@@ -1,0 +1,221 @@
+//! SS4.3 end-to-end driver: the distributed ML pipeline.
+//!
+//!     make artifacts && cargo run --release --example ml_pipeline
+//!
+//! Reproduces the paper's Kubeflow workflow on HPK, all layers
+//! composing: an Argo workflow ingests the dataset; TFJobs train three
+//! classifier variants with synchronous 2-worker data-parallel SGD
+//! (each worker's grad step is the AOT-compiled JAX graph whose dense
+//! layers are the L1 Pallas matmul kernel, executed via PJRT from
+//! Rust); the best model by held-out accuracy is deployed as an
+//! inference service behind a headless Kubernetes service, and queries
+//! are answered through CoreDNS + the pod fabric. Loss curves and the
+//! selection table print at the end (recorded in EXPERIMENTS.md).
+
+use hpk::operators::training::{self, operator::tfjob_manifest};
+use hpk::testbed;
+use std::time::Instant;
+
+const VARIANTS: &[&str] = &["mlp-small", "mlp-medium", "mlp-large"];
+const WORKERS: usize = 2;
+const STEPS: u64 = 200;
+
+fn main() {
+    println!("== Distributed ML pipeline on HPK (SS4.3) ==\n");
+    let tb = testbed::deploy(4, 8);
+    assert!(
+        tb.pjrt.is_some(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+
+    // ---- Stage 1: data ingestion via an Argo workflow step. ----------
+    println!("--> workflow stage 1: data ingestion");
+    tb.cp
+        .kubectl_apply(
+            r#"kind: Workflow
+metadata:
+  name: ingest
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: ingest, template: ingest}
+  - name: ingest
+    container:
+      image: data-ingest:latest
+      env:
+      - {name: SHARDS, value: "8"}
+      - {name: SAMPLES_PER_SHARD, value: "512"}
+      - {name: DATA_DIR, value: /home/user/datasets/fmnist}
+"#,
+        )
+        .unwrap();
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.get("Workflow", "default", "ingest")
+            .ok()
+            .and_then(|w| w.str_at("status.phase").map(|p| p == "Succeeded"))
+            .unwrap_or(false)
+    }));
+    let shards = tb.cp.fs.list("/home/user/datasets/fmnist").len();
+    println!("    {shards} dataset files materialized\n");
+
+    // ---- Stage 2: train the three variants as TFJobs. -----------------
+    println!(
+        "--> workflow stage 2: distributed training ({WORKERS} workers x {STEPS} steps each)"
+    );
+    let t0 = Instant::now();
+    for v in VARIANTS {
+        tb.cp
+            .kubectl_apply(&tfjob_manifest(
+                &format!("train-{v}"),
+                "default",
+                v,
+                WORKERS,
+                STEPS,
+                0.15,
+                &format!("/home/user/models/{v}"),
+            ))
+            .unwrap();
+    }
+    for v in VARIANTS {
+        let name = format!("train-{v}");
+        assert!(
+            tb.cp.wait_until(600_000, |api| {
+                api.get("TFJob", "default", &name)
+                    .ok()
+                    .and_then(|j| j.str_at("status.state").map(|s| s == "Succeeded"))
+                    .unwrap_or(false)
+            }),
+            "{name} did not succeed"
+        );
+        println!("    {name}: Succeeded");
+    }
+    println!("    all variants trained in {:.2?}\n", t0.elapsed());
+
+    // ---- Stage 3: model selection on held-out accuracy. ---------------
+    println!("--> workflow stage 3: model selection");
+    println!(
+        "    {:<12} {:>10} {:>10} {:>12} {:>14}",
+        "variant", "params", "nll", "accuracy", "loss 1st->last"
+    );
+    let mut best: Option<(&str, f32)> = None;
+    for v in VARIANTS {
+        let metrics = tb
+            .cp
+            .fs
+            .read_str(&format!("/home/user/models/{v}/metrics.txt"))
+            .unwrap();
+        let acc: f32 = metrics
+            .split("accuracy=")
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        let nll: f32 = metrics
+            .split("nll=")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        let csv = tb
+            .cp
+            .fs
+            .read_str(&format!("/home/user/models/{v}/loss.csv"))
+            .unwrap();
+        let losses: Vec<f32> = csv
+            .lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(1)?.parse().ok())
+            .collect();
+        println!(
+            "    {:<12} {:>10} {:>10.4} {:>11.1}% {:>8.3} -> {:.3}",
+            v,
+            hpk::workloads::trainer::param_count(v),
+            nll,
+            acc * 100.0,
+            losses.first().unwrap(),
+            losses.last().unwrap()
+        );
+        if best.map(|(_, a)| acc > a).unwrap_or(true) {
+            best = Some((v, acc));
+        }
+    }
+    let (winner, acc) = best.unwrap();
+    println!("    selected: {winner} ({:.1}% held-out accuracy)\n", acc * 100.0);
+
+    // ---- Stage 4: deploy the winner as an inference service. ----------
+    println!("--> workflow stage 4: inference service");
+    tb.cp
+        .kubectl_apply(&format!(
+            r#"kind: Deployment
+metadata:
+  name: classifier
+spec:
+  replicas: 1
+  selector:
+    matchLabels:
+      app: classifier
+  template:
+    metadata:
+      labels:
+        app: classifier
+    spec:
+      containers:
+      - name: serving
+        image: tf-serving:latest
+        env:
+        - {{name: MODEL_VARIANT, value: {winner}}}
+        - {{name: MODEL_PATH, value: /home/user/models/{winner}/weights.bin}}
+---
+kind: Service
+metadata:
+  name: classifier
+spec:
+  selector:
+    app: classifier
+  ports:
+  - port: 8501
+"#
+        ))
+        .unwrap();
+    assert!(tb.cp.wait_until(60_000, |_| {
+        tb.cp
+            .dns
+            .resolve_one("classifier")
+            .map(|ip| tb.cp.runtime.fabric.is_bound(ip, training::SERVING_PORT))
+            .unwrap_or(false)
+    }));
+    let ip = tb.cp.dns.resolve_one("classifier").unwrap();
+    let server = tb
+        .cp
+        .runtime
+        .fabric
+        .connect::<training::InferenceServer>(ip, training::SERVING_PORT)
+        .unwrap();
+    let (x, y) = hpk::workloads::dataset::synthetic_batch(512, 123_456);
+    let t_inf = Instant::now();
+    let predictions = server.classify(&x).unwrap();
+    let correct = predictions
+        .iter()
+        .zip(y.as_i32())
+        .filter(|(p, t)| p == t)
+        .count();
+    println!(
+        "    served 512 queries in {:.2?} via {ip}:8501 -> accuracy {:.1}%\n",
+        t_inf.elapsed(),
+        correct as f32 * 100.0 / 512.0
+    );
+
+    println!("Slurm accounting: {} jobs total (ingest + {} trainers + serving)",
+        tb.cp.slurm.sacct().len() + tb.cp.slurm.squeue().len(),
+        VARIANTS.len() * WORKERS,
+    );
+    tb.shutdown();
+    println!("== pipeline complete ==");
+}

@@ -1,0 +1,117 @@
+//! Quickstart: boot HPK, deploy a microservice, watch it appear in the
+//! Slurm queue, scale it, resolve it through DNS, tear it down.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the paper's core pitch in one file: an *unmodified*
+//! Kubernetes workflow (Deployment + headless Service) executing as
+//! Slurm jobs under the HPC center's normal accounting.
+
+use hpk::kube::object;
+use hpk::testbed;
+
+fn main() {
+    println!("== HPK quickstart ==");
+    println!("deploying HPK on a 4-node x 8-cpu simulated Slurm cluster\n");
+    let tb = testbed::deploy(4, 8);
+
+    // 1. kubectl apply a Deployment + Service, exactly as in the Cloud.
+    println!("--> kubectl apply deployment(web, replicas=3) + service(web)");
+    tb.cp
+        .kubectl_apply(
+            r#"kind: Deployment
+metadata:
+  name: web
+spec:
+  replicas: 3
+  selector:
+    matchLabels:
+      app: web
+  template:
+    metadata:
+      labels:
+        app: web
+    spec:
+      containers:
+      - name: main
+        image: pause:3.9
+        resources:
+          requests:
+            cpu: 2
+            memory: 1Gi
+---
+kind: Service
+metadata:
+  name: web
+spec:
+  selector:
+    app: web
+  ports:
+  - port: 80
+"#,
+        )
+        .expect("apply");
+
+    // 2. Pods come up through Slurm + Apptainer.
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.list("Pod")
+            .iter()
+            .filter(|p| object::pod_phase(p) == "Running")
+            .count()
+            == 3
+    }));
+    println!("\nsqueue (the HPC center's view -- compliance):");
+    for j in tb.cp.slurm.squeue() {
+        println!(
+            "  job {:>3}  {:<24} {:<3} cpus={} comment={}",
+            j.job_id,
+            j.name,
+            j.state.code(),
+            j.alloc_cpus,
+            j.comment
+        );
+    }
+    println!("\nsinfo:");
+    for (node, used, total, state) in tb.cp.slurm.sinfo() {
+        println!("  {node}: {used}/{total} cpus [{state}]");
+    }
+
+    // 3. Service discovery: headless, straight to pod IPs.
+    let svc = tb.cp.api.get("Service", "default", "web").unwrap();
+    println!(
+        "\nservice web: clusterIP={} (admission forced headless)",
+        svc.str_at("spec.clusterIP").unwrap_or("?")
+    );
+    tb.cp.wait_until(30_000, |_| tb.cp.dns.resolve("web").len() == 3);
+    println!("dns web.default.svc.cluster.local -> {:?}", tb.cp.dns.resolve("web"));
+
+    // 4. The generated artifacts live in the user's home dir.
+    let script = tb
+        .cp
+        .fs
+        .list("/home/user/.hpk/default")
+        .into_iter()
+        .find(|p| p.ends_with("job.sbatch"))
+        .expect("a generated sbatch script");
+    println!("\ngenerated Slurm script ({script}):");
+    for line in tb.cp.fs.read_str(&script).unwrap().lines().take(10) {
+        println!("  | {line}");
+    }
+
+    // 5. Scale up, then delete; Slurm queue follows.
+    println!("\n--> kubectl scale deployment web --replicas=5");
+    let mut dep = tb.cp.api.get("Deployment", "default", "web").unwrap();
+    dep.entry_map("spec").set("replicas", hpk::Value::Int(5));
+    tb.cp.api.update(dep).unwrap();
+    tb.cp.wait_until(60_000, |_| tb.cp.slurm.squeue().len() == 5);
+    println!("squeue now has {} jobs", tb.cp.slurm.squeue().len());
+
+    println!("\n--> kubectl delete deployment web");
+    tb.cp.api.delete("Deployment", "default", "web").unwrap();
+    tb.cp.wait_until(60_000, |_| tb.cp.slurm.squeue().is_empty());
+    println!("queue drained; {} pod IPs leaked", tb.cp.runtime.cni.live_count());
+
+    println!("\naccounting (sacct) saw {} jobs total", tb.cp.slurm.sacct().len());
+    tb.shutdown();
+    println!("== quickstart complete ==");
+}

@@ -1,0 +1,114 @@
+//! SS4.1: Spark TPC-DS on HPK — the full paper flow.
+//!
+//!     cargo run --release --example spark_tpcds
+//!
+//! 1. helm install spark-operator + MinIO (service `spark-k8s-data`).
+//! 2. Submit the data-generation SparkApplication.
+//! 3. Submit the benchmark SparkApplication (q3/q55/q7) with the
+//!    executor count from Listing 1, and print the query results.
+
+use hpk::operators::spark::operator::spark_application_manifest;
+use hpk::testbed;
+use std::time::Instant;
+
+fn wait_completed(tb: &testbed::Testbed, app: &str) {
+    let ok = tb.cp.wait_until(120_000, |api| {
+        api.get("SparkApplication", "default", app)
+            .ok()
+            .and_then(|a| {
+                a.str_at("status.applicationState.state")
+                    .map(|s| s == "COMPLETED" || s == "FAILED")
+            })
+            .unwrap_or(false)
+    });
+    let state = tb
+        .cp
+        .api
+        .get("SparkApplication", "default", app)
+        .ok()
+        .and_then(|a| {
+            a.str_at("status.applicationState.state").map(String::from)
+        })
+        .unwrap_or_default();
+    assert!(ok && state == "COMPLETED", "{app}: state={state}");
+}
+
+fn main() {
+    println!("== Spark TPC-DS on HPK (SS4.1) ==\n");
+    let tb = testbed::deploy(4, 8);
+
+    println!("--> helm install minio (service name spark-k8s-data)");
+    tb.install_minio("spark-k8s-data").expect("minio up");
+
+    let scale = 1;
+    let partitions = 8;
+    let executors = 3; // Listing 1: 3 executors x 1 core
+
+    println!("--> submit SparkApplication tpcds-data-generation (sf={scale}, {partitions} partitions, {executors} executors)");
+    let t0 = Instant::now();
+    tb.cp
+        .kubectl_apply(&spark_application_manifest(
+            "tpcds-benchmark-data-generation-1g",
+            "default",
+            "datagen",
+            scale,
+            partitions,
+            "",
+            executors,
+            1,
+            "8000m",
+        ))
+        .unwrap();
+    wait_completed(&tb, "tpcds-benchmark-data-generation-1g");
+    println!("    datagen COMPLETED in {:.2?}", t0.elapsed());
+
+    let store = tb.object_store("spark-k8s-data").unwrap();
+    println!(
+        "    store_sales: {} partitions, {:.1} MiB in MinIO",
+        store.list("spark", "tpcds/sf1/store_sales/").len(),
+        store.bucket_size("spark") as f64 / (1 << 20) as f64
+    );
+
+    println!("\n--> submit SparkApplication tpcds-benchmark (q3, q55, q7)");
+    let t1 = Instant::now();
+    tb.cp
+        .kubectl_apply(&spark_application_manifest(
+            "tpcds-benchmark-1g",
+            "default",
+            "benchmark",
+            scale,
+            partitions,
+            "q3,q55,q7",
+            executors,
+            1,
+            "8000m",
+        ))
+        .unwrap();
+    wait_completed(&tb, "tpcds-benchmark-1g");
+    println!("    benchmark COMPLETED in {:.2?}\n", t1.elapsed());
+
+    for q in ["q3", "q55", "q7"] {
+        let csv = store
+            .get("spark", &format!("results/tpcds-benchmark-1g/{q}.csv"))
+            .unwrap();
+        let text = String::from_utf8_lossy(&csv);
+        println!("{q} (first 6 rows):");
+        for line in text.lines().take(6) {
+            println!("  {line}");
+        }
+        println!();
+    }
+
+    println!("Slurm accounting for the run:");
+    let mut cpu_ms = 0u64;
+    for r in tb.cp.slurm.sacct() {
+        cpu_ms += r.cpu_ms();
+    }
+    println!(
+        "  {} jobs, {:.1} cpu-seconds (simulated) billed to the user",
+        tb.cp.slurm.sacct().len(),
+        cpu_ms as f64 / 1000.0
+    );
+    tb.shutdown();
+    println!("== done ==");
+}

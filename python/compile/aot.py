@@ -1,0 +1,174 @@
+"""AOT-lower the L2 graphs to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. Lowered with
+``return_tuple=True``; the Rust side unwraps with ``to_tuple()``.
+
+Emits, per model variant (mlp-small / mlp-medium / mlp-large):
+
+  artifacts/grad_step_<variant>.hlo.txt   fwd+bwd -> (grads..., loss)
+  artifacts/train_step_<variant>.hlo.txt  fused fwd+bwd+SGD (1-worker path)
+  artifacts/predict_<variant>.hlo.txt     logits (inference service)
+  artifacts/eval_<variant>.hlo.txt        (sum nll, correct) for selection
+
+plus the EP workflow kernel:
+
+  artifacts/ep.hlo.txt                    (q[10], s[3]) per counter range
+
+and artifacts/manifest.json describing every entry point's arguments so
+the Rust runtime can validate shapes at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ep
+
+TRAIN_BATCH = 128
+PREDICT_BATCH = 256
+EVAL_BATCH = 256
+EP_SAMPLES_PER_CALL = 1 << 16  # 65536 candidate pairs per PJRT execution
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="float32"):
+    return jax.ShapeDtypeStruct(shape, getattr(jnp, dtype))
+
+
+def _arg_entry(name, shape, dtype="float32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_variant(variant, batch=TRAIN_BATCH):
+    """Lower all four entry points of one classifier variant."""
+    shapes = model.param_shapes(variant)
+    params = [_spec(s) for _, s in shapes]
+    x_train = _spec((batch, model.INPUT_DIM))
+    y_train = _spec((batch,), "int32")
+    x_pred = _spec((PREDICT_BATCH, model.INPUT_DIM))
+    x_eval = _spec((EVAL_BATCH, model.INPUT_DIM))
+    y_eval = _spec((EVAL_BATCH,), "int32")
+    lr = _spec((), "float32")
+
+    param_args = [_arg_entry(n, s) for n, s in shapes]
+    entries = {}
+
+    lowered = jax.jit(model.grad_step).lower(*params, x_train, y_train)
+    entries[f"grad_step_{variant}"] = {
+        "hlo": f"grad_step_{variant}.hlo.txt",
+        "text": to_hlo_text(lowered),
+        "args": param_args
+        + [
+            _arg_entry("x", (batch, model.INPUT_DIM)),
+            _arg_entry("y", (batch,), "int32"),
+        ],
+        "outputs": [_arg_entry(f"g_{n}", s) for n, s in shapes]
+        + [_arg_entry("loss", ())],
+    }
+
+    lowered = jax.jit(model.train_step).lower(*params, x_train, y_train, lr)
+    entries[f"train_step_{variant}"] = {
+        "hlo": f"train_step_{variant}.hlo.txt",
+        "text": to_hlo_text(lowered),
+        "args": param_args
+        + [
+            _arg_entry("x", (batch, model.INPUT_DIM)),
+            _arg_entry("y", (batch,), "int32"),
+            _arg_entry("lr", ()),
+        ],
+        "outputs": param_args + [_arg_entry("loss", ())],
+    }
+
+    lowered = jax.jit(model.predict).lower(*params, x_pred)
+    entries[f"predict_{variant}"] = {
+        "hlo": f"predict_{variant}.hlo.txt",
+        "text": to_hlo_text(lowered),
+        "args": param_args + [_arg_entry("x", (PREDICT_BATCH, model.INPUT_DIM))],
+        "outputs": [_arg_entry("logits", (PREDICT_BATCH, model.NUM_CLASSES))],
+    }
+
+    lowered = jax.jit(model.eval_step).lower(*params, x_eval, y_eval)
+    entries[f"eval_{variant}"] = {
+        "hlo": f"eval_{variant}.hlo.txt",
+        "text": to_hlo_text(lowered),
+        "args": param_args
+        + [
+            _arg_entry("x", (EVAL_BATCH, model.INPUT_DIM)),
+            _arg_entry("y", (EVAL_BATCH,), "int32"),
+        ],
+        "outputs": [_arg_entry("nll_sum", ()), _arg_entry("correct", ())],
+    }
+    return entries
+
+
+def lower_ep():
+    def ep_fn(seed, base):
+        return ep.ep_gaussian_pairs(seed, base, EP_SAMPLES_PER_CALL)
+
+    lowered = jax.jit(ep_fn).lower(
+        _spec((), "uint32"), _spec((), "uint32")
+    )
+    return {
+        "ep": {
+            "hlo": "ep.hlo.txt",
+            "text": to_hlo_text(lowered),
+            "args": [
+                _arg_entry("seed", (), "uint32"),
+                _arg_entry("base", (), "uint32"),
+            ],
+            "outputs": [_arg_entry("q", (10,)), _arg_entry("s", (3,))],
+            "samples_per_call": EP_SAMPLES_PER_CALL,
+        }
+    }
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--variants", default=",".join(model.VARIANTS), help="comma-separated"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = {}
+    for variant in args.variants.split(","):
+        entries.update(lower_variant(variant))
+        print(f"lowered {variant}")
+    entries.update(lower_ep())
+    print("lowered ep")
+
+    manifest = {"train_batch": TRAIN_BATCH, "predict_batch": PREDICT_BATCH,
+                "eval_batch": EVAL_BATCH, "entries": {}}
+    for name, entry in entries.items():
+        path = os.path.join(args.out_dir, entry["hlo"])
+        with open(path, "w") as f:
+            f.write(entry["text"])
+        manifest["entries"][name] = {
+            k: v for k, v in entry.items() if k != "text"
+        }
+        print(f"wrote {path} ({len(entry['text'])} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for HPK's compute workloads.
+
+Two kernels back the paper's evaluation workloads:
+
+- ``matmul``: tiled matmul + bias + optional ReLU, the hot spot of the
+  SS4.3 distributed-training classifier (every layer's fwd and bwd GEMMs
+  route through it).
+- ``ep``: the NAS EP (Embarrassingly Parallel) Gaussian-pair kernel used
+  by the SS4.2 Argo/MPI workflow step.
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); see DESIGN.md SSHardware-Adaptation.
+"""
+
+from .matmul import matmul_bias_act  # noqa: F401
+from .ep import ep_gaussian_pairs  # noqa: F401

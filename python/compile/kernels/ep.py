@@ -1,0 +1,125 @@
+"""NAS EP (Embarrassingly Parallel) Gaussian-pair kernel in Pallas.
+
+The SS4.2 Argo workflow (paper Listing 2) runs the NAS ``ep.A.x``
+executable with varying ``--ntasks``. EP generates pseudo-random uniform
+pairs, applies the Marsaglia polar method to obtain Gaussian deviates,
+and tallies them into 10 annuli (deciles of ``max(|X|, |Y|)``) plus the
+running sums ``sx``/``sy``. Work is split by giving each task a disjoint
+range of counter values, which is exactly how the Slurm ``--ntasks``
+annotation fans the kernel out in our reproduction.
+
+Instead of NAS's 46-bit LCG (awkward in f32/u32 vector lanes) we use a
+counter-based bijective integer hash (murmur3 finalizer) -- the standard
+TPU-friendly choice (cf. threefry): stateless, order-independent, and
+identical across JAX, the jnp oracle (ref.py) and the Rust baseline
+(``workloads::ep``), so all three tallies can be cross-checked.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Samples processed per grid step: one VMEM-resident vector batch.
+BLOCK = 4096
+
+
+def _hash_u32(x):
+    """Murmur3 finalizer: bijective u32 -> u32 mix, vectorizable on VPU."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _uniform_pm1(bits):
+    """u32 -> f32 uniform in (-1, 1), using the top 24 bits."""
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    return 2.0 * u - 1.0
+
+
+def pairs_block(seed, base, n):
+    """Generate ``n`` candidate pairs for counters ``base .. base+n-1``.
+
+    Shared between the Pallas kernel and the jnp oracle so that both see
+    bit-identical streams.
+    """
+    idx = base + jnp.arange(n, dtype=jnp.uint32)
+    s = jnp.uint32(seed) * jnp.uint32(0x9E3779B9)
+    x = _uniform_pm1(_hash_u32(idx * jnp.uint32(2) + s))
+    y = _uniform_pm1(_hash_u32(idx * jnp.uint32(2) + jnp.uint32(1) + s))
+    return x, y
+
+
+def tally_block(x, y):
+    """Marsaglia polar method + decile tally for one block of pairs.
+
+    Returns ``(q, sx, sy, accepted)`` where ``q`` is the 10-bin histogram
+    of ``floor(max(|X|, |Y|))`` over accepted pairs.
+    """
+    t = x * x + y * y
+    accept = (t <= 1.0) & (t > 0.0)
+    # Guard the log against t=0 / rejected lanes.
+    t_safe = jnp.where(accept, t, 1.0)
+    f = jnp.sqrt(-2.0 * jnp.log(t_safe) / t_safe)
+    gx = jnp.where(accept, x * f, 0.0)
+    gy = jnp.where(accept, y * f, 0.0)
+    m = jnp.maximum(jnp.abs(gx), jnp.abs(gy))
+    bins = jnp.clip(jnp.floor(m), 0.0, 9.0).astype(jnp.int32)
+    # One-hot tally; rejected lanes contribute nothing.
+    onehot = (bins[:, None] == jnp.arange(10, dtype=jnp.int32)[None, :]) & accept[:, None]
+    q = jnp.sum(onehot.astype(jnp.float32), axis=0)
+    return q, jnp.sum(gx), jnp.sum(gy), jnp.sum(accept.astype(jnp.float32))
+
+
+def _ep_kernel(seed_ref, base_ref, q_ref, s_ref, *, block: int):
+    """Grid step i tallies counters [base + i*block, base + (i+1)*block)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        q_ref[...] = jnp.zeros_like(q_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    base = base_ref[0] + jnp.uint32(i) * jnp.uint32(block)
+    x, y = pairs_block(seed_ref[0], base, block)
+    q, sx, sy, acc = tally_block(x, y)
+    q_ref[...] += q
+    s_ref[...] += jnp.stack([sx, sy, acc])
+
+
+def ep_gaussian_pairs(seed, base, n, block=BLOCK):
+    """Tally ``n`` candidate pairs starting at counter ``base``.
+
+    Args:
+      seed: u32 scalar array -- experiment seed (same for all tasks).
+      base: u32 scalar array -- first counter of this task's range.
+      n: static int -- number of candidate pairs (multiple of ``block``).
+
+    Returns:
+      ``(q, s)``: ``q`` f32[10] decile counts, ``s`` f32[3] = (sx, sy,
+      accepted count).
+    """
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_ep_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((10,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((10,), jnp.float32),
+            jax.ShapeDtypeStruct((3,), jnp.float32),
+        ],
+        interpret=True,
+    )(seed.reshape(1), base.reshape(1))

@@ -1,0 +1,135 @@
+"""Tiled matmul + bias + activation Pallas kernel with a custom VJP.
+
+This is the L1 hot spot of the SS4.3 training workload: every dense layer
+of the classifier (fwd activations, and both backward GEMMs ``dx = g @ W^T``
+and ``dW = x^T @ g``) runs through :func:`matmul_bias_act`.
+
+TPU mapping (DESIGN.md SSHardware-Adaptation): the grid iterates
+``(M/bm, N/bn, K/bk)`` with VMEM-resident ``(bm, bk) x (bk, bn)`` tiles
+feeding the MXU; the K axis is the innermost (fastest-varying) grid
+dimension so the f32 accumulator tile stays resident in VMEM across the
+K loop (revolving output window). On this testbed kernels execute via
+``interpret=True`` so tiling is validated structurally, not for wallclock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: 128 matches the MXU systolic-array edge; a
+# (128, 128) f32 tile is 64 KiB, so x/w/o tiles plus double-buffering fit
+# comfortably in ~16 MiB VMEM (see EXPERIMENTS.md SSPerf-L1 for the model).
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str, k_steps: int):
+    """Grid point (i, j, k): o[i, j] += x[i, k] @ w[k, j]; epilogue on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def _matmul_bias_act_fwd_impl(x, w, b, activation, bm, bn, bk):
+    """Raw pallas call; pads inputs to tile multiples and slices back."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = _pad_to(b.reshape(1, n), bn, 1)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _matmul_kernel, activation=activation, k_steps=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def matmul_bias_act(x, w, b, activation="none", bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: ``(M, K)`` f32 activations.
+      w: ``(K, N)`` f32 weights.
+      b: ``(N,)`` f32 bias.
+      activation: ``"none"`` or ``"relu"``.
+      bm/bn/bk: tile sizes (static).
+
+    Returns:
+      ``(M, N)`` f32.
+
+    Differentiable via a custom VJP whose backward GEMMs also run through
+    the Pallas kernel (so the AOT-lowered train step is Pallas end-to-end).
+    """
+    return _matmul_bias_act_fwd_impl(x, w, b, activation, bm, bn, bk)
+
+
+def _fwd(x, w, b, activation, bm, bn, bk):
+    out = _matmul_bias_act_fwd_impl(x, w, b, activation, bm, bn, bk)
+    return out, (x, w, out)
+
+
+def _bwd(activation, bm, bn, bk, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = jnp.where(out > 0.0, g, 0.0)
+    n = w.shape[1]
+    k = w.shape[0]
+    zero_n = jnp.zeros((n,), jnp.float32)
+    zero_k = jnp.zeros((k,), jnp.float32)
+    # dx = g @ w^T, dw = x^T @ g -- both through the Pallas kernel.
+    dx = _matmul_bias_act_fwd_impl(g, w.T, zero_k, "none", bm, bk, bn)
+    dw = _matmul_bias_act_fwd_impl(x.T, g, zero_n, "none", bk, bn, bm)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_fwd, _bwd)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness reference: pytest asserts the Pallas kernels
+match these to float tolerance across shape/dtype sweeps (hypothesis).
+"""
+
+import jax.numpy as jnp
+
+from . import ep as _ep
+
+
+def matmul_bias_act_ref(x, w, b, activation="none"):
+    """Reference for kernels.matmul.matmul_bias_act."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def ep_gaussian_pairs_ref(seed, base, n):
+    """Reference for kernels.ep.ep_gaussian_pairs (single un-tiled block)."""
+    x, y = _ep.pairs_block(seed, base, n)
+    q, sx, sy, acc = _ep.tally_block(x, y)
+    return q, jnp.stack([sx, sy, acc])

@@ -1,0 +1,136 @@
+"""L2: the SS4.3 image-classifier compute graph (fwd/bwd/SGD) in JAX.
+
+The paper's distributed-training experiment trains several classifier
+variants on Fashion-MNIST via TensorFlow's MultiWorkerMirroredStrategy.
+Our reproduction keeps the same *training semantics* (synchronous
+data-parallel SGD: every worker computes gradients on its shard, gradients
+are all-reduced, every worker applies the identical update) but expresses
+the per-worker compute as a JAX graph whose dense layers run through the
+L1 Pallas matmul kernel (see kernels/matmul.py).
+
+The graph is AOT-lowered by aot.py; at runtime the Rust training operator
+(``operators::training``) executes the compiled artifacts via PJRT and
+performs the all-reduce across simulated worker pods itself. Python never
+runs on the request path.
+
+Three variants reproduce the paper's "train several different models and
+pick the best" workflow:
+
+  ===========  =================  ============
+  variant      hidden layers      ~parameters
+  ===========  =================  ============
+  mlp-small    (256, 128)         235k
+  mlp-medium   (512, 256)         535k
+  mlp-large    (1024, 512)        1.3M
+  ===========  =================  ============
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_bias_act
+
+INPUT_DIM = 28 * 28
+NUM_CLASSES = 10
+
+VARIANTS = {
+    "mlp-small": (256, 128),
+    "mlp-medium": (512, 256),
+    "mlp-large": (1024, 512),
+}
+
+
+def param_shapes(variant):
+    """[(name, shape), ...] for a variant, in positional-argument order."""
+    h1, h2 = VARIANTS[variant]
+    return [
+        ("w1", (INPUT_DIM, h1)),
+        ("b1", (h1,)),
+        ("w2", (h1, h2)),
+        ("b2", (h2,)),
+        ("w3", (h2, NUM_CLASSES)),
+        ("b3", (NUM_CLASSES,)),
+    ]
+
+
+def init_params(variant, key):
+    """He-initialised parameters as a flat tuple (test/compile-time only;
+    the Rust runtime does its own deterministic init with the same scheme).
+    """
+    params = []
+    for name, shape in param_shapes(variant):
+        key, sub = jax.random.split(key)
+        if name.startswith("w"):
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def apply(w1, b1, w2, b2, w3, b3, x):
+    """Forward pass: logits for a batch of flattened 28x28 images."""
+    h = matmul_bias_act(x, w1, b1, "relu")
+    h = matmul_bias_act(h, w2, b2, "relu")
+    return matmul_bias_act(h, w3, b3, "none")
+
+
+def _log_softmax(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    return shifted - jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+
+
+def loss_fn(w1, b1, w2, b2, w3, b3, x, y):
+    """Mean softmax cross-entropy over the batch; y is int32 labels."""
+    logp = _log_softmax(apply(w1, b1, w2, b2, w3, b3, x))
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def grad_step(w1, b1, w2, b2, w3, b3, x, y):
+    """One gradient evaluation: returns (g_w1, g_b1, ..., g_b3, loss).
+
+    This is the per-worker unit of SS4.3's synchronous training: each
+    worker runs grad_step on its shard; the coordinator all-reduces the
+    gradients and applies the SGD update (mirroring
+    MultiWorkerMirroredStrategy, where the update is replicated). Keeping
+    the update outside the artifact lets the Rust side scale the averaged
+    gradient by the learning-rate schedule without recompiling.
+    """
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3, 4, 5))(
+        w1, b1, w2, b2, w3, b3, x, y
+    )
+    return (*grads, loss)
+
+
+def train_step(w1, b1, w2, b2, w3, b3, x, y, lr):
+    """Fused single-worker step: SGD update applied in-graph.
+
+    Used for the 1-worker fast path and as the L2 fusion baseline in the
+    perf pass (one HLO module: fwd + bwd + update, donated params).
+    """
+    out = grad_step(w1, b1, w2, b2, w3, b3, x, y)
+    grads, loss = out[:-1], out[-1]
+    params = (w1, b1, w2, b2, w3, b3)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+def predict(w1, b1, w2, b2, w3, b3, x):
+    """Inference: logits (the SS4.3 inference-service artifact)."""
+    return apply(w1, b1, w2, b2, w3, b3, x)
+
+
+def eval_step(w1, b1, w2, b2, w3, b3, x, y):
+    """Held-out evaluation: (sum nll, correct count) for model selection."""
+    logits = apply(w1, b1, w2, b2, w3, b3, x)
+    logp = _log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == y.astype(jnp.int32)).astype(jnp.float32)
+    )
+    return jnp.sum(nll), correct

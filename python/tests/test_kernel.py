@@ -1,0 +1,137 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes (and tile sizes) of the Pallas matmul kernel and
+asserts allclose against the pure-jnp reference; the EP kernel's tiled
+tally is checked against the un-tiled oracle exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_bias_act, ep_gaussian_pairs
+from compile.kernels import ref
+from compile.kernels import ep as ep_mod
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestMatmulKernel:
+    @pytest.mark.parametrize("activation", ["none", "relu"])
+    def test_square_matches_ref(self, activation):
+        x, w = _rand(0, (64, 64)), _rand(1, (64, 64))
+        b = _rand(2, (64,))
+        out = matmul_bias_act(x, w, b, activation)
+        expect = ref.matmul_bias_act_ref(x, w, b, activation)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+    def test_non_divisible_shapes_padded(self):
+        # 28*28=784 inputs and 10 classes are not tile multiples.
+        x, w, b = _rand(0, (37, 784)), _rand(1, (784, 10)), _rand(2, (10,))
+        out = matmul_bias_act(x, w, b, "none")
+        expect = ref.matmul_bias_act_ref(x, w, b, "none")
+        assert out.shape == (37, 10)
+        # K=784 accumulates in tile order; allow reassociation slack.
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        bm=st.sampled_from([8, 16, 32, 128]),
+        bn=st.sampled_from([8, 16, 32, 128]),
+        bk=st.sampled_from([8, 16, 32, 128]),
+        activation=st.sampled_from(["none", "relu"]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_tile_sweep(self, m, k, n, bm, bn, bk, activation, seed):
+        x, w = _rand(seed, (m, k)), _rand(seed + 1, (k, n))
+        b = _rand(seed + 2, (n,))
+        out = matmul_bias_act(x, w, b, activation, bm, bn, bk)
+        expect = ref.matmul_bias_act_ref(x, w, b, activation)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+    def test_relu_clamps_negatives(self):
+        x = jnp.ones((4, 4), jnp.float32)
+        w = -jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        out = matmul_bias_act(x, w, b, "relu")
+        assert float(jnp.max(out)) == 0.0
+
+    def test_custom_vjp_matches_jnp_grad(self):
+        x, w, b = _rand(0, (16, 24)), _rand(1, (24, 12)), _rand(2, (12,))
+
+        def f_kernel(x, w, b):
+            return jnp.sum(matmul_bias_act(x, w, b, "relu") ** 2)
+
+        def f_ref(x, w, b):
+            return jnp.sum(ref.matmul_bias_act_ref(x, w, b, "relu") ** 2)
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+        for a, e in zip(gk, gr):
+            np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+    def test_dtype_is_f32(self):
+        x, w, b = _rand(0, (8, 8)), _rand(1, (8, 8)), _rand(2, (8,))
+        assert matmul_bias_act(x, w, b).dtype == jnp.float32
+
+
+class TestEpKernel:
+    def test_matches_ref_exactly(self):
+        seed = jnp.uint32(42)
+        base = jnp.uint32(0)
+        n = 4 * ep_mod.BLOCK
+        q, s = ep_gaussian_pairs(seed, base, n)
+        qr, sr = ref.ep_gaussian_pairs_ref(seed, base, n)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31), blocks=st.integers(1, 4))
+    def test_seed_sweep_matches_ref(self, seed, blocks):
+        s32 = jnp.uint32(seed)
+        base = jnp.uint32(0)
+        n = blocks * ep_mod.BLOCK
+        q, s = ep_gaussian_pairs(s32, base, n)
+        qr, sr = ref.ep_gaussian_pairs_ref(s32, base, n)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-4)
+
+    def test_disjoint_ranges_compose(self):
+        """Task-parallel decomposition: two half-ranges sum to the full."""
+        seed = jnp.uint32(7)
+        n = 2 * ep_mod.BLOCK
+        q_full, s_full = ep_gaussian_pairs(seed, jnp.uint32(0), 2 * n)
+        q_a, s_a = ep_gaussian_pairs(seed, jnp.uint32(0), n)
+        q_b, s_b = ep_gaussian_pairs(seed, jnp.uint32(n), n)
+        np.testing.assert_array_equal(
+            np.asarray(q_full), np.asarray(q_a) + np.asarray(q_b)
+        )
+        np.testing.assert_allclose(
+            np.asarray(s_full), np.asarray(s_a) + np.asarray(s_b), rtol=1e-4
+        )
+
+    def test_acceptance_rate_near_pi_over_4(self):
+        q, s = ep_gaussian_pairs(jnp.uint32(3), jnp.uint32(0), 8 * ep_mod.BLOCK)
+        rate = float(s[2]) / (8 * ep_mod.BLOCK)
+        assert abs(rate - np.pi / 4) < 0.01
+
+    def test_gaussian_moments(self):
+        """Accepted deviates should have ~zero mean (sx, sy ~ 0)."""
+        q, s = ep_gaussian_pairs(jnp.uint32(9), jnp.uint32(0), 16 * ep_mod.BLOCK)
+        n_acc = float(s[2])
+        assert abs(float(s[0]) / n_acc) < 0.02
+        assert abs(float(s[1]) / n_acc) < 0.02
+
+    def test_decile_counts_decrease(self):
+        """|N(0,1)| mass falls off with the annulus index."""
+        q, _ = ep_gaussian_pairs(jnp.uint32(1), jnp.uint32(0), 16 * ep_mod.BLOCK)
+        qn = np.asarray(q)
+        assert qn[0] > qn[1] > qn[2]
+        assert qn[0] + qn[1] + qn[2] > 0.99 * qn.sum()

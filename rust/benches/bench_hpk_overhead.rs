@@ -1,0 +1,229 @@
+//! E5: HPK overhead characterization + design-choice ablations.
+//!
+//! Not a table in the paper, but the quantified backing for its SS3
+//! claims: HPK adds a translation + Slurm-queueing constant per pod on
+//! top of vanilla Kubernetes; the translation itself is negligible; the
+//! pass-through scheduler keeps the control plane out of the placement
+//! path; EASY backfill (in the Slurm substrate) improves mixed-size
+//! makespan — the "better scheduling flexibility and finer-grain
+//! resource sharing" argument of SS2.
+//!
+//! Run: `cargo bench --bench bench_hpk_overhead`
+
+use hpk::hpk::translate;
+use hpk::kube::object;
+use hpk::slurm::{JobSpec, SlurmConfig};
+use hpk::testbed;
+use hpk::yamlkit::parse_one;
+use std::time::Instant;
+
+fn pod_manifest(name: &str) -> String {
+    format!(
+        "kind: Pod\nmetadata:\n  name: {name}\nspec:\n  containers:\n  - name: main\n    image: pause:3.9\n    resources:\n      requests:\n        cpu: 1\n        memory: 256Mi\n"
+    )
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    // ---- 1. pod-launch latency: HPK vs vanilla ----
+    println!("# E5.1: pod create -> Running latency (real ms, median of 20)");
+    let tb = testbed::deploy(4, 8);
+    let mut hpk_lat = Vec::new();
+    for i in 0..20 {
+        let name = format!("lat-{i}");
+        let t0 = Instant::now();
+        tb.cp.kubectl_apply(&pod_manifest(&name)).unwrap();
+        assert!(tb.cp.wait_until(30_000, |api| {
+            api.get("Pod", "default", &name)
+                .map(|p| object::pod_phase(&p) == "Running")
+                .unwrap_or(false)
+        }));
+        hpk_lat.push(t0.elapsed().as_secs_f64() * 1000.0);
+        tb.cp.api.delete("Pod", "default", &name).unwrap();
+        tb.cp.wait_until(10_000, |_| tb.cp.slurm.squeue().is_empty());
+    }
+    tb.shutdown();
+
+    let vb = testbed::deploy_vanilla(4, 8);
+    let mut van_lat = Vec::new();
+    for i in 0..20 {
+        let name = format!("lat-{i}");
+        let t0 = Instant::now();
+        vb.api.apply_manifest(&pod_manifest(&name)).unwrap();
+        assert!(vb.wait_until(30_000, |api| {
+            api.get("Pod", "default", &name)
+                .map(|p| object::pod_phase(&p) == "Running")
+                .unwrap_or(false)
+        }));
+        van_lat.push(t0.elapsed().as_secs_f64() * 1000.0);
+        vb.api.delete("Pod", "default", &name).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    vb.shutdown();
+    let h = median(hpk_lat);
+    let v = median(van_lat);
+    println!("{:<12} {:>10.1} ms", "hpk", h);
+    println!("{:<12} {:>10.1} ms", "vanilla", v);
+    println!("# hpk overhead: {:+.1} ms (translation + sbatch + slurm dispatch)\n", h - v);
+
+    // ---- 2. translation cost ----
+    println!("# E5.2: pod -> Slurm script translation microbench");
+    let pod = parse_one(&pod_manifest("micro")).unwrap();
+    let iters = 20_000;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let spec = translate::pod_to_jobspec(&pod).unwrap();
+        std::hint::black_box(&spec);
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "pod_to_jobspec: {:.1} us/op ({:.0} pods/s)\n",
+        per * 1e6,
+        1.0 / per
+    );
+
+    // ---- 3. API-server store throughput ----
+    println!("# E5.3: API server object throughput");
+    let api = hpk::kube::ApiServer::new();
+    let t0 = Instant::now();
+    let n = 5_000;
+    for i in 0..n {
+        api.create(parse_one(&pod_manifest(&format!("p-{i}"))).unwrap())
+            .unwrap();
+    }
+    let create_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let (events, complete) = api.events_since(0);
+    assert!(!complete || events.len() <= n as usize);
+    let list = api.list("Pod");
+    assert_eq!(list.len(), n as usize);
+    let list_s = t0.elapsed().as_secs_f64();
+    // Deep-copy list vs shared-snapshot list (the controller hot path;
+    // reconcilers were switched to list_refs in the perf pass).
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        std::hint::black_box(api.list("Pod"));
+    }
+    let deep = t0.elapsed().as_secs_f64() / 20.0;
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        std::hint::black_box(api.list_refs("Pod"));
+    }
+    let arc = t0.elapsed().as_secs_f64() / 20.0;
+    println!(
+        "create: {:.0} obj/s   list+watch drain of {}: {:.1} ms",
+        n as f64 / create_s,
+        n,
+        list_s * 1000.0
+    );
+    println!(
+        "list({n} pods): deep-copy {:.2} ms vs arc-snapshot {:.3} ms ({:.0}x)\n",
+        deep * 1000.0,
+        arc * 1000.0,
+        deep / arc.max(1e-9)
+    );
+
+    // ---- 4. scheduler throughput (pass-through + kubelet + slurm) ----
+    println!("# E5.4: pod throughput, 120 short pods on 4x8 cpus");
+    let tb = testbed::deploy(4, 8);
+    let t0 = Instant::now();
+    let mut manifest = String::new();
+    for i in 0..120 {
+        manifest.push_str(&format!(
+            "kind: Pod\nmetadata:\n  name: burst-{i}\nspec:\n  containers:\n  - name: main\n    image: busybox:latest\n    command: [\"true\"]\n---\n"
+        ));
+    }
+    tb.cp.kubectl_apply(&manifest).unwrap();
+    assert!(tb.cp.wait_until(120_000, |api| {
+        api.list("Pod")
+            .iter()
+            .filter(|p| object::pod_phase(p) == "Succeeded")
+            .count()
+            == 120
+    }));
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "120 pods completed in {:.2} s ({:.1} pods/s); sched passes: {}\n",
+        dt,
+        120.0 / dt,
+        tb.cp.slurm.sched_passes()
+    );
+    tb.shutdown();
+
+    // ---- 5. ablation: EASY backfill on/off ----
+    // Dedicated Slurm instance with a sleeping executor (testbed's
+    // Apptainer executor ignores plain batch scripts).
+    println!("# E5.5: Slurm backfill ablation (mixed job sizes)");
+    struct SleepExec;
+    impl hpk::slurm::JobExecutor for SleepExec {
+        fn execute(&self, ctx: &hpk::slurm::JobContext) -> Result<(), String> {
+            let ms: u64 = ctx.spec.script.trim().parse().unwrap_or(0);
+            let t0 = ctx.clock.now_ms();
+            while ctx.clock.now_ms() - t0 < ms {
+                if ctx.cancel.is_cancelled() {
+                    return Err("cancelled".to_string());
+                }
+                ctx.clock.tick();
+            }
+            Ok(())
+        }
+    }
+    for backfill in [true, false] {
+        let cluster = hpk::hpcsim::Cluster::new(hpk::hpcsim::ClusterSpec::uniform(1, 4, 16));
+        let slurm = hpk::slurm::Slurmctld::start(
+            cluster,
+            std::sync::Arc::new(SleepExec),
+            SlurmConfig { backfill, ..SlurmConfig::default() },
+        );
+        // wide-a holds 3/4 cpus for 20k sim ms; wide-b (4 cpus) blocks
+        // behind it; 4 narrow 1-cpu jobs can only jump with backfill.
+        let _a = slurm
+            .submit(
+                JobSpec::new("wide-a")
+                    .with_tasks(1, 3, 1 << 20)
+                    .with_script("20000")
+                    .with_time_limit_ms(30_000),
+            )
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let b = slurm
+            .submit(
+                JobSpec::new("wide-b")
+                    .with_tasks(1, 4, 1 << 20)
+                    .with_script("20000")
+                    .with_time_limit_ms(30_000),
+            )
+            .unwrap();
+        let mut narrow = Vec::new();
+        for i in 0..4 {
+            narrow.push(
+                slurm
+                    .submit(
+                        JobSpec::new(&format!("narrow-{i}"))
+                            .with_tasks(1, 1, 1 << 20)
+                            .with_script("1000")
+                            .with_time_limit_ms(2_000),
+                    )
+                    .unwrap(),
+            );
+        }
+        let t0 = Instant::now();
+        for id in &narrow {
+            slurm.wait_terminal(*id, 60_000).expect("narrow finished");
+        }
+        let narrow_done = t0.elapsed().as_secs_f64() * 1000.0;
+        slurm.wait_terminal(b, 60_000).expect("b finished");
+        println!(
+            "backfill={:<5}  4 narrow 1-cpu jobs done after {:>6.0} real ms (wide queue blocked: {})",
+            backfill,
+            narrow_done,
+            if backfill { "jumped" } else { "waited" }
+        );
+        slurm.shutdown();
+    }
+    println!("# expectation: backfill=true completes narrow jobs ~immediately; false waits for the wide queue");
+}

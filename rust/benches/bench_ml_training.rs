@@ -1,0 +1,134 @@
+//! E4 (SS4.3): distributed training scaling + L2 fusion ablation.
+//!
+//! Worker sweep {1, 2, 4} on TFJob/mlp-small: aggregate samples/sec and
+//! final loss. Expected shape: throughput grows with workers until the
+//! (serialized, single-CPU-device) PJRT executions dominate; loss
+//! decreases in all configurations and is *identical across workers
+//! within a configuration* (synchronous semantics).
+//!
+//! Ablation: the fused `train_step` artifact (fwd+bwd+SGD in one HLO)
+//! vs `grad_step` + coordinator-side update — the L2 fusion choice
+//! DESIGN.md SS5 calls out.
+//!
+//! Run: `cargo bench --bench bench_ml_training`
+
+use hpk::operators::training::operator::tfjob_manifest;
+use hpk::runtime::{PjrtRuntime, Tensor};
+use hpk::testbed;
+use hpk::workloads::{dataset, trainer};
+use std::time::Instant;
+
+const STEPS: u64 = 40;
+const WORKER_SWEEP: &[usize] = &[1, 2, 4];
+
+fn main() {
+    let Ok(rt) = PjrtRuntime::open(&hpk::runtime::artifacts_dir()) else {
+        println!("artifacts not built; run `make artifacts` first");
+        return;
+    };
+    let batch = rt.manifest_i64("train_batch").unwrap() as usize;
+
+    println!("# E4: TFJob worker sweep (mlp-small, {STEPS} steps, batch {batch}/worker)");
+    println!(
+        "{:>8} {:>12} {:>16} {:>12} {:>12}",
+        "workers", "wall_ms", "samples_per_s", "first_loss", "final_loss"
+    );
+    for &w in WORKER_SWEEP {
+        let tb = testbed::deploy(4, 8);
+        let t0 = Instant::now();
+        tb.cp
+            .kubectl_apply(&tfjob_manifest(
+                "sweep",
+                "default",
+                "mlp-small",
+                w,
+                STEPS,
+                0.15,
+                "/home/user/models/sweep",
+            ))
+            .unwrap();
+        assert!(
+            tb.cp.wait_until(600_000, |api| {
+                api.get("TFJob", "default", "sweep")
+                    .ok()
+                    .and_then(|j| j.str_at("status.state").map(|s| s == "Succeeded"))
+                    .unwrap_or(false)
+            }),
+            "workers={w}"
+        );
+        let wall = t0.elapsed();
+        let csv = tb.cp.fs.read_str("/home/user/models/sweep/loss.csv").unwrap();
+        let losses: Vec<f32> = csv
+            .lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(1)?.parse().ok())
+            .collect();
+        let samples = STEPS as f64 * w as f64 * batch as f64;
+        println!(
+            "{:>8} {:>12} {:>16.0} {:>12.4} {:>12.4}",
+            w,
+            wall.as_millis(),
+            samples / wall.as_secs_f64(),
+            losses.first().unwrap(),
+            losses.last().unwrap()
+        );
+        tb.shutdown();
+    }
+    println!("# expectation: samples/s grows with workers until the single CPU PJRT device saturates");
+
+    // ---- L2 fusion ablation: fused train_step vs grad_step+update ----
+    println!("\n# L2 ablation: fused train_step vs grad_step + host update (1 worker, {STEPS} steps)");
+    rt.load("train_step_mlp-small").unwrap();
+    rt.load("grad_step_mlp-small").unwrap();
+    let lr = 0.15f32;
+    let (x, y) = dataset::synthetic_batch(batch, 0);
+
+    let mut params = trainer::init_params_rust("mlp-small", 7);
+    let t = Instant::now();
+    for _ in 0..STEPS {
+        let mut inputs = params.clone();
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        inputs.push(Tensor::scalar_f32(lr));
+        let out = rt.call("train_step_mlp-small", &inputs).unwrap();
+        params = out[..out.len() - 1].to_vec();
+    }
+    let fused = t.elapsed();
+    let loss_fused = {
+        let mut inputs = params.clone();
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        inputs.push(Tensor::scalar_f32(lr));
+        rt.call("train_step_mlp-small", &inputs).unwrap()
+            .last()
+            .unwrap()
+            .as_f32()[0]
+    };
+
+    let mut params = trainer::init_params_rust("mlp-small", 7);
+    let t = Instant::now();
+    for _ in 0..STEPS {
+        let mut inputs = params.clone();
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        let out = rt.call("grad_step_mlp-small", &inputs).unwrap();
+        for (p, g) in params.iter_mut().zip(&out[..out.len() - 1]) {
+            p.sgd_update(g, lr).unwrap();
+        }
+    }
+    let split = t.elapsed();
+    println!(
+        "{:<28} {:>10.1} ms   ({:.1} steps/s, loss after: {:.4})",
+        "fused train_step",
+        fused.as_secs_f64() * 1000.0,
+        STEPS as f64 / fused.as_secs_f64(),
+        loss_fused
+    );
+    println!(
+        "{:<28} {:>10.1} ms   ({:.1} steps/s)",
+        "grad_step + host update",
+        split.as_secs_f64() * 1000.0,
+        STEPS as f64 / split.as_secs_f64()
+    );
+    println!("# expectation: fused avoids one host round-trip of the full parameter set per step");
+}

@@ -1,0 +1,120 @@
+//! E1 (SS4.1, Listing 1): Spark TPC-DS executor sweep, HPK vs the
+//! regular-Cloud Kubernetes baseline.
+//!
+//! The paper's observable: the *same* SparkApplication YAML runs
+//! unchanged on both platforms, and the executor-count knob controls
+//! parallelism. Expected shape: makespan decreases with executors on
+//! both platforms; HPK tracks the baseline within a queueing-delay
+//! constant (Slurm submission + dispatch).
+//!
+//! Run: `cargo bench --bench bench_spark_tpcds`
+
+use hpk::operators::spark::operator::spark_application_manifest;
+use hpk::testbed;
+use std::time::Instant;
+
+const SCALE: usize = 8;
+const PARTITIONS: usize = 16;
+const EXECUTOR_SWEEP: &[i64] = &[1, 2, 3, 4, 8];
+
+fn wait_state_hpk(tb: &testbed::Testbed, name: &str) -> bool {
+    tb.cp.wait_until(180_000, |api| {
+        api.get("SparkApplication", "default", name)
+            .ok()
+            .and_then(|a| {
+                a.str_at("status.applicationState.state")
+                    .map(|s| s == "COMPLETED")
+            })
+            .unwrap_or(false)
+    })
+}
+
+fn wait_state_vanilla(vb: &testbed::VanillaBed, name: &str) -> bool {
+    vb.wait_until(180_000, |api| {
+        api.get("SparkApplication", "default", name)
+            .ok()
+            .and_then(|a| {
+                a.str_at("status.applicationState.state")
+                    .map(|s| s == "COMPLETED")
+            })
+            .unwrap_or(false)
+    })
+}
+
+fn main() {
+    println!("# E1: Spark TPC-DS executor sweep (sf={SCALE}, {PARTITIONS} partitions)");
+    println!("# paper: SS4.1 / Listing 1 — same YAML on Cloud K8s and HPK");
+    println!(
+        "{:<10} {:>10} {:>14} {:>14}",
+        "platform", "executors", "datagen_ms", "benchmark_ms"
+    );
+
+    for &execs in EXECUTOR_SWEEP {
+        // ---------- HPK ----------
+        let tb = testbed::deploy(4, 8);
+        tb.install_minio("spark-k8s-data").expect("minio");
+        let t0 = Instant::now();
+        tb.cp
+            .kubectl_apply(&spark_application_manifest(
+                "gen", "default", "datagen", SCALE, PARTITIONS, "", execs, 1, "1Gi",
+            ))
+            .unwrap();
+        assert!(wait_state_hpk(&tb, "gen"), "hpk datagen e={execs}");
+        let datagen_ms = t0.elapsed().as_millis();
+        let t1 = Instant::now();
+        tb.cp
+            .kubectl_apply(&spark_application_manifest(
+                "bench",
+                "default",
+                "benchmark",
+                SCALE,
+                PARTITIONS,
+                "q3,q55,q7",
+                execs,
+                1,
+                "1Gi",
+            ))
+            .unwrap();
+        assert!(wait_state_hpk(&tb, "bench"), "hpk bench e={execs}");
+        let bench_ms = t1.elapsed().as_millis();
+        println!(
+            "{:<10} {:>10} {:>14} {:>14}",
+            "hpk", execs, datagen_ms, bench_ms
+        );
+        tb.shutdown();
+
+        // ---------- vanilla Kubernetes baseline ----------
+        let vb = testbed::deploy_vanilla(4, 8);
+        vb.install_minio("spark-k8s-data").expect("minio");
+        let t0 = Instant::now();
+        vb.api
+            .apply_manifest(&spark_application_manifest(
+                "gen", "default", "datagen", SCALE, PARTITIONS, "", execs, 1, "1Gi",
+            ))
+            .unwrap();
+        assert!(wait_state_vanilla(&vb, "gen"), "vanilla datagen e={execs}");
+        let datagen_ms = t0.elapsed().as_millis();
+        let t1 = Instant::now();
+        vb.api
+            .apply_manifest(&spark_application_manifest(
+                "bench",
+                "default",
+                "benchmark",
+                SCALE,
+                PARTITIONS,
+                "q3,q55,q7",
+                execs,
+                1,
+                "1Gi",
+            ))
+            .unwrap();
+        assert!(wait_state_vanilla(&vb, "bench"), "vanilla bench e={execs}");
+        let bench_ms = t1.elapsed().as_millis();
+        println!(
+            "{:<10} {:>10} {:>14} {:>14}",
+            "vanilla", execs, datagen_ms, bench_ms
+        );
+        vb.shutdown();
+    }
+    println!("# expectation: makespan decreases with executors on both; hpk ~= vanilla + queueing constant");
+}

@@ -1,0 +1,149 @@
+//! Flannel-style CNI: per-node /24 pod subnets under 10.244.0.0/16.
+//!
+//! The paper's evaluation installs "Apptainer with the Flannel CNI
+//! plugin ... to distribute private IPs to container instances and
+//! manage routes across nodes" (SS4). This reproduces the allocation
+//! semantics: each node gets a disjoint /24; pod IPs are unique
+//! cluster-wide; releasing an IP makes it reusable.
+
+use std::collections::HashMap;
+use std::net::Ipv4Addr;
+use std::sync::Mutex;
+
+struct NodeSubnet {
+    subnet: u8,
+    /// Host-part usage bitmap, indices 2..=254 usable (.0 net, .1
+    /// gateway, .255 broadcast).
+    used: [bool; 256],
+}
+
+/// Cluster-wide IP allocator.
+pub struct Flannel {
+    base: (u8, u8),
+    inner: Mutex<FlannelInner>,
+}
+
+#[derive(Default)]
+struct FlannelInner {
+    nodes: HashMap<String, NodeSubnet>,
+    next_subnet: u8,
+}
+
+impl Default for Flannel {
+    fn default() -> Flannel {
+        Flannel::new()
+    }
+}
+
+impl Flannel {
+    /// The conventional flannel pod CIDR 10.244.0.0/16.
+    pub fn new() -> Flannel {
+        Flannel { base: (10, 244), inner: Mutex::new(FlannelInner::default()) }
+    }
+
+    /// Allocate a pod IP on `node`, registering the node's subnet on
+    /// first use. Returns `None` when the node's /24 (253 pods) or the
+    /// /16 (256 nodes) is exhausted.
+    pub fn allocate(&self, node: &str) -> Option<Ipv4Addr> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.nodes.contains_key(node) {
+            let subnet = inner.next_subnet;
+            inner.next_subnet = inner.next_subnet.checked_add(1)?;
+            inner.nodes.insert(
+                node.to_string(),
+                NodeSubnet { subnet, used: [false; 256] },
+            );
+        }
+        let ns = inner.nodes.get_mut(node).unwrap();
+        for host in 2..=254u16 {
+            if !ns.used[host as usize] {
+                ns.used[host as usize] = true;
+                return Some(Ipv4Addr::new(
+                    self.base.0,
+                    self.base.1,
+                    ns.subnet,
+                    host as u8,
+                ));
+            }
+        }
+        None
+    }
+
+    /// Release a previously allocated IP (idempotent).
+    pub fn release(&self, ip: Ipv4Addr) {
+        let [a, b, subnet, host] = ip.octets();
+        if (a, b) != self.base {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for ns in inner.nodes.values_mut() {
+            if ns.subnet == subnet {
+                ns.used[host as usize] = false;
+                return;
+            }
+        }
+    }
+
+    /// The /24 assigned to a node, if registered.
+    pub fn node_subnet(&self, node: &str) -> Option<Ipv4Addr> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .nodes
+            .get(node)
+            .map(|ns| Ipv4Addr::new(self.base.0, self.base.1, ns.subnet, 0))
+    }
+
+    /// Number of live allocations (for leak tests).
+    pub fn live_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .nodes
+            .values()
+            .map(|ns| ns.used.iter().filter(|u| **u).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_node_subnets_disjoint() {
+        let f = Flannel::new();
+        let a = f.allocate("n1").unwrap();
+        let b = f.allocate("n2").unwrap();
+        assert_ne!(a.octets()[2], b.octets()[2]);
+        assert_eq!(f.node_subnet("n1").unwrap().octets()[3], 0);
+    }
+
+    #[test]
+    fn ips_unique_and_reusable() {
+        let f = Flannel::new();
+        let a = f.allocate("n1").unwrap();
+        let b = f.allocate("n1").unwrap();
+        assert_ne!(a, b);
+        f.release(a);
+        let c = f.allocate("n1").unwrap();
+        assert_eq!(a, c, "released IP is reused first");
+    }
+
+    #[test]
+    fn subnet_exhaustion() {
+        let f = Flannel::new();
+        let mut got = Vec::new();
+        for _ in 0..253 {
+            got.push(f.allocate("n1").unwrap());
+        }
+        assert!(f.allocate("n1").is_none());
+        f.release(got[100]);
+        assert!(f.allocate("n1").is_some());
+    }
+
+    #[test]
+    fn release_foreign_ip_is_noop() {
+        let f = Flannel::new();
+        f.release(Ipv4Addr::new(192, 168, 1, 1));
+        assert_eq!(f.live_count(), 0);
+    }
+}

@@ -1,0 +1,111 @@
+//! In-process "network": binds (ip, port) to service endpoint objects.
+//!
+//! The reproduction has no real sockets; services (MinIO, inference
+//! servers, Spark drivers) bind typed endpoint objects here, and clients
+//! that resolved a pod IP through CoreDNS connect by address. This keeps
+//! the paper's service-discovery semantics observable: a headless
+//! service only works if DNS hands out pod IPs that are actually bound.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::net::Ipv4Addr;
+use std::sync::{Arc, Mutex};
+
+type Endpoint = Arc<dyn Any + Send + Sync>;
+
+/// Cluster-wide endpoint table; cheap to clone.
+#[derive(Clone, Default)]
+pub struct NetFabric {
+    inner: Arc<Mutex<HashMap<(Ipv4Addr, u16), Endpoint>>>,
+}
+
+impl NetFabric {
+    pub fn new() -> NetFabric {
+        NetFabric::default()
+    }
+
+    /// Bind a service object at `(ip, port)`. Returns false if the
+    /// address is already bound (EADDRINUSE).
+    pub fn bind<T: Any + Send + Sync>(
+        &self,
+        ip: Ipv4Addr,
+        port: u16,
+        service: Arc<T>,
+    ) -> bool {
+        let mut map = self.inner.lock().unwrap();
+        if map.contains_key(&(ip, port)) {
+            return false;
+        }
+        map.insert((ip, port), service);
+        true
+    }
+
+    /// Connect to `(ip, port)`, downcasting to the expected service type.
+    pub fn connect<T: Any + Send + Sync>(
+        &self,
+        ip: Ipv4Addr,
+        port: u16,
+    ) -> Option<Arc<T>> {
+        let map = self.inner.lock().unwrap();
+        map.get(&(ip, port)).cloned()?.downcast::<T>().ok()
+    }
+
+    /// Whether anything is bound at the address (port probe).
+    pub fn is_bound(&self, ip: Ipv4Addr, port: u16) -> bool {
+        self.inner.lock().unwrap().contains_key(&(ip, port))
+    }
+
+    /// Remove a binding (idempotent). All bindings for an IP can be
+    /// cleared when its pod dies via [`NetFabric::unbind_ip`].
+    pub fn unbind(&self, ip: Ipv4Addr, port: u16) {
+        self.inner.lock().unwrap().remove(&(ip, port));
+    }
+
+    /// Drop every port bound on `ip` (pod teardown).
+    pub fn unbind_ip(&self, ip: Ipv4Addr) {
+        self.inner.lock().unwrap().retain(|(bip, _), _| *bip != ip);
+    }
+
+    pub fn bound_count(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo(&'static str);
+
+    #[test]
+    fn bind_connect_typed() {
+        let fab = NetFabric::new();
+        let ip = Ipv4Addr::new(10, 244, 0, 2);
+        assert!(fab.bind(ip, 9000, Arc::new(Echo("minio"))));
+        let svc: Arc<Echo> = fab.connect(ip, 9000).unwrap();
+        assert_eq!(svc.0, "minio");
+        // Wrong type downcasts to None.
+        assert!(fab.connect::<String>(ip, 9000).is_none());
+        // Wrong port.
+        assert!(fab.connect::<Echo>(ip, 9001).is_none());
+    }
+
+    #[test]
+    fn double_bind_rejected() {
+        let fab = NetFabric::new();
+        let ip = Ipv4Addr::new(10, 244, 0, 2);
+        assert!(fab.bind(ip, 80, Arc::new(Echo("a"))));
+        assert!(!fab.bind(ip, 80, Arc::new(Echo("b"))));
+    }
+
+    #[test]
+    fn unbind_ip_clears_all_ports() {
+        let fab = NetFabric::new();
+        let ip = Ipv4Addr::new(10, 244, 0, 3);
+        fab.bind(ip, 1, Arc::new(Echo("x")));
+        fab.bind(ip, 2, Arc::new(Echo("y")));
+        fab.bind(Ipv4Addr::new(10, 244, 0, 4), 1, Arc::new(Echo("z")));
+        fab.unbind_ip(ip);
+        assert_eq!(fab.bound_count(), 1);
+    }
+}

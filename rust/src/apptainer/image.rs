@@ -1,0 +1,160 @@
+//! Container image registry with per-node pull cache.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+use crate::hpcsim::Clock;
+
+/// A registered image. The `entrypoint_key` selects the Rust closure in
+/// [`super::EntrypointTable`] that simulates the container's payload
+/// (when `args` don't override it).
+#[derive(Debug, Clone)]
+pub struct ImageSpec {
+    /// Full reference, e.g. `minio/minio:latest`.
+    pub reference: String,
+    /// Key into the entrypoint table.
+    pub entrypoint_key: String,
+    /// Image-baked environment (overridable per container).
+    pub env: Vec<(String, String)>,
+    /// Compressed size; drives the simulated first-pull latency.
+    pub size_bytes: u64,
+    /// Whether the payload assumes uid 0 (common Docker images); such
+    /// images require the runtime's fakeroot capability.
+    pub needs_root: bool,
+}
+
+impl ImageSpec {
+    pub fn new(reference: &str, entrypoint_key: &str) -> ImageSpec {
+        ImageSpec {
+            reference: reference.to_string(),
+            entrypoint_key: entrypoint_key.to_string(),
+            env: Vec::new(),
+            size_bytes: 50 << 20,
+            needs_root: false,
+        }
+    }
+
+    pub fn with_env(mut self, k: &str, v: &str) -> ImageSpec {
+        self.env.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn with_size(mut self, bytes: u64) -> ImageSpec {
+        self.size_bytes = bytes;
+        self
+    }
+
+    pub fn root(mut self) -> ImageSpec {
+        self.needs_root = true;
+        self
+    }
+}
+
+/// Image store + per-node pulled cache.
+#[derive(Default)]
+pub struct ImageRegistry {
+    images: Mutex<HashMap<String, ImageSpec>>,
+    pulled: Mutex<HashSet<(String, String)>>, // (node, reference)
+}
+
+/// Simulated pull throughput: bytes per simulated millisecond.
+const PULL_BYTES_PER_SIM_MS: u64 = 10 << 20;
+
+impl ImageRegistry {
+    pub fn new() -> ImageRegistry {
+        ImageRegistry::default()
+    }
+
+    pub fn register(&self, spec: ImageSpec) {
+        self.images
+            .lock()
+            .unwrap()
+            .insert(spec.reference.clone(), spec);
+    }
+
+    /// Resolve a reference; `name` (no tag) falls back to `name:latest`.
+    pub fn resolve(&self, reference: &str) -> Option<ImageSpec> {
+        let images = self.images.lock().unwrap();
+        images.get(reference).cloned().or_else(|| {
+            if reference.contains(':') {
+                None
+            } else {
+                images.get(&format!("{reference}:latest")).cloned()
+            }
+        })
+    }
+
+    /// Ensure the image is present on `node`, paying the simulated pull
+    /// cost on first use (Apptainer's SIF cache behaviour).
+    pub fn ensure_pulled(&self, node: &str, reference: &str, clock: &Clock) -> Result<ImageSpec, String> {
+        let spec = self
+            .resolve(reference)
+            .ok_or_else(|| format!("image not found: {reference}"))?;
+        let key = (node.to_string(), spec.reference.clone());
+        {
+            let pulled = self.pulled.lock().unwrap();
+            if pulled.contains(&key) {
+                return Ok(spec);
+            }
+        }
+        // Pull outside the lock; mark afterwards (duplicate pulls are
+        // harmless, like concurrent `apptainer pull`s).
+        clock.sleep_sim(spec.size_bytes / PULL_BYTES_PER_SIM_MS);
+        self.pulled.lock().unwrap().insert(key);
+        Ok(spec)
+    }
+
+    /// Whether a node already has the image (no pull cost).
+    pub fn is_pulled(&self, node: &str, reference: &str) -> bool {
+        self.pulled
+            .lock()
+            .unwrap()
+            .contains(&(node.to_string(), reference.to_string()))
+    }
+
+    pub fn image_count(&self) -> usize {
+        self.images.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_resolve_latest_fallback() {
+        let reg = ImageRegistry::new();
+        reg.register(ImageSpec::new("busybox:latest", "busybox"));
+        assert!(reg.resolve("busybox:latest").is_some());
+        assert!(reg.resolve("busybox").is_some());
+        assert!(reg.resolve("busybox:1.0").is_none());
+        assert!(reg.resolve("nginx").is_none());
+    }
+
+    #[test]
+    fn pull_cached_per_node() {
+        let reg = ImageRegistry::new();
+        reg.register(ImageSpec::new("a:1", "a").with_size(1 << 20));
+        let clock = Clock::new(1000);
+        assert!(!reg.is_pulled("n1", "a:1"));
+        reg.ensure_pulled("n1", "a:1", &clock).unwrap();
+        assert!(reg.is_pulled("n1", "a:1"));
+        assert!(!reg.is_pulled("n2", "a:1"));
+        reg.ensure_pulled("n2", "a:1", &clock).unwrap();
+        assert!(reg.is_pulled("n2", "a:1"));
+    }
+
+    #[test]
+    fn missing_image_errors() {
+        let reg = ImageRegistry::new();
+        let clock = Clock::new(1000);
+        assert!(reg.ensure_pulled("n1", "ghost:9", &clock).is_err());
+    }
+
+    #[test]
+    fn builder_flags() {
+        let s = ImageSpec::new("x:1", "x").with_env("A", "1").root();
+        assert!(s.needs_root);
+        assert_eq!(s.env[0].0, "A");
+    }
+}

@@ -1,0 +1,35 @@
+//! Singularity/Apptainer container-runtime simulator + Flannel CNI.
+//!
+//! HPK executes every pod as Apptainer container instances inside a
+//! Slurm job (SS3). The runtime features HPK relies on, all reproduced
+//! here at the interface level:
+//!
+//! - **image handling** — a registry of image references whose
+//!   "entrypoints" are Rust closures (our stand-in for container
+//!   payloads), with one-time per-node pull latency ([`ImageRegistry`]).
+//! - **fakeroot** — the configuration HPK requires so Docker images that
+//!   assume uid 0 run unprivileged; enforced as a per-runtime capability
+//!   bit, and containers that declare `needs_root` fail without it.
+//! - **CNI networking** — Apptainer delegates pod addressing to a
+//!   cluster-wide Flannel: per-node `/24` subnets under `10.244.0.0/16`
+//!   ([`Flannel`]).
+//! - **pod network topology** — hpk-kubelet's parent/child embedding:
+//!   the *parent* container owns the pod IP; child containers join its
+//!   network context and share `localhost` ([`NetContext`]).
+//! - **a connection fabric** — [`NetFabric`] binds `(ip, port)` pairs to
+//!   in-process service endpoints so that DNS-resolved addresses are
+//!   actually connectable (how MinIO, parameter servers and inference
+//!   services talk in the reproduction).
+
+mod cni;
+mod fabric;
+mod image;
+mod runtime;
+
+pub use cni::Flannel;
+pub use fabric::NetFabric;
+pub use image::{ImageRegistry, ImageSpec};
+pub use runtime::{
+    ApptainerRuntime, ContainerCtx, Entrypoint, EntrypointTable, NetContext,
+    ServiceHub,
+};

@@ -1,0 +1,333 @@
+//! The container runtime: pod sandboxes, fakeroot, entrypoint dispatch.
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::net::Ipv4Addr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{Flannel, ImageRegistry, NetFabric};
+use crate::hpcsim::Clock;
+use crate::slurm::CancelToken;
+use crate::virtfs::VirtFs;
+
+/// A pod's shared network context: the "parent" container owns the IP,
+/// children join it (the paper's embedded-container topology).
+#[derive(Debug, Clone)]
+pub struct NetContext {
+    pub ip: Ipv4Addr,
+    pub node: String,
+    /// Sandbox id (parent instance id).
+    pub sandbox_id: u64,
+}
+
+/// Type-map of in-process services available to entrypoints (the PJRT
+/// runtime, object-store handles, the kube API client for operators...).
+#[derive(Clone, Default)]
+pub struct ServiceHub {
+    map: Arc<Mutex<HashMap<TypeId, Arc<dyn Any + Send + Sync>>>>,
+}
+
+impl ServiceHub {
+    pub fn new() -> ServiceHub {
+        ServiceHub::default()
+    }
+
+    pub fn insert<T: Any + Send + Sync>(&self, svc: Arc<T>) {
+        self.map.lock().unwrap().insert(TypeId::of::<T>(), svc);
+    }
+
+    pub fn get<T: Any + Send + Sync>(&self) -> Option<Arc<T>> {
+        self.map
+            .lock()
+            .unwrap()
+            .get(&TypeId::of::<T>())
+            .cloned()?
+            .downcast::<T>()
+            .ok()
+    }
+
+    /// Like `get`, but with a workload-friendly error message.
+    pub fn expect<T: Any + Send + Sync>(&self, what: &str) -> Result<Arc<T>, String> {
+        self.get::<T>()
+            .ok_or_else(|| format!("service not available in hub: {what}"))
+    }
+}
+
+/// Everything an entrypoint closure sees — the container's world.
+pub struct ContainerCtx {
+    /// Image reference that launched this container.
+    pub image: String,
+    /// Command + args (entrypoint override when non-empty).
+    pub args: Vec<String>,
+    pub env: HashMap<String, String>,
+    /// Pod IP (shared with siblings in the same sandbox).
+    pub ip: Ipv4Addr,
+    pub node: String,
+    pub fs: VirtFs,
+    pub fabric: NetFabric,
+    pub cancel: CancelToken,
+    pub clock: Clock,
+    pub hub: ServiceHub,
+}
+
+impl ContainerCtx {
+    pub fn env_or(&self, key: &str, default: &str) -> String {
+        self.env.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn env_parsed<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.env.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// A container payload: returns the exit code.
+pub type Entrypoint = Arc<dyn Fn(&ContainerCtx) -> Result<i32, String> + Send + Sync>;
+
+/// Entrypoint registry, keyed by the image's `entrypoint_key`.
+#[derive(Clone, Default)]
+pub struct EntrypointTable {
+    map: Arc<Mutex<HashMap<String, Entrypoint>>>,
+}
+
+impl EntrypointTable {
+    pub fn new() -> EntrypointTable {
+        EntrypointTable::default()
+    }
+
+    pub fn register<F>(&self, key: &str, f: F)
+    where
+        F: Fn(&ContainerCtx) -> Result<i32, String> + Send + Sync + 'static,
+    {
+        self.map.lock().unwrap().insert(key.to_string(), Arc::new(f));
+    }
+
+    pub fn get(&self, key: &str) -> Option<Entrypoint> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+}
+
+/// The per-cluster Apptainer runtime.
+pub struct ApptainerRuntime {
+    pub registry: ImageRegistry,
+    pub table: EntrypointTable,
+    pub cni: Flannel,
+    pub fabric: NetFabric,
+    pub fs: VirtFs,
+    pub clock: Clock,
+    pub hub: ServiceHub,
+    /// Host-level configuration: whether admins enabled fakeroot (one of
+    /// the two host changes HPK requires, SS3).
+    pub fakeroot_allowed: bool,
+    next_id: AtomicU64,
+    running: Mutex<HashMap<u64, String>>, // instance id -> image
+}
+
+impl ApptainerRuntime {
+    pub fn new(fs: VirtFs, clock: Clock, fakeroot_allowed: bool) -> ApptainerRuntime {
+        ApptainerRuntime {
+            registry: ImageRegistry::new(),
+            table: EntrypointTable::new(),
+            cni: Flannel::new(),
+            fabric: NetFabric::new(),
+            fs,
+            clock,
+            hub: ServiceHub::new(),
+            fakeroot_allowed,
+            next_id: AtomicU64::new(1),
+            running: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Start a pod sandbox on `node`: allocates the pod IP via CNI and
+    /// creates the parent network context.
+    pub fn create_sandbox(&self, node: &str) -> Result<NetContext, String> {
+        let ip = self
+            .cni
+            .allocate(node)
+            .ok_or_else(|| format!("flannel: subnet exhausted on {node}"))?;
+        Ok(NetContext {
+            ip,
+            node: node.to_string(),
+            sandbox_id: self.next_id.fetch_add(1, Ordering::Relaxed),
+        })
+    }
+
+    /// Tear down a sandbox: release the IP and all fabric bindings.
+    pub fn destroy_sandbox(&self, net: &NetContext) {
+        self.fabric.unbind_ip(net.ip);
+        self.cni.release(net.ip);
+    }
+
+    /// Run one container synchronously inside a sandbox ("child"
+    /// containers share the sandbox's network context). Blocks until
+    /// the entrypoint returns; a non-zero exit code is an `Err`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_container(
+        &self,
+        net: &NetContext,
+        image_ref: &str,
+        args: &[String],
+        env: &[(String, String)],
+        fakeroot: bool,
+        cancel: CancelToken,
+    ) -> Result<(), String> {
+        let spec = self
+            .registry
+            .ensure_pulled(&net.node, image_ref, &self.clock)?;
+        if spec.needs_root && !fakeroot {
+            return Err(format!(
+                "image {image_ref} requires root; run with fakeroot"
+            ));
+        }
+        if fakeroot && !self.fakeroot_allowed {
+            return Err(
+                "fakeroot not permitted by host configuration (ask your \
+                 HPC admins to enable it in apptainer.conf)"
+                    .to_string(),
+            );
+        }
+        let entry = self.table.get(&spec.entrypoint_key).ok_or_else(|| {
+            format!("no entrypoint registered for key {}", spec.entrypoint_key)
+        })?;
+        let mut env_map: HashMap<String, String> =
+            spec.env.iter().cloned().collect();
+        for (k, v) in env {
+            env_map.insert(k.clone(), v.clone());
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.running
+            .lock()
+            .unwrap()
+            .insert(id, spec.reference.clone());
+        let ctx = ContainerCtx {
+            image: spec.reference.clone(),
+            args: args.to_vec(),
+            env: env_map,
+            ip: net.ip,
+            node: net.node.clone(),
+            fs: self.fs.clone(),
+            fabric: self.fabric.clone(),
+            cancel,
+            clock: self.clock.clone(),
+            hub: self.hub.clone(),
+        };
+        let result = entry(&ctx);
+        self.running.lock().unwrap().remove(&id);
+        match result {
+            Ok(0) => Ok(()),
+            Ok(code) => Err(format!("container exited with code {code}")),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Number of currently executing containers (instance list).
+    pub fn instance_count(&self) -> usize {
+        self.running.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apptainer::ImageSpec;
+
+    fn runtime() -> ApptainerRuntime {
+        let rt = ApptainerRuntime::new(VirtFs::new(), Clock::new(1000), true);
+        rt.registry.register(ImageSpec::new("echo:latest", "echo"));
+        rt.registry
+            .register(ImageSpec::new("rooty:latest", "echo").root());
+        rt.table.register("echo", |ctx| {
+            ctx.fs
+                .write_str("/out/echo.txt", &ctx.args.join(" "))
+                .map_err(|e| e.to_string())?;
+            Ok(0)
+        });
+        rt
+    }
+
+    #[test]
+    fn sandbox_run_teardown() {
+        let rt = runtime();
+        let net = rt.create_sandbox("n1").unwrap();
+        rt.run_container(
+            &net,
+            "echo:latest",
+            &["hello".to_string(), "world".to_string()],
+            &[],
+            false,
+            CancelToken::new(),
+        )
+        .unwrap();
+        assert_eq!(rt.fs.read_str("/out/echo.txt").unwrap(), "hello world");
+        rt.destroy_sandbox(&net);
+        assert_eq!(rt.cni.live_count(), 0);
+    }
+
+    #[test]
+    fn root_image_needs_fakeroot() {
+        let rt = runtime();
+        let net = rt.create_sandbox("n1").unwrap();
+        let err = rt
+            .run_container(&net, "rooty:latest", &[], &[], false, CancelToken::new())
+            .unwrap_err();
+        assert!(err.contains("requires root"));
+        rt.run_container(&net, "rooty:latest", &[], &[], true, CancelToken::new())
+            .unwrap();
+    }
+
+    #[test]
+    fn fakeroot_requires_host_opt_in() {
+        let rt = ApptainerRuntime::new(VirtFs::new(), Clock::new(1000), false);
+        rt.registry.register(ImageSpec::new("x:1", "x"));
+        rt.table.register("x", |_| Ok(0));
+        let net = rt.create_sandbox("n1").unwrap();
+        let err = rt
+            .run_container(&net, "x:1", &[], &[], true, CancelToken::new())
+            .unwrap_err();
+        assert!(err.contains("not permitted"));
+    }
+
+    #[test]
+    fn env_layering_image_then_overrides() {
+        let rt = ApptainerRuntime::new(VirtFs::new(), Clock::new(1000), true);
+        rt.registry
+            .register(ImageSpec::new("envy:1", "envy").with_env("A", "img").with_env("B", "img"));
+        rt.table.register("envy", |ctx| {
+            assert_eq!(ctx.env.get("A").unwrap(), "pod");
+            assert_eq!(ctx.env.get("B").unwrap(), "img");
+            Ok(0)
+        });
+        let net = rt.create_sandbox("n1").unwrap();
+        rt.run_container(
+            &net,
+            "envy:1",
+            &[],
+            &[("A".to_string(), "pod".to_string())],
+            false,
+            CancelToken::new(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn nonzero_exit_is_error() {
+        let rt = ApptainerRuntime::new(VirtFs::new(), Clock::new(1000), true);
+        rt.registry.register(ImageSpec::new("fail:1", "fail"));
+        rt.table.register("fail", |_| Ok(3));
+        let net = rt.create_sandbox("n1").unwrap();
+        let err = rt
+            .run_container(&net, "fail:1", &[], &[], false, CancelToken::new())
+            .unwrap_err();
+        assert!(err.contains("code 3"));
+    }
+
+    #[test]
+    fn hub_typed_services() {
+        let hub = ServiceHub::new();
+        hub.insert(Arc::new(42u64));
+        assert_eq!(*hub.get::<u64>().unwrap(), 42);
+        assert!(hub.get::<String>().is_none());
+        assert!(hub.expect::<String>("thing").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! HPC cluster hardware model: nodes, resources, virtual time, failures.
+//!
+//! Stands in for the AWS ParallelCluster testbed of SS4. The Slurm
+//! simulator allocates against these nodes; the Apptainer runtime "runs"
+//! containers on them; Flannel hands out per-node pod subnets.
+
+mod clock;
+mod node;
+
+pub use clock::Clock;
+pub use node::{Node, NodeState, Resources};
+
+use std::sync::{Arc, Mutex};
+
+/// Static description of one node type.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub cpus: u32,
+    pub memory_bytes: u64,
+}
+
+/// Cluster-wide configuration (paper SS4: login node + compute nodes).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+    /// Virtual-time scale: how many simulated milliseconds elapse per
+    /// real millisecond of sleeping (compute work always runs for real).
+    pub time_scale: u64,
+}
+
+impl ClusterSpec {
+    /// A uniform cluster of `n` nodes with `cpus` cores each.
+    pub fn uniform(n: usize, cpus: u32, memory_gib: u64) -> ClusterSpec {
+        ClusterSpec {
+            name: "hpc".to_string(),
+            nodes: (0..n)
+                .map(|i| NodeSpec {
+                    name: format!("node{:02}", i + 1),
+                    cpus,
+                    memory_bytes: memory_gib << 30,
+                })
+                .collect(),
+            time_scale: 100,
+        }
+    }
+}
+
+/// The simulated cluster: shared node table + clock.
+#[derive(Clone)]
+pub struct Cluster {
+    pub clock: Clock,
+    nodes: Arc<Mutex<Vec<Node>>>,
+    pub spec: ClusterSpec,
+}
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec) -> Cluster {
+        let nodes = spec
+            .nodes
+            .iter()
+            .map(|ns| Node::new(&ns.name, ns.cpus, ns.memory_bytes))
+            .collect();
+        Cluster {
+            clock: Clock::new(spec.time_scale),
+            nodes: Arc::new(Mutex::new(nodes)),
+            spec,
+        }
+    }
+
+    /// Run `f` with the node table locked.
+    pub fn with_nodes<R>(&self, f: impl FnOnce(&mut Vec<Node>) -> R) -> R {
+        let mut nodes = self.nodes.lock().unwrap();
+        f(&mut nodes)
+    }
+
+    pub fn node_names(&self) -> Vec<String> {
+        self.with_nodes(|ns| ns.iter().map(|n| n.name.clone()).collect())
+    }
+
+    /// Total and free CPU across up nodes.
+    pub fn cpu_summary(&self) -> (u32, u32) {
+        self.with_nodes(|ns| {
+            let mut total = 0;
+            let mut free = 0;
+            for n in ns.iter() {
+                if n.state == NodeState::Up {
+                    total += n.resources.cpus;
+                    free += n.free_cpus();
+                }
+            }
+            (total, free)
+        })
+    }
+
+    /// Mark a node down (failure injection); returns false if unknown.
+    pub fn fail_node(&self, name: &str) -> bool {
+        self.with_nodes(|ns| {
+            for n in ns.iter_mut() {
+                if n.name == name {
+                    n.state = NodeState::Down;
+                    return true;
+                }
+            }
+            false
+        })
+    }
+
+    /// Bring a failed node back.
+    pub fn restore_node(&self, name: &str) -> bool {
+        self.with_nodes(|ns| {
+            for n in ns.iter_mut() {
+                if n.name == name {
+                    n.state = NodeState::Up;
+                    return true;
+                }
+            }
+            false
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cluster_shape() {
+        let c = Cluster::new(ClusterSpec::uniform(4, 16, 64));
+        assert_eq!(c.node_names().len(), 4);
+        let (total, free) = c.cpu_summary();
+        assert_eq!(total, 64);
+        assert_eq!(free, 64);
+    }
+
+    #[test]
+    fn failing_a_node_removes_capacity() {
+        let c = Cluster::new(ClusterSpec::uniform(2, 8, 16));
+        assert!(c.fail_node("node01"));
+        let (total, _) = c.cpu_summary();
+        assert_eq!(total, 8);
+        assert!(c.restore_node("node01"));
+        assert_eq!(c.cpu_summary().0, 16);
+        assert!(!c.fail_node("nope"));
+    }
+}

@@ -1,0 +1,117 @@
+//! Node model: capacity, allocations, health.
+
+use std::collections::HashMap;
+
+/// Allocatable capacity of a node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Resources {
+    pub cpus: u32,
+    pub memory_bytes: u64,
+}
+
+/// Node health, Slurm-style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    Down,
+    Drain,
+}
+
+/// A compute node with per-job allocations.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub resources: Resources,
+    pub state: NodeState,
+    /// job id -> (cpus, memory) currently allocated.
+    allocations: HashMap<u64, (u32, u64)>,
+}
+
+impl Node {
+    pub fn new(name: &str, cpus: u32, memory_bytes: u64) -> Node {
+        Node {
+            name: name.to_string(),
+            resources: Resources { cpus, memory_bytes },
+            state: NodeState::Up,
+            allocations: HashMap::new(),
+        }
+    }
+
+    pub fn free_cpus(&self) -> u32 {
+        let used: u32 = self.allocations.values().map(|(c, _)| *c).sum();
+        self.resources.cpus.saturating_sub(used)
+    }
+
+    pub fn free_memory(&self) -> u64 {
+        let used: u64 = self.allocations.values().map(|(_, m)| *m).sum();
+        self.resources.memory_bytes.saturating_sub(used)
+    }
+
+    pub fn can_fit(&self, cpus: u32, memory: u64) -> bool {
+        self.state == NodeState::Up
+            && self.free_cpus() >= cpus
+            && self.free_memory() >= memory
+    }
+
+    /// Reserve resources for a job. Returns false (no change) if they
+    /// don't fit.
+    pub fn allocate(&mut self, job: u64, cpus: u32, memory: u64) -> bool {
+        if !self.can_fit(cpus, memory) {
+            return false;
+        }
+        let entry = self.allocations.entry(job).or_insert((0, 0));
+        entry.0 += cpus;
+        entry.1 += memory;
+        true
+    }
+
+    /// Release a job's resources (idempotent).
+    pub fn release(&mut self, job: u64) {
+        self.allocations.remove(&job);
+    }
+
+    pub fn job_ids(&self) -> Vec<u64> {
+        self.allocations.keys().copied().collect()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.allocations.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release() {
+        let mut n = Node::new("n1", 8, 16 << 30);
+        assert!(n.allocate(1, 4, 8 << 30));
+        assert_eq!(n.free_cpus(), 4);
+        assert!(!n.allocate(2, 5, 1 << 30), "over-cpu must fail");
+        assert!(n.allocate(2, 4, 8 << 30));
+        assert_eq!(n.free_cpus(), 0);
+        assert_eq!(n.free_memory(), 0);
+        n.release(1);
+        assert_eq!(n.free_cpus(), 4);
+        n.release(1); // idempotent
+        assert_eq!(n.free_cpus(), 4);
+    }
+
+    #[test]
+    fn down_node_rejects() {
+        let mut n = Node::new("n1", 8, 16 << 30);
+        n.state = NodeState::Down;
+        assert!(!n.allocate(1, 1, 1));
+    }
+
+    #[test]
+    fn same_job_accumulates() {
+        let mut n = Node::new("n1", 8, 16 << 30);
+        assert!(n.allocate(1, 2, 1 << 30));
+        assert!(n.allocate(1, 2, 1 << 30));
+        assert_eq!(n.free_cpus(), 4);
+        n.release(1);
+        assert_eq!(n.free_cpus(), 8);
+    }
+}

@@ -1,0 +1,98 @@
+//! HPK's service admission controller.
+//!
+//! "To avoid the network proxy, HPK completely disables ClusterIP
+//! services, via a Kubernetes admission controller" (SS3). Every Service
+//! is mutated to be headless (`clusterIP: None`); NodePort services —
+//! which the paper's compatibility requirement carves out as the one
+//! unsupported construct — are rejected outright.
+
+use crate::kube::api::{AdmissionCheck, AdmissionOp};
+use crate::yamlkit::Value;
+use std::sync::Arc;
+
+/// Build the admission check to register with the API server.
+pub fn service_admission() -> AdmissionCheck {
+    Arc::new(|op: AdmissionOp, obj: &mut Value| {
+        if op == AdmissionOp::Delete || obj.str_at("kind") != Some("Service") {
+            return Ok(());
+        }
+        match obj.str_at("spec.type") {
+            Some("NodePort") | Some("LoadBalancer") => {
+                return Err(format!(
+                    "{} services are not supported on HPK (no root-level \
+                     network proxy); use a headless ClusterIP service",
+                    obj.str_at("spec.type").unwrap()
+                ));
+            }
+            _ => {}
+        }
+        // Force headless: discovery through CoreDNS -> pod IPs.
+        obj.entry_map("spec").set("clusterIP", Value::from("None"));
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::api::ApiServer;
+    use crate::yamlkit::parse_one;
+
+    fn api_with_admission() -> ApiServer {
+        let api = ApiServer::new();
+        api.register_admission(service_admission());
+        api
+    }
+
+    #[test]
+    fn services_become_headless() {
+        let api = api_with_admission();
+        let svc = parse_one(
+            "kind: Service\nmetadata:\n  name: web\nspec:\n  clusterIP: 10.96.0.1\n  selector:\n    app: web\n",
+        )
+        .unwrap();
+        let created = api.create(svc).unwrap();
+        assert_eq!(created.str_at("spec.clusterIP"), Some("None"));
+    }
+
+    #[test]
+    fn nodeport_rejected() {
+        let api = api_with_admission();
+        let svc = parse_one(
+            "kind: Service\nmetadata:\n  name: np\nspec:\n  type: NodePort\n",
+        )
+        .unwrap();
+        let err = api.create(svc).unwrap_err();
+        assert!(err.to_string().contains("NodePort"));
+    }
+
+    #[test]
+    fn loadbalancer_rejected() {
+        let api = api_with_admission();
+        let svc = parse_one(
+            "kind: Service\nmetadata:\n  name: lb\nspec:\n  type: LoadBalancer\n",
+        )
+        .unwrap();
+        assert!(api.create(svc).is_err());
+    }
+
+    #[test]
+    fn non_services_untouched() {
+        let api = api_with_admission();
+        let pod = parse_one("kind: Pod\nmetadata:\n  name: p\nspec: {}\n").unwrap();
+        let created = api.create(pod).unwrap();
+        assert!(created.str_at("spec.clusterIP").is_none());
+    }
+
+    #[test]
+    fn update_also_mutated() {
+        let api = api_with_admission();
+        let svc = parse_one("kind: Service\nmetadata:\n  name: s\nspec: {}\n").unwrap();
+        let mut created = api.create(svc).unwrap();
+        created
+            .entry_map("spec")
+            .set("clusterIP", Value::from("10.0.0.1"));
+        let updated = api.update(created).unwrap();
+        assert_eq!(updated.str_at("spec.clusterIP"), Some("None"));
+    }
+}

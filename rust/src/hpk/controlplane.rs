@@ -1,0 +1,278 @@
+//! Control-plane bootstrap — the "control plane container" of Figure 3.
+//!
+//! "At runtime, it generates all necessary internal keys and
+//! certificates, bootstraps the Kubernetes control plane by initializing
+//! the executables in order, and produces the configuration file
+//! containing the endpoint and credentials needed to connect" (SS3).
+//! Here that means: assemble store/API server, register HPK's admission
+//! controller, start the controller manager, pass-through scheduler and
+//! CoreDNS, connect hpk-kubelet to Slurm, and emit a kubeconfig
+//! [`Value`] to the user's home directory.
+
+use super::admission::service_admission;
+use super::executor::ApptainerExecutor;
+use super::kubelet::HpkKubelet;
+use super::scheduler::PassThroughScheduler;
+use crate::apptainer::ApptainerRuntime;
+use crate::hpcsim::{Cluster, ClusterSpec};
+use crate::kube::api::ApiServer;
+use crate::kube::controllers::{
+    ControllerManager, DeploymentController, EndpointsController, GcController,
+    JobController, ReplicaSetController,
+};
+use crate::kube::coredns::CoreDns;
+use crate::slurm::{Slurmctld, SlurmConfig};
+use crate::util::Rng;
+use crate::virtfs::VirtFs;
+use crate::yamlkit::Value;
+use std::sync::Arc;
+
+/// Deployment-time knobs.
+#[derive(Debug, Clone)]
+pub struct HpkConfig {
+    pub cluster: ClusterSpec,
+    pub slurm: SlurmConfig,
+    /// Host-level fakeroot opt-in (the one change HPK asks admins for).
+    pub fakeroot_allowed: bool,
+}
+
+impl Default for HpkConfig {
+    fn default() -> HpkConfig {
+        HpkConfig {
+            cluster: ClusterSpec::uniform(4, 16, 64),
+            slurm: SlurmConfig::default(),
+            fakeroot_allowed: true,
+        }
+    }
+}
+
+/// A running HPK deployment: every component, plus user-facing handles.
+pub struct ControlPlane {
+    pub api: ApiServer,
+    pub dns: CoreDns,
+    pub slurm: Slurmctld,
+    pub kubelet: HpkKubelet,
+    pub runtime: Arc<ApptainerRuntime>,
+    pub fs: VirtFs,
+    pub cluster: Cluster,
+    pub kubeconfig: Value,
+    controller_manager: Option<ControllerManager>,
+}
+
+impl ControlPlane {
+    /// Boot HPK on a fresh simulated cluster.
+    pub fn deploy(config: HpkConfig) -> ControlPlane {
+        let cluster = Cluster::new(config.cluster.clone());
+        let fs = VirtFs::new();
+        fs.add_mount("/home", "lustre-home", 0, false);
+        fs.add_mount("/mnt/nvme", "nvme-local", 0, false);
+
+        let runtime = Arc::new(ApptainerRuntime::new(
+            fs.clone(),
+            cluster.clock.clone(),
+            config.fakeroot_allowed,
+        ));
+
+        // "Generates all necessary internal keys and certificates":
+        // deterministic pseudo-credentials, kept in the kubeconfig.
+        let mut rng = Rng::new(0x48504b); // "HPK"
+        let token = format!("hpk-token-{:016x}", rng.next_u64());
+        let ca_cert = format!("hpk-ca-{:016x}", rng.next_u64());
+
+        // Order matters, mirroring the control-plane container: store +
+        // API server first, ...
+        let api = ApiServer::new();
+        api.register_admission(service_admission());
+
+        // ... then Slurm connectivity for the kubelet, ...
+        let slurm = Slurmctld::start(
+            cluster.clone(),
+            Arc::new(ApptainerExecutor::new(runtime.clone())),
+            config.slurm.clone(),
+        );
+
+        // ... then the controller manager (+ HPK's scheduler), ...
+        let controller_manager = ControllerManager::start(
+            api.clone(),
+            vec![
+                Box::new(DeploymentController),
+                Box::new(ReplicaSetController),
+                Box::new(JobController),
+                Box::new(EndpointsController),
+                Box::new(GcController),
+                Box::new(PassThroughScheduler),
+            ],
+            2,
+        );
+
+        // ... then CoreDNS and finally the kubelet announcing its node.
+        let dns = CoreDns::new(api.clone());
+        let kubelet = HpkKubelet::start(api.clone(), slurm.clone(), fs.clone());
+
+        // Produce the kubeconfig in the home directory.
+        let mut kubeconfig = Value::map();
+        kubeconfig.set("apiVersion", Value::from("v1"));
+        kubeconfig.set("kind", Value::from("Config"));
+        kubeconfig.set("current-context", Value::from("hpk"));
+        let mut cluster_entry = Value::map();
+        cluster_entry.set("server", Value::from("https://hpk-apiserver:6443"));
+        cluster_entry.set("certificate-authority-data", Value::from(ca_cert));
+        kubeconfig.set("cluster", cluster_entry);
+        let mut user = Value::map();
+        user.set("token", Value::from(token));
+        kubeconfig.set("user", user);
+        let _ = fs.write_str(
+            "/home/user/.hpk/kubeconfig",
+            &crate::yamlkit::to_yaml_string(&kubeconfig),
+        );
+
+        ControlPlane {
+            api,
+            dns,
+            slurm,
+            kubelet,
+            runtime,
+            fs,
+            cluster,
+            kubeconfig,
+            controller_manager: Some(controller_manager),
+        }
+    }
+
+    /// `kubectl apply -f` equivalent.
+    pub fn kubectl_apply(&self, manifest: &str) -> Result<Vec<Value>, crate::kube::ApiError> {
+        self.api.apply_manifest(manifest)
+    }
+
+    /// Wait until a pod reaches `phase` (real-ms timeout). Returns the
+    /// final pod object on success.
+    pub fn wait_for_phase(
+        &self,
+        namespace: &str,
+        name: &str,
+        phase: &str,
+        timeout_ms: u64,
+    ) -> Option<Value> {
+        let t0 = std::time::Instant::now();
+        loop {
+            if let Ok(p) = self.api.get("Pod", namespace, name) {
+                if crate::kube::object::pod_phase(&p) == phase {
+                    return Some(p);
+                }
+            }
+            if t0.elapsed().as_millis() as u64 > timeout_ms {
+                return None;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    /// Block until `cond(api)` holds.
+    pub fn wait_until(
+        &self,
+        timeout_ms: u64,
+        mut cond: impl FnMut(&ApiServer) -> bool,
+    ) -> bool {
+        let t0 = std::time::Instant::now();
+        loop {
+            if cond(&self.api) {
+                return true;
+            }
+            if t0.elapsed().as_millis() as u64 > timeout_ms {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    /// Orderly teardown of all loops.
+    pub fn shutdown(mut self) {
+        self.kubelet.shutdown();
+        if let Some(cm) = self.controller_manager.take() {
+            cm.shutdown();
+        }
+        self.slurm.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apptainer::ImageSpec;
+    use crate::kube::object;
+
+    fn deploy_small() -> ControlPlane {
+        let cp = ControlPlane::deploy(HpkConfig {
+            cluster: ClusterSpec::uniform(2, 8, 32),
+            ..HpkConfig::default()
+        });
+        cp.runtime
+            .registry
+            .register(ImageSpec::new("quick:1", "quick").with_size(1 << 20));
+        cp.runtime.table.register("quick", |_| Ok(0));
+        cp.runtime
+            .registry
+            .register(ImageSpec::new("server:1", "server").with_size(1 << 20));
+        cp.runtime.table.register("server", |ctx| {
+            while !ctx.cancel.is_cancelled() {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err("terminated".to_string())
+        });
+        cp
+    }
+
+    #[test]
+    fn kubeconfig_written() {
+        let cp = deploy_small();
+        let text = cp.fs.read_str("/home/user/.hpk/kubeconfig").unwrap();
+        assert!(text.contains("hpk-apiserver"));
+        assert!(text.contains("token"));
+        cp.shutdown();
+    }
+
+    #[test]
+    fn deployment_end_to_end_through_slurm() {
+        let cp = deploy_small();
+        cp.kubectl_apply(
+            "kind: Deployment\nmetadata:\n  name: web\nspec:\n  replicas: 2\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: main\n        image: server:1\n",
+        )
+        .unwrap();
+        assert!(cp.wait_until(8000, |api| {
+            api.list("Pod")
+                .iter()
+                .filter(|p| object::pod_phase(p) == "Running")
+                .count()
+                == 2
+        }));
+        // Both pods visible in squeue (compliance!).
+        let q = cp.slurm.squeue();
+        assert_eq!(q.len(), 2);
+        assert!(q.iter().all(|j| j.comment.starts_with("default/web-")));
+        // Scale down -> jobs cancelled.
+        let mut dep = cp.api.get("Deployment", "default", "web").unwrap();
+        dep.entry_map("spec").set("replicas", crate::yamlkit::Value::Int(0));
+        cp.api.update(dep).unwrap();
+        assert!(cp.wait_until(8000, |_| cp.slurm.squeue().is_empty()));
+        cp.shutdown();
+    }
+
+    #[test]
+    fn headless_service_resolves_to_hpk_pod_ips() {
+        let cp = deploy_small();
+        cp.kubectl_apply(
+            "kind: Service\nmetadata:\n  name: db\nspec:\n  clusterIP: 10.96.0.1\n  selector:\n    app: db\n---\nkind: Pod\nmetadata:\n  name: db-0\n  labels:\n    app: db\nspec:\n  containers:\n  - name: main\n    image: server:1\n",
+        )
+        .unwrap();
+        // Admission forced the service headless despite the explicit IP.
+        let svc = cp.api.get("Service", "default", "db").unwrap();
+        assert_eq!(svc.str_at("spec.clusterIP"), Some("None"));
+        assert!(cp.wait_until(8000, |_| {
+            !cp.dns.resolve("db.default.svc.cluster.local").is_empty()
+        }));
+        let ips = cp.dns.resolve("db");
+        assert_eq!(ips.len(), 1);
+        assert!(ips[0].to_string().starts_with("10.244."));
+        cp.shutdown();
+    }
+}

@@ -1,0 +1,248 @@
+//! Slurm-side interpreter of hpk-kubelet's generated scripts.
+//!
+//! Implements [`crate::slurm::JobExecutor`]: when Slurm starts the job,
+//! this executor replays the script's `apptainer` lines on the allocated
+//! node — starting the pod sandbox (parent container with the CNI-
+//! assigned IP), writing the IP handshake file for hpk-kubelet, then
+//! running each container. Multi-task jobs (`--ntasks=N` via annotation)
+//! run the container once per task slot with `SLURM_PROCID`/
+//! `SLURM_NTASKS` set, which is how the paper embeds MPI steps in Argo
+//! workflows (Listing 2).
+
+use crate::apptainer::ApptainerRuntime;
+use crate::slurm::{JobContext, JobExecutor};
+use std::sync::Arc;
+
+/// One parsed `apptainer exec` line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecLine {
+    pub image: String,
+    pub env: Vec<(String, String)>,
+    pub args: Vec<String>,
+}
+
+/// Parse the script body into exec lines + the pod dir.
+pub fn parse_script_body(body: &str) -> Result<(Option<String>, Vec<ExecLine>), String> {
+    let mut pod_dir = None;
+    let mut lines = Vec::new();
+    for raw in body.lines() {
+        let line = raw.trim();
+        if let Some(dir) = line.strip_prefix("hpk_pod_dir=") {
+            pod_dir = Some(dir.to_string());
+            continue;
+        }
+        if !line.starts_with("apptainer exec") {
+            continue;
+        }
+        let tokens = shlex::split(line)
+            .ok_or_else(|| format!("unparsable script line: {line}"))?;
+        // apptainer exec instance://parent [--fakeroot] [--env K=V]... image args...
+        let mut env = Vec::new();
+        let mut rest: Vec<String> = Vec::new();
+        let mut i = 2; // skip "apptainer exec"
+        while i < tokens.len() {
+            match tokens[i].as_str() {
+                "--fakeroot" => {}
+                t if t.starts_with("instance://") => {}
+                "--env" => {
+                    i += 1;
+                    let kv = tokens
+                        .get(i)
+                        .ok_or("--env without value")?;
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("bad --env {kv}"))?;
+                    env.push((k.to_string(), v.to_string()));
+                }
+                _ => rest.push(tokens[i].clone()),
+            }
+            i += 1;
+        }
+        if rest.is_empty() {
+            return Err(format!("exec line has no image: {line}"));
+        }
+        lines.push(ExecLine {
+            image: rest.remove(0),
+            env,
+            args: rest,
+        });
+    }
+    Ok((pod_dir, lines))
+}
+
+/// The executor: owns a handle to the cluster's container runtime.
+pub struct ApptainerExecutor {
+    pub runtime: Arc<ApptainerRuntime>,
+}
+
+impl ApptainerExecutor {
+    pub fn new(runtime: Arc<ApptainerRuntime>) -> ApptainerExecutor {
+        ApptainerExecutor { runtime }
+    }
+}
+
+impl JobExecutor for ApptainerExecutor {
+    fn execute(&self, ctx: &JobContext) -> Result<(), String> {
+        let (pod_dir, exec_lines) = parse_script_body(&ctx.spec.script)?;
+        if exec_lines.is_empty() {
+            // Not an HPK pod script (plain batch job): nothing to run.
+            return Ok(());
+        }
+        // The sandbox lives on the first task's node (the pod is one
+        // schedulable unit; extra tasks are MPI ranks).
+        let first_node = ctx
+            .allocation
+            .tasks
+            .first()
+            .map(|t| t.node.clone())
+            .ok_or("empty allocation")?;
+        let net = self.runtime.create_sandbox(&first_node)?;
+
+        // IP handshake: hpk-kubelet polls this file to publish podIP.
+        if let Some(dir) = &pod_dir {
+            self.runtime
+                .fs
+                .write_str(&format!("{dir}/ip"), &net.ip.to_string())
+                .map_err(|e| e.to_string())?;
+        }
+
+        let ntasks = ctx.spec.ntasks.max(1);
+        let mut result: Result<(), String> = Ok(());
+        if ntasks == 1 {
+            // Plain pod: containers run concurrently in the sandbox.
+            result = run_all_containers(self, ctx, &net, &exec_lines);
+        } else {
+            // MPI-style: the pod's containers are launched once per task
+            // slot (srun semantics), each with its rank env.
+            let mut handles = Vec::new();
+            for task in &ctx.allocation.tasks {
+                for line in &exec_lines {
+                    let rt = self.runtime.clone();
+                    let net = net.clone();
+                    let mut line = line.clone();
+                    line.env.push((
+                        "SLURM_PROCID".to_string(),
+                        task.task_id.to_string(),
+                    ));
+                    line.env
+                        .push(("SLURM_NTASKS".to_string(), ntasks.to_string()));
+                    line.env.push((
+                        "SLURM_JOB_ID".to_string(),
+                        ctx.job_id.to_string(),
+                    ));
+                    for (k, v) in &ctx.spec.env {
+                        line.env.push((k.clone(), v.clone()));
+                    }
+                    let cancel = ctx.cancel.clone();
+                    handles.push(std::thread::spawn(move || {
+                        rt.run_container(
+                            &net, &line.image, &line.args, &line.env, true, cancel,
+                        )
+                    }));
+                }
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => result = Err(e),
+                    Err(_) => result = Err("container thread panicked".to_string()),
+                }
+            }
+        }
+
+        self.runtime.destroy_sandbox(&net);
+        result
+    }
+}
+
+fn run_all_containers(
+    exec: &ApptainerExecutor,
+    ctx: &JobContext,
+    net: &crate::apptainer::NetContext,
+    lines: &[ExecLine],
+) -> Result<(), String> {
+    let mut handles = Vec::new();
+    for line in lines {
+        let rt = exec.runtime.clone();
+        let net = net.clone();
+        let mut line = line.clone();
+        // Downward-API-ish identity from the job.
+        if let Some((ns, name)) = ctx.spec.comment.split_once('/') {
+            line.env.push(("POD_NAMESPACE".to_string(), ns.to_string()));
+            line.env.push(("POD_NAME".to_string(), name.to_string()));
+        }
+        line.env.push(("POD_IP".to_string(), net.ip.to_string()));
+        line.env.push(("NODE_NAME".to_string(), net.node.clone()));
+        line.env
+            .push(("SLURM_JOB_ID".to_string(), ctx.job_id.to_string()));
+        for (k, v) in &ctx.spec.env {
+            line.env.push((k.clone(), v.clone()));
+        }
+        let cancel = ctx.cancel.clone();
+        handles.push(std::thread::spawn(move || {
+            rt.run_container(&net, &line.image, &line.args, &line.env, true, cancel)
+        }));
+    }
+    let mut result = Ok(());
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => result = Err(e),
+            Err(_) => result = Err("container thread panicked".to_string()),
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_script_body() {
+        let body = "hpk_pod_dir=/home/user/.hpk/ns/pod\napptainer instance start --cni flannel --fakeroot hpk-pause parent\n\napptainer exec instance://parent --fakeroot --env \"A=hello world\" --env B=2 img:1 cmd --flag x\n";
+        let (dir, lines) = parse_script_body(body).unwrap();
+        assert_eq!(dir.as_deref(), Some("/home/user/.hpk/ns/pod"));
+        assert_eq!(lines.len(), 1);
+        let l = &lines[0];
+        assert_eq!(l.image, "img:1");
+        assert_eq!(l.env[0], ("A".to_string(), "hello world".to_string()));
+        assert_eq!(l.env[1], ("B".to_string(), "2".to_string()));
+        assert_eq!(l.args, vec!["cmd", "--flag", "x"]);
+    }
+
+    #[test]
+    fn multiple_exec_lines() {
+        let body = "apptainer exec instance://parent --fakeroot a:1\napptainer exec instance://parent --fakeroot b:1 run\n";
+        let (_, lines) = parse_script_body(body).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].image, "b:1");
+    }
+
+    #[test]
+    fn malformed_env_rejected() {
+        let body = "apptainer exec instance://parent --env NOEQUALS img\n";
+        assert!(parse_script_body(body).is_err());
+    }
+
+    #[test]
+    fn non_hpk_script_is_empty() {
+        let (dir, lines) = parse_script_body("echo hello\nexit 0\n").unwrap();
+        assert!(dir.is_none());
+        assert!(lines.is_empty());
+    }
+
+    #[test]
+    fn roundtrip_with_translate() {
+        let pod = crate::yamlkit::parse_one(
+            "kind: Pod\nmetadata:\n  name: p\n  namespace: ns\nspec:\n  containers:\n  - name: c\n    image: worker:1\n    command: [\"run\", \"--n\", \"4\"]\n    env:\n    - name: MODE\n      value: fast\n",
+        )
+        .unwrap();
+        let spec = crate::hpk::translate::pod_to_jobspec(&pod).unwrap();
+        let (dir, lines) = parse_script_body(&spec.script).unwrap();
+        assert_eq!(dir.as_deref(), Some("/home/user/.hpk/ns/p"));
+        assert_eq!(lines[0].image, "worker:1");
+        assert_eq!(lines[0].args, vec!["run", "--n", "4"]);
+        assert!(lines[0].env.contains(&("MODE".to_string(), "fast".to_string())));
+    }
+}

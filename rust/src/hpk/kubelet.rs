@@ -1,0 +1,474 @@
+//! hpk-kubelet: the Virtual-Kubelet provider.
+//!
+//! One kubelet represents the *entire* HPC cluster as a single
+//! Kubernetes node. It translates each pod bound to that node into a
+//! Slurm script ([`super::translate`]), submits it, and keeps the pod's
+//! status in sync with the Slurm job state: "enqueued jobs are marked as
+//! 'pending' pods in Kubernetes, 'running' when started, or 'failed' if
+//! they produce errors" (SS3). Deleting a pod cancels its job.
+
+use super::translate;
+use crate::kube::api::ApiServer;
+use crate::kube::object;
+use crate::slurm::{JobId, JobState, Slurmctld};
+use crate::virtfs::VirtFs;
+use crate::yamlkit::Value;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The name of the single virtual node.
+pub const VIRTUAL_NODE: &str = "hpk-kubelet";
+
+struct PodBinding {
+    job_id: JobId,
+    /// Last phase we pushed, to avoid redundant status writes.
+    last_phase: String,
+    ip_published: bool,
+}
+
+/// The kubelet; cheap to clone (shared state inside).
+#[derive(Clone)]
+pub struct HpkKubelet {
+    api: ApiServer,
+    slurm: Slurmctld,
+    /// The user's home-directory filesystem (scripts, IP handshakes).
+    pub fs: VirtFs,
+    bindings: Arc<Mutex<HashMap<String, PodBinding>>>, // pod full name
+    shutdown: Arc<AtomicBool>,
+    /// Pods translated since boot (metrics).
+    translated: Arc<Mutex<u64>>,
+}
+
+impl HpkKubelet {
+    /// Register the virtual node and start the sync loop.
+    pub fn start(api: ApiServer, slurm: Slurmctld, fs: VirtFs) -> HpkKubelet {
+        // Announce the node with the whole cluster's capacity ("a virtual
+        // Kubernetes node representing the entire cluster", SS5).
+        let (total_cpus, _) = slurm.cluster().cpu_summary();
+        let total_mem: u64 = slurm
+            .cluster()
+            .with_nodes(|ns| ns.iter().map(|n| n.resources.memory_bytes).sum());
+        crate::kube::scheduler::register_node(&api, VIRTUAL_NODE, total_cpus, total_mem);
+
+        let kubelet = HpkKubelet {
+            api,
+            slurm,
+            fs,
+            bindings: Arc::new(Mutex::new(HashMap::new())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            translated: Arc::new(Mutex::new(0)),
+        };
+        let k = kubelet.clone();
+        std::thread::Builder::new()
+            .name("hpk-kubelet".to_string())
+            .spawn(move || {
+                while !k.shutdown.load(Ordering::SeqCst) {
+                    k.sync_once();
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            })
+            .expect("spawn hpk-kubelet");
+        kubelet
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Pods translated to Slurm scripts since boot.
+    pub fn translated_count(&self) -> u64 {
+        *self.translated.lock().unwrap()
+    }
+
+    /// One reconcile pass (public for deterministic tests/benches).
+    pub fn sync_once(&self) {
+        // 1. New pods bound to us -> translate + sbatch.
+        for pod in self.api.list_refs("Pod") {
+            if pod.str_at("spec.nodeName") != Some(VIRTUAL_NODE) {
+                continue;
+            }
+            let full = object::full_name(&pod);
+            if self.bindings.lock().unwrap().contains_key(&full) {
+                continue;
+            }
+            if object::pod_phase(&pod) != "Pending" {
+                continue; // already processed in an earlier life
+            }
+            self.submit_pod(&pod, full);
+        }
+
+        // 2. Sync Slurm job state -> pod status; scancel deleted pods.
+        let snapshot: Vec<(String, JobId)> = {
+            let bindings = self.bindings.lock().unwrap();
+            bindings
+                .iter()
+                .map(|(k, b)| (k.clone(), b.job_id))
+                .collect()
+        };
+        for (full, job_id) in snapshot {
+            let (ns, name) = full.split_once('/').unwrap();
+            let pod = self.api.get("Pod", ns, name).ok();
+            let job = self.slurm.job_info(job_id);
+            match (pod, job) {
+                (None, Some(info)) => {
+                    // Pod deleted by the user -> cancel the Slurm job.
+                    if !info.state.is_terminal() {
+                        self.slurm.cancel(job_id);
+                    }
+                    self.fs.remove_tree(&translate::pod_dir(ns, name));
+                    self.bindings.lock().unwrap().remove(&full);
+                }
+                (Some(_pod), Some(info)) => {
+                    self.sync_pod_status(&full, ns, name, &info.state);
+                    if info.state.is_terminal() {
+                        self.bindings.lock().unwrap().remove(&full);
+                    }
+                }
+                (_, None) => {
+                    self.bindings.lock().unwrap().remove(&full);
+                }
+            }
+        }
+    }
+
+    fn submit_pod(&self, pod: &Value, full: String) {
+        let ns = object::namespace(pod).to_string();
+        let name = object::name(pod).to_string();
+        // Resolve ConfigMap/Secret references before translation so the
+        // generated script carries concrete values.
+        let pod = &resolve_env_refs(&self.api, pod);
+        match translate::pod_to_jobspec(pod) {
+            Ok(spec) => {
+                // Persist the script in the user's home dir (HPK keeps all
+                // of its state there) before submitting.
+                let script = crate::slurm::script::render_script(&spec);
+                let _ = self.fs.write_str(
+                    &format!("{}/job.sbatch", translate::pod_dir(&ns, &name)),
+                    &script,
+                );
+                match self.slurm.submit(spec) {
+                    Ok(job_id) => {
+                        *self.translated.lock().unwrap() += 1;
+                        self.bindings.lock().unwrap().insert(
+                            full,
+                            PodBinding {
+                                job_id,
+                                last_phase: String::new(),
+                                ip_published: false,
+                            },
+                        );
+                        // Record the job id on the pod for transparency.
+                        let mut patch = Value::map();
+                        patch
+                            .entry_map("metadata")
+                            .entry_map("annotations")
+                            .set(
+                                super::annotations::JOB_ID,
+                                Value::from(job_id.to_string()),
+                            );
+                        let _ = self.api.patch("Pod", &ns, &name, &patch);
+                        self.api.record_event(
+                            &ns,
+                            &format!("Pod/{name}"),
+                            "SlurmSubmitted",
+                            &format!("job {job_id}"),
+                        );
+                    }
+                    Err(e) => {
+                        let mut st = Value::map();
+                        st.set("phase", Value::from("Failed"));
+                        st.set("reason", Value::from(format!("sbatch: {e}")));
+                        let _ = self.api.update_status("Pod", &ns, &name, st);
+                    }
+                }
+            }
+            Err(e) => {
+                let mut st = Value::map();
+                st.set("phase", Value::from("Failed"));
+                st.set("reason", Value::from(format!("translate: {e}")));
+                let _ = self.api.update_status("Pod", &ns, &name, st);
+            }
+        }
+    }
+
+    fn sync_pod_status(&self, full: &str, ns: &str, name: &str, state: &JobState) {
+        let (phase, reason): (&str, Option<String>) = match state {
+            JobState::Pending(r) => ("Pending", Some(r.clone())),
+            JobState::Running => ("Running", None),
+            JobState::Completed => ("Succeeded", None),
+            JobState::Failed(e) => ("Failed", Some(e.clone())),
+            JobState::Cancelled => ("Failed", Some("Cancelled".to_string())),
+            JobState::Timeout => ("Failed", Some("DeadlineExceeded".to_string())),
+        };
+        // IP handshake file (written by the executor when the sandbox is
+        // up). Publish once.
+        let ip = self
+            .fs
+            .read_str(&format!("{}/ip", translate::pod_dir(ns, name)))
+            .ok();
+        let mut bindings = self.bindings.lock().unwrap();
+        let Some(binding) = bindings.get_mut(full) else {
+            return;
+        };
+        let need_ip = !binding.ip_published && ip.is_some();
+        if binding.last_phase == phase && !need_ip {
+            return;
+        }
+        binding.last_phase = phase.to_string();
+        if need_ip {
+            binding.ip_published = true;
+        }
+        drop(bindings);
+
+        let mut status = Value::map();
+        status.set("phase", Value::from(phase));
+        if let Some(r) = reason {
+            status.set("reason", Value::from(r));
+        }
+        if let Some(ip) = ip {
+            status.set("podIP", Value::from(ip));
+        }
+        let _ = self.api.update_status("Pod", ns, name, status);
+    }
+}
+
+/// Rewrite `env[].valueFrom.{configMapKeyRef,secretKeyRef}` into plain
+/// values by reading the referenced objects — the kubelet's
+/// responsibility in real Kubernetes, done at translation time in HPK
+/// so the sbatch script is self-contained.
+pub fn resolve_env_refs(api: &ApiServer, pod: &Value) -> Value {
+    let mut pod = pod.clone();
+    let ns = object::namespace(&pod).to_string();
+    let Some(Value::Seq(containers)) =
+        pod.entry_map("spec").get_mut("containers").map(|c| {
+            // Take ownership via std::mem::replace pattern below.
+            c
+        })
+    else {
+        return pod;
+    };
+    for c in containers.iter_mut() {
+        let Some(Value::Seq(env)) = c.get_mut("env") else {
+            continue;
+        };
+        for item in env.iter_mut() {
+            if item.get("value").is_some() {
+                continue;
+            }
+            let resolved = ["configMapKeyRef", "secretKeyRef"]
+                .iter()
+                .find_map(|ref_kind| {
+                    let r = item.path(&format!("valueFrom.{ref_kind}"))?;
+                    let obj_name = r.str_at("name")?;
+                    let key = r.str_at("key")?;
+                    let kind = if *ref_kind == "configMapKeyRef" {
+                        "ConfigMap"
+                    } else {
+                        "Secret"
+                    };
+                    let obj = api.get(kind, &ns, obj_name).ok()?;
+                    obj.path("data")?.get(key)?.coerce_string()
+                });
+            if let Some(v) = resolved {
+                item.remove("valueFrom");
+                item.set("value", Value::from(v));
+            }
+        }
+    }
+    pod
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apptainer::{ApptainerRuntime, ImageSpec};
+    use crate::hpcsim::{Cluster, ClusterSpec};
+    use crate::hpk::executor::ApptainerExecutor;
+    use crate::hpk::PassThroughScheduler;
+    use crate::kube::controllers::Reconciler;
+    use crate::slurm::SlurmConfig;
+    use crate::yamlkit::parse_one;
+
+    struct World {
+        api: ApiServer,
+        kubelet: HpkKubelet,
+        slurm: Slurmctld,
+        runtime: Arc<ApptainerRuntime>,
+    }
+
+    fn world() -> World {
+        let cluster = Cluster::new(ClusterSpec::uniform(2, 8, 32));
+        let fs = VirtFs::new();
+        let runtime = Arc::new(ApptainerRuntime::new(
+            fs.clone(),
+            cluster.clock.clone(),
+            true,
+        ));
+        runtime
+            .registry
+            .register(ImageSpec::new("quick:1", "quick").with_size(1 << 20));
+        runtime.table.register("quick", |_| Ok(0));
+        runtime
+            .registry
+            .register(ImageSpec::new("server:1", "server").with_size(1 << 20));
+        runtime.table.register("server", |ctx| {
+            while !ctx.cancel.is_cancelled() {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err("terminated".to_string())
+        });
+        let slurm = Slurmctld::start(
+            cluster,
+            Arc::new(ApptainerExecutor::new(runtime.clone())),
+            SlurmConfig::default(),
+        );
+        let api = ApiServer::new();
+        let kubelet = HpkKubelet::start(api.clone(), slurm.clone(), fs);
+        World { api, kubelet, slurm, runtime }
+    }
+
+    fn wait_phase(api: &ApiServer, ns: &str, name: &str, phase: &str, ms: u64) -> bool {
+        let t0 = std::time::Instant::now();
+        while (t0.elapsed().as_millis() as u64) < ms {
+            if let Ok(p) = api.get("Pod", ns, name) {
+                if object::pod_phase(&p) == phase {
+                    return true;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        false
+    }
+
+    fn quick_pod(name: &str) -> Value {
+        parse_one(&format!(
+            "kind: Pod\nmetadata:\n  name: {name}\nspec:\n  containers:\n  - name: main\n    image: quick:1\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn virtual_node_registered() {
+        let w = world();
+        let node = w.api.get("Node", "default", VIRTUAL_NODE).unwrap();
+        assert_eq!(node.i64_at("status.capacity.cpu"), Some(16));
+        w.kubelet.shutdown();
+        w.slurm.shutdown();
+    }
+
+    #[test]
+    fn pod_runs_through_slurm_to_success() {
+        let w = world();
+        w.api.create(quick_pod("p1")).unwrap();
+        PassThroughScheduler.reconcile(&w.api);
+        assert!(wait_phase(&w.api, "default", "p1", "Succeeded", 5000));
+        // The pod was visible in Slurm accounting with the ns/name comment.
+        let acct = w.slurm.sacct();
+        assert!(acct.iter().any(|r| r.comment == "default/p1"));
+        // The generated script landed in the home dir.
+        let script = w
+            .kubelet
+            .fs
+            .read_str("/home/user/.hpk/default/p1/job.sbatch")
+            .unwrap();
+        assert!(script.contains("apptainer exec"));
+        assert_eq!(w.kubelet.translated_count(), 1);
+        w.kubelet.shutdown();
+        w.slurm.shutdown();
+    }
+
+    #[test]
+    fn server_pod_gets_ip_then_cancelled_on_delete() {
+        let w = world();
+        w.api
+            .create(
+                parse_one(
+                    "kind: Pod\nmetadata:\n  name: srv\nspec:\n  containers:\n  - name: main\n    image: server:1\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        PassThroughScheduler.reconcile(&w.api);
+        assert!(wait_phase(&w.api, "default", "srv", "Running", 5000));
+        // IP handshake published.
+        let t0 = std::time::Instant::now();
+        loop {
+            let p = w.api.get("Pod", "default", "srv").unwrap();
+            if p.str_at("status.podIP").map(|s| s.starts_with("10.244.")) == Some(true) {
+                break;
+            }
+            assert!(t0.elapsed().as_secs() < 5, "no podIP published");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // Delete -> scancel -> sandbox freed.
+        w.api.delete("Pod", "default", "srv").unwrap();
+        let t0 = std::time::Instant::now();
+        while w.runtime.cni.live_count() > 0 && t0.elapsed().as_secs() < 15 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(w.runtime.cni.live_count(), 0);
+        w.kubelet.shutdown();
+        w.slurm.shutdown();
+    }
+
+    #[test]
+    fn bad_image_fails_pod() {
+        let w = world();
+        w.api
+            .create(
+                parse_one(
+                    "kind: Pod\nmetadata:\n  name: ghost\nspec:\n  containers:\n  - name: main\n    image: missing:9\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        PassThroughScheduler.reconcile(&w.api);
+        assert!(wait_phase(&w.api, "default", "ghost", "Failed", 5000));
+        w.kubelet.shutdown();
+        w.slurm.shutdown();
+    }
+
+    #[test]
+    fn configmap_env_resolved_into_script() {
+        let w = world();
+        w.api
+            .create(
+                parse_one(
+                    "kind: ConfigMap\nmetadata:\n  name: app-config\ndata:\n  MODE: turbo\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        w.api
+            .create(
+                parse_one(
+                    "kind: Pod\nmetadata:\n  name: cfg\nspec:\n  containers:\n  - name: main\n    image: quick:1\n    env:\n    - name: MODE\n      valueFrom:\n        configMapKeyRef:\n          name: app-config\n          key: MODE\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        PassThroughScheduler.reconcile(&w.api);
+        assert!(wait_phase(&w.api, "default", "cfg", "Succeeded", 5000));
+        let script = w
+            .kubelet
+            .fs
+            .read_str("/home/user/.hpk/default/cfg/job.sbatch")
+            .unwrap();
+        assert!(script.contains("--env MODE=turbo"), "{script}");
+        w.kubelet.shutdown();
+        w.slurm.shutdown();
+    }
+
+    #[test]
+    fn job_id_annotation_recorded() {
+        let w = world();
+        w.api.create(quick_pod("p2")).unwrap();
+        PassThroughScheduler.reconcile(&w.api);
+        assert!(wait_phase(&w.api, "default", "p2", "Succeeded", 5000));
+        let pod = w.api.get("Pod", "default", "p2").unwrap();
+        assert!(object::annotation(&pod, super::super::annotations::JOB_ID).is_some());
+        w.kubelet.shutdown();
+        w.slurm.shutdown();
+    }
+}

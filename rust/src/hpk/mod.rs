@@ -1,0 +1,42 @@
+//! High-Performance Kubernetes — the paper's contribution.
+//!
+//! HPK runs a private, unprivileged Kubernetes control plane whose pods
+//! execute as Slurm jobs via Apptainer (SS3):
+//!
+//! - [`kubelet`] — **hpk-kubelet**, a Virtual-Kubelet provider that
+//!   represents the whole HPC cluster as a single Kubernetes node and
+//!   translates pod lifecycle to Slurm scripts of Apptainer commands,
+//!   syncing Slurm job states back to pod phases.
+//! - [`translate`] — the pod -> sbatch-script translation, including the
+//!   `slurm-job.hpk.io/*` annotation pass-through (paper Listing 2).
+//! - [`executor`] — the Slurm-side interpreter of those scripts: starts
+//!   the pod sandbox (parent container, CNI IP) and the per-container
+//!   Apptainer invocations; fans MPI-style jobs out over task slots.
+//! - [`scheduler`] — the pass-through scheduler: "makes no scheduling
+//!   decisions, but always selects hpk-kubelet to run workloads".
+//! - [`admission`] — the service admission controller that disables
+//!   ClusterIP services (everything becomes headless) and rejects
+//!   NodePort, removing the need for a root-level kube-proxy.
+//! - [`controlplane`] — the control-plane-container equivalent:
+//!   bootstraps all components in order and emits a kubeconfig.
+
+pub mod admission;
+pub mod controlplane;
+pub mod executor;
+pub mod kubelet;
+pub mod scheduler;
+pub mod translate;
+
+pub use controlplane::{ControlPlane, HpkConfig};
+pub use kubelet::{HpkKubelet, VIRTUAL_NODE};
+pub use scheduler::PassThroughScheduler;
+
+/// Annotation keys HPK recognises on pods (SS4.2).
+pub mod annotations {
+    /// Extra generic Slurm flags, forwarded verbatim.
+    pub const SLURM_FLAGS: &str = "slurm-job.hpk.io/flags";
+    /// MPI-launcher flags (recorded in the script; informational here).
+    pub const MPI_FLAGS: &str = "slurm-job.hpk.io/mpi-flags";
+    /// Set by hpk-kubelet: the Slurm job id backing this pod.
+    pub const JOB_ID: &str = "slurm-job.hpk.io/id";
+}

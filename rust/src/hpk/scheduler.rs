@@ -1,0 +1,75 @@
+//! The pass-through scheduler.
+//!
+//! "Since cluster-level scheduling is to be performed by Slurm, HPK
+//! employs a custom, simplified pass-through scheduler that makes no
+//! scheduling decisions, but always selects hpk-kubelet to run
+//! workloads" (SS3). Placement intelligence lives entirely in the Slurm
+//! simulator; this controller just binds.
+
+use crate::kube::api::ApiServer;
+use crate::kube::controllers::Reconciler;
+use crate::kube::object;
+use crate::yamlkit::Value;
+
+pub struct PassThroughScheduler;
+
+impl Reconciler for PassThroughScheduler {
+    fn name(&self) -> &'static str {
+        "hpk-scheduler"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for pod in api.list_refs("Pod") {
+            if pod.str_at("spec.nodeName").is_some()
+                || object::pod_phase(&pod) != "Pending"
+            {
+                continue;
+            }
+            let mut patch = Value::map();
+            patch
+                .entry_map("spec")
+                .set("nodeName", Value::from(super::VIRTUAL_NODE));
+            let _ = api.patch("Pod", object::namespace(&pod), object::name(&pod), &patch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    #[test]
+    fn binds_everything_to_virtual_node() {
+        let api = ApiServer::new();
+        for i in 0..3 {
+            api.create(
+                parse_one(&format!(
+                    "kind: Pod\nmetadata:\n  name: p{i}\nspec:\n  containers:\n  - name: c\n    image: x\n"
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+        }
+        PassThroughScheduler.reconcile(&api);
+        for p in api.list("Pod") {
+            assert_eq!(p.str_at("spec.nodeName"), Some(super::super::VIRTUAL_NODE));
+        }
+    }
+
+    #[test]
+    fn leaves_bound_and_terminal_pods_alone() {
+        let api = ApiServer::new();
+        api.create(
+            parse_one("kind: Pod\nmetadata:\n  name: done\nspec: {}\nstatus:\n  phase: Succeeded\n")
+                .unwrap(),
+        )
+        .unwrap();
+        PassThroughScheduler.reconcile(&api);
+        assert!(api
+            .get("Pod", "default", "done")
+            .unwrap()
+            .str_at("spec.nodeName")
+            .is_none());
+    }
+}

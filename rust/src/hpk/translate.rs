@@ -1,0 +1,195 @@
+//! Pod -> Slurm-script translation ("Workloads enter in YAML format
+//! through the Kubernetes API endpoint and exit as Slurm scripts from
+//! hpk-kubelet", Figure 2).
+//!
+//! The generated script uses only generic `#SBATCH` directives plus
+//! `apptainer` command lines the [`super::executor`] interprets. Pod
+//! resource requests map to `--cpus-per-task`/`--mem`; the
+//! `slurm-job.hpk.io/flags` annotation is appended verbatim, which is
+//! how Listing 2 scales MPI steps with `--ntasks`.
+
+use crate::kube::object;
+use crate::slurm::script::{apply_flags, render_script};
+use crate::slurm::JobSpec;
+use crate::yamlkit::Value;
+
+/// The home-directory area where hpk-kubelet keeps per-pod state
+/// (scripts, the IP handshake file) — HPK's "all configuration resides
+/// in the user's home directory" requirement.
+pub const HPK_DIR: &str = "/home/user/.hpk";
+
+/// Per-pod state directory.
+pub fn pod_dir(namespace: &str, name: &str) -> String {
+    format!("{HPK_DIR}/{namespace}/{name}")
+}
+
+/// Quote a token for the generated script.
+fn sh_quote(s: &str) -> String {
+    if s.is_empty()
+        || s.contains(|c: char| c.is_whitespace() || c == '"' || c == '\'' || c == '$')
+    {
+        format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Translate a pod manifest into a Slurm [`JobSpec`] whose script body
+/// is a sequence of `apptainer` lines. Errors on malformed annotations.
+pub fn pod_to_jobspec(pod: &Value) -> Result<JobSpec, String> {
+    let ns = object::namespace(pod);
+    let name = object::name(pod);
+    let mut spec = JobSpec::new(&format!("hpk-{ns}-{name}"));
+    spec.comment = format!("{ns}/{name}");
+
+    // Resources: sum container requests; Slurm allocates per task.
+    let (cpu_millis, mem_bytes) = object::pod_resource_totals(pod);
+    spec.cpus_per_task = (((cpu_millis + 999) / 1000).max(1)) as u32;
+    spec.mem_per_task = mem_bytes.max(64 << 20) as u64;
+
+    // Script body: sandbox start + one exec line per container.
+    let mut body = String::new();
+    body.push_str(&format!("hpk_pod_dir={}\n", pod_dir(ns, name)));
+    body.push_str("apptainer instance start --cni flannel --fakeroot hpk-pause parent\n");
+    let containers = pod
+        .path("spec.containers")
+        .and_then(|c| c.as_seq())
+        .ok_or("pod has no containers")?;
+    if containers.is_empty() {
+        return Err("pod has no containers".to_string());
+    }
+    for c in containers {
+        let image = c
+            .str_at("image")
+            .ok_or("container has no image")?;
+        let mut line = String::from("apptainer exec instance://parent --fakeroot");
+        // Pod-spec env vars (downward fields are added by the executor).
+        if let Some(items) = c.path("env").and_then(|e| e.as_seq()) {
+            for item in items {
+                if let (Some(k), Some(v)) = (
+                    item.str_at("name"),
+                    item.get("value").and_then(|v| v.coerce_string()),
+                ) {
+                    line.push_str(&format!(" --env {}", sh_quote(&format!("{k}={v}"))));
+                }
+            }
+        }
+        line.push(' ');
+        line.push_str(&sh_quote(image));
+        for arg in crate::kube::kubelet::container_args(c) {
+            line.push(' ');
+            line.push_str(&sh_quote(&arg));
+        }
+        body.push('\n');
+        body.push_str(&line);
+        body.push('\n');
+    }
+    spec.script = body;
+
+    // Annotation pass-through (may override ntasks, time, partition...).
+    if let Some(flags) = object::annotation(pod, super::annotations::SLURM_FLAGS) {
+        apply_flags(&mut spec, flags)
+            .map_err(|e| format!("bad {}: {e}", super::annotations::SLURM_FLAGS))?;
+    }
+    if let Some(mpi) = object::annotation(pod, super::annotations::MPI_FLAGS) {
+        // Recorded for the MPI launcher inside the job.
+        spec.env
+            .push(("HPK_MPI_FLAGS".to_string(), mpi.to_string()));
+    }
+    Ok(spec)
+}
+
+/// Full script text (directives + body) — what lands in the user's home
+/// directory and what `sbatch` receives.
+pub fn pod_to_script(pod: &Value) -> Result<String, String> {
+    Ok(render_script(&pod_to_jobspec(pod)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn pod_yaml() -> Value {
+        parse_one(
+            r#"
+kind: Pod
+metadata:
+  name: tpcds-exec-1
+  namespace: spark
+  annotations:
+    slurm-job.hpk.io/flags: >-
+      --ntasks=4 --time=30
+    slurm-job.hpk.io/mpi-flags: "-x LD_PRELOAD"
+spec:
+  containers:
+  - name: exec
+    image: spark:3.5
+    command: ["spark-executor"]
+    args: ["--cores", "1"]
+    env:
+    - name: DRIVER_URL
+      value: spark-driver.spark
+    resources:
+      requests:
+        cpu: 1
+        memory: 8Gi
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn resources_and_identity_forwarded() {
+        let spec = pod_to_jobspec(&pod_yaml()).unwrap();
+        assert_eq!(spec.comment, "spark/tpcds-exec-1");
+        assert_eq!(spec.cpus_per_task, 1);
+        assert_eq!(spec.mem_per_task, 8 << 30);
+    }
+
+    #[test]
+    fn annotation_flags_applied() {
+        let spec = pod_to_jobspec(&pod_yaml()).unwrap();
+        assert_eq!(spec.ntasks, 4);
+        assert_eq!(spec.time_limit_ms, 30 * 60_000);
+        assert_eq!(
+            spec.env,
+            vec![("HPK_MPI_FLAGS".to_string(), "-x LD_PRELOAD".to_string())]
+        );
+    }
+
+    #[test]
+    fn script_contains_apptainer_lines() {
+        let script = pod_to_script(&pod_yaml()).unwrap();
+        assert!(script.contains("#SBATCH --job-name=hpk-spark-tpcds-exec-1"));
+        assert!(script.contains("#SBATCH --comment=spark/tpcds-exec-1"));
+        assert!(script.contains("apptainer instance start --cni flannel"));
+        assert!(script.contains("apptainer exec instance://parent --fakeroot"));
+        assert!(script.contains("spark:3.5"));
+        assert!(script.contains("--env DRIVER_URL=spark-driver.spark"));
+        assert!(script.contains("spark-executor --cores 1"));
+    }
+
+    #[test]
+    fn script_reparses_as_slurm_job() {
+        let script = pod_to_script(&pod_yaml()).unwrap();
+        let spec = crate::slurm::script::parse_script(&script).unwrap();
+        assert_eq!(spec.ntasks, 4);
+        assert_eq!(spec.comment, "spark/tpcds-exec-1");
+    }
+
+    #[test]
+    fn bad_annotation_is_an_error() {
+        let mut pod = pod_yaml();
+        pod.entry_map("metadata")
+            .entry_map("annotations")
+            .set(super::super::annotations::SLURM_FLAGS, Value::from("--bogus=1"));
+        assert!(pod_to_jobspec(&pod).is_err());
+    }
+
+    #[test]
+    fn no_containers_rejected() {
+        let pod = parse_one("kind: Pod\nmetadata:\n  name: x\nspec:\n  containers: []\n").unwrap();
+        assert!(pod_to_jobspec(&pod).is_err());
+    }
+}

@@ -1,0 +1,425 @@
+//! The API-server role: verbs, defaulting, admission, events.
+//!
+//! All controllers — Kubernetes's own, HPK's, and the workload operators
+//! — talk only to this surface, exactly as in the paper's architecture
+//! (Figure 1: "the main interface to the cluster and the synchronization
+//! point for all controllers").
+
+use super::object;
+use super::store::{Store, StoreEvent};
+use crate::util::unique_suffix;
+use crate::yamlkit::{merge_patch, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// API error surface (maps to HTTP statuses in real Kubernetes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    NotFound(String),
+    AlreadyExists(String),
+    Invalid(String),
+    /// Rejected by an admission controller.
+    Denied(String),
+    Conflict(String),
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::NotFound(m) => write!(f, "not found: {m}"),
+            ApiError::AlreadyExists(m) => write!(f, "already exists: {m}"),
+            ApiError::Invalid(m) => write!(f, "invalid: {m}"),
+            ApiError::Denied(m) => write!(f, "admission denied: {m}"),
+            ApiError::Conflict(m) => write!(f, "conflict: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Admission operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionOp {
+    Create,
+    Update,
+    Delete,
+}
+
+/// A (possibly mutating) admission controller — HPK's service webhook
+/// plugs in here (SS3: "a hook that monitors API requests and may reject
+/// or mutate them before reaching the API server").
+pub type AdmissionCheck =
+    Arc<dyn Fn(AdmissionOp, &mut Value) -> Result<(), String> + Send + Sync>;
+
+/// The API server.
+#[derive(Clone)]
+pub struct ApiServer {
+    store: Store,
+    admission: Arc<Mutex<Vec<AdmissionCheck>>>,
+    uid_counter: Arc<AtomicU64>,
+}
+
+impl Default for ApiServer {
+    fn default() -> ApiServer {
+        ApiServer::new()
+    }
+}
+
+impl ApiServer {
+    pub fn new() -> ApiServer {
+        ApiServer {
+            store: Store::new(),
+            admission: Arc::new(Mutex::new(Vec::new())),
+            uid_counter: Arc::new(AtomicU64::new(1)),
+        }
+    }
+
+    /// Register an admission controller (runs on create + update).
+    pub fn register_admission(&self, check: AdmissionCheck) {
+        self.admission.lock().unwrap().push(check);
+    }
+
+    /// Direct store access for watch plumbing (`events_since`).
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    fn run_admission(&self, op: AdmissionOp, obj: &mut Value) -> Result<(), ApiError> {
+        let checks = self.admission.lock().unwrap().clone();
+        for check in checks {
+            check(op, obj).map_err(ApiError::Denied)?;
+        }
+        Ok(())
+    }
+
+    fn default_metadata(&self, obj: &mut Value) -> Result<(String, String, String), ApiError> {
+        let kind = object::kind(obj).to_string();
+        if kind.is_empty() {
+            return Err(ApiError::Invalid("object has no kind".to_string()));
+        }
+        let meta = obj.entry_map("metadata");
+        // generateName support.
+        if meta.get("name").is_none() {
+            match meta.get("generateName").and_then(|v| v.as_str()) {
+                Some(prefix) => {
+                    let generated = format!("{prefix}{}", unique_suffix());
+                    meta.set("name", Value::from(generated));
+                }
+                None => {
+                    return Err(ApiError::Invalid(
+                        "metadata.name or generateName required".to_string(),
+                    ))
+                }
+            }
+        }
+        if meta.get("namespace").is_none() {
+            meta.set("namespace", Value::from("default"));
+        }
+        let name = meta.get("name").and_then(|v| v.as_str()).unwrap().to_string();
+        let namespace = meta
+            .get("namespace")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+        if meta.get("uid").is_none() {
+            let uid = format!(
+                "uid-{:08x}",
+                self.uid_counter.fetch_add(1, Ordering::Relaxed)
+            );
+            meta.set("uid", Value::from(uid));
+        }
+        if meta.get("creationTimestamp").is_none() {
+            meta.set(
+                "creationTimestamp",
+                Value::Int(crate::util::monotonic_ms() as i64),
+            );
+        }
+        Ok((kind, namespace, name))
+    }
+
+    /// CREATE: defaulting + admission + uniqueness.
+    pub fn create(&self, mut obj: Value) -> Result<Value, ApiError> {
+        self.run_admission(AdmissionOp::Create, &mut obj)?;
+        let (kind, namespace, name) = self.default_metadata(&mut obj)?;
+        if self.store.get(&kind, &namespace, &name).is_some() {
+            return Err(ApiError::AlreadyExists(format!("{kind} {namespace}/{name}")));
+        }
+        self.store.put(&kind, &namespace, &name, obj.clone());
+        Ok(self
+            .store
+            .get(&kind, &namespace, &name)
+            .map(|a| (*a).clone())
+            .unwrap())
+    }
+
+    /// GET by coordinates.
+    pub fn get(&self, kind: &str, namespace: &str, name: &str) -> Result<Value, ApiError> {
+        self.store
+            .get(kind, namespace, name)
+            .map(|a| (*a).clone())
+            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))
+    }
+
+    /// LIST (all namespaces).
+    pub fn list(&self, kind: &str) -> Vec<Value> {
+        self.store.list(kind).iter().map(|a| (**a).clone()).collect()
+    }
+
+    /// LIST without copying: shared snapshots for read-only reconciler
+    /// passes (the hot path — controllers poll every couple of ms).
+    pub fn list_refs(&self, kind: &str) -> Vec<std::sync::Arc<Value>> {
+        self.store.list(kind)
+    }
+
+    /// LIST namespaced.
+    pub fn list_namespaced(&self, kind: &str, namespace: &str) -> Vec<Value> {
+        self.store
+            .list_namespaced(kind, namespace)
+            .iter()
+            .map(|a| (**a).clone())
+            .collect()
+    }
+
+    /// UPDATE (replace). Enforces optimistic concurrency when the caller
+    /// provides `metadata.resourceVersion`.
+    pub fn update(&self, mut obj: Value) -> Result<Value, ApiError> {
+        self.run_admission(AdmissionOp::Update, &mut obj)?;
+        let kind = object::kind(&obj).to_string();
+        let namespace = object::namespace(&obj).to_string();
+        let name = object::name(&obj).to_string();
+        let current = self
+            .store
+            .get(&kind, &namespace, &name)
+            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))?;
+        if let Some(rv) = obj.i64_at("metadata.resourceVersion") {
+            let cur_rv = current.i64_at("metadata.resourceVersion").unwrap_or(0);
+            if rv != cur_rv {
+                return Err(ApiError::Conflict(format!(
+                    "{kind} {namespace}/{name}: resourceVersion {rv} != {cur_rv}"
+                )));
+            }
+        }
+        // uid is immutable.
+        let uid = current.str_at("metadata.uid").unwrap_or("").to_string();
+        obj.entry_map("metadata").set("uid", Value::from(uid));
+        self.store.put(&kind, &namespace, &name, obj.clone());
+        Ok(self
+            .store
+            .get(&kind, &namespace, &name)
+            .map(|a| (*a).clone())
+            .unwrap())
+    }
+
+    /// PATCH (JSON-merge-patch semantics).
+    pub fn patch(
+        &self,
+        kind: &str,
+        namespace: &str,
+        name: &str,
+        patch: &Value,
+    ) -> Result<Value, ApiError> {
+        let current = self
+            .store
+            .get(kind, namespace, name)
+            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))?;
+        let mut obj = (*current).clone();
+        merge_patch(&mut obj, patch);
+        let mut obj2 = obj;
+        self.run_admission(AdmissionOp::Update, &mut obj2)?;
+        self.store.put(kind, namespace, name, obj2);
+        Ok((*self.store.get(kind, namespace, name).unwrap()).clone())
+    }
+
+    /// Update only the `status` subtree (the status subresource).
+    pub fn update_status(
+        &self,
+        kind: &str,
+        namespace: &str,
+        name: &str,
+        status: Value,
+    ) -> Result<Value, ApiError> {
+        let current = self
+            .store
+            .get(kind, namespace, name)
+            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))?;
+        let mut obj = (*current).clone();
+        obj.set("status", status);
+        self.store.put(kind, namespace, name, obj);
+        Ok((*self.store.get(kind, namespace, name).unwrap()).clone())
+    }
+
+    /// DELETE.
+    pub fn delete(&self, kind: &str, namespace: &str, name: &str) -> Result<Value, ApiError> {
+        // Admission sees a lightweight tombstone for deletes.
+        let mut probe = object::new_object(kind, namespace, name);
+        self.run_admission(AdmissionOp::Delete, &mut probe)?;
+        self.store
+            .delete(kind, namespace, name)
+            .map(|a| (*a).clone())
+            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))
+    }
+
+    /// Watch support: events after `since` (see [`Store::events_since`]).
+    pub fn events_since(&self, since: u64) -> (Vec<StoreEvent>, bool) {
+        self.store.events_since(since)
+    }
+
+    pub fn revision(&self) -> u64 {
+        self.store.revision()
+    }
+
+    /// Record a Kubernetes Event object (best effort, no admission).
+    pub fn record_event(&self, namespace: &str, involved: &str, reason: &str, message: &str) {
+        let name = format!("evt-{}", unique_suffix());
+        let mut e = object::new_object("Event", namespace, &name);
+        e.set("involvedObject", Value::from(involved));
+        e.set("reason", Value::from(reason));
+        e.set("message", Value::from(message));
+        e.set("timestamp", Value::Int(crate::util::monotonic_ms() as i64));
+        self.store.put("Event", namespace, &name, e);
+    }
+
+    /// Apply a multi-document manifest (create-or-update per document),
+    /// like `kubectl apply -f`. Returns the applied objects.
+    pub fn apply_manifest(&self, yaml_text: &str) -> Result<Vec<Value>, ApiError> {
+        let docs = crate::yamlkit::parse_all(yaml_text)
+            .map_err(|e| ApiError::Invalid(e.to_string()))?;
+        let mut out = Vec::new();
+        for doc in docs {
+            if matches!(doc, Value::Null) {
+                continue;
+            }
+            let kind = object::kind(&doc).to_string();
+            let ns = object::namespace(&doc).to_string();
+            let name = object::name(&doc).to_string();
+            let applied = if !name.is_empty()
+                && self.store.get(&kind, &ns, &name).is_some()
+            {
+                let mut updated = doc;
+                // Adopt the live resourceVersion for optimistic concurrency.
+                if let Some(live) = self.store.get(&kind, &ns, &name) {
+                    let rv = live.i64_at("metadata.resourceVersion").unwrap_or(0);
+                    updated
+                        .entry_map("metadata")
+                        .set("resourceVersion", Value::Int(rv));
+                }
+                self.update(updated)?
+            } else {
+                self.create(doc)?
+            };
+            out.push(applied);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn pod_yaml(name: &str) -> Value {
+        parse_one(&format!(
+            "kind: Pod\nmetadata:\n  name: {name}\nspec:\n  containers:\n  - name: main\n    image: busybox\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn create_defaults_metadata() {
+        let api = ApiServer::new();
+        let created = api.create(pod_yaml("p1")).unwrap();
+        assert_eq!(created.str_at("metadata.namespace"), Some("default"));
+        assert!(created.str_at("metadata.uid").unwrap().starts_with("uid-"));
+        assert!(created.i64_at("metadata.resourceVersion").unwrap() > 0);
+    }
+
+    #[test]
+    fn create_duplicate_rejected() {
+        let api = ApiServer::new();
+        api.create(pod_yaml("p1")).unwrap();
+        assert!(matches!(
+            api.create(pod_yaml("p1")),
+            Err(ApiError::AlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    fn generate_name() {
+        let api = ApiServer::new();
+        let obj = parse_one("kind: Pod\nmetadata:\n  generateName: web-\n").unwrap();
+        let created = api.create(obj).unwrap();
+        assert!(created.str_at("metadata.name").unwrap().starts_with("web-"));
+    }
+
+    #[test]
+    fn update_conflict_on_stale_rv() {
+        let api = ApiServer::new();
+        let created = api.create(pod_yaml("p1")).unwrap();
+        let mut stale = created.clone();
+        // Bump the live object.
+        let mut live = created.clone();
+        live.entry_map("spec").set("x", Value::Int(1));
+        api.update(live).unwrap();
+        stale.entry_map("spec").set("x", Value::Int(2));
+        assert!(matches!(api.update(stale), Err(ApiError::Conflict(_))));
+    }
+
+    #[test]
+    fn patch_merges() {
+        let api = ApiServer::new();
+        api.create(pod_yaml("p1")).unwrap();
+        let patch = parse_one("metadata:\n  labels:\n    app: x\n").unwrap();
+        let patched = api.patch("Pod", "default", "p1", &patch).unwrap();
+        assert_eq!(patched.str_at("metadata.labels.app"), Some("x"));
+        assert_eq!(patched.str_at("spec.containers.0.image"), Some("busybox"));
+    }
+
+    #[test]
+    fn admission_mutates_and_denies() {
+        let api = ApiServer::new();
+        api.register_admission(Arc::new(|op, obj| {
+            if op == AdmissionOp::Create && object::kind(obj) == "Service" {
+                if obj.str_at("spec.type") == Some("NodePort") {
+                    return Err("NodePort services are not supported".into());
+                }
+                obj.entry_map("spec").set("clusterIP", Value::from("None"));
+            }
+            Ok(())
+        }));
+        let svc = parse_one("kind: Service\nmetadata:\n  name: s\nspec:\n  selector:\n    app: x\n").unwrap();
+        let created = api.create(svc).unwrap();
+        assert_eq!(created.str_at("spec.clusterIP"), Some("None"));
+        let np = parse_one("kind: Service\nmetadata:\n  name: s2\nspec:\n  type: NodePort\n").unwrap();
+        assert!(matches!(api.create(np), Err(ApiError::Denied(_))));
+    }
+
+    #[test]
+    fn update_status_only_touches_status() {
+        let api = ApiServer::new();
+        api.create(pod_yaml("p1")).unwrap();
+        let status = parse_one("phase: Running\n").unwrap();
+        let updated = api.update_status("Pod", "default", "p1", status).unwrap();
+        assert_eq!(updated.str_at("status.phase"), Some("Running"));
+        assert_eq!(updated.str_at("spec.containers.0.image"), Some("busybox"));
+    }
+
+    #[test]
+    fn apply_manifest_create_then_update() {
+        let api = ApiServer::new();
+        let text = "kind: ConfigMap\nmetadata:\n  name: cm\ndata:\n  a: 1\n---\nkind: ConfigMap\nmetadata:\n  name: cm2\ndata:\n  b: 2\n";
+        let applied = api.apply_manifest(text).unwrap();
+        assert_eq!(applied.len(), 2);
+        let text2 = "kind: ConfigMap\nmetadata:\n  name: cm\ndata:\n  a: 42\n";
+        api.apply_manifest(text2).unwrap();
+        let cm = api.get("ConfigMap", "default", "cm").unwrap();
+        assert_eq!(cm.i64_at("data.a"), Some(42));
+    }
+
+    #[test]
+    fn events_recorded() {
+        let api = ApiServer::new();
+        api.record_event("default", "Pod/p1", "Scheduled", "ok");
+        assert_eq!(api.list("Event").len(), 1);
+    }
+}

@@ -1,0 +1,179 @@
+//! Deployment controller: manage ReplicaSets per template revision.
+
+use super::{template_hash, Reconciler};
+use crate::kube::api::ApiServer;
+use crate::kube::object;
+use crate::yamlkit::Value;
+
+pub struct DeploymentController;
+
+impl Reconciler for DeploymentController {
+    fn name(&self) -> &'static str {
+        "deployment"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for dep in api.list("Deployment") {
+            let ns = object::namespace(&dep);
+            let dep_name = object::name(&dep);
+            let replicas = dep.i64_at("spec.replicas").unwrap_or(1).max(0);
+            let template = dep
+                .path("spec.template")
+                .cloned()
+                .unwrap_or(Value::map());
+            let hash = template_hash(&template);
+            let rs_name = format!("{dep_name}-{hash}");
+
+            // Current-revision ReplicaSet.
+            match api.get("ReplicaSet", ns, &rs_name) {
+                Ok(mut rs) => {
+                    if rs.i64_at("spec.replicas") != Some(replicas) {
+                        rs.entry_map("spec").set("replicas", Value::Int(replicas));
+                        let _ = api.update(rs);
+                    }
+                }
+                Err(_) => {
+                    let mut rs = object::new_object("ReplicaSet", ns, &rs_name);
+                    rs.set("apiVersion", Value::from("apps/v1"));
+                    let mut tpl = template.clone();
+                    tpl.entry_map("metadata")
+                        .entry_map("labels")
+                        .set("pod-template-hash", Value::from(hash.as_str()));
+                    let spec = rs.entry_map("spec");
+                    spec.set("replicas", Value::Int(replicas));
+                    if let Some(sel) = dep.path("spec.selector") {
+                        spec.set("selector", sel.clone());
+                    }
+                    spec.set("template", tpl);
+                    object::add_owner_ref(
+                        &mut rs,
+                        "Deployment",
+                        dep_name,
+                        object::uid(&dep),
+                    );
+                    let _ = api.create(rs);
+                }
+            }
+
+            // Old-revision ReplicaSets: scale to 0, then delete when empty.
+            for rs in api.list_namespaced("ReplicaSet", ns) {
+                let owned = object::owner_refs(&rs)
+                    .iter()
+                    .any(|(_, _, u)| u == object::uid(&dep));
+                if !owned || object::name(&rs) == rs_name {
+                    continue;
+                }
+                if rs.i64_at("spec.replicas").unwrap_or(0) != 0 {
+                    let mut rs2 = rs.clone();
+                    rs2.entry_map("spec").set("replicas", Value::Int(0));
+                    let _ = api.update(rs2);
+                } else if rs.i64_at("status.replicas").unwrap_or(0) == 0 {
+                    let _ = api.delete("ReplicaSet", ns, object::name(&rs));
+                }
+            }
+
+            // Roll up status.
+            let ready: i64 = api
+                .list_namespaced("ReplicaSet", ns)
+                .iter()
+                .filter(|rs| {
+                    object::owner_refs(rs)
+                        .iter()
+                        .any(|(_, _, u)| u == object::uid(&dep))
+                })
+                .map(|rs| rs.i64_at("status.readyReplicas").unwrap_or(0))
+                .sum();
+            if dep.i64_at("status.readyReplicas") != Some(ready) {
+                let mut status = Value::map();
+                status.set("readyReplicas", Value::Int(ready));
+                status.set("replicas", Value::Int(replicas));
+                let _ = api.update_status("Deployment", ns, dep_name, status);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::reconcile_until;
+    use super::super::ReplicaSetController;
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn deployment(replicas: i64, image: &str) -> Value {
+        parse_one(&format!(
+            "kind: Deployment\nmetadata:\n  name: web\nspec:\n  replicas: {replicas}\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: main\n        image: {image}\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn creates_replicaset_and_pods() {
+        let api = ApiServer::new();
+        api.create(deployment(2, "nginx:1")).unwrap();
+        let d = DeploymentController;
+        let r = ReplicaSetController;
+        reconcile_until(&api, &[&d, &r], |a| a.list("Pod").len() == 2, 20);
+        assert_eq!(api.list("ReplicaSet").len(), 1);
+    }
+
+    #[test]
+    fn template_change_rolls_to_new_rs() {
+        let api = ApiServer::new();
+        api.create(deployment(2, "nginx:1")).unwrap();
+        let d = DeploymentController;
+        let r = ReplicaSetController;
+        reconcile_until(&api, &[&d, &r], |a| a.list("Pod").len() == 2, 20);
+        let old_rs = object::name(&api.list("ReplicaSet")[0]).to_string();
+
+        let mut dep = api.get("Deployment", "default", "web").unwrap();
+        dep.entry_map("spec")
+            .entry_map("template")
+            .entry_map("spec")
+            .path("containers")
+            .map(|_| ());
+        // Easier: re-apply with new image.
+        let dep2 = deployment(2, "nginx:2");
+        let rv = dep.i64_at("metadata.resourceVersion").unwrap();
+        let mut dep2 = dep2;
+        dep2.entry_map("metadata")
+            .set("resourceVersion", Value::Int(rv));
+        api.update(dep2).unwrap();
+
+        reconcile_until(
+            &api,
+            &[&d, &r],
+            |a| {
+                let rss = a.list("ReplicaSet");
+                rss.len() == 1 && object::name(&rss[0]) != old_rs
+            },
+            50,
+        );
+        // New pods carry the new image.
+        reconcile_until(
+            &api,
+            &[&d, &r],
+            |a| {
+                let pods = a.list("Pod");
+                pods.len() == 2
+                    && pods.iter().all(|p| {
+                        p.str_at("spec.containers.0.image") == Some("nginx:2")
+                    })
+            },
+            50,
+        );
+    }
+
+    #[test]
+    fn scale_deployment_propagates() {
+        let api = ApiServer::new();
+        api.create(deployment(1, "nginx:1")).unwrap();
+        let d = DeploymentController;
+        let r = ReplicaSetController;
+        reconcile_until(&api, &[&d, &r], |a| a.list("Pod").len() == 1, 20);
+        let mut dep = api.get("Deployment", "default", "web").unwrap();
+        dep.entry_map("spec").set("replicas", Value::Int(3));
+        api.update(dep).unwrap();
+        reconcile_until(&api, &[&d, &r], |a| a.list("Pod").len() == 3, 20);
+    }
+}

@@ -1,0 +1,155 @@
+//! Endpoints controller: map Services to ready pod IPs.
+//!
+//! This is what makes *headless* services work in HPK: CoreDNS answers
+//! from these Endpoints, so "service discovery continues to function, as
+//! CoreDNS maps the service name to the actual pod IPs instead of the
+//! virtual service address" (SS3).
+
+use super::Reconciler;
+use crate::kube::api::ApiServer;
+use crate::kube::object;
+use crate::yamlkit::Value;
+
+pub struct EndpointsController;
+
+impl Reconciler for EndpointsController {
+    fn name(&self) -> &'static str {
+        "endpoints"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for svc in api.list("Service") {
+            let ns = object::namespace(&svc);
+            let svc_name = object::name(&svc);
+            let Some(selector) = svc.path("spec.selector") else {
+                continue;
+            };
+            // Ready addresses: Running pods matching the selector that
+            // have an IP.
+            let mut addrs: Vec<String> = api
+                .list_namespaced("Pod", ns)
+                .iter()
+                .filter(|p| object::selector_matches(selector, p))
+                .filter(|p| object::pod_phase(p) == "Running")
+                .filter_map(|p| p.str_at("status.podIP").map(|s| s.to_string()))
+                .collect();
+            addrs.sort();
+
+            let current = api.get("Endpoints", ns, svc_name).ok();
+            let cur_addrs: Vec<String> = current
+                .as_ref()
+                .and_then(|e| e.path("addresses"))
+                .and_then(|a| a.as_seq())
+                .map(|items| {
+                    items
+                        .iter()
+                        .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            if current.is_some() && cur_addrs == addrs {
+                continue;
+            }
+            let mut ep = object::new_object("Endpoints", ns, svc_name);
+            ep.set(
+                "addresses",
+                Value::Seq(addrs.into_iter().map(Value::from).collect()),
+            );
+            object::add_owner_ref(&mut ep, "Service", svc_name, object::uid(&svc));
+            if current.is_some() {
+                let _ = api.update(ep);
+            } else {
+                let _ = api.create(ep);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::reconcile_until;
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn svc() -> Value {
+        parse_one(
+            "kind: Service\nmetadata:\n  name: db\nspec:\n  clusterIP: None\n  selector:\n    app: db\n  ports:\n  - port: 5432\n",
+        )
+        .unwrap()
+    }
+
+    fn running_pod(name: &str, ip: &str, app: &str) -> Value {
+        parse_one(&format!(
+            "kind: Pod\nmetadata:\n  name: {name}\n  labels:\n    app: {app}\nspec: {{}}\nstatus:\n  phase: Running\n  podIP: {ip}\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn endpoints_track_ready_pods() {
+        let api = ApiServer::new();
+        api.create(svc()).unwrap();
+        api.create(running_pod("db-0", "10.244.0.2", "db")).unwrap();
+        api.create(running_pod("db-1", "10.244.1.2", "db")).unwrap();
+        api.create(running_pod("web-0", "10.244.0.9", "web")).unwrap();
+        let c = EndpointsController;
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.get("Endpoints", "default", "db")
+                    .map(|e| {
+                        e.path("addresses").and_then(|x| x.as_seq()).map(|s| s.len())
+                            == Some(2)
+                    })
+                    .unwrap_or(false)
+            },
+            10,
+        );
+        // Pod goes away -> endpoints shrink.
+        api.delete("Pod", "default", "db-1").unwrap();
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.get("Endpoints", "default", "db")
+                    .map(|e| {
+                        e.path("addresses").and_then(|x| x.as_seq()).map(|s| s.len())
+                            == Some(1)
+                    })
+                    .unwrap_or(false)
+            },
+            10,
+        );
+    }
+
+    #[test]
+    fn pending_pods_not_included() {
+        let api = ApiServer::new();
+        api.create(svc()).unwrap();
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: db-0\n  labels:\n    app: db\nspec: {}\nstatus:\n  phase: Pending\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let c = EndpointsController;
+        c.reconcile(&api);
+        let ep = api.get("Endpoints", "default", "db").unwrap();
+        assert_eq!(ep.path("addresses").unwrap().as_seq().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn selectorless_service_ignored() {
+        let api = ApiServer::new();
+        api.create(
+            parse_one("kind: Service\nmetadata:\n  name: ext\nspec:\n  ports:\n  - port: 80\n")
+                .unwrap(),
+        )
+        .unwrap();
+        let c = EndpointsController;
+        c.reconcile(&api);
+        assert!(api.get("Endpoints", "default", "ext").is_err());
+    }
+}

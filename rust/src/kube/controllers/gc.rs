@@ -1,0 +1,94 @@
+//! Garbage collector: cascade-delete orphans whose owners are gone.
+
+use super::Reconciler;
+use crate::kube::api::ApiServer;
+use crate::kube::object;
+
+pub struct GcController;
+
+/// Kinds the GC scans (owner-managed objects).
+const MANAGED_KINDS: &[&str] = &["ReplicaSet", "Pod", "Endpoints"];
+
+impl Reconciler for GcController {
+    fn name(&self) -> &'static str {
+        "gc"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for kind in MANAGED_KINDS {
+            for obj in api.list(kind) {
+                let refs = object::owner_refs(&obj);
+                if refs.is_empty() {
+                    continue;
+                }
+                let orphaned = refs.iter().any(|(okind, oname, ouid)| {
+                    match api.get(okind, object::namespace(&obj), oname) {
+                        Ok(owner) => object::uid(&owner) != ouid,
+                        Err(_) => true,
+                    }
+                });
+                if orphaned {
+                    let _ = api.delete(kind, object::namespace(&obj), object::name(&obj));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::reconcile_until;
+    use super::super::{DeploymentController, ReplicaSetController};
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    #[test]
+    fn deleting_deployment_cascades() {
+        let api = ApiServer::new();
+        api.create(
+            parse_one(
+                "kind: Deployment\nmetadata:\n  name: web\nspec:\n  replicas: 2\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: c\n        image: nginx\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let d = DeploymentController;
+        let r = ReplicaSetController;
+        let g = GcController;
+        reconcile_until(&api, &[&d, &r], |a| a.list("Pod").len() == 2, 20);
+        api.delete("Deployment", "default", "web").unwrap();
+        reconcile_until(
+            &api,
+            &[&g],
+            |a| a.list("Pod").is_empty() && a.list("ReplicaSet").is_empty(),
+            20,
+        );
+    }
+
+    #[test]
+    fn uid_mismatch_counts_as_orphan() {
+        let api = ApiServer::new();
+        // Owner with a specific uid.
+        api.create(parse_one("kind: Job\nmetadata:\n  name: j\nspec: {}\n").unwrap())
+            .unwrap();
+        let mut pod = parse_one("kind: Pod\nmetadata:\n  name: p\nspec: {}\n").unwrap();
+        object::add_owner_ref(&mut pod, "Job", "j", "uid-bogus");
+        api.create(pod).unwrap();
+        let g = GcController;
+        reconcile_until(&api, &[&g], |a| a.list("Pod").is_empty(), 10);
+    }
+
+    #[test]
+    fn owned_objects_with_live_owner_kept() {
+        let api = ApiServer::new();
+        let job = api
+            .create(parse_one("kind: Job\nmetadata:\n  name: j\nspec: {}\n").unwrap())
+            .unwrap();
+        let mut pod = parse_one("kind: Pod\nmetadata:\n  name: p\nspec: {}\n").unwrap();
+        object::add_owner_ref(&mut pod, "Job", "j", object::uid(&job));
+        api.create(pod).unwrap();
+        let g = GcController;
+        g.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Job controller: run pods to completion with parallelism/backoff.
+
+use super::{pod_from_template, Reconciler};
+use crate::kube::api::ApiServer;
+use crate::kube::object;
+use crate::yamlkit::Value;
+
+pub struct JobController;
+
+impl Reconciler for JobController {
+    fn name(&self) -> &'static str {
+        "job"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for job in api.list("Job") {
+            let ns = object::namespace(&job);
+            let job_name = object::name(&job);
+            // Terminal jobs are left alone.
+            if job.str_at("status.state") == Some("Complete")
+                || job.str_at("status.state") == Some("Failed")
+            {
+                continue;
+            }
+            let completions = job.i64_at("spec.completions").unwrap_or(1).max(1);
+            let parallelism = job.i64_at("spec.parallelism").unwrap_or(1).max(1);
+            let backoff_limit = job.i64_at("spec.backoffLimit").unwrap_or(3);
+
+            let pods: Vec<Value> = api
+                .list_namespaced("Pod", ns)
+                .into_iter()
+                .filter(|p| {
+                    object::owner_refs(p)
+                        .iter()
+                        .any(|(_, _, u)| u == object::uid(&job))
+                })
+                .collect();
+            let succeeded = pods
+                .iter()
+                .filter(|p| object::pod_phase(p) == "Succeeded")
+                .count() as i64;
+            let failed = pods
+                .iter()
+                .filter(|p| object::pod_phase(p) == "Failed")
+                .count() as i64;
+            let active = pods
+                .iter()
+                .filter(|p| {
+                    matches!(object::pod_phase(p), "Pending" | "Running")
+                })
+                .count() as i64;
+
+            let mut state = "Active";
+            if succeeded >= completions {
+                state = "Complete";
+            } else if failed > backoff_limit {
+                state = "Failed";
+            } else {
+                // Spawn up to parallelism, bounded by remaining completions.
+                let want = (completions - succeeded - active).min(parallelism - active);
+                if want > 0 {
+                    let template = job
+                        .path("spec.template")
+                        .cloned()
+                        .unwrap_or(Value::map());
+                    for _ in 0..want {
+                        let pod =
+                            pod_from_template(&template, &job, job_name, &[]);
+                        let _ = api.create(pod);
+                    }
+                }
+            }
+
+            let changed = job.i64_at("status.succeeded") != Some(succeeded)
+                || job.i64_at("status.failed") != Some(failed)
+                || job.i64_at("status.active") != Some(active)
+                || job.str_at("status.state") != Some(state);
+            if changed {
+                let mut status = Value::map();
+                status.set("succeeded", Value::Int(succeeded));
+                status.set("failed", Value::Int(failed));
+                status.set("active", Value::Int(active));
+                status.set("state", Value::from(state));
+                let _ = api.update_status("Job", ns, job_name, status);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::reconcile_until;
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn job(completions: i64, parallelism: i64) -> Value {
+        parse_one(&format!(
+            "kind: Job\nmetadata:\n  name: work\nspec:\n  completions: {completions}\n  parallelism: {parallelism}\n  template:\n    spec:\n      containers:\n      - name: main\n        image: worker:1\n"
+        ))
+        .unwrap()
+    }
+
+    fn finish_pods(api: &ApiServer, phase: &str) {
+        for p in api.list("Pod") {
+            if object::pod_phase(&p) != "Succeeded" && object::pod_phase(&p) != "Failed" {
+                api.update_status(
+                    "Pod",
+                    "default",
+                    object::name(&p),
+                    parse_one(&format!("phase: {phase}\n")).unwrap(),
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn runs_to_completion() {
+        let api = ApiServer::new();
+        api.create(job(1, 1)).unwrap();
+        let c = JobController;
+        reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 1, 10);
+        finish_pods(&api, "Succeeded");
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.get("Job", "default", "work").unwrap().str_at("status.state")
+                    == Some("Complete")
+            },
+            10,
+        );
+    }
+
+    #[test]
+    fn parallelism_bounds_active_pods() {
+        let api = ApiServer::new();
+        api.create(job(4, 2)).unwrap();
+        let c = JobController;
+        c.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 2);
+        finish_pods(&api, "Succeeded");
+        c.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 4, "2 done + 2 new");
+        finish_pods(&api, "Succeeded");
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.get("Job", "default", "work").unwrap().str_at("status.state")
+                    == Some("Complete")
+            },
+            10,
+        );
+    }
+
+    #[test]
+    fn backoff_limit_fails_job() {
+        let api = ApiServer::new();
+        let mut j = job(1, 1);
+        j.entry_map("spec").set("backoffLimit", Value::Int(1));
+        api.create(j).unwrap();
+        let c = JobController;
+        for _ in 0..3 {
+            c.reconcile(&api);
+            finish_pods(&api, "Failed");
+        }
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.get("Job", "default", "work").unwrap().str_at("status.state")
+                    == Some("Failed")
+            },
+            10,
+        );
+    }
+
+    #[test]
+    fn retries_failed_pod_within_backoff() {
+        let api = ApiServer::new();
+        api.create(job(1, 1)).unwrap();
+        let c = JobController;
+        c.reconcile(&api);
+        finish_pods(&api, "Failed");
+        c.reconcile(&api);
+        // One failed + one fresh attempt.
+        let pods = api.list("Pod");
+        assert_eq!(pods.len(), 2);
+        finish_pods(&api, "Succeeded");
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.get("Job", "default", "work").unwrap().str_at("status.state")
+                    == Some("Complete")
+            },
+            10,
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! ReplicaSet controller: keep `spec.replicas` pods alive.
+
+use super::{pod_from_template, Reconciler};
+use crate::kube::api::ApiServer;
+use crate::kube::object;
+use crate::yamlkit::Value;
+
+pub struct ReplicaSetController;
+
+impl Reconciler for ReplicaSetController {
+    fn name(&self) -> &'static str {
+        "replicaset"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for rs in api.list("ReplicaSet") {
+            let desired = rs.i64_at("spec.replicas").unwrap_or(1).max(0);
+            let rs_uid = object::uid(&rs);
+            let ns = object::namespace(&rs);
+            let pods: Vec<Value> = api
+                .list_namespaced("Pod", ns)
+                .into_iter()
+                .filter(|p| {
+                    object::owner_refs(p).iter().any(|(_, _, uid)| uid == rs_uid)
+                })
+                .collect();
+
+            // Replace terminally failed pods (delete; recreate below).
+            let mut live: Vec<&Value> = Vec::new();
+            for p in &pods {
+                let phase = object::pod_phase(p);
+                if phase == "Failed" || phase == "Succeeded" {
+                    let _ = api.delete("Pod", ns, object::name(p));
+                } else {
+                    live.push(p);
+                }
+            }
+
+            let have = live.len() as i64;
+            if have < desired {
+                let template = rs.path("spec.template").cloned().unwrap_or(Value::map());
+                for _ in 0..(desired - have) {
+                    let pod = pod_from_template(
+                        &template,
+                        &rs,
+                        object::name(&rs),
+                        &[],
+                    );
+                    let _ = api.create(pod);
+                }
+            } else if have > desired {
+                // Prefer deleting not-yet-running pods first.
+                let mut victims: Vec<&&Value> = live
+                    .iter()
+                    .filter(|p| object::pod_phase(p) != "Running")
+                    .collect();
+                let runners: Vec<&&Value> = live
+                    .iter()
+                    .filter(|p| object::pod_phase(p) == "Running")
+                    .collect();
+                victims.extend(runners);
+                for p in victims.into_iter().take((have - desired) as usize) {
+                    let _ = api.delete("Pod", ns, object::name(p));
+                }
+            }
+
+            // Status: readyReplicas = running owned pods.
+            let ready = live
+                .iter()
+                .filter(|p| object::pod_phase(p) == "Running")
+                .count() as i64;
+            let cur_ready = rs.i64_at("status.readyReplicas").unwrap_or(-1);
+            let cur_repl = rs.i64_at("status.replicas").unwrap_or(-1);
+            if cur_ready != ready || cur_repl != have {
+                let mut status = Value::map();
+                status.set("replicas", Value::Int(have));
+                status.set("readyReplicas", Value::Int(ready));
+                let _ = api.update_status("ReplicaSet", ns, object::name(&rs), status);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::reconcile_until;
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn rs_yaml(replicas: i64) -> Value {
+        parse_one(&format!(
+            "kind: ReplicaSet\nmetadata:\n  name: web-abc\nspec:\n  replicas: {replicas}\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: main\n        image: nginx\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn scales_up_to_replicas() {
+        let api = ApiServer::new();
+        api.create(rs_yaml(3)).unwrap();
+        let c = ReplicaSetController;
+        reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 3, 10);
+        // Stable: more reconciles don't overshoot.
+        c.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 3);
+    }
+
+    #[test]
+    fn scales_down() {
+        let api = ApiServer::new();
+        api.create(rs_yaml(3)).unwrap();
+        let c = ReplicaSetController;
+        reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 3, 10);
+        let mut rs = api.get("ReplicaSet", "default", "web-abc").unwrap();
+        rs.entry_map("spec").set("replicas", Value::Int(1));
+        api.update(rs).unwrap();
+        reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 1, 10);
+    }
+
+    #[test]
+    fn replaces_failed_pod() {
+        let api = ApiServer::new();
+        api.create(rs_yaml(1)).unwrap();
+        let c = ReplicaSetController;
+        reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 1, 10);
+        let pod = &api.list("Pod")[0];
+        let name = object::name(pod).to_string();
+        api.update_status("Pod", "default", &name, parse_one("phase: Failed\n").unwrap())
+            .unwrap();
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                let pods = a.list("Pod");
+                pods.len() == 1 && object::name(&pods[0]) != name
+            },
+            10,
+        );
+    }
+
+    #[test]
+    fn ignores_unowned_pods() {
+        let api = ApiServer::new();
+        api.create(rs_yaml(1)).unwrap();
+        api.create(
+            parse_one("kind: Pod\nmetadata:\n  name: stray\nspec: {}\n").unwrap(),
+        )
+        .unwrap();
+        let c = ReplicaSetController;
+        reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 2, 10);
+        c.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 2, "stray pod untouched");
+        assert!(api.get("Pod", "default", "stray").is_ok());
+    }
+
+    #[test]
+    fn status_reflects_ready() {
+        let api = ApiServer::new();
+        api.create(rs_yaml(2)).unwrap();
+        let c = ReplicaSetController;
+        reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 2, 10);
+        for p in api.list("Pod") {
+            api.update_status(
+                "Pod",
+                "default",
+                object::name(&p),
+                parse_one("phase: Running\n").unwrap(),
+            )
+            .unwrap();
+        }
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.get("ReplicaSet", "default", "web-abc")
+                    .unwrap()
+                    .i64_at("status.readyReplicas")
+                    == Some(2)
+            },
+            10,
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! CoreDNS role: resolve service names to addresses.
+//!
+//! Supported query shapes (all namespaces default to `default`):
+//!
+//! - `svc` / `svc.ns` / `svc.ns.svc.cluster.local`
+//!
+//! Headless services (`clusterIP: None`) resolve to the ready pod IPs
+//! from Endpoints — the mechanism HPK relies on after disabling
+//! ClusterIP services. Services *with* a ClusterIP resolve to that
+//! virtual IP (only meaningful in the vanilla baseline, where a
+//! kube-proxy equivalent routes it).
+
+use super::api::ApiServer;
+use std::net::Ipv4Addr;
+
+/// Stateless resolver over the API server.
+#[derive(Clone)]
+pub struct CoreDns {
+    api: ApiServer,
+}
+
+impl CoreDns {
+    pub fn new(api: ApiServer) -> CoreDns {
+        CoreDns { api }
+    }
+
+    /// Split a query into (service, namespace).
+    fn parse_query<'a>(&self, query: &'a str) -> (&'a str, &'a str) {
+        let parts: Vec<&str> = query.split('.').collect();
+        match parts.as_slice() {
+            [svc] => (svc, "default"),
+            [svc, ns] => (svc, ns),
+            [svc, ns, rest @ ..]
+                if rest.first() == Some(&"svc")
+                    || rest.first() == Some(&"pod") =>
+            {
+                (svc, ns)
+            }
+            [svc, ns, ..] => (svc, ns),
+            [] => ("", "default"),
+        }
+    }
+
+    /// Resolve a service query to IPs (possibly several for headless).
+    pub fn resolve(&self, query: &str) -> Vec<Ipv4Addr> {
+        let (svc_name, ns) = self.parse_query(query);
+        let Ok(svc) = self.api.get("Service", ns, svc_name) else {
+            return Vec::new();
+        };
+        let cluster_ip = svc.str_at("spec.clusterIP");
+        match cluster_ip {
+            Some("None") | None => {
+                // Headless: endpoints' pod IPs.
+                let Ok(ep) = self.api.get("Endpoints", ns, svc_name) else {
+                    return Vec::new();
+                };
+                ep.path("addresses")
+                    .and_then(|a| a.as_seq())
+                    .map(|items| {
+                        items
+                            .iter()
+                            .filter_map(|v| v.as_str())
+                            .filter_map(|s| s.parse().ok())
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            }
+            Some(ip) => ip.parse().map(|ip| vec![ip]).unwrap_or_default(),
+        }
+    }
+
+    /// First address, if any (the common client path).
+    pub fn resolve_one(&self, query: &str) -> Option<Ipv4Addr> {
+        self.resolve(query).into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::controllers::{EndpointsController, Reconciler};
+    use crate::yamlkit::parse_one;
+
+    fn setup_headless() -> ApiServer {
+        let api = ApiServer::new();
+        api.create(
+            parse_one(
+                "kind: Service\nmetadata:\n  name: db\n  namespace: prod\nspec:\n  clusterIP: None\n  selector:\n    app: db\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: db-0\n  namespace: prod\n  labels:\n    app: db\nspec: {}\nstatus:\n  phase: Running\n  podIP: 10.244.0.5\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        EndpointsController.reconcile(&api);
+        api
+    }
+
+    #[test]
+    fn headless_resolves_to_pod_ips() {
+        let api = setup_headless();
+        let dns = CoreDns::new(api);
+        let ips = dns.resolve("db.prod");
+        assert_eq!(ips, vec![Ipv4Addr::new(10, 244, 0, 5)]);
+        assert_eq!(
+            dns.resolve("db.prod.svc.cluster.local"),
+            vec![Ipv4Addr::new(10, 244, 0, 5)]
+        );
+    }
+
+    #[test]
+    fn default_namespace_shorthand() {
+        let api = ApiServer::new();
+        api.create(
+            parse_one(
+                "kind: Service\nmetadata:\n  name: web\nspec:\n  clusterIP: 10.96.0.7\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let dns = CoreDns::new(api);
+        assert_eq!(dns.resolve_one("web"), Some(Ipv4Addr::new(10, 96, 0, 7)));
+    }
+
+    #[test]
+    fn unknown_service_empty() {
+        let dns = CoreDns::new(ApiServer::new());
+        assert!(dns.resolve("ghost").is_empty());
+        assert!(dns.resolve_one("ghost.ns").is_none());
+    }
+}

@@ -1,0 +1,336 @@
+//! Kubelet machinery: pod execution shared by the vanilla node agent
+//! (Cloud baseline) and HPK's Slurm-side executor.
+
+use super::api::ApiServer;
+use super::object;
+use crate::apptainer::{ApptainerRuntime, NetContext};
+use crate::slurm::CancelToken;
+use crate::yamlkit::Value;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Env for one container: pod spec env + downward-API-style fields.
+pub fn container_env(pod: &Value, container: &Value, net: &NetContext) -> Vec<(String, String)> {
+    let mut env: Vec<(String, String)> = Vec::new();
+    if let Some(items) = container.path("env").and_then(|e| e.as_seq()) {
+        for item in items {
+            if let (Some(k), Some(v)) = (
+                item.str_at("name"),
+                item.get("value").and_then(|v| v.coerce_string()),
+            ) {
+                env.push((k.to_string(), v));
+            }
+        }
+    }
+    env.push(("POD_NAME".to_string(), object::name(pod).to_string()));
+    env.push((
+        "POD_NAMESPACE".to_string(),
+        object::namespace(pod).to_string(),
+    ));
+    env.push(("POD_IP".to_string(), net.ip.to_string()));
+    env.push(("NODE_NAME".to_string(), net.node.clone()));
+    env
+}
+
+/// Command + args of a container.
+pub fn container_args(container: &Value) -> Vec<String> {
+    let mut out = Vec::new();
+    for key in ["command", "args"] {
+        if let Some(items) = container.path(key).and_then(|c| c.as_seq()) {
+            out.extend(items.iter().filter_map(|v| v.coerce_string()));
+        }
+    }
+    out
+}
+
+/// Run all containers of a pod inside one sandbox (the paper's
+/// parent/child topology: every container shares the sandbox IP).
+/// Containers run concurrently; the pod "succeeds" when all exit Ok.
+pub fn run_pod_containers(
+    runtime: &Arc<ApptainerRuntime>,
+    net: &NetContext,
+    pod: &Value,
+    cancel: &CancelToken,
+) -> Result<(), String> {
+    let containers: Vec<Value> = pod
+        .path("spec.containers")
+        .and_then(|c| c.as_seq())
+        .map(|s| s.to_vec())
+        .unwrap_or_default();
+    if containers.is_empty() {
+        return Err("pod has no containers".to_string());
+    }
+    let results: Arc<Mutex<Vec<Result<(), String>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let mut handles = Vec::new();
+    for c in containers {
+        let rt = runtime.clone();
+        let net = net.clone();
+        let pod = pod.clone();
+        let cancel = cancel.clone();
+        let results = results.clone();
+        handles.push(std::thread::spawn(move || {
+            let image = c.str_at("image").unwrap_or("").to_string();
+            let args = container_args(&c);
+            let env = container_env(&pod, &c, &net);
+            // HPK default: fakeroot on, for Docker-image compatibility.
+            let r = rt.run_container(&net, &image, &args, &env, true, cancel);
+            results.lock().unwrap().push(r);
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let results = results.lock().unwrap();
+    for r in results.iter() {
+        if let Err(e) = r {
+            return Err(e.clone());
+        }
+    }
+    Ok(())
+}
+
+/// The vanilla kubelet: runs pods bound to `node_name` directly on the
+/// container runtime (no Slurm) — the "regular Cloud setting" baseline
+/// the paper compares against in SS4.1.
+pub struct VanillaKubelet {
+    api: ApiServer,
+    node_name: String,
+    runtime: Arc<ApptainerRuntime>,
+    shutdown: Arc<AtomicBool>,
+    running: Arc<Mutex<HashMap<String, CancelToken>>>, // pod full name
+}
+
+impl VanillaKubelet {
+    pub fn start(
+        api: ApiServer,
+        node_name: &str,
+        runtime: Arc<ApptainerRuntime>,
+    ) -> Arc<VanillaKubelet> {
+        let kubelet = Arc::new(VanillaKubelet {
+            api,
+            node_name: node_name.to_string(),
+            runtime,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            running: Arc::new(Mutex::new(HashMap::new())),
+        });
+        let k = kubelet.clone();
+        std::thread::Builder::new()
+            .name(format!("kubelet-{node_name}"))
+            .spawn(move || k.sync_loop())
+            .expect("spawn kubelet");
+        kubelet
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Cancel everything we started.
+        for (_, tok) in self.running.lock().unwrap().iter() {
+            tok.cancel();
+        }
+    }
+
+    fn sync_loop(&self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            self.sync_once();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    fn sync_once(&self) {
+        for pod in self.api.list("Pod") {
+            if pod.str_at("spec.nodeName") != Some(&self.node_name) {
+                continue;
+            }
+            let full = object::full_name(&pod);
+            let phase = object::pod_phase(&pod);
+            let started = self.running.lock().unwrap().contains_key(&full);
+            if phase == "Pending" && !started {
+                self.start_pod(pod.clone(), full);
+            }
+        }
+        // Cancel pods that were deleted from the API.
+        let live: Vec<String> = self
+            .api
+            .list("Pod")
+            .iter()
+            .map(object::full_name)
+            .collect();
+        let mut running = self.running.lock().unwrap();
+        running.retain(|full, tok| {
+            if !live.contains(full) {
+                tok.cancel();
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    fn start_pod(&self, pod: Value, full: String) {
+        let cancel = CancelToken::new();
+        self.running
+            .lock()
+            .unwrap()
+            .insert(full.clone(), cancel.clone());
+        let api = self.api.clone();
+        let runtime = self.runtime.clone();
+        let node = self.node_name.clone();
+        std::thread::Builder::new()
+            .name(format!("pod-{full}"))
+            .spawn(move || {
+                let ns = object::namespace(&pod).to_string();
+                let name = object::name(&pod).to_string();
+                let net = match runtime.create_sandbox(&node) {
+                    Ok(net) => net,
+                    Err(e) => {
+                        let mut st = Value::map();
+                        st.set("phase", Value::from("Failed"));
+                        st.set("reason", Value::from(e.as_str()));
+                        let _ = api.update_status("Pod", &ns, &name, st);
+                        return;
+                    }
+                };
+                let mut st = Value::map();
+                st.set("phase", Value::from("Running"));
+                st.set("podIP", Value::from(net.ip.to_string()));
+                let _ = api.update_status("Pod", &ns, &name, st);
+
+                let result = run_pod_containers(&runtime, &net, &pod, &cancel);
+                runtime.destroy_sandbox(&net);
+
+                // The pod may have been deleted while running.
+                if api.get("Pod", &ns, &name).is_err() {
+                    return;
+                }
+                let mut st = Value::map();
+                st.set("podIP", Value::from(net.ip.to_string()));
+                match result {
+                    Ok(()) => st.set("phase", Value::from("Succeeded")),
+                    Err(e) if cancel.is_cancelled() => {
+                        let _ = e;
+                        st.set("phase", Value::from("Succeeded"));
+                        st.set("reason", Value::from("Terminated"));
+                    }
+                    Err(e) => {
+                        st.set("phase", Value::from("Failed"));
+                        st.set("reason", Value::from(e.as_str()));
+                    }
+                }
+                let _ = api.update_status("Pod", &ns, &name, st);
+            })
+            .expect("spawn pod thread");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apptainer::ImageSpec;
+    use crate::hpcsim::Clock;
+    use crate::virtfs::VirtFs;
+    use crate::yamlkit::parse_one;
+
+    fn wait_phase(api: &ApiServer, name: &str, phase: &str, ms: u64) -> bool {
+        let t0 = std::time::Instant::now();
+        while (t0.elapsed().as_millis() as u64) < ms {
+            if let Ok(p) = api.get("Pod", "default", name) {
+                if object::pod_phase(&p) == phase {
+                    return true;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        false
+    }
+
+    fn setup() -> (ApiServer, Arc<ApptainerRuntime>) {
+        let api = ApiServer::new();
+        let rt = Arc::new(ApptainerRuntime::new(VirtFs::new(), Clock::new(1000), true));
+        rt.registry.register(ImageSpec::new("quick:1", "quick").with_size(1 << 20));
+        rt.table.register("quick", |_| Ok(0));
+        rt.registry.register(ImageSpec::new("server:1", "server").with_size(1 << 20));
+        rt.table.register("server", |ctx| {
+            while !ctx.cancel.is_cancelled() {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err("terminated".to_string())
+        });
+        (api, rt)
+    }
+
+    #[test]
+    fn runs_bound_pod_to_success() {
+        let (api, rt) = setup();
+        let kubelet = VanillaKubelet::start(api.clone(), "n1", rt);
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: p1\nspec:\n  nodeName: n1\n  containers:\n  - name: main\n    image: quick:1\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(wait_phase(&api, "p1", "Succeeded", 3000));
+        let p = api.get("Pod", "default", "p1").unwrap();
+        assert!(p.str_at("status.podIP").unwrap().starts_with("10.244."));
+        kubelet.shutdown();
+    }
+
+    #[test]
+    fn ignores_pods_for_other_nodes() {
+        let (api, rt) = setup();
+        let kubelet = VanillaKubelet::start(api.clone(), "n1", rt);
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: p2\nspec:\n  nodeName: other\n  containers:\n  - name: main\n    image: quick:1\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let p = api.get("Pod", "default", "p2").unwrap();
+        assert_eq!(object::pod_phase(&p), "Pending");
+        kubelet.shutdown();
+    }
+
+    #[test]
+    fn deleting_pod_cancels_server_container() {
+        let (api, rt) = setup();
+        let kubelet = VanillaKubelet::start(api.clone(), "n1", rt.clone());
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: srv\nspec:\n  nodeName: n1\n  containers:\n  - name: main\n    image: server:1\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(wait_phase(&api, "srv", "Running", 3000));
+        api.delete("Pod", "default", "srv").unwrap();
+        // The container must unwind and free its sandbox (generous
+        // timeout: the suite runs many threads on few cores).
+        let t0 = std::time::Instant::now();
+        while rt.cni.live_count() > 0 && t0.elapsed().as_secs() < 15 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(rt.cni.live_count(), 0);
+        kubelet.shutdown();
+    }
+
+    #[test]
+    fn failing_container_fails_pod() {
+        let (api, rt) = setup();
+        rt.registry.register(ImageSpec::new("bad:1", "bad").with_size(1 << 20));
+        rt.table.register("bad", |_| Err("boom".to_string()));
+        let kubelet = VanillaKubelet::start(api.clone(), "n1", rt);
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: bad\nspec:\n  nodeName: n1\n  containers:\n  - name: main\n    image: bad:1\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(wait_phase(&api, "bad", "Failed", 3000));
+        kubelet.shutdown();
+    }
+}

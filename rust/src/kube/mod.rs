@@ -1,0 +1,33 @@
+//! The Kubernetes core: everything the paper uses *unmodified*.
+//!
+//! HPK bundles official builds of the API server, etcd, the controller
+//! manager and CoreDNS into its control-plane container (SS3, Figure 3).
+//! This module re-implements their documented behaviour so the HPK
+//! modules in [`crate::hpk`] integrate against the same surfaces:
+//!
+//! - [`store`] — the etcd role: versioned objects + a watchable event log.
+//! - [`object`] — helpers over manifest [`crate::Value`]s (names, labels,
+//!   owner refs, selectors).
+//! - [`api`] — the API-server role: CRUD verbs, defaulting, admission
+//!   chain, namespaces, field validation.
+//! - [`controllers`] — the controller-manager role: Deployment,
+//!   ReplicaSet, Job, Endpoints and garbage collection, plus the
+//!   controller-runtime harness they share.
+//! - [`scheduler`] — the default kube-scheduler (used by the *vanilla*
+//!   baseline; HPK swaps in its pass-through scheduler).
+//! - [`coredns`] — name resolution for services (headless and
+//!   ClusterIP) backed by Endpoints.
+//! - [`kubelet`] — the kubelet interface + a vanilla node agent for the
+//!   Cloud-baseline comparison.
+
+pub mod api;
+pub mod controllers;
+pub mod coredns;
+pub mod kubelet;
+pub mod object;
+pub mod scheduler;
+pub mod store;
+
+pub use api::{AdmissionCheck, AdmissionOp, ApiError, ApiServer};
+pub use coredns::CoreDns;
+pub use store::{EventType, Store, StoreEvent};

@@ -1,0 +1,200 @@
+//! The default kube-scheduler (vanilla baseline).
+//!
+//! HPK replaces this with its pass-through scheduler
+//! ([`crate::hpk::PassThroughScheduler`]); the vanilla one is kept for
+//! the Cloud-baseline comparison in the benches: it scores Node objects
+//! by free resources and binds pods to the least-loaded fitting node.
+
+use super::api::ApiServer;
+use super::controllers::Reconciler;
+use super::object;
+use crate::yamlkit::Value;
+
+/// Least-allocated scoring scheduler over `Node` objects.
+pub struct DefaultScheduler;
+
+fn node_capacity(node: &Value) -> (i64, i64) {
+    let cpu = node
+        .path("status.capacity.cpu")
+        .and_then(|v| v.coerce_string())
+        .and_then(|s| crate::util::parse_cpu_millis(&s))
+        .unwrap_or(0);
+    let mem = node
+        .path("status.capacity.memory")
+        .and_then(|v| v.coerce_string())
+        .and_then(|s| crate::util::parse_memory_bytes(&s))
+        .unwrap_or(0);
+    (cpu, mem)
+}
+
+impl Reconciler for DefaultScheduler {
+    fn name(&self) -> &'static str {
+        "default-scheduler"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        let nodes = api.list("Node");
+        if nodes.is_empty() {
+            return;
+        }
+        // Usage per node from bound, non-terminal pods.
+        let pods = api.list("Pod");
+        let mut usage: Vec<(String, i64, i64)> = nodes
+            .iter()
+            .map(|n| (object::name(n).to_string(), 0i64, 0i64))
+            .collect();
+        for p in &pods {
+            let phase = object::pod_phase(p);
+            if phase == "Succeeded" || phase == "Failed" {
+                continue;
+            }
+            if let Some(node_name) = p.str_at("spec.nodeName") {
+                let (cpu, mem) = object::pod_resource_totals(p);
+                if let Some(u) = usage.iter_mut().find(|(n, _, _)| n == node_name) {
+                    u.1 += cpu;
+                    u.2 += mem;
+                }
+            }
+        }
+
+        for p in pods {
+            if p.str_at("spec.nodeName").is_some() {
+                continue;
+            }
+            if object::pod_phase(&p) != "Pending" {
+                continue;
+            }
+            // Honor an explicit schedulerName that isn't ours.
+            if let Some(s) = p.str_at("spec.schedulerName") {
+                if s != "default-scheduler" {
+                    continue;
+                }
+            }
+            let (need_cpu, need_mem) = object::pod_resource_totals(&p);
+            // Pick the fitting node with most free CPU (spread).
+            let mut best: Option<(String, i64)> = None;
+            for n in &nodes {
+                let name = object::name(n).to_string();
+                let (cap_cpu, cap_mem) = node_capacity(n);
+                let (used_cpu, used_mem) = usage
+                    .iter()
+                    .find(|(un, _, _)| *un == name)
+                    .map(|(_, c, m)| (*c, *m))
+                    .unwrap_or((0, 0));
+                let free_cpu = cap_cpu - used_cpu;
+                let free_mem = cap_mem - used_mem;
+                if free_cpu >= need_cpu && free_mem >= need_mem {
+                    if best.as_ref().map(|(_, f)| free_cpu > *f).unwrap_or(true) {
+                        best = Some((name, free_cpu));
+                    }
+                }
+            }
+            if let Some((node_name, _)) = best {
+                let mut patch = Value::map();
+                patch
+                    .entry_map("spec")
+                    .set("nodeName", Value::from(node_name.as_str()));
+                if api
+                    .patch("Pod", object::namespace(&p), object::name(&p), &patch)
+                    .is_ok()
+                {
+                    if let Some(u) =
+                        usage.iter_mut().find(|(n, _, _)| *n == node_name)
+                    {
+                        u.1 += need_cpu;
+                        u.2 += need_mem;
+                    }
+                    api.record_event(
+                        object::namespace(&p),
+                        &format!("Pod/{}", object::name(&p)),
+                        "Scheduled",
+                        &format!("assigned to {node_name}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Register a Node object (what a kubelet does when it joins).
+pub fn register_node(api: &ApiServer, name: &str, cpus: u32, memory_bytes: u64) {
+    let mut node = object::new_object("Node", "default", name);
+    let status = node.entry_map("status");
+    let cap = status.entry_map("capacity");
+    cap.set("cpu", Value::Int(cpus as i64));
+    cap.set("memory", Value::from(format!("{memory_bytes}")));
+    status.set("phase", Value::from("Ready"));
+    let _ = api.create(node);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn pod(name: &str, cpu_m: i64) -> Value {
+        parse_one(&format!(
+            "kind: Pod\nmetadata:\n  name: {name}\nspec:\n  containers:\n  - name: c\n    resources:\n      requests:\n        cpu: {cpu_m}m\n        memory: 64Mi\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn binds_to_fitting_node() {
+        let api = ApiServer::new();
+        register_node(&api, "n1", 2, 8 << 30);
+        api.create(pod("p1", 1500)).unwrap();
+        let s = DefaultScheduler;
+        s.reconcile(&api);
+        let p = api.get("Pod", "default", "p1").unwrap();
+        assert_eq!(p.str_at("spec.nodeName"), Some("n1"));
+    }
+
+    #[test]
+    fn spreads_by_free_cpu() {
+        let api = ApiServer::new();
+        register_node(&api, "n1", 4, 8 << 30);
+        register_node(&api, "n2", 4, 8 << 30);
+        for i in 0..4 {
+            api.create(pod(&format!("p{i}"), 1000)).unwrap();
+        }
+        let s = DefaultScheduler;
+        s.reconcile(&api);
+        let mut counts = std::collections::HashMap::new();
+        for p in api.list("Pod") {
+            *counts
+                .entry(p.str_at("spec.nodeName").unwrap().to_string())
+                .or_insert(0)
+                += 1;
+        }
+        assert_eq!(counts.get("n1"), Some(&2));
+        assert_eq!(counts.get("n2"), Some(&2));
+    }
+
+    #[test]
+    fn unschedulable_pod_stays_pending() {
+        let api = ApiServer::new();
+        register_node(&api, "n1", 1, 1 << 30);
+        api.create(pod("huge", 64_000)).unwrap();
+        let s = DefaultScheduler;
+        s.reconcile(&api);
+        let p = api.get("Pod", "default", "huge").unwrap();
+        assert!(p.str_at("spec.nodeName").is_none());
+    }
+
+    #[test]
+    fn respects_foreign_scheduler_name() {
+        let api = ApiServer::new();
+        register_node(&api, "n1", 4, 8 << 30);
+        let mut p = pod("p1", 100);
+        p.entry_map("spec")
+            .set("schedulerName", Value::from("hpk-scheduler"));
+        api.create(p).unwrap();
+        DefaultScheduler.reconcile(&api);
+        assert!(api
+            .get("Pod", "default", "p1")
+            .unwrap()
+            .str_at("spec.nodeName")
+            .is_none());
+    }
+}

@@ -1,0 +1,240 @@
+//! The etcd role: versioned object storage with a watchable event log.
+//!
+//! Objects are whole manifests ([`crate::Value`]) keyed by
+//! `(kind, namespace, name)`. Every mutation bumps a global revision and
+//! appends to a bounded event log that watchers poll with
+//! [`Store::events_since`] — the same contract Kubernetes watches give
+//! controllers (list + watch from a resourceVersion).
+
+use crate::yamlkit::Value;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Watch event types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventType {
+    Added,
+    Modified,
+    Deleted,
+}
+
+/// One event in the log.
+#[derive(Debug, Clone)]
+pub struct StoreEvent {
+    pub revision: u64,
+    pub event_type: EventType,
+    pub kind: String,
+    pub namespace: String,
+    pub name: String,
+    /// Object state after the event (before, for deletions).
+    pub object: Arc<Value>,
+}
+
+/// Bounded event log length; watchers lagging further re-list.
+const EVENT_LOG_CAP: usize = 8192;
+
+#[derive(Default)]
+struct Inner {
+    /// kind -> namespace/name -> object.
+    objects: BTreeMap<String, BTreeMap<String, Arc<Value>>>,
+    revision: u64,
+    log: std::collections::VecDeque<StoreEvent>,
+}
+
+/// Thread-safe versioned store; cheap to clone.
+#[derive(Clone, Default)]
+pub struct Store {
+    inner: Arc<Mutex<Inner>>,
+}
+
+fn nskey(namespace: &str, name: &str) -> String {
+    format!("{namespace}/{name}")
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store::default()
+    }
+
+    /// Insert or replace; returns the new revision.
+    pub fn put(&self, kind: &str, namespace: &str, name: &str, mut obj: Value) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.revision += 1;
+        let rev = inner.revision;
+        obj.entry_map("metadata")
+            .set("resourceVersion", Value::Int(rev as i64));
+        let arc = Arc::new(obj);
+        let existed = inner
+            .objects
+            .entry(kind.to_string())
+            .or_default()
+            .insert(nskey(namespace, name), arc.clone())
+            .is_some();
+        let event = StoreEvent {
+            revision: rev,
+            event_type: if existed { EventType::Modified } else { EventType::Added },
+            kind: kind.to_string(),
+            namespace: namespace.to_string(),
+            name: name.to_string(),
+            object: arc,
+        };
+        inner.log.push_back(event);
+        if inner.log.len() > EVENT_LOG_CAP {
+            inner.log.pop_front();
+        }
+        rev
+    }
+
+    /// Fetch one object.
+    pub fn get(&self, kind: &str, namespace: &str, name: &str) -> Option<Arc<Value>> {
+        let inner = self.inner.lock().unwrap();
+        inner.objects.get(kind)?.get(&nskey(namespace, name)).cloned()
+    }
+
+    /// Delete; returns the removed object and logs a Deleted event.
+    pub fn delete(&self, kind: &str, namespace: &str, name: &str) -> Option<Arc<Value>> {
+        let mut inner = self.inner.lock().unwrap();
+        let removed = inner.objects.get_mut(kind)?.remove(&nskey(namespace, name))?;
+        inner.revision += 1;
+        let rev = inner.revision;
+        let event = StoreEvent {
+            revision: rev,
+            event_type: EventType::Deleted,
+            kind: kind.to_string(),
+            namespace: namespace.to_string(),
+            name: name.to_string(),
+            object: removed.clone(),
+        };
+        inner.log.push_back(event);
+        if inner.log.len() > EVENT_LOG_CAP {
+            inner.log.pop_front();
+        }
+        Some(removed)
+    }
+
+    /// All objects of a kind (all namespaces), sorted by namespace/name.
+    pub fn list(&self, kind: &str) -> Vec<Arc<Value>> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .objects
+            .get(kind)
+            .map(|m| m.values().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Objects of a kind in one namespace.
+    pub fn list_namespaced(&self, kind: &str, namespace: &str) -> Vec<Arc<Value>> {
+        let prefix = format!("{namespace}/");
+        let inner = self.inner.lock().unwrap();
+        inner
+            .objects
+            .get(kind)
+            .map(|m| {
+                m.range(prefix.clone()..)
+                    .take_while(|(k, _)| k.starts_with(&prefix))
+                    .map(|(_, v)| v.clone())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Current global revision.
+    pub fn revision(&self) -> u64 {
+        self.inner.lock().unwrap().revision
+    }
+
+    /// Events with revision > `since`. The bool is false when the log has
+    /// been truncated past `since` (watcher must re-list).
+    pub fn events_since(&self, since: u64) -> (Vec<StoreEvent>, bool) {
+        let inner = self.inner.lock().unwrap();
+        let oldest_logged = inner.log.front().map(|e| e.revision).unwrap_or(inner.revision + 1);
+        let complete = since + 1 >= oldest_logged || inner.log.is_empty() && since >= inner.revision;
+        let events = inner
+            .log
+            .iter()
+            .filter(|e| e.revision > since)
+            .cloned()
+            .collect();
+        (events, complete)
+    }
+
+    /// Kinds present in the store.
+    pub fn kinds(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner.objects.keys().cloned().collect()
+    }
+
+    /// Total object count (across kinds).
+    pub fn object_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.objects.values().map(|m| m.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn obj(name: &str) -> Value {
+        parse_one(&format!("metadata:\n  name: {name}\n")).unwrap()
+    }
+
+    #[test]
+    fn put_get_list_delete() {
+        let s = Store::new();
+        s.put("Pod", "default", "a", obj("a"));
+        s.put("Pod", "default", "b", obj("b"));
+        s.put("Pod", "kube-system", "c", obj("c"));
+        assert!(s.get("Pod", "default", "a").is_some());
+        assert_eq!(s.list("Pod").len(), 3);
+        assert_eq!(s.list_namespaced("Pod", "default").len(), 2);
+        assert!(s.delete("Pod", "default", "a").is_some());
+        assert!(s.get("Pod", "default", "a").is_none());
+        assert!(s.delete("Pod", "default", "a").is_none());
+    }
+
+    #[test]
+    fn revisions_monotonic_and_stamped() {
+        let s = Store::new();
+        let r1 = s.put("Pod", "default", "a", obj("a"));
+        let r2 = s.put("Pod", "default", "a", obj("a"));
+        assert!(r2 > r1);
+        let stored = s.get("Pod", "default", "a").unwrap();
+        assert_eq!(stored.i64_at("metadata.resourceVersion"), Some(r2 as i64));
+    }
+
+    #[test]
+    fn event_log_types() {
+        let s = Store::new();
+        s.put("Pod", "default", "a", obj("a"));
+        s.put("Pod", "default", "a", obj("a"));
+        s.delete("Pod", "default", "a");
+        let (events, complete) = s.events_since(0);
+        assert!(complete);
+        let types: Vec<EventType> = events.iter().map(|e| e.event_type).collect();
+        assert_eq!(
+            types,
+            vec![EventType::Added, EventType::Modified, EventType::Deleted]
+        );
+    }
+
+    #[test]
+    fn events_since_filters() {
+        let s = Store::new();
+        let r1 = s.put("Pod", "default", "a", obj("a"));
+        s.put("Pod", "default", "b", obj("b"));
+        let (events, complete) = s.events_since(r1);
+        assert!(complete);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].name, "b");
+    }
+
+    #[test]
+    fn namespace_prefix_no_bleed() {
+        let s = Store::new();
+        s.put("Pod", "a", "x", obj("x"));
+        s.put("Pod", "ab", "y", obj("y"));
+        assert_eq!(s.list_namespaced("Pod", "a").len(), 1);
+    }
+}

@@ -1,0 +1,36 @@
+//! # High-Performance Kubernetes (HPK) — reproduction library
+//!
+//! Reproduction of *Running Cloud-native Workloads on HPC with
+//! High-Performance Kubernetes* (Chazapis et al., FORTH ICS, 2024).
+//!
+//! HPK lets an unprivileged HPC user run a private Kubernetes "mini
+//! Cloud" whose pods are executed as Slurm jobs via Apptainer. This
+//! crate contains the complete system plus every substrate it depends
+//! on, simulated at the interface level (see `DESIGN.md`):
+//!
+//! - [`yamlkit`] — YAML/JSON parsing and emission (manifests).
+//! - [`virtfs`] — the cluster's shared filesystem model.
+//! - [`hpcsim`] — nodes, resources, virtual time, failure injection.
+//! - [`slurm`] — the Slurm workload-manager simulator.
+//! - [`apptainer`] — the container runtime + Flannel CNI.
+//! - [`kube`] — the Kubernetes core: store, API server, controllers.
+//! - [`hpk`] — **the paper's contribution**: hpk-kubelet, pass-through
+//!   scheduler, service admission controller, control-plane bootstrap.
+//! - [`runtime`] — PJRT loading/execution of the AOT compute artifacts.
+//! - [`workloads`] — container-image → entrypoint dispatch.
+//! - [`operators`] — Argo Workflows, Spark, Training, MinIO, OpenEBS.
+
+pub mod yamlkit;
+pub mod virtfs;
+pub mod hpcsim;
+pub mod slurm;
+pub mod apptainer;
+pub mod kube;
+pub mod hpk;
+pub mod runtime;
+pub mod workloads;
+pub mod operators;
+pub mod testbed;
+pub mod util;
+
+pub use yamlkit::Value;

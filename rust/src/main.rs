@@ -1,0 +1,159 @@
+//! `hpk` — the leader binary: boot a simulated HPC cluster, deploy the
+//! HPK control plane + workload operators, then drive it from the
+//! command line (apply manifests, inspect queues, run a demo).
+//!
+//! Usage:
+//!   hpk demo                         # quickstart deployment + teardown
+//!   hpk apply <file.yaml> [...]      # kubectl-style apply + watch
+//!   hpk --nodes 8 --cpus 16 apply f.yaml
+
+use hpk::kube::object;
+use hpk::testbed;
+
+struct Cli {
+    nodes: usize,
+    cpus: u32,
+    command: String,
+    args: Vec<String>,
+}
+
+fn parse_cli() -> Result<Cli, String> {
+    let mut nodes = 4usize;
+    let mut cpus = 8u32;
+    let mut positional = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--nodes" => {
+                nodes = it
+                    .next()
+                    .ok_or("--nodes needs a value")?
+                    .parse()
+                    .map_err(|_| "bad --nodes")?
+            }
+            "--cpus" => {
+                cpus = it
+                    .next()
+                    .ok_or("--cpus needs a value")?
+                    .parse()
+                    .map_err(|_| "bad --cpus")?
+            }
+            "--help" | "-h" => {
+                println!("hpk [--nodes N] [--cpus C] <demo|apply <files...>>");
+                std::process::exit(0);
+            }
+            other => positional.push(other.to_string()),
+        }
+    }
+    let command = positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "demo".to_string());
+    Ok(Cli {
+        nodes,
+        cpus,
+        command,
+        args: positional.into_iter().skip(1).collect(),
+    })
+}
+
+fn print_squeue(tb: &testbed::Testbed) {
+    println!(
+        "{:>6} {:<28} {:<6} {:>5}  {}",
+        "JOBID", "NAME", "STATE", "CPUS", "COMMENT"
+    );
+    for j in tb.cp.slurm.squeue() {
+        println!(
+            "{:>6} {:<28} {:<6} {:>5}  {}",
+            j.job_id,
+            j.name,
+            j.state.code(),
+            j.alloc_cpus,
+            j.comment
+        );
+    }
+}
+
+fn main() {
+    let cli = match parse_cli() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "booting HPK on a {}x{}-cpu simulated cluster...",
+        cli.nodes, cli.cpus
+    );
+    let tb = testbed::deploy(cli.nodes, cli.cpus);
+    println!("control plane up; kubeconfig at /home/user/.hpk/kubeconfig (virtual)");
+    if tb.pjrt.is_some() {
+        println!("PJRT artifacts loaded from {}", hpk::runtime::artifacts_dir());
+    } else {
+        println!(
+            "note: no artifacts/ found — ML workloads unavailable (run `make artifacts`)"
+        );
+    }
+
+    match cli.command.as_str() {
+        "apply" => {
+            for file in &cli.args {
+                let text = match std::fs::read_to_string(file) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        eprintln!("read {file}: {e}");
+                        std::process::exit(1);
+                    }
+                };
+                match tb.cp.kubectl_apply(&text) {
+                    Ok(objs) => {
+                        for o in objs {
+                            println!("applied {}/{}", object::kind(&o), object::name(&o));
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("apply {file}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            let settled = tb.cp.wait_until(60_000, |api| {
+                api.list("Pod").iter().all(|p| {
+                    matches!(object::pod_phase(p), "Succeeded" | "Running" | "Failed")
+                })
+            });
+            print_squeue(&tb);
+            println!("settled={settled}");
+        }
+        "demo" => {
+            println!("applying demo deployment (2 replicas of pause)...");
+            tb.cp
+                .kubectl_apply(
+                    "kind: Deployment\nmetadata:\n  name: demo\nspec:\n  replicas: 2\n  selector:\n    matchLabels:\n      app: demo\n  template:\n    metadata:\n      labels:\n        app: demo\n    spec:\n      containers:\n      - name: main\n        image: pause:3.9\n",
+                )
+                .expect("apply demo");
+            tb.cp.wait_until(30_000, |api| {
+                api.list("Pod")
+                    .iter()
+                    .filter(|p| object::pod_phase(p) == "Running")
+                    .count()
+                    == 2
+            });
+            print_squeue(&tb);
+            println!("\nsinfo:");
+            for (node, used, total, state) in tb.cp.slurm.sinfo() {
+                println!("  {node}: {used}/{total} cpus [{state}]");
+            }
+            println!("\ndeleting deployment...");
+            let _ = tb.cp.api.delete("Deployment", "default", "demo");
+            tb.cp.wait_until(30_000, |_| tb.cp.slurm.squeue().is_empty());
+            println!("queue drained; demo complete");
+        }
+        other => {
+            eprintln!("unknown command {other}; try --help");
+            std::process::exit(2);
+        }
+    }
+    tb.shutdown();
+}

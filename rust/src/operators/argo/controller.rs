@@ -1,0 +1,327 @@
+//! The Argo workflow controller: drives expanded DAGs by creating pods.
+
+use super::engine::{expand_workflow_with, WorkflowNode};
+use crate::kube::api::ApiServer;
+use crate::kube::controllers::Reconciler;
+use crate::kube::object;
+use crate::virtfs::VirtFs;
+use crate::yamlkit::Value;
+
+/// The workflow driver. `fs` (when present) backs `withParam`
+/// resolution: a completed step's pod may write its output items as a
+/// JSON array to `<pod_dir>/outputs/result.json` — "the 'items' used
+/// may be ... dynamically generated as the output of a previous step"
+/// (SS4.2).
+#[derive(Default)]
+pub struct WorkflowController {
+    pub fs: Option<VirtFs>,
+}
+
+/// Register the controllers with a running control plane ("helm install
+/// argo"): the Workflow driver plus the CronWorkflow scheduler.
+pub fn install(cp: &crate::hpk::ControlPlane) {
+    let api = cp.api.clone();
+    let clock = cp.cluster.clock.clone();
+    let fs = cp.fs.clone();
+    std::thread::Builder::new()
+        .name("argo-controller".to_string())
+        .spawn(move || {
+            let c = WorkflowController { fs: Some(fs) };
+            let cron = super::cron::CronWorkflowController::new(clock);
+            loop {
+                c.reconcile(&api);
+                cron.reconcile(&api);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+        .expect("spawn argo controller");
+}
+
+fn sanitize(id: &str) -> String {
+    id.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' {
+                c.to_ascii_lowercase()
+            } else {
+                '-'
+            }
+        })
+        .collect::<String>()
+        .trim_matches('-')
+        .to_string()
+}
+
+/// Pod name for a workflow node (deterministic; doubles as the join key).
+fn node_pod_name(wf_name: &str, node: &WorkflowNode) -> String {
+    // Strip the entrypoint prefix for readability, keep uniqueness.
+    let short = node.id.split_once('.').map(|(_, r)| r).unwrap_or(&node.id);
+    format!("{wf_name}-{}", sanitize(short))
+}
+
+impl Reconciler for WorkflowController {
+    fn name(&self) -> &'static str {
+        "argo-workflow"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for wf in api.list("Workflow") {
+            let phase = wf.str_at("status.phase").unwrap_or("");
+            if phase == "Succeeded" || phase == "Failed" || phase == "Error" {
+                continue;
+            }
+            let ns = object::namespace(&wf);
+            let wf_name = object::name(&wf);
+            // Output resolver: node id -> its pod's outputs JSON array.
+            let fs = self.fs.clone();
+            let wf_name_owned = wf_name.to_string();
+            let ns_owned = ns.to_string();
+            let resolver = move |node_id: &str| -> Option<Vec<Value>> {
+                let fs = fs.as_ref()?;
+                // Reconstruct the pod name exactly like node_pod_name.
+                let short = node_id
+                    .split_once('.')
+                    .map(|(_, r)| r)
+                    .unwrap_or(node_id);
+                let pod = format!("{wf_name_owned}-{}", sanitize(short));
+                let path = format!(
+                    "{}/outputs/result.json",
+                    crate::hpk::translate::pod_dir(&ns_owned, &pod)
+                );
+                let text = fs.read_str(&path).ok()?;
+                crate::yamlkit::parse_json(&text)
+                    .ok()
+                    .and_then(|v| v.as_seq().map(|s| s.to_vec()))
+            };
+            let (nodes, expansion_complete) =
+                match expand_workflow_with(&wf, &resolver) {
+                Ok(n) => n,
+                Err(e) => {
+                    let mut st = Value::map();
+                    st.set("phase", Value::from("Error"));
+                    st.set("message", Value::from(e.as_str()));
+                    let _ = api.update_status("Workflow", ns, wf_name, st);
+                    continue;
+                }
+            };
+
+            // Current node phases from pods.
+            let mut node_phase: std::collections::HashMap<&str, String> =
+                std::collections::HashMap::new();
+            for node in &nodes {
+                let pod_name = node_pod_name(wf_name, node);
+                let p = api.get("Pod", ns, &pod_name).ok();
+                let phase = p
+                    .as_ref()
+                    .map(|p| object::pod_phase(p).to_string())
+                    .unwrap_or_else(|| "Unscheduled".to_string());
+                node_phase.insert(node.id.as_str(), phase);
+            }
+
+            // Launch ready nodes.
+            for node in &nodes {
+                if node_phase[node.id.as_str()] != "Unscheduled" {
+                    continue;
+                }
+                let ready = node
+                    .deps
+                    .iter()
+                    .all(|d| node_phase.get(d.as_str()).map(|s| s.as_str()) == Some("Succeeded"));
+                if !ready {
+                    continue;
+                }
+                let pod_name = node_pod_name(wf_name, node);
+                let mut pod = object::new_object("Pod", ns, &pod_name);
+                // Template metadata (annotations! Listing 2) + labels.
+                if let Some(meta) = node.template.get("metadata") {
+                    if let Some(ann) = meta.get("annotations") {
+                        pod.entry_map("metadata")
+                            .set("annotations", ann.clone());
+                    }
+                    if let Some(labels) = meta.get("labels") {
+                        pod.entry_map("metadata").set("labels", labels.clone());
+                    }
+                }
+                pod.entry_map("metadata")
+                    .entry_map("labels")
+                    .set("workflows.argoproj.io/workflow", Value::from(wf_name));
+                let mut container = node
+                    .template
+                    .get("container")
+                    .cloned()
+                    .unwrap_or(Value::map());
+                container.set("name", Value::from("main"));
+                pod.entry_map("spec")
+                    .set("containers", Value::Seq(vec![container]));
+                object::add_owner_ref(&mut pod, "Workflow", wf_name, object::uid(&wf));
+                if api.create(pod).is_ok() {
+                    node_phase.insert(node.id.as_str(), "Pending".to_string());
+                }
+            }
+
+            // Roll up workflow status.
+            let succeeded = nodes
+                .iter()
+                .filter(|n| node_phase[n.id.as_str()] == "Succeeded")
+                .count();
+            let failed = nodes
+                .iter()
+                .filter(|n| node_phase[n.id.as_str()] == "Failed")
+                .count();
+            let wf_phase = if failed > 0 {
+                "Failed"
+            } else if succeeded == nodes.len() && expansion_complete {
+                "Succeeded"
+            } else {
+                "Running"
+            };
+            let mut progress_nodes = Value::map();
+            for node in &nodes {
+                progress_nodes.set(&node.id, Value::from(node_phase[node.id.as_str()].as_str()));
+            }
+            let changed = wf.str_at("status.phase") != Some(wf_phase)
+                || wf.path("status.nodes") != Some(&progress_nodes);
+            if changed {
+                let mut st = Value::map();
+                st.set("phase", Value::from(wf_phase));
+                st.set(
+                    "progress",
+                    Value::from(format!("{succeeded}/{}", nodes.len())),
+                );
+                st.set("nodes", progress_nodes);
+                let _ = api.update_status("Workflow", ns, wf_name, st);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn finish_pods(api: &ApiServer, phase: &str) {
+        for p in api.list("Pod") {
+            if matches!(object::pod_phase(&p), "Pending" | "Running") {
+                api.update_status(
+                    "Pod",
+                    object::namespace(&p),
+                    object::name(&p),
+                    parse_one(&format!("phase: {phase}\n")).unwrap(),
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    fn diamond() -> Value {
+        parse_one(
+            r#"
+kind: Workflow
+metadata: {name: dia}
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: a, template: t}
+      - {name: b, template: t, dependencies: [a]}
+      - {name: c, template: t, dependencies: [a]}
+      - {name: d, template: t, dependencies: [b, c]}
+  - name: t
+    container:
+      image: busybox:latest
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dag_executes_in_waves() {
+        let api = ApiServer::new();
+        api.create(diamond()).unwrap();
+        let c = WorkflowController::default();
+        c.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 1, "only the root starts");
+        finish_pods(&api, "Succeeded");
+        c.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 3, "b and c fan out");
+        finish_pods(&api, "Succeeded");
+        c.reconcile(&api);
+        assert_eq!(api.list("Pod").len(), 4);
+        finish_pods(&api, "Succeeded");
+        c.reconcile(&api);
+        let wf = api.get("Workflow", "default", "dia").unwrap();
+        assert_eq!(wf.str_at("status.phase"), Some("Succeeded"));
+        assert_eq!(wf.str_at("status.progress"), Some("4/4"));
+    }
+
+    #[test]
+    fn failure_fails_workflow_and_stops_descendants() {
+        let api = ApiServer::new();
+        api.create(diamond()).unwrap();
+        let c = WorkflowController::default();
+        c.reconcile(&api);
+        finish_pods(&api, "Failed");
+        c.reconcile(&api);
+        let wf = api.get("Workflow", "default", "dia").unwrap();
+        assert_eq!(wf.str_at("status.phase"), Some("Failed"));
+        assert_eq!(api.list("Pod").len(), 1, "no descendants launched");
+    }
+
+    #[test]
+    fn annotations_propagate_to_pods() {
+        let api = ApiServer::new();
+        api.create(
+            parse_one(
+                r#"
+kind: Workflow
+metadata: {name: ann}
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - name: step
+        template: mpi
+        arguments:
+          parameters:
+          - {name: n, value: "8"}
+  - name: mpi
+    metadata:
+      annotations:
+        slurm-job.hpk.io/flags: "--ntasks={{inputs.parameters.n}}"
+    inputs:
+      parameters:
+      - name: n
+    container:
+      image: mpi-npb:latest
+      command: ["ep.S.x"]
+"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        WorkflowController::default().reconcile(&api);
+        let pods = api.list("Pod");
+        assert_eq!(pods.len(), 1);
+        assert_eq!(
+            object::annotation(&pods[0], "slurm-job.hpk.io/flags"),
+            Some("--ntasks=8")
+        );
+    }
+
+    #[test]
+    fn bad_workflow_marked_error() {
+        let api = ApiServer::new();
+        api.create(
+            parse_one("kind: Workflow\nmetadata: {name: bad}\nspec:\n  entrypoint: ghost\n  templates: []\n")
+                .unwrap(),
+        )
+        .unwrap();
+        WorkflowController::default().reconcile(&api);
+        let wf = api.get("Workflow", "default", "bad").unwrap();
+        assert_eq!(wf.str_at("status.phase"), Some("Error"));
+    }
+}

@@ -1,0 +1,642 @@
+//! Workflow expansion: templates + parameters -> a flat DAG of
+//! container nodes.
+
+use crate::yamlkit::Value;
+use std::collections::HashMap;
+
+/// One runnable node after expansion.
+#[derive(Debug, Clone)]
+pub struct WorkflowNode {
+    /// Unique id within the workflow, e.g. `main.A(1)`.
+    pub id: String,
+    /// Fully substituted *container template* (with metadata/inputs).
+    pub template: Value,
+    /// Node ids that must succeed first.
+    pub deps: Vec<String>,
+}
+
+/// Substitute `{{...}}` expressions in every string of a value tree.
+pub fn substitute(v: &Value, params: &HashMap<String, String>) -> Value {
+    match v {
+        Value::Str(s) => Value::Str(substitute_str(s, params)),
+        Value::Seq(items) => {
+            Value::Seq(items.iter().map(|i| substitute(i, params)).collect())
+        }
+        Value::Map(entries) => Value::Map(
+            entries
+                .iter()
+                .map(|(k, val)| (k.clone(), substitute(val, params)))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+fn substitute_str(s: &str, params: &HashMap<String, String>) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(start) = rest.find("{{") {
+        out.push_str(&rest[..start]);
+        let after = &rest[start + 2..];
+        match after.find("}}") {
+            Some(end) => {
+                let expr = after[..end].trim();
+                match params.get(expr) {
+                    Some(val) => out.push_str(val),
+                    None => {
+                        // Unknown expression: keep verbatim (Argo errors
+                        // later; we surface it in the pod name/args).
+                        out.push_str("{{");
+                        out.push_str(&after[..end]);
+                        out.push_str("}}");
+                    }
+                }
+                rest = &after[end + 2..];
+            }
+            None => {
+                out.push_str("{{");
+                rest = after;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+fn find_template<'a>(workflow: &'a Value, name: &str) -> Option<&'a Value> {
+    workflow
+        .path("spec.templates")
+        .and_then(|t| t.as_seq())?
+        .iter()
+        .find(|t| t.str_at("name") == Some(name))
+}
+
+/// Collect parameters from an `arguments`/`inputs` block into a map of
+/// `inputs.parameters.<name>` keys.
+fn params_from(block: Option<&Value>, prefix: &str, out: &mut HashMap<String, String>) {
+    if let Some(items) = block
+        .and_then(|b| b.get("parameters"))
+        .and_then(|p| p.as_seq())
+    {
+        for item in items {
+            if let Some(name) = item.str_at("name") {
+                if let Some(value) = item.get("value").and_then(|v| v.coerce_string()) {
+                    out.insert(format!("{prefix}.{name}"), value);
+                }
+            }
+        }
+    }
+}
+
+/// Render an item value for `{{item}}` / `{{item.field}}`.
+fn item_params(item: &Value, out: &mut HashMap<String, String>) {
+    if let Some(s) = item.coerce_string() {
+        out.insert("item".to_string(), s);
+    }
+    if let Some(entries) = item.as_map() {
+        for (k, v) in entries {
+            if let Some(s) = v.coerce_string() {
+                out.insert(format!("item.{k}"), s);
+            }
+        }
+    }
+}
+
+/// Resolver for `withParam` references: given the node id of a
+/// completed upstream task (e.g. `main.gen`), return its output items
+/// (parsed JSON array), or None while unavailable.
+pub type OutputResolver<'a> = &'a dyn Fn(&str) -> Option<Vec<Value>>;
+
+/// Expand a workflow into its container-node DAG. Errors on missing
+/// templates or cycles. Tasks whose `withParam` source has not produced
+/// outputs yet are left out and the `complete` flag comes back false —
+/// the controller re-expands as outputs appear ("items ... dynamically
+/// generated as the output of a previous step", SS4.2).
+pub fn expand_workflow(workflow: &Value) -> Result<Vec<WorkflowNode>, String> {
+    let (nodes, _complete) = expand_workflow_with(workflow, &|_| None)?;
+    Ok(nodes)
+}
+
+/// Like [`expand_workflow`] but with a live output resolver; returns
+/// `(nodes, complete)` where `complete == false` means some `withParam`
+/// task is still waiting for its source outputs.
+pub fn expand_workflow_with(
+    workflow: &Value,
+    resolver: OutputResolver,
+) -> Result<(Vec<WorkflowNode>, bool), String> {
+    let entry = workflow
+        .str_at("spec.entrypoint")
+        .ok_or("workflow has no spec.entrypoint")?;
+    let mut globals = HashMap::new();
+    params_from(
+        workflow.path("spec.arguments"),
+        "workflow.parameters",
+        &mut globals,
+    );
+    let mut nodes = Vec::new();
+    let mut complete = true;
+    let leaves = expand_template(
+        workflow,
+        entry,
+        entry,
+        &globals,
+        Vec::new(),
+        &mut nodes,
+        0,
+        resolver,
+        &mut complete,
+    )?;
+    let _ = leaves;
+    // Cycle check: Kahn over the produced DAG.
+    let mut indeg: HashMap<&str, usize> = HashMap::new();
+    for n in &nodes {
+        indeg.entry(&n.id).or_insert(0);
+        for _ in &n.deps {
+            *indeg.entry(&n.id).or_insert(0) += 0;
+        }
+    }
+    let ids: std::collections::HashSet<&str> =
+        nodes.iter().map(|n| n.id.as_str()).collect();
+    for n in &nodes {
+        for d in &n.deps {
+            if !ids.contains(d.as_str()) {
+                return Err(format!("node {} depends on unknown {d}", n.id));
+            }
+        }
+    }
+    Ok((nodes, complete))
+}
+
+/// Returns the "leaf" node ids whose completion means this template
+/// invocation is complete.
+#[allow(clippy::too_many_arguments)]
+fn expand_template(
+    workflow: &Value,
+    tmpl_name: &str,
+    prefix: &str,
+    params: &HashMap<String, String>,
+    deps_in: Vec<String>,
+    nodes: &mut Vec<WorkflowNode>,
+    depth: usize,
+    resolver: OutputResolver,
+    complete: &mut bool,
+) -> Result<Vec<String>, String> {
+    if depth > 16 {
+        return Err(format!("template recursion too deep at {tmpl_name}"));
+    }
+    let tmpl = find_template(workflow, tmpl_name)
+        .ok_or_else(|| format!("template not found: {tmpl_name}"))?;
+    let tmpl = substitute(tmpl, params);
+
+    if tmpl.get("container").is_some() {
+        nodes.push(WorkflowNode {
+            id: prefix.to_string(),
+            template: tmpl,
+            deps: deps_in,
+        });
+        return Ok(vec![prefix.to_string()]);
+    }
+
+    if let Some(dag) = tmpl.get("dag") {
+        let tasks = dag
+            .get("tasks")
+            .and_then(|t| t.as_seq())
+            .ok_or_else(|| format!("dag template {tmpl_name} has no tasks"))?;
+        // leaves per task name.
+        let mut task_leaves: HashMap<String, Vec<String>> = HashMap::new();
+        // Iterate until all tasks resolved (handles arbitrary order).
+        // Tasks blocked on an unresolved withParam source (and their
+        // transitive dependents) are skipped and mark the expansion
+        // incomplete.
+        let mut blocked: std::collections::HashSet<String> =
+            std::collections::HashSet::new();
+        let mut pending: Vec<&Value> = tasks.iter().collect();
+        let mut guard = 0;
+        while !pending.is_empty() {
+            guard += 1;
+            if guard > tasks.len() + 2 {
+                return Err(format!("dependency cycle in dag {tmpl_name}"));
+            }
+            let mut next = Vec::new();
+            for task in pending {
+                let tname = task
+                    .str_at("name")
+                    .ok_or("dag task without a name")?;
+                let deps: Vec<String> = task
+                    .path("dependencies")
+                    .and_then(|d| d.as_seq())
+                    .map(|items| {
+                        items
+                            .iter()
+                            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                if deps.iter().any(|d| blocked.contains(d)) {
+                    blocked.insert(tname.to_string());
+                    *complete = false;
+                    continue;
+                }
+                if !deps.iter().all(|d| task_leaves.contains_key(d)) {
+                    next.push(task);
+                    continue;
+                }
+                // Root tasks inherit the deps of the dag invocation
+                // itself (how nested dags chain to their predecessors).
+                let dep_nodes: Vec<String> = if deps.is_empty() {
+                    deps_in.clone()
+                } else {
+                    deps.iter().flat_map(|d| task_leaves[d].clone()).collect()
+                };
+                let target = task
+                    .str_at("template")
+                    .ok_or_else(|| format!("dag task {tname} has no template"))?;
+                let mut leaves = Vec::new();
+                // withParam: items from an upstream task's outputs.
+                let mut param_items: Option<Vec<Value>> = None;
+                if let Some(wp) = task.str_at("withParam") {
+                    let src = wp
+                        .trim()
+                        .strip_prefix("{{tasks.")
+                        .and_then(|r| r.strip_suffix(".outputs.result}}"))
+                        .ok_or_else(|| {
+                            format!("unsupported withParam expression {wp}")
+                        })?;
+                    let src_id = format!("{prefix}.{src}");
+                    match resolver(&src_id) {
+                        Some(items) => param_items = Some(items),
+                        None => {
+                            // Source outputs not ready: block this task.
+                            blocked.insert(tname.to_string());
+                            *complete = false;
+                            continue;
+                        }
+                    }
+                }
+                let items = param_items.as_deref().or_else(|| {
+                    task.path("withItems").and_then(|w| w.as_seq())
+                });
+                match items {
+                    Some(items) => {
+                        for (i, item) in items.iter().enumerate() {
+                            let mut p = params.clone();
+                            item_params(item, &mut p);
+                            // Argument values may reference {{item}}:
+                            // render them against p before inserting.
+                            let mut tmp = HashMap::new();
+                            params_from(
+                                task.get("arguments"),
+                                "inputs.parameters",
+                                &mut tmp,
+                            );
+                            for (k, v) in tmp {
+                                let rendered = substitute_str(&v, &p);
+                                p.insert(k, rendered);
+                            }
+                            let sub_prefix = format!("{prefix}.{tname}({i})");
+                            leaves.extend(expand_template(
+                                workflow,
+                                target,
+                                &sub_prefix,
+                                &p,
+                                dep_nodes.clone(),
+                                nodes,
+                                depth + 1,
+                                resolver,
+                                complete,
+                            )?);
+                        }
+                    }
+                    None => {
+                        let mut p = params.clone();
+                        let mut tmp = HashMap::new();
+                        params_from(task.get("arguments"), "inputs.parameters", &mut tmp);
+                        for (k, v) in tmp {
+                            let rendered = substitute_str(&v, &p);
+                            p.insert(k, rendered);
+                        }
+                        let sub_prefix = format!("{prefix}.{tname}");
+                        leaves.extend(expand_template(
+                            workflow,
+                            target,
+                            &sub_prefix,
+                            &p,
+                            dep_nodes.clone(),
+                            nodes,
+                            depth + 1,
+                            resolver,
+                            complete,
+                        )?);
+                    }
+                }
+                task_leaves.insert(tname.to_string(), leaves);
+            }
+            pending = next;
+        }
+        // The dag completes when every task's leaves complete; report
+        // terminal tasks (those nobody depends on) as leaves.
+        let depended: std::collections::HashSet<String> = tasks
+            .iter()
+            .flat_map(|t| {
+                t.path("dependencies")
+                    .and_then(|d| d.as_seq())
+                    .map(|items| {
+                        items
+                            .iter()
+                            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                            .collect::<Vec<_>>()
+                    })
+                    .unwrap_or_default()
+            })
+            .collect();
+        let mut out = Vec::new();
+        for task in tasks {
+            let tname = task.str_at("name").unwrap_or("");
+            if !depended.contains(tname) {
+                out.extend(task_leaves.get(tname).cloned().unwrap_or_default());
+            }
+        }
+        return Ok(out);
+    }
+
+    if let Some(steps) = tmpl.get("steps") {
+        let groups = steps
+            .as_seq()
+            .ok_or_else(|| format!("steps template {tmpl_name} malformed"))?;
+        let mut prev_leaves = deps_in;
+        for (gi, group) in groups.iter().enumerate() {
+            let group_steps: Vec<&Value> = match group {
+                Value::Seq(items) => items.iter().collect(),
+                single => vec![single],
+            };
+            let mut group_leaves = Vec::new();
+            for step in group_steps {
+                let sname = step.str_at("name").ok_or("step without a name")?;
+                let target = step
+                    .str_at("template")
+                    .ok_or_else(|| format!("step {sname} has no template"))?;
+                let mut p = params.clone();
+                let mut tmp = HashMap::new();
+                params_from(step.get("arguments"), "inputs.parameters", &mut tmp);
+                for (k, v) in tmp {
+                    let rendered = substitute_str(&v, &p);
+                    p.insert(k, rendered);
+                }
+                let sub_prefix = format!("{prefix}.[{gi}].{sname}");
+                group_leaves.extend(expand_template(
+                    workflow,
+                    target,
+                    &sub_prefix,
+                    &p,
+                    prev_leaves.clone(),
+                    nodes,
+                    depth + 1,
+                    resolver,
+                    complete,
+                )?);
+            }
+            prev_leaves = group_leaves;
+        }
+        return Ok(prev_leaves);
+    }
+
+    Err(format!(
+        "template {tmpl_name} is neither container, dag nor steps"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    /// The paper's Listing 2, verbatim in structure.
+    fn listing2() -> Value {
+        parse_one(
+            r#"
+kind: Workflow
+metadata:
+  name: npb-sweep
+spec:
+  entrypoint: npb-with-mpi
+  templates:
+  - name: npb-with-mpi
+    dag:
+      tasks:
+      - name: A
+        template: npb
+        arguments:
+          parameters:
+          - {name: cpus, value: "{{item}}"}
+        withItems:
+        - 2
+        - 4
+        - 8
+        - 16
+  - name: npb
+    metadata:
+      annotations:
+        slurm-job.hpk.io/flags: >-
+          --ntasks={{inputs.parameters.cpus}}
+    inputs:
+      parameters:
+      - name: cpus
+    container:
+      image: mpi-npb:latest
+      command: ["ep.A.{{inputs.parameters.cpus}}"]
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn listing2_expands_to_four_parallel_nodes() {
+        let nodes = expand_workflow(&listing2()).unwrap();
+        assert_eq!(nodes.len(), 4);
+        for (i, want) in [2i64, 4, 8, 16].iter().enumerate() {
+            let n = &nodes[i];
+            assert!(n.deps.is_empty());
+            let flags = n
+                .template
+                .path("metadata.annotations")
+                .and_then(|a| a.get("slurm-job.hpk.io/flags"))
+                .and_then(|f| f.as_str())
+                .unwrap();
+            assert_eq!(flags, format!("--ntasks={want}"));
+            let cmd = n.template.str_at("container.command.0").unwrap();
+            assert_eq!(cmd, format!("ep.A.{want}"));
+        }
+    }
+
+    #[test]
+    fn dag_dependencies_become_node_deps() {
+        let wf = parse_one(
+            r#"
+kind: Workflow
+metadata: {name: diamond}
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: A, template: t}
+      - {name: B, template: t, dependencies: [A]}
+      - {name: C, template: t, dependencies: [A]}
+      - {name: D, template: t, dependencies: [B, C]}
+  - name: t
+    container:
+      image: busybox:latest
+"#,
+        )
+        .unwrap();
+        let nodes = expand_workflow(&wf).unwrap();
+        assert_eq!(nodes.len(), 4);
+        let d = nodes.iter().find(|n| n.id.ends_with(".D")).unwrap();
+        assert_eq!(d.deps.len(), 2);
+        let a = nodes.iter().find(|n| n.id.ends_with(".A")).unwrap();
+        assert!(a.deps.is_empty());
+    }
+
+    #[test]
+    fn steps_are_sequential_groups() {
+        let wf = parse_one(
+            r#"
+kind: Workflow
+metadata: {name: steps}
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    steps:
+    - - {name: s1, template: t}
+      - {name: s2, template: t}
+    - - {name: s3, template: t}
+  - name: t
+    container:
+      image: busybox:latest
+"#,
+        )
+        .unwrap();
+        let nodes = expand_workflow(&wf).unwrap();
+        assert_eq!(nodes.len(), 3);
+        let s3 = nodes.iter().find(|n| n.id.contains("s3")).unwrap();
+        assert_eq!(s3.deps.len(), 2, "s3 waits for both of group 0");
+    }
+
+    #[test]
+    fn nested_dag_templates() {
+        let wf = parse_one(
+            r#"
+kind: Workflow
+metadata: {name: nested}
+spec:
+  entrypoint: outer
+  templates:
+  - name: outer
+    dag:
+      tasks:
+      - {name: prep, template: t}
+      - {name: inner, template: inner-dag, dependencies: [prep]}
+  - name: inner-dag
+    dag:
+      tasks:
+      - {name: x, template: t}
+      - {name: y, template: t, dependencies: [x]}
+  - name: t
+    container:
+      image: busybox:latest
+"#,
+        )
+        .unwrap();
+        let nodes = expand_workflow(&wf).unwrap();
+        assert_eq!(nodes.len(), 3);
+        let x = nodes.iter().find(|n| n.id.contains("inner.x")).unwrap();
+        assert!(x.deps.iter().any(|d| d.contains("prep")));
+    }
+
+    #[test]
+    fn workflow_parameters_substituted() {
+        let wf = parse_one(
+            r#"
+kind: Workflow
+metadata: {name: p}
+spec:
+  entrypoint: main
+  arguments:
+    parameters:
+    - {name: size, value: large}
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: A, template: t}
+  - name: t
+    container:
+      image: "runner:{{workflow.parameters.size}}"
+"#,
+        )
+        .unwrap();
+        let nodes = expand_workflow(&wf).unwrap();
+        assert_eq!(nodes[0].template.str_at("container.image"), Some("runner:large"));
+    }
+
+    #[test]
+    fn map_items() {
+        let wf = parse_one(
+            r#"
+kind: Workflow
+metadata: {name: mapitems}
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - name: A
+        template: t
+        withItems: [{os: ubuntu, v: 20}, {os: alpine, v: 3}]
+  - name: t
+    container:
+      image: "{{item.os}}:{{item.v}}"
+"#,
+        )
+        .unwrap();
+        let nodes = expand_workflow(&wf).unwrap();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0].template.str_at("container.image"), Some("ubuntu:20"));
+        assert_eq!(nodes[1].template.str_at("container.image"), Some("alpine:3"));
+    }
+
+    #[test]
+    fn missing_template_is_error() {
+        let wf = parse_one(
+            "kind: Workflow\nmetadata: {name: bad}\nspec:\n  entrypoint: ghost\n  templates: []\n",
+        )
+        .unwrap();
+        assert!(expand_workflow(&wf).is_err());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let wf = parse_one(
+            r#"
+kind: Workflow
+metadata: {name: cyc}
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: A, template: t, dependencies: [B]}
+      - {name: B, template: t, dependencies: [A]}
+  - name: t
+    container:
+      image: busybox:latest
+"#,
+        )
+        .unwrap();
+        assert!(expand_workflow(&wf).is_err());
+    }
+}

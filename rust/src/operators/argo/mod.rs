@@ -1,0 +1,24 @@
+//! Argo Workflows: DAG language + controller (SS4.2).
+//!
+//! "In Argo, every node of the graph is a container. The Argo controller
+//! processes each workflow by submitting respective containers for
+//! execution, monitoring their status, and collecting their outputs."
+//!
+//! Supported language features (what the paper's examples exercise):
+//! `entrypoint`, `templates` (container / `dag` / `steps`, arbitrarily
+//! nested), `dependencies`, `withItems` (scalar and map items),
+//! workflow/ input parameters with `{{workflow.parameters.x}}`,
+//! `{{inputs.parameters.x}}`, `{{item}}` and `{{item.field}}`
+//! substitution, per-template metadata (which is how Listing 2 attaches
+//! `slurm-job.hpk.io/flags` to an MPI step), CronWorkflows, and
+//! `withParam` fan-out over a previous step's output items (steps write
+//! a JSON array to `<pod_dir>/outputs/result.json`). Artifact passing
+//! (S3-backed files between steps) is out of scope (DESIGN.md).
+
+mod controller;
+pub mod cron;
+mod engine;
+
+pub use controller::{install, WorkflowController};
+pub use cron::{CronWorkflowController, Schedule};
+pub use engine::{expand_workflow, substitute, WorkflowNode};

@@ -1,0 +1,182 @@
+//! MinIO: S3-compatible object storage (the SS4.1 data sink).
+//!
+//! The store is an in-process service object backed by the cluster
+//! filesystem; the `minio/minio` container binds it at `POD_IP:9000` on
+//! the [`NetFabric`], so clients that resolve the service name through
+//! CoreDNS (e.g. `spark-k8s-data`, the name the benchmark YAMLs demand)
+//! get a working endpoint — exactly the discovery path headless
+//! services give on HPK.
+//!
+//! [`NetFabric`]: crate::apptainer::NetFabric
+
+use crate::virtfs::VirtFs;
+use std::sync::Arc;
+
+/// S3 port MinIO binds.
+pub const MINIO_PORT: u16 = 9000;
+
+/// The S3-ish interface: buckets + objects over a VirtFs root.
+pub struct ObjectStore {
+    fs: VirtFs,
+    root: String,
+}
+
+impl ObjectStore {
+    pub fn new(fs: VirtFs, root: &str) -> ObjectStore {
+        ObjectStore { fs, root: root.trim_end_matches('/').to_string() }
+    }
+
+    fn key_path(&self, bucket: &str, key: &str) -> String {
+        format!("{}/{bucket}/{key}", self.root)
+    }
+
+    /// PUT object.
+    pub fn put(&self, bucket: &str, key: &str, data: impl Into<Vec<u8>>) -> Result<(), String> {
+        self.fs
+            .write(&self.key_path(bucket, key), data)
+            .map_err(|e| e.to_string())
+    }
+
+    /// GET object.
+    pub fn get(&self, bucket: &str, key: &str) -> Result<Arc<Vec<u8>>, String> {
+        self.fs
+            .read(&self.key_path(bucket, key))
+            .map_err(|e| e.to_string())
+    }
+
+    /// LIST keys under a prefix.
+    pub fn list(&self, bucket: &str, prefix: &str) -> Vec<String> {
+        let dir = format!("{}/{bucket}", self.root);
+        let full_prefix = format!("{dir}/{prefix}");
+        self.fs
+            .list(&dir)
+            .into_iter()
+            .filter(|p| p.starts_with(&full_prefix))
+            .map(|p| p[dir.len() + 1..].to_string())
+            .collect()
+    }
+
+    /// DELETE object.
+    pub fn delete(&self, bucket: &str, key: &str) -> Result<(), String> {
+        self.fs
+            .remove(&self.key_path(bucket, key))
+            .map_err(|e| e.to_string())
+    }
+
+    /// Total bytes in a bucket.
+    pub fn bucket_size(&self, bucket: &str) -> u64 {
+        self.fs.usage(&format!("{}/{bucket}", self.root))
+    }
+}
+
+/// Register the `minio/minio` image: serves an [`ObjectStore`] on the
+/// pod IP until terminated.
+pub fn register_minio_image(rt: &crate::apptainer::ApptainerRuntime) {
+    use crate::apptainer::ImageSpec;
+    rt.registry.register(
+        ImageSpec::new("minio/minio:latest", "minio")
+            .with_size(150 << 20)
+            .root(), // official image runs as root
+    );
+    rt.table.register("minio", |ctx| {
+        // Data root: the HostPath/PV mount (env MINIO_DATA_DIR) or a
+        // default under the pod's scratch space.
+        let root = ctx.env_or(
+            "MINIO_DATA_DIR",
+            &format!("/mnt/nvme/{}/minio-{}", ctx.node, ctx.ip),
+        );
+        let store = Arc::new(ObjectStore::new(ctx.fs.clone(), &root));
+        if !ctx.fabric.bind(ctx.ip, MINIO_PORT, store) {
+            return Err(format!("{}:{MINIO_PORT} already bound", ctx.ip));
+        }
+        while !ctx.cancel.is_cancelled() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        ctx.fabric.unbind(ctx.ip, MINIO_PORT);
+        Err("terminated".to_string())
+    });
+}
+
+/// Client-side: resolve a MinIO service by DNS name and connect.
+pub fn connect(
+    dns: &crate::kube::CoreDns,
+    fabric: &crate::apptainer::NetFabric,
+    service: &str,
+) -> Result<Arc<ObjectStore>, String> {
+    let ip = dns
+        .resolve_one(service)
+        .ok_or_else(|| format!("DNS: no endpoints for {service}"))?;
+    fabric
+        .connect::<ObjectStore>(ip, MINIO_PORT)
+        .ok_or_else(|| format!("connect {ip}:{MINIO_PORT} refused"))
+}
+
+/// The manifest the paper's flow installs via helm (deployment +
+/// headless service named by `service_name` — the benchmark requires
+/// `spark-k8s-data`).
+pub fn helm_manifest(service_name: &str, namespace: &str) -> String {
+    format!(
+        r#"kind: Deployment
+metadata:
+  name: minio
+  namespace: {namespace}
+spec:
+  replicas: 1
+  selector:
+    matchLabels:
+      app: minio
+  template:
+    metadata:
+      labels:
+        app: minio
+    spec:
+      containers:
+      - name: minio
+        image: minio/minio:latest
+        resources:
+          requests:
+            cpu: 1
+            memory: 1Gi
+---
+kind: Service
+metadata:
+  name: {service_name}
+  namespace: {namespace}
+spec:
+  selector:
+    app: minio
+  ports:
+  - port: {MINIO_PORT}
+"#
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_list_delete() {
+        let fs = VirtFs::new();
+        let s = ObjectStore::new(fs, "/data/minio");
+        s.put("bucket", "a/1.parquet", b"111".to_vec()).unwrap();
+        s.put("bucket", "a/2.parquet", b"22".to_vec()).unwrap();
+        s.put("bucket", "b/3.parquet", b"3".to_vec()).unwrap();
+        assert_eq!(&**s.get("bucket", "a/1.parquet").unwrap(), b"111");
+        assert_eq!(
+            s.list("bucket", "a/"),
+            vec!["a/1.parquet".to_string(), "a/2.parquet".to_string()]
+        );
+        assert_eq!(s.bucket_size("bucket"), 6);
+        s.delete("bucket", "a/1.parquet").unwrap();
+        assert!(s.get("bucket", "a/1.parquet").is_err());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let docs =
+            crate::yamlkit::parse_all(&helm_manifest("spark-k8s-data", "spark")).unwrap();
+        assert_eq!(docs.len(), 2);
+        assert_eq!(docs[1].str_at("metadata.name"), Some("spark-k8s-data"));
+    }
+}

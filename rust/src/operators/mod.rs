@@ -1,0 +1,22 @@
+//! Cloud-native workload layer: the operators and services the paper's
+//! evaluation deploys *unmodified* on HPK.
+//!
+//! - [`minio`] — S3-compatible object store (SS4.1 stores TPC-DS data in
+//!   MinIO).
+//! - [`openebs`] — storage controller provisioning PVs from storage
+//!   classes over HostPath mounts (SS3).
+//! - [`argo`] — Argo Workflows: DAG engine + controller (SS4.2).
+//! - [`spark`] — Spark Operator + a mini columnar SQL engine and the
+//!   TPC-DS-style workload (SS4.1).
+//! - [`training`] — Kubeflow Training Operator: TFJob with synchronous
+//!   multi-worker training over the PJRT artifacts (SS4.3).
+//!
+//! Each submodule exposes an `install(...)` that mirrors the paper's
+//! `helm install` step: it registers the operator's controller loop,
+//! container images and CRD handling.
+
+pub mod argo;
+pub mod minio;
+pub mod openebs;
+pub mod spark;
+pub mod training;

@@ -1,0 +1,151 @@
+//! OpenEBS-style storage controller.
+//!
+//! SS3: HPK supports HostPath volumes, which storage controllers like
+//! OpenEBS turn into storage *classes* — e.g. one class over node-local
+//! NVMe for temporary data and one over the Lustre-backed home
+//! directory. This controller watches PersistentVolumeClaims, carves a
+//! directory out of the class's mount, and binds a PersistentVolume.
+
+use crate::kube::api::ApiServer;
+use crate::kube::controllers::Reconciler;
+use crate::kube::object;
+use crate::virtfs::VirtFs;
+use crate::yamlkit::Value;
+
+/// Root directory per storage class.
+pub fn class_root(class: &str) -> Option<&'static str> {
+    match class {
+        "nvme-local" => Some("/mnt/nvme/pv"),
+        "lustre-home" => Some("/home/user/pv"),
+        _ => None,
+    }
+}
+
+pub struct OpenEbsController {
+    pub fs: VirtFs,
+}
+
+impl Reconciler for OpenEbsController {
+    fn name(&self) -> &'static str {
+        "openebs"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for pvc in api.list("PersistentVolumeClaim") {
+            if pvc.str_at("status.phase") == Some("Bound") {
+                continue;
+            }
+            let ns = object::namespace(&pvc);
+            let name = object::name(&pvc);
+            let class = pvc
+                .str_at("spec.storageClassName")
+                .unwrap_or("nvme-local");
+            let Some(root) = class_root(class) else {
+                let mut st = Value::map();
+                st.set("phase", Value::from("Pending"));
+                st.set(
+                    "reason",
+                    Value::from(format!("unknown storage class {class}")),
+                );
+                let _ = api.update_status("PersistentVolumeClaim", ns, name, st);
+                continue;
+            };
+            let pv_name = format!("pv-{ns}-{name}");
+            let path = format!("{root}/{pv_name}");
+            // Materialize the volume directory with a marker file.
+            let _ = self.fs.write_str(&format!("{path}/.pv"), pv_name.as_str());
+
+            let mut pv = object::new_object("PersistentVolume", ns, &pv_name);
+            let spec = pv.entry_map("spec");
+            spec.set("storageClassName", Value::from(class));
+            let mut hp = Value::map();
+            hp.set("path", Value::from(path.as_str()));
+            spec.set("hostPath", hp);
+            let mut claim_ref = Value::map();
+            claim_ref.set("namespace", Value::from(ns));
+            claim_ref.set("name", Value::from(name));
+            spec.set("claimRef", claim_ref);
+            if let Some(cap) = pvc.path("spec.resources.requests.storage") {
+                spec.entry_map("capacity").set("storage", cap.clone());
+            }
+            let _ = api.create(pv);
+
+            let mut st = Value::map();
+            st.set("phase", Value::from("Bound"));
+            st.set("volumeName", Value::from(pv_name.as_str()));
+            st.set("hostPath", Value::from(path.as_str()));
+            let _ = api.update_status("PersistentVolumeClaim", ns, name, st);
+        }
+    }
+}
+
+/// Resolve the host path behind a bound PVC (for pods mounting it).
+pub fn pvc_host_path(api: &ApiServer, namespace: &str, name: &str) -> Option<String> {
+    let pvc = api.get("PersistentVolumeClaim", namespace, name).ok()?;
+    pvc.str_at("status.hostPath").map(|s| s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn pvc(name: &str, class: &str) -> Value {
+        parse_one(&format!(
+            "kind: PersistentVolumeClaim\nmetadata:\n  name: {name}\nspec:\n  storageClassName: {class}\n  resources:\n    requests:\n      storage: 10Gi\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn binds_pvc_to_pv() {
+        let api = ApiServer::new();
+        let fs = VirtFs::new();
+        api.create(pvc("scratch", "nvme-local")).unwrap();
+        let c = OpenEbsController { fs: fs.clone() };
+        c.reconcile(&api);
+        let bound = api.get("PersistentVolumeClaim", "default", "scratch").unwrap();
+        assert_eq!(bound.str_at("status.phase"), Some("Bound"));
+        let path = bound.str_at("status.hostPath").unwrap();
+        assert!(path.starts_with("/mnt/nvme/pv/"));
+        assert!(fs.exists(&format!("{path}/.pv")));
+        assert_eq!(api.list("PersistentVolume").len(), 1);
+        assert_eq!(
+            pvc_host_path(&api, "default", "scratch").as_deref(),
+            Some(path)
+        );
+    }
+
+    #[test]
+    fn two_classes_land_in_different_roots() {
+        let api = ApiServer::new();
+        let c = OpenEbsController { fs: VirtFs::new() };
+        api.create(pvc("a", "nvme-local")).unwrap();
+        api.create(pvc("b", "lustre-home")).unwrap();
+        c.reconcile(&api);
+        let a = pvc_host_path(&api, "default", "a").unwrap();
+        let b = pvc_host_path(&api, "default", "b").unwrap();
+        assert!(a.starts_with("/mnt/nvme/"));
+        assert!(b.starts_with("/home/user/"));
+    }
+
+    #[test]
+    fn unknown_class_stays_pending() {
+        let api = ApiServer::new();
+        let c = OpenEbsController { fs: VirtFs::new() };
+        api.create(pvc("x", "gluster")).unwrap();
+        c.reconcile(&api);
+        let x = api.get("PersistentVolumeClaim", "default", "x").unwrap();
+        assert_eq!(x.str_at("status.phase"), Some("Pending"));
+    }
+
+    #[test]
+    fn idempotent_reconcile() {
+        let api = ApiServer::new();
+        let c = OpenEbsController { fs: VirtFs::new() };
+        api.create(pvc("a", "nvme-local")).unwrap();
+        c.reconcile(&api);
+        c.reconcile(&api);
+        assert_eq!(api.list("PersistentVolume").len(), 1);
+    }
+}

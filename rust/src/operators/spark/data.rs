@@ -1,0 +1,233 @@
+//! TPC-DS-style tables: partitioned `store_sales` fact data plus small
+//! dimensions, all deterministic.
+//!
+//! The real benchmark generates ~GBs with dsdgen; we keep the schema
+//! shape (surrogate keys into dimensions, additive measures) and the
+//! execution shape (fact table partitioned across executors, dimensions
+//! broadcast) at a scale the simulator can sweep in seconds. Scale
+//! factor 1 = `SF_ROWS` fact rows.
+
+use crate::util::Rng;
+
+/// Fact rows per scale factor unit.
+pub const SF_ROWS: usize = 240_000;
+
+/// Years covered by date_dim.
+pub const YEARS: &[i32] = &[2000, 2001, 2002];
+pub const NUM_CATEGORIES: usize = 10;
+pub const NUM_BRANDS: usize = 50;
+pub const NUM_STORES: usize = 20;
+pub const NUM_STATES: usize = 5;
+
+/// Columnar store_sales partition.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreSales {
+    pub date_sk: Vec<i32>,
+    pub item_sk: Vec<i32>,
+    pub store_sk: Vec<i32>,
+    pub quantity: Vec<i32>,
+    pub sales_price: Vec<f32>,
+    pub net_profit: Vec<f32>,
+}
+
+impl StoreSales {
+    pub fn len(&self) -> usize {
+        self.date_sk.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.date_sk.is_empty()
+    }
+}
+
+/// date_dim row: (date_sk, year, month-of-year).
+pub fn date_dim() -> Vec<(i32, i32, i32)> {
+    let mut rows = Vec::new();
+    let mut sk = 0;
+    for (yi, year) in YEARS.iter().enumerate() {
+        for moy in 1..=12 {
+            rows.push((sk, *year, moy));
+            sk += 1;
+            let _ = yi;
+        }
+    }
+    rows
+}
+
+/// item row: (item_sk, category, brand).
+pub fn item_dim(num_items: usize) -> Vec<(i32, i32, i32)> {
+    (0..num_items)
+        .map(|i| {
+            let h = crate::util::rng::murmur3_mix(i as u32 ^ 0xBEEF);
+            (
+                i as i32,
+                (h % NUM_CATEGORIES as u32) as i32,
+                ((h >> 8) % NUM_BRANDS as u32) as i32,
+            )
+        })
+        .collect()
+}
+
+/// store row: (store_sk, state).
+pub fn store_dim() -> Vec<(i32, i32)> {
+    (0..NUM_STORES)
+        .map(|s| {
+            let h = crate::util::rng::murmur3_mix(s as u32 ^ 0xCAFE);
+            (s as i32, (h % NUM_STATES as u32) as i32)
+        })
+        .collect()
+}
+
+/// Number of distinct items at a scale factor.
+pub fn num_items(scale: usize) -> usize {
+    1000 * scale.max(1)
+}
+
+/// Generate one fact partition deterministically.
+pub fn gen_partition(scale: usize, partition: usize, num_partitions: usize) -> StoreSales {
+    let total = SF_ROWS * scale.max(1);
+    let per = total / num_partitions.max(1);
+    let start = partition * per;
+    let rows = if partition + 1 == num_partitions { total - start } else { per };
+    let dates = date_dim().len() as u32;
+    let items = num_items(scale) as u32;
+    let mut out = StoreSales::default();
+    let mut rng = Rng::new(0x5EED ^ (partition as u64) << 20 ^ scale as u64);
+    for _ in 0..rows {
+        out.date_sk.push((rng.below(dates as u64)) as i32);
+        out.item_sk.push((rng.below(items as u64)) as i32);
+        out.store_sk.push((rng.below(NUM_STORES as u64)) as i32);
+        let qty = 1 + rng.below(10) as i32;
+        out.quantity.push(qty);
+        let price = 1.0 + rng.next_f32() * 99.0;
+        out.sales_price.push(price * qty as f32);
+        out.net_profit
+            .push(price * qty as f32 * (rng.next_f32() * 0.6 - 0.2));
+    }
+    out
+}
+
+/// Serialize a partition (little-endian columns).
+pub fn encode_partition(p: &StoreSales) -> Vec<u8> {
+    let n = p.len();
+    let mut out = Vec::with_capacity(4 + n * 24);
+    out.extend((n as u32).to_le_bytes());
+    for v in &p.date_sk {
+        out.extend(v.to_le_bytes());
+    }
+    for v in &p.item_sk {
+        out.extend(v.to_le_bytes());
+    }
+    for v in &p.store_sk {
+        out.extend(v.to_le_bytes());
+    }
+    for v in &p.quantity {
+        out.extend(v.to_le_bytes());
+    }
+    for v in &p.sales_price {
+        out.extend(v.to_le_bytes());
+    }
+    for v in &p.net_profit {
+        out.extend(v.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a serialized partition.
+pub fn decode_partition(bytes: &[u8]) -> Result<StoreSales, String> {
+    if bytes.len() < 4 {
+        return Err("partition too short".to_string());
+    }
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    if bytes.len() != 4 + n * 24 {
+        return Err(format!(
+            "partition length {} != expected {}",
+            bytes.len(),
+            4 + n * 24
+        ));
+    }
+    let mut off = 4;
+    let read_i32 = |count: usize, off: &mut usize| -> Vec<i32> {
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            v.push(i32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap()));
+            *off += 4;
+        }
+        v
+    };
+    let date_sk = read_i32(n, &mut off);
+    let item_sk = read_i32(n, &mut off);
+    let store_sk = read_i32(n, &mut off);
+    let quantity = read_i32(n, &mut off);
+    let read_f32 = |count: usize, off: &mut usize| -> Vec<f32> {
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            v.push(f32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap()));
+            *off += 4;
+        }
+        v
+    };
+    let sales_price = read_f32(n, &mut off);
+    let net_profit = read_f32(n, &mut off);
+    Ok(StoreSales { date_sk, item_sk, store_sk, quantity, sales_price, net_profit })
+}
+
+/// Object-store key for a partition.
+pub fn partition_key(scale: usize, partition: usize) -> String {
+    format!("tpcds/sf{scale}/store_sales/part-{partition:05}.bin")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_cover_total_rows() {
+        let scale = 1;
+        let parts = 7;
+        let total: usize = (0..parts)
+            .map(|p| gen_partition(scale, p, parts).len())
+            .sum();
+        assert_eq!(total, SF_ROWS);
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        assert_eq!(gen_partition(1, 2, 4), gen_partition(1, 2, 4));
+        assert_ne!(
+            gen_partition(1, 2, 4).sales_price[..8],
+            gen_partition(1, 3, 4).sales_price[..8]
+        );
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = gen_partition(1, 0, 16);
+        let bytes = encode_partition(&p);
+        let back = decode_partition(&bytes).unwrap();
+        assert_eq!(p, back);
+        assert!(decode_partition(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn dimensions_are_well_formed() {
+        let dd = date_dim();
+        assert_eq!(dd.len(), YEARS.len() * 12);
+        assert!(dd.iter().all(|(_, y, m)| YEARS.contains(y) && (1..=12).contains(m)));
+        let items = item_dim(num_items(1));
+        assert!(items
+            .iter()
+            .all(|(_, c, b)| (0..10).contains(c) && (0..50).contains(b)));
+        assert_eq!(store_dim().len(), NUM_STORES);
+    }
+
+    #[test]
+    fn keys_in_dimension_range() {
+        let p = gen_partition(1, 0, 8);
+        let dates = date_dim().len() as i32;
+        let items = num_items(1) as i32;
+        assert!(p.date_sk.iter().all(|d| (0..dates).contains(d)));
+        assert!(p.item_sk.iter().all(|i| (0..items).contains(i)));
+        assert!(p.store_sk.iter().all(|s| (0..NUM_STORES as i32).contains(s)));
+    }
+}

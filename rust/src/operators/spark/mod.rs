@@ -1,0 +1,23 @@
+//! Spark Operator + a mini data-parallel SQL engine (SS4.1).
+//!
+//! The paper runs the AWS EKS Spark TPC-DS sample through the Spark
+//! Operator: a `SparkApplication` CRD whose operator manages driver and
+//! executor pods. We reproduce that control flow faithfully —
+//!
+//!   SparkApplication -> operator -> driver pod -> N executor pods,
+//!
+//! with the driver creating its executors through the Kubernetes API
+//! (as Spark-on-K8s does), distributing tasks over an in-cluster
+//! endpoint, and storing data in MinIO under the service name the
+//! benchmark YAMLs require (`spark-k8s-data`) — and implement enough of
+//! a columnar engine ([`engine`]) to run TPC-DS-shaped work: a
+//! partitioned `store_sales` fact table with `item`/`date_dim`/`store`
+//! dimensions ([`data`]), scan-filter-join-aggregate queries with
+//! partial aggregation on executors and a merge on the driver.
+
+pub mod data;
+pub mod driver;
+pub mod engine;
+pub mod operator;
+
+pub use operator::{install, SparkOperator};

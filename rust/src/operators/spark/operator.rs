@@ -1,0 +1,262 @@
+//! The Spark Operator: SparkApplication CRD -> driver pod -> status.
+//!
+//! "The operator streamlines the deployment and management of Apache
+//! Spark applications on Kubernetes by defining the SparkApplication
+//! CRD. It handles the entire lifecycle of execution, including
+//! submission, scaling, and cleanup" (SS4.1).
+
+use crate::kube::api::ApiServer;
+use crate::kube::controllers::Reconciler;
+use crate::kube::object;
+use crate::yamlkit::Value;
+
+pub struct SparkOperator;
+
+/// Install into a control plane: registers the image and the controller
+/// loop, and drops the API/DNS handles into the service hub so drivers
+/// can reach them (the "helm install spark-operator" step).
+pub fn install(cp: &crate::hpk::ControlPlane) {
+    super::driver::register_spark_image(&cp.runtime);
+    cp.runtime.hub.insert(std::sync::Arc::new(cp.api.clone()));
+    cp.runtime.hub.insert(std::sync::Arc::new(cp.dns.clone()));
+    let api = cp.api.clone();
+    std::thread::Builder::new()
+        .name("spark-operator".to_string())
+        .spawn(move || {
+            let c = SparkOperator;
+            loop {
+                c.reconcile(&api);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+        .expect("spawn spark operator");
+}
+
+fn env_entry(k: &str, v: String) -> Value {
+    let mut e = Value::map();
+    e.set("name", Value::from(k));
+    e.set("value", Value::from(v));
+    e
+}
+
+impl Reconciler for SparkOperator {
+    fn name(&self) -> &'static str {
+        "spark-operator"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for app in api.list("SparkApplication") {
+            let ns = object::namespace(&app);
+            let name = object::name(&app);
+            let state = app.str_at("status.applicationState.state").unwrap_or("");
+            if state == "COMPLETED" || state == "FAILED" {
+                continue;
+            }
+            let driver_name = format!("{name}-driver");
+            match api.get("Pod", ns, &driver_name) {
+                Err(_) => {
+                    // Submit: build the driver pod from the spec.
+                    let mode = app
+                        .str_at("spec.mainClass")
+                        .unwrap_or("benchmark")
+                        .to_string();
+                    let scale = app
+                        .path("spec.arguments.0")
+                        .and_then(|v| v.coerce_string())
+                        .unwrap_or_else(|| "1".to_string());
+                    let partitions = app
+                        .path("spec.arguments.1")
+                        .and_then(|v| v.coerce_string())
+                        .unwrap_or_else(|| "8".to_string());
+                    let queries = app
+                        .path("spec.arguments.2")
+                        .and_then(|v| v.coerce_string())
+                        .unwrap_or_else(|| "q3,q55,q7".to_string());
+                    let instances = app
+                        .i64_at("spec.executor.instances")
+                        .unwrap_or(3)
+                        .to_string();
+                    let cores = app
+                        .path("spec.executor.cores")
+                        .and_then(|v| v.coerce_string())
+                        .unwrap_or_else(|| "1".to_string());
+                    let memory = app
+                        .str_at("spec.executor.memory")
+                        .unwrap_or("1Gi")
+                        .to_string();
+                    let s3 = app
+                        .str_at("spec.s3Service")
+                        .unwrap_or("spark-k8s-data")
+                        .to_string();
+
+                    let mut pod = object::new_object("Pod", ns, &driver_name);
+                    let mut labels = Value::map();
+                    labels.set("spark-role", Value::from("driver"));
+                    labels.set("spark-app", Value::from(name));
+                    pod.entry_map("metadata").set("labels", labels);
+                    let mut container = Value::map();
+                    container.set("name", Value::from("driver"));
+                    container.set("image", Value::from("spark:3.5"));
+                    container.set(
+                        "env",
+                        Value::Seq(vec![
+                            env_entry("SPARK_ROLE", "driver".to_string()),
+                            env_entry("SPARK_APP_NAME", name.to_string()),
+                            env_entry("SPARK_MODE", mode),
+                            env_entry("SPARK_SCALE", scale),
+                            env_entry("SPARK_PARTITIONS", partitions),
+                            env_entry("SPARK_QUERIES", queries),
+                            env_entry("EXECUTOR_INSTANCES", instances),
+                            env_entry("EXECUTOR_CORES", cores),
+                            env_entry("EXECUTOR_MEMORY", memory),
+                            env_entry("S3_SERVICE", s3),
+                        ]),
+                    );
+                    let req = container.entry_map("resources").entry_map("requests");
+                    req.set(
+                        "cpu",
+                        app.path("spec.driver.cores")
+                            .cloned()
+                            .unwrap_or(Value::Int(1)),
+                    );
+                    req.set(
+                        "memory",
+                        app.path("spec.driver.memory")
+                            .cloned()
+                            .unwrap_or(Value::from("1Gi")),
+                    );
+                    pod.entry_map("spec")
+                        .set("containers", Value::Seq(vec![container]));
+                    object::add_owner_ref(
+                        &mut pod,
+                        "SparkApplication",
+                        name,
+                        object::uid(&app),
+                    );
+                    if api.create(pod).is_ok() {
+                        let mut st = Value::map();
+                        st.entry_map("applicationState")
+                            .set("state", Value::from("SUBMITTED"));
+                        let _ = api.update_status("SparkApplication", ns, name, st);
+                    }
+                }
+                Ok(driver) => {
+                    let new_state = match object::pod_phase(&driver) {
+                        "Running" => "RUNNING",
+                        "Succeeded" => "COMPLETED",
+                        "Failed" => "FAILED",
+                        _ => "SUBMITTED",
+                    };
+                    if state != new_state {
+                        let mut st = Value::map();
+                        st.entry_map("applicationState")
+                            .set("state", Value::from(new_state));
+                        if new_state == "FAILED" {
+                            if let Some(r) = driver.str_at("status.reason") {
+                                st.entry_map("applicationState")
+                                    .set("errorMessage", Value::from(r));
+                            }
+                        }
+                        let _ = api.update_status("SparkApplication", ns, name, st);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The Listing-1 style manifest (executor knobs exposed the same way).
+pub fn spark_application_manifest(
+    name: &str,
+    namespace: &str,
+    mode: &str,
+    scale: usize,
+    partitions: usize,
+    queries: &str,
+    instances: i64,
+    cores: i64,
+    memory: &str,
+) -> String {
+    format!(
+        r#"apiVersion: "sparkoperator.k8s.io/v1beta2"
+kind: SparkApplication
+metadata:
+  name: {name}
+  namespace: {namespace}
+spec:
+  type: Scala
+  mainClass: {mode}
+  arguments:
+  - "{scale}"
+  - "{partitions}"
+  - "{queries}"
+  driver:
+    cores: 1
+    memory: "1Gi"
+  executor:
+    instances: {instances}
+    cores: {cores}
+    memory: "{memory}"
+    memoryOverhead: 2G
+"#
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_all;
+
+    #[test]
+    fn manifest_matches_listing1_shape() {
+        let docs = parse_all(&spark_application_manifest(
+            "tpcds-benchmark-data-generation-1g",
+            "default",
+            "datagen",
+            1,
+            8,
+            "",
+            3,
+            1,
+            "8000m",
+        ))
+        .unwrap();
+        let app = &docs[0];
+        assert_eq!(app.str_at("kind"), Some("SparkApplication"));
+        assert_eq!(app.i64_at("spec.executor.instances"), Some(3));
+        assert_eq!(app.i64_at("spec.executor.cores"), Some(1));
+        assert_eq!(app.str_at("spec.executor.memory"), Some("8000m"));
+    }
+
+    #[test]
+    fn operator_creates_driver_and_tracks_state() {
+        let api = ApiServer::new();
+        api.apply_manifest(&spark_application_manifest(
+            "app", "default", "datagen", 1, 4, "", 2, 1, "1Gi",
+        ))
+        .unwrap();
+        let op = SparkOperator;
+        op.reconcile(&api);
+        let driver = api.get("Pod", "default", "app-driver").unwrap();
+        assert_eq!(driver.str_at("metadata.labels.spark-role"), Some("driver"));
+        let env = driver.path("spec.containers.0.env").unwrap().as_seq().unwrap();
+        assert!(env
+            .iter()
+            .any(|e| e.str_at("name") == Some("EXECUTOR_INSTANCES")
+                && e.str_at("value") == Some("2")));
+        // Driver succeeds -> app COMPLETED.
+        api.update_status(
+            "Pod",
+            "default",
+            "app-driver",
+            crate::yamlkit::parse_one("phase: Succeeded\n").unwrap(),
+        )
+        .unwrap();
+        op.reconcile(&api);
+        let app = api.get("SparkApplication", "default", "app").unwrap();
+        assert_eq!(
+            app.str_at("status.applicationState.state"),
+            Some("COMPLETED")
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! Synchronous gradient all-reduce (MultiWorkerMirroredStrategy).
+//!
+//! Every worker contributes its gradients for round `r`; the last to
+//! arrive averages them, applies the SGD update to the shared
+//! parameters, and wakes everyone with the identical new state. This is
+//! the in-process equivalent of the ring all-reduce TF performs over
+//! the pod network — the *synchronization semantics* (barrier + same
+//! update everywhere) are what SS4.3's workload depends on.
+
+use crate::runtime::Tensor;
+use crate::slurm::CancelToken;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Round {
+    /// Gradients contributed this round, by rank.
+    grads: Vec<Option<Vec<Tensor>>>,
+    /// Round number (generation counter for the barrier).
+    round: u64,
+    params: Vec<Tensor>,
+    /// Mean loss of the last completed round (reporting).
+    last_loss: f32,
+    failed: Option<String>,
+}
+
+/// One coordinator per TFJob.
+pub struct AllReduce {
+    workers: usize,
+    state: Mutex<Round>,
+    cv: Condvar,
+}
+
+impl AllReduce {
+    pub fn new(workers: usize, initial_params: Vec<Tensor>) -> AllReduce {
+        AllReduce {
+            workers: workers.max(1),
+            state: Mutex::new(Round {
+                grads: vec![None; workers.max(1)],
+                round: 0,
+                params: initial_params,
+                last_loss: f32::NAN,
+                failed: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parameters at round 0 (what every worker starts from).
+    pub fn initial_params(&self) -> Vec<Tensor> {
+        self.state.lock().unwrap().params.clone()
+    }
+
+    /// Mean loss of the last completed round.
+    pub fn last_loss(&self) -> f32 {
+        self.state.lock().unwrap().last_loss
+    }
+
+    /// Mark the job failed (wakes all blocked workers with an error).
+    pub fn fail(&self, reason: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.failed = Some(reason.to_string());
+        self.cv.notify_all();
+    }
+
+    /// Contribute gradients for the current round; blocks until all
+    /// ranks arrive; returns the post-update parameters.
+    pub fn step(
+        &self,
+        rank: usize,
+        grads: Vec<Tensor>,
+        loss: f32,
+        lr: f32,
+        cancel: &CancelToken,
+    ) -> Result<Vec<Tensor>, String> {
+        if rank >= self.workers {
+            return Err(format!("rank {rank} out of range"));
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.failed.is_some() {
+            return Err(st.failed.clone().unwrap());
+        }
+        if st.grads[rank].is_some() {
+            return Err(format!("rank {rank} double-submitted a round"));
+        }
+        st.grads[rank] = Some(grads);
+        // Stash the loss sum in last_loss incrementally via the grads
+        // vector length bookkeeping below; simplest: recompute when full.
+        let my_round = st.round;
+        let arrived = st.grads.iter().filter(|g| g.is_some()).count();
+        if arrived == self.workers {
+            // Last rank: reduce.
+            let mut grad_acc: Option<Vec<Tensor>> = None;
+            for g in st.grads.iter_mut() {
+                let g = g.take().unwrap();
+                match &mut grad_acc {
+                    None => grad_acc = Some(g),
+                    Some(acc) => {
+                        for (a, b) in acc.iter_mut().zip(&g) {
+                            a.add_assign(b)?;
+                        }
+                    }
+                }
+            }
+            let mut acc = grad_acc.unwrap();
+            let scale = 1.0 / self.workers as f32;
+            for t in acc.iter_mut() {
+                t.scale(scale)?;
+            }
+            for (p, g) in st.params.iter_mut().zip(&acc) {
+                p.sgd_update(g, lr)?;
+            }
+            st.last_loss = loss; // representative (losses differ per shard)
+            st.round += 1;
+            st.grads = vec![None; self.workers];
+            self.cv.notify_all();
+            return Ok(st.params.clone());
+        }
+        // Wait for the round to complete.
+        loop {
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(st, std::time::Duration::from_millis(50))
+                .unwrap();
+            st = guard;
+            if let Some(e) = &st.failed {
+                return Err(e.clone());
+            }
+            if st.round > my_round {
+                return Ok(st.params.clone());
+            }
+            if timeout.timed_out() && cancel.is_cancelled() {
+                return Err("terminated while waiting for all-reduce".to_string());
+            }
+        }
+    }
+}
+
+/// Job-name -> coordinator map, shared through the ServiceHub.
+#[derive(Default)]
+pub struct TrainerRegistry {
+    jobs: Mutex<HashMap<String, Arc<AllReduce>>>,
+}
+
+impl TrainerRegistry {
+    pub fn new() -> TrainerRegistry {
+        TrainerRegistry::default()
+    }
+
+    pub fn insert(&self, job: &str, ar: Arc<AllReduce>) {
+        self.jobs.lock().unwrap().insert(job.to_string(), ar);
+    }
+
+    pub fn get(&self, job: &str) -> Option<Arc<AllReduce>> {
+        self.jobs.lock().unwrap().get(job).cloned()
+    }
+
+    pub fn remove(&self, job: &str) {
+        self.jobs.lock().unwrap().remove(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Vec<Tensor> {
+        vec![Tensor::from_f32(vec![v, v], &[2])]
+    }
+
+    #[test]
+    fn two_workers_average_and_sync() {
+        let ar = Arc::new(AllReduce::new(2, t(0.0)));
+        let a = ar.clone();
+        let h = std::thread::spawn(move || {
+            a.step(0, t(1.0), 0.5, 1.0, &CancelToken::new()).unwrap()
+        });
+        let p1 = ar.step(1, t(3.0), 0.7, 1.0, &CancelToken::new()).unwrap();
+        let p0 = h.join().unwrap();
+        // avg grad = 2.0, lr 1.0 -> params = -2.0 everywhere, same on
+        // both ranks.
+        assert_eq!(p0, p1);
+        assert_eq!(p0[0].as_f32(), &[-2.0, -2.0]);
+    }
+
+    #[test]
+    fn multiple_rounds_accumulate() {
+        let ar = Arc::new(AllReduce::new(1, t(10.0)));
+        let p = ar.step(0, t(1.0), 0.1, 1.0, &CancelToken::new()).unwrap();
+        assert_eq!(p[0].as_f32(), &[9.0, 9.0]);
+        let p = ar.step(0, t(1.0), 0.1, 1.0, &CancelToken::new()).unwrap();
+        assert_eq!(p[0].as_f32(), &[8.0, 8.0]);
+    }
+
+    #[test]
+    fn double_submit_rejected() {
+        let ar = Arc::new(AllReduce::new(2, t(0.0)));
+        // rank 0 submits; without rank 1, a second submit by rank 0 in
+        // the same round must fail immediately.
+        let a = ar.clone();
+        let h = std::thread::spawn(move || {
+            a.step(0, t(1.0), 0.0, 1.0, &CancelToken::new())
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // Rank 0's thread is blocked; now simulate its double submit via
+        // the error path by submitting as rank 0 again from here.
+        let err = ar.step(0, t(1.0), 0.0, 1.0, &CancelToken::new());
+        assert!(err.is_err());
+        // Complete the round so the thread unblocks.
+        ar.step(1, t(1.0), 0.0, 1.0, &CancelToken::new()).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn cancel_unblocks_waiter() {
+        let ar = Arc::new(AllReduce::new(2, t(0.0)));
+        let cancel = CancelToken::new();
+        let c2 = cancel.clone();
+        let a = ar.clone();
+        let h = std::thread::spawn(move || a.step(0, t(1.0), 0.0, 1.0, &c2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        cancel.cancel();
+        let r = h.join().unwrap();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fail_propagates() {
+        let ar = Arc::new(AllReduce::new(2, t(0.0)));
+        let a = ar.clone();
+        let h = std::thread::spawn(move || {
+            a.step(0, t(1.0), 0.0, 1.0, &CancelToken::new())
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        ar.fail("worker 1 died");
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn registry_lookup() {
+        let reg = TrainerRegistry::new();
+        reg.insert("job", Arc::new(AllReduce::new(1, t(0.0))));
+        assert!(reg.get("job").is_some());
+        reg.remove("job");
+        assert!(reg.get("job").is_none());
+    }
+}

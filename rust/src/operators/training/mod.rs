@@ -1,0 +1,199 @@
+//! Kubeflow Training Operator: distributed TF-style training (SS4.3).
+//!
+//! "Instead of simple container image steps, it uses TFJob CRDs; the
+//! operator then spawns the requested number of pods with the
+//! appropriate roles and handles their lifecycle." Training uses
+//! synchronous data-parallel SGD (MultiWorkerMirroredStrategy
+//! semantics): every worker computes gradients on its shard through the
+//! `grad_step_*` PJRT artifact, gradients are all-reduced, and the
+//! identical update is applied on every worker.
+
+mod allreduce;
+pub mod operator;
+mod serving;
+
+pub use allreduce::{AllReduce, TrainerRegistry};
+pub use operator::{install, TfJobOperator};
+pub use serving::{register_serving_image, InferenceServer, SERVING_PORT};
+
+use crate::apptainer::{ApptainerRuntime, ContainerCtx, ImageSpec};
+use crate::runtime::{PjrtRuntime, Tensor};
+use crate::workloads::{dataset, trainer};
+use std::sync::Arc;
+
+/// Register the `tf-trainer` worker image.
+pub fn register_trainer_image(rt: &ApptainerRuntime) {
+    rt.registry.register(
+        ImageSpec::new("tf-trainer:latest", "tf-trainer").with_size(800 << 20),
+    );
+    rt.table.register("tf-trainer", run_worker);
+}
+
+fn run_worker(ctx: &ContainerCtx) -> Result<i32, String> {
+    let job = ctx.env_or("TFJOB_NAME", "tfjob");
+    let rank: usize = ctx.env_parsed("WORKER_RANK").unwrap_or(0);
+    let workers: usize = ctx.env_parsed("NUM_WORKERS").unwrap_or(1);
+    let variant = ctx.env_or("MODEL_VARIANT", "mlp-small");
+    let steps: u64 = ctx.env_parsed("STEPS").unwrap_or(100);
+    let lr: f32 = ctx.env_parsed("LEARNING_RATE").unwrap_or(0.1);
+    let out_dir = ctx.env_or("OUT_DIR", &format!("/home/user/models/{job}"));
+
+    let pjrt = ctx.hub.expect::<PjrtRuntime>("PjrtRuntime")?;
+    let registry = ctx.hub.expect::<TrainerRegistry>("TrainerRegistry")?;
+    let allreduce = registry
+        .get(&job)
+        .ok_or_else(|| format!("no AllReduce coordinator for job {job}"))?;
+
+    let entry = format!("grad_step_{variant}");
+    pjrt.load(&entry)?;
+    let batch = pjrt.manifest_i64("train_batch").unwrap_or(128) as usize;
+
+    let mut params = allreduce.initial_params();
+    let mut losses: Vec<f32> = Vec::with_capacity(steps as usize);
+    for step in 0..steps {
+        if ctx.cancel.is_cancelled() {
+            return Err("terminated".to_string());
+        }
+        // Shard: disjoint seeds per (step, rank).
+        let seed = step * workers as u64 + rank as u64;
+        let (x, y) = dataset::synthetic_batch(batch, seed);
+        let mut inputs = params.clone();
+        inputs.push(x);
+        inputs.push(y);
+        let out = pjrt.call(&entry, &inputs)?;
+        let loss = out.last().unwrap().as_f32()[0];
+        let grads: Vec<Tensor> = out[..out.len() - 1].to_vec();
+        params = allreduce.step(rank, grads, loss, lr, &ctx.cancel)?;
+        losses.push(loss);
+    }
+
+    // Rank 0 persists the loss curve, final weights and held-out metrics.
+    if rank == 0 {
+        let mut csv = String::from("step,loss\n");
+        for (i, l) in losses.iter().enumerate() {
+            csv.push_str(&format!("{i},{l}\n"));
+        }
+        ctx.fs
+            .write_str(&format!("{out_dir}/loss.csv"), &csv)
+            .map_err(|e| e.to_string())?;
+        ctx.fs
+            .write(&format!("{out_dir}/weights.bin"), trainer_encode(&params))
+            .map_err(|e| e.to_string())?;
+        let (nll, acc) = trainer::evaluate(&pjrt, &variant, &params, 10_000, 4)?;
+        ctx.fs
+            .write_str(
+                &format!("{out_dir}/metrics.txt"),
+                &format!("variant={variant} nll={nll} accuracy={acc}\n"),
+            )
+            .map_err(|e| e.to_string())?;
+    }
+    Ok(0)
+}
+
+/// Serialize parameter tensors (count, then per-tensor rank/dims/data).
+pub fn trainer_encode(params: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend((params.len() as u32).to_le_bytes());
+    for p in params {
+        out.extend((p.shape().len() as u32).to_le_bytes());
+        for d in p.shape() {
+            out.extend((*d as u32).to_le_bytes());
+        }
+        for v in p.as_f32() {
+            out.extend(v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Parse parameters back.
+pub fn trainer_decode(bytes: &[u8]) -> Result<Vec<Tensor>, String> {
+    let mut off = 0usize;
+    let take_u32 = |off: &mut usize| -> Result<u32, String> {
+        let v = bytes
+            .get(*off..*off + 4)
+            .ok_or("truncated params")?
+            .try_into()
+            .unwrap();
+        *off += 4;
+        Ok(u32::from_le_bytes(v))
+    };
+    let count = take_u32(&mut off)? as usize;
+    let mut params = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = take_u32(&mut off)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(take_u32(&mut off)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = bytes
+                .get(off..off + 4)
+                .ok_or("truncated tensor data")?
+                .try_into()
+                .unwrap();
+            data.push(f32::from_le_bytes(v));
+            off += 4;
+        }
+        params.push(Tensor::from_f32(data, &shape));
+    }
+    if off != bytes.len() {
+        return Err("trailing bytes in params".to_string());
+    }
+    Ok(params)
+}
+
+/// The ingestion image (`data-ingest`): materializes dataset shards to
+/// shared storage — the pipeline's first step in SS4.3.
+pub fn register_ingest_image(rt: &ApptainerRuntime) {
+    rt.registry
+        .register(ImageSpec::new("data-ingest:latest", "data-ingest").with_size(80 << 20));
+    rt.table.register("data-ingest", |ctx| {
+        let shards: usize = ctx.env_parsed("SHARDS").unwrap_or(4);
+        let per: usize = ctx.env_parsed("SAMPLES_PER_SHARD").unwrap_or(1024);
+        let out_dir = ctx.env_or("DATA_DIR", "/home/user/datasets/fmnist");
+        for s in 0..shards {
+            if ctx.cancel.is_cancelled() {
+                return Err("terminated".to_string());
+            }
+            let (x, y) = dataset::synthetic_batch(per, s as u64);
+            ctx.fs
+                .write(
+                    &format!("{out_dir}/shard-{s:03}.bin"),
+                    dataset::encode_shard(&x, &y),
+                )
+                .map_err(|e| e.to_string())?;
+        }
+        ctx.fs
+            .write_str(&format!("{out_dir}/_SUCCESS"), &format!("shards={shards}"))
+            .map_err(|e| e.to_string())?;
+        Ok(0)
+    });
+}
+
+/// Convenience: the hub services training needs, installed together.
+pub fn install_runtime_services(cp: &crate::hpk::ControlPlane, pjrt: Arc<PjrtRuntime>) {
+    cp.runtime.hub.insert(pjrt);
+    cp.runtime.hub.insert(Arc::new(TrainerRegistry::new()));
+    cp.runtime.hub.insert(Arc::new(cp.api.clone()));
+    cp.runtime.hub.insert(Arc::new(cp.dns.clone()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip() {
+        let params = crate::workloads::trainer::init_params_rust("mlp-small", 1);
+        let bytes = trainer_encode(&params);
+        let back = trainer_decode(&bytes).unwrap();
+        assert_eq!(params.len(), back.len());
+        for (a, b) in params.iter().zip(&back) {
+            assert_eq!(a, b);
+        }
+        assert!(trainer_decode(&bytes[..bytes.len() - 2]).is_err());
+    }
+}

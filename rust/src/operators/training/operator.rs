@@ -1,0 +1,300 @@
+//! The TFJob operator: CRD -> worker pods + coordinator lifecycle.
+
+use super::allreduce::{AllReduce, TrainerRegistry};
+use crate::kube::api::ApiServer;
+use crate::kube::controllers::Reconciler;
+use crate::kube::object;
+use crate::workloads::trainer;
+use crate::yamlkit::Value;
+use std::sync::Arc;
+
+pub struct TfJobOperator {
+    pub registry: Arc<TrainerRegistry>,
+}
+
+/// Install into a control plane ("helm install training-operator"):
+/// requires [`super::install_runtime_services`] to have provided the
+/// PJRT runtime and registry in the hub.
+pub fn install(cp: &crate::hpk::ControlPlane) {
+    super::register_trainer_image(&cp.runtime);
+    super::register_ingest_image(&cp.runtime);
+    super::serving::register_serving_image(&cp.runtime);
+    let registry = cp
+        .runtime
+        .hub
+        .get::<TrainerRegistry>()
+        .expect("install_runtime_services must run first");
+    let api = cp.api.clone();
+    std::thread::Builder::new()
+        .name("training-operator".to_string())
+        .spawn(move || {
+            let c = TfJobOperator { registry };
+            loop {
+                c.reconcile(&api);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+        .expect("spawn training operator");
+}
+
+fn env_entry(k: &str, v: String) -> Value {
+    let mut e = Value::map();
+    e.set("name", Value::from(k));
+    e.set("value", Value::from(v));
+    e
+}
+
+impl Reconciler for TfJobOperator {
+    fn name(&self) -> &'static str {
+        "tfjob-operator"
+    }
+
+    fn reconcile(&self, api: &ApiServer) {
+        for job in api.list("TFJob") {
+            let ns = object::namespace(&job);
+            let name = object::name(&job);
+            let state = job.str_at("status.state").unwrap_or("");
+            if state == "Succeeded" || state == "Failed" {
+                continue;
+            }
+            let replicas = job
+                .i64_at("spec.tfReplicaSpecs.Worker.replicas")
+                .unwrap_or(1)
+                .max(1) as usize;
+            let variant = job.str_at("spec.variant").unwrap_or("mlp-small");
+            if trainer::variant_dims(variant).is_none() {
+                let mut st = Value::map();
+                st.set("state", Value::from("Failed"));
+                st.set("reason", Value::from(format!("unknown variant {variant}")));
+                let _ = api.update_status("TFJob", ns, name, st);
+                continue;
+            }
+            let steps = job.i64_at("spec.steps").unwrap_or(100);
+            let lr = job
+                .path("spec.learningRate")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.1);
+            let seed = job.i64_at("spec.seed").unwrap_or(7) as u64;
+            let out_dir = job
+                .str_at("spec.outputDir")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("/home/user/models/{name}"));
+
+            // Coordinator + pods on first sight.
+            if self.registry.get(&format!("{ns}/{name}")).is_none() {
+                let params = trainer::init_params_rust(variant, seed);
+                self.registry.insert(
+                    &format!("{ns}/{name}"),
+                    Arc::new(AllReduce::new(replicas, params)),
+                );
+            }
+            let mut pods_done = 0usize;
+            let mut pods_failed = 0usize;
+            for r in 0..replicas {
+                let pod_name = format!("{name}-worker-{r}");
+                match api.get("Pod", ns, &pod_name) {
+                    Err(_) => {
+                        let mut pod = object::new_object("Pod", ns, &pod_name);
+                        let mut labels = Value::map();
+                        labels.set("training.kubeflow.org/job-name", Value::from(name));
+                        labels.set("training.kubeflow.org/replica-type", Value::from("worker"));
+                        pod.entry_map("metadata").set("labels", labels);
+                        // Training outlives the site's default batch
+                        // limit; request wall time via the HPK
+                        // annotation pass-through (spec.timeLimit or a
+                        // generous default).
+                        let wall = job
+                            .str_at("spec.timeLimit")
+                            .unwrap_or("24:00:00")
+                            .to_string();
+                        pod.entry_map("metadata")
+                            .entry_map("annotations")
+                            .set(
+                                "slurm-job.hpk.io/flags",
+                                Value::from(format!("--time={wall}")),
+                            );
+                        let mut container = Value::map();
+                        container.set("name", Value::from("tensorflow"));
+                        container.set("image", Value::from("tf-trainer:latest"));
+                        container.set(
+                            "env",
+                            Value::Seq(vec![
+                                env_entry("TFJOB_NAME", format!("{ns}/{name}")),
+                                env_entry("WORKER_RANK", r.to_string()),
+                                env_entry("NUM_WORKERS", replicas.to_string()),
+                                env_entry("MODEL_VARIANT", variant.to_string()),
+                                env_entry("STEPS", steps.to_string()),
+                                env_entry("LEARNING_RATE", lr.to_string()),
+                                env_entry("OUT_DIR", out_dir.clone()),
+                            ]),
+                        );
+                        let req =
+                            container.entry_map("resources").entry_map("requests");
+                        req.set(
+                            "cpu",
+                            job.path("spec.tfReplicaSpecs.Worker.cpu")
+                                .cloned()
+                                .unwrap_or(Value::Int(1)),
+                        );
+                        req.set("memory", Value::from("2Gi"));
+                        pod.entry_map("spec")
+                            .set("containers", Value::Seq(vec![container]));
+                        object::add_owner_ref(&mut pod, "TFJob", name, object::uid(&job));
+                        let _ = api.create(pod);
+                    }
+                    Ok(p) => match object::pod_phase(&p) {
+                        "Succeeded" => pods_done += 1,
+                        "Failed" => pods_failed += 1,
+                        _ => {}
+                    },
+                }
+            }
+
+            let new_state = if pods_failed > 0 {
+                // Unblock peers stuck at the barrier.
+                if let Some(ar) = self.registry.get(&format!("{ns}/{name}")) {
+                    ar.fail("a worker pod failed");
+                }
+                "Failed"
+            } else if pods_done == replicas {
+                self.registry.remove(&format!("{ns}/{name}"));
+                "Succeeded"
+            } else {
+                "Running"
+            };
+            if state != new_state {
+                let mut st = Value::map();
+                st.set("state", Value::from(new_state));
+                st.set("succeededWorkers", Value::Int(pods_done as i64));
+                let _ = api.update_status("TFJob", ns, name, st);
+            }
+        }
+    }
+}
+
+/// A TFJob manifest like the distributed-ml-system workflow submits.
+pub fn tfjob_manifest(
+    name: &str,
+    namespace: &str,
+    variant: &str,
+    workers: usize,
+    steps: u64,
+    lr: f64,
+    out_dir: &str,
+) -> String {
+    format!(
+        r#"apiVersion: "kubeflow.org/v1"
+kind: TFJob
+metadata:
+  name: {name}
+  namespace: {namespace}
+spec:
+  variant: {variant}
+  steps: {steps}
+  learningRate: {lr}
+  outputDir: {out_dir}
+  tfReplicaSpecs:
+    Worker:
+      replicas: {workers}
+      cpu: 1
+"#
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    #[test]
+    fn creates_worker_pods_with_ranks() {
+        let api = ApiServer::new();
+        api.apply_manifest(&tfjob_manifest(
+            "train", "default", "mlp-small", 3, 50, 0.1, "/home/user/m",
+        ))
+        .unwrap();
+        let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
+        op.reconcile(&api);
+        let pods = api.list("Pod");
+        assert_eq!(pods.len(), 3);
+        let ranks: Vec<String> = pods
+            .iter()
+            .map(|p| {
+                p.path("spec.containers.0.env")
+                    .unwrap()
+                    .as_seq()
+                    .unwrap()
+                    .iter()
+                    .find(|e| e.str_at("name") == Some("WORKER_RANK"))
+                    .unwrap()
+                    .str_at("value")
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        let mut sorted = ranks.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec!["0", "1", "2"]);
+        assert!(op.registry.get("default/train").is_some());
+    }
+
+    #[test]
+    fn completion_tracks_pods() {
+        let api = ApiServer::new();
+        api.apply_manifest(&tfjob_manifest(
+            "t", "default", "mlp-small", 2, 10, 0.1, "/m",
+        ))
+        .unwrap();
+        let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
+        op.reconcile(&api);
+        for p in api.list("Pod") {
+            api.update_status(
+                "Pod",
+                "default",
+                object::name(&p),
+                parse_one("phase: Succeeded\n").unwrap(),
+            )
+            .unwrap();
+        }
+        op.reconcile(&api);
+        let job = api.get("TFJob", "default", "t").unwrap();
+        assert_eq!(job.str_at("status.state"), Some("Succeeded"));
+        assert!(op.registry.get("default/t").is_none(), "registry cleaned");
+    }
+
+    #[test]
+    fn failed_worker_fails_job() {
+        let api = ApiServer::new();
+        api.apply_manifest(&tfjob_manifest(
+            "t", "default", "mlp-small", 2, 10, 0.1, "/m",
+        ))
+        .unwrap();
+        let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
+        op.reconcile(&api);
+        let pods = api.list("Pod");
+        api.update_status(
+            "Pod",
+            "default",
+            object::name(&pods[0]),
+            parse_one("phase: Failed\n").unwrap(),
+        )
+        .unwrap();
+        op.reconcile(&api);
+        let job = api.get("TFJob", "default", "t").unwrap();
+        assert_eq!(job.str_at("status.state"), Some("Failed"));
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let api = ApiServer::new();
+        api.apply_manifest(&tfjob_manifest(
+            "t", "default", "mlp-huge", 1, 10, 0.1, "/m",
+        ))
+        .unwrap();
+        let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
+        op.reconcile(&api);
+        let job = api.get("TFJob", "default", "t").unwrap();
+        assert_eq!(job.str_at("status.state"), Some("Failed"));
+        assert!(api.list("Pod").is_empty());
+    }
+}

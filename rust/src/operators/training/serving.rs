@@ -1,0 +1,132 @@
+//! Inference serving: the SS4.3 pipeline's final stage.
+//!
+//! The `tf-serving` image loads saved weights from shared storage and
+//! serves classification at `POD_IP:8501` on the fabric. Clients
+//! resolve the (headless) service via CoreDNS and call
+//! [`InferenceServer::classify`].
+
+use crate::apptainer::{ApptainerRuntime, ImageSpec};
+use crate::runtime::{PjrtRuntime, Tensor};
+use std::sync::{Arc, Mutex};
+
+pub const SERVING_PORT: u16 = 8501;
+
+/// The in-process serving endpoint.
+pub struct InferenceServer {
+    pjrt: Arc<PjrtRuntime>,
+    variant: String,
+    params: Vec<Tensor>,
+    requests: Mutex<u64>,
+    batch: usize,
+}
+
+impl InferenceServer {
+    pub fn new(
+        pjrt: Arc<PjrtRuntime>,
+        variant: &str,
+        params: Vec<Tensor>,
+    ) -> Result<InferenceServer, String> {
+        let entry = format!("predict_{variant}");
+        pjrt.load(&entry)?;
+        let batch = pjrt.manifest_i64("predict_batch").unwrap_or(256) as usize;
+        Ok(InferenceServer {
+            pjrt,
+            variant: variant.to_string(),
+            params,
+            requests: Mutex::new(0),
+            batch,
+        })
+    }
+
+    /// Classify a batch of flattened images (any count; padded to the
+    /// artifact's static batch internally). Returns predicted labels.
+    pub fn classify(&self, x: &Tensor) -> Result<Vec<i32>, String> {
+        let dims = x.shape();
+        if dims.len() != 2 || dims[1] != crate::workloads::dataset::IMAGE_DIM {
+            return Err(format!("bad input shape {dims:?}"));
+        }
+        let n = dims[0];
+        let mut labels = Vec::with_capacity(n);
+        let entry = format!("predict_{}", self.variant);
+        let xs = x.as_f32();
+        let dim = dims[1];
+        let mut start = 0usize;
+        while start < n {
+            let count = (n - start).min(self.batch);
+            // Pad to the static batch.
+            let mut padded = vec![0f32; self.batch * dim];
+            padded[..count * dim]
+                .copy_from_slice(&xs[start * dim..(start + count) * dim]);
+            let mut inputs = self.params.clone();
+            inputs.push(Tensor::from_f32(padded, &[self.batch, dim]));
+            let out = self.pjrt.call(&entry, &inputs)?;
+            let logits = out[0].as_f32();
+            for i in 0..count {
+                let row = &logits[i * 10..(i + 1) * 10];
+                let mut best = 0usize;
+                for c in 1..10 {
+                    if row[c] > row[best] {
+                        best = c;
+                    }
+                }
+                labels.push(best as i32);
+            }
+            start += count;
+        }
+        *self.requests.lock().unwrap() += 1;
+        Ok(labels)
+    }
+
+    pub fn request_count(&self) -> u64 {
+        *self.requests.lock().unwrap()
+    }
+}
+
+/// Register `tf-serving:latest`: loads `MODEL_PATH` weights for
+/// `MODEL_VARIANT` and serves until terminated.
+pub fn register_serving_image(rt: &ApptainerRuntime) {
+    rt.registry.register(
+        ImageSpec::new("tf-serving:latest", "tf-serving").with_size(300 << 20),
+    );
+    rt.table.register("tf-serving", |ctx| {
+        let pjrt = ctx.hub.expect::<PjrtRuntime>("PjrtRuntime")?;
+        let variant = ctx.env_or("MODEL_VARIANT", "mlp-small");
+        let path = ctx.env_or("MODEL_PATH", "");
+        let bytes = ctx.fs.read(&path).map_err(|e| e.to_string())?;
+        let params = super::trainer_decode(&bytes)?;
+        let server = Arc::new(InferenceServer::new(pjrt, &variant, params)?);
+        if !ctx.fabric.bind(ctx.ip, SERVING_PORT, server) {
+            return Err("serving port already bound".to_string());
+        }
+        while !ctx.cancel.is_cancelled() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        ctx.fabric.unbind(ctx.ip, SERVING_PORT);
+        Err("terminated".to_string())
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{dataset, trainer};
+
+    #[test]
+    fn serves_predictions_with_padding() {
+        let Ok(pjrt) = PjrtRuntime::open(&crate::runtime::artifacts_dir()) else {
+            return; // artifacts not built
+        };
+        let pjrt = Arc::new(pjrt);
+        let params = trainer::init_params_rust("mlp-small", 3);
+        let server = InferenceServer::new(pjrt, "mlp-small", params).unwrap();
+        // 300 samples > one 256 batch -> exercises the padding loop.
+        let (x, _) = dataset::synthetic_batch(300, 0);
+        let labels = server.classify(&x).unwrap();
+        assert_eq!(labels.len(), 300);
+        assert!(labels.iter().all(|l| (0..10).contains(l)));
+        assert_eq!(server.request_count(), 1);
+        // Bad shape rejected.
+        let bad = Tensor::from_f32(vec![0.0; 10], &[10]);
+        assert!(server.classify(&bad).is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! PJRT runtime: load and execute the AOT-compiled compute artifacts.
+//!
+//! Python runs once at build time (`make artifacts`): `python/compile/`
+//! lowers the L2 JAX graphs (whose hot spots are L1 Pallas kernels) to
+//! HLO *text*; this module loads those files, compiles each once on the
+//! PJRT CPU client, and serves executions to the simulated containers.
+//! Python is never on the request path.
+//!
+//! Interchange is HLO text, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! # Thread safety
+//!
+//! The `xla` crate's client/executable handles use `Rc` internally and
+//! are not `Send`/`Sync`. All XLA objects (client, executables, device
+//! buffers) are therefore *confined* behind one `Mutex`: they are
+//! created, used and dropped while holding it, so their refcounts are
+//! never touched concurrently. Host tensors ([`Tensor`]) cross the
+//! boundary by value. Worker pods consequently serialize on the PJRT
+//! device — faithful to the testbed (one CPU device), and measured
+//! explicitly in the perf pass.
+
+mod tensor;
+
+pub use tensor::Tensor;
+
+use crate::yamlkit::{parse_json, Value};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Argument/output signature entry from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+struct CompiledEntry {
+    exe: xla::PjRtLoadedExecutable,
+    calls: u64,
+}
+
+struct XlaState {
+    client: xla::PjRtClient,
+    cache: HashMap<String, CompiledEntry>,
+}
+
+/// The artifact store: manifest + lazily compiled executables.
+pub struct PjrtRuntime {
+    state: Mutex<XlaState>,
+    dir: String,
+    manifest: Value,
+    /// Parsed signatures per entry.
+    signatures: HashMap<String, (Vec<ArgSpec>, Vec<ArgSpec>)>,
+}
+
+// SAFETY: every xla object lives inside `state: Mutex<XlaState>` and is
+// only created/used/dropped under that lock (see `call`/`ensure_loaded`),
+// so the non-atomic Rc refcounts are never mutated from two threads at
+// once. Literals passed in/out are host-only buffers built outside any
+// client context.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Open `artifacts/` (reads `manifest.json`; compiles lazily).
+    pub fn open(dir: &str) -> Result<PjrtRuntime, String> {
+        let manifest_path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| format!("read {}: {e}", manifest_path.display()))?;
+        let manifest = parse_json(&text).map_err(|e| e.to_string())?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        let mut signatures = HashMap::new();
+        if let Some(entries) = manifest.path("entries").and_then(|e| e.as_map()) {
+            for (name, entry) in entries {
+                signatures.insert(
+                    name.clone(),
+                    (
+                        Self::parse_specs(entry, "args"),
+                        Self::parse_specs(entry, "outputs"),
+                    ),
+                );
+            }
+        }
+        Ok(PjrtRuntime {
+            state: Mutex::new(XlaState { client, cache: HashMap::new() }),
+            dir: dir.to_string(),
+            manifest,
+            signatures,
+        })
+    }
+
+    fn parse_specs(entry: &Value, key: &str) -> Vec<ArgSpec> {
+        entry
+            .path(key)
+            .and_then(|a| a.as_seq())
+            .map(|items| {
+                items
+                    .iter()
+                    .map(|a| ArgSpec {
+                        name: a.str_at("name").unwrap_or("").to_string(),
+                        shape: a
+                            .path("shape")
+                            .and_then(|s| s.as_seq())
+                            .map(|dims| {
+                                dims.iter()
+                                    .filter_map(|d| d.as_i64())
+                                    .map(|d| d as usize)
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                        dtype: a.str_at("dtype").unwrap_or("float32").to_string(),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Entry names available in the manifest.
+    pub fn entries(&self) -> Vec<String> {
+        self.manifest
+            .path("entries")
+            .and_then(|e| e.as_map())
+            .map(|m| m.iter().map(|(k, _)| k.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Scalars recorded by the AOT step (batch sizes etc.).
+    pub fn manifest_i64(&self, key: &str) -> Option<i64> {
+        self.manifest.i64_at(key)
+    }
+
+    /// Signature of an entry: (args, outputs).
+    pub fn signature(&self, name: &str) -> Option<&(Vec<ArgSpec>, Vec<ArgSpec>)> {
+        self.signatures.get(name)
+    }
+
+    fn ensure_loaded(&self, state: &mut XlaState, name: &str) -> Result<(), String> {
+        if state.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .path("entries")
+            .and_then(|e| e.get(name))
+            .ok_or_else(|| format!("no such artifact entry: {name}"))?;
+        let hlo_file = entry
+            .str_at("hlo")
+            .ok_or_else(|| format!("entry {name} has no hlo file"))?;
+        let path = Path::new(&self.dir).join(hlo_file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().ok_or("bad path")?)
+                .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = state
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
+        state
+            .cache
+            .insert(name.to_string(), CompiledEntry { exe, calls: 0 });
+        Ok(())
+    }
+
+    /// Pre-compile one entry (no execution).
+    pub fn load(&self, name: &str) -> Result<(), String> {
+        let mut state = self.state.lock().unwrap();
+        self.ensure_loaded(&mut state, name)
+    }
+
+    /// Compile every entry up front (benches exclude compile time).
+    pub fn warm_all(&self) -> Result<(), String> {
+        for name in self.entries() {
+            self.load(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry with positional tensors; returns the output
+    /// tuple (the AOT side lowers with `return_tuple=True`).
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        let (args, outputs) = self
+            .signatures
+            .get(name)
+            .ok_or_else(|| format!("no such artifact entry: {name}"))?;
+        if inputs.len() != args.len() {
+            return Err(format!(
+                "{name}: expected {} args, got {}",
+                args.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(args).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(format!(
+                    "{name}: arg {i} ({}) shape {:?} != expected {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                ));
+            }
+        }
+        // Literals are host-only; build them outside the lock.
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_, _>>()?;
+
+        let mut state = self.state.lock().unwrap();
+        self.ensure_loaded(&mut state, name)?;
+        let entry = state.cache.get_mut(name).unwrap();
+        // Execute, fetch and drop device buffers all under the lock.
+        let result = entry
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("{name}: execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("{name}: fetch: {e}"))?;
+        entry.calls += 1;
+        drop(result);
+        drop(state);
+
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| format!("{name}: untuple: {e}"))?;
+        parts
+            .iter()
+            .zip(outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, &spec.dtype))
+            .collect()
+    }
+
+    /// Executions served for an entry (perf counter).
+    pub fn call_count(&self, name: &str) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .cache
+            .get(name)
+            .map(|e| e.calls)
+            .unwrap_or(0)
+    }
+}
+
+/// Locate the artifacts directory: `$HPK_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> String {
+    std::env::var("HPK_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        // Skipped when artifacts haven't been built yet (`make test`
+        // guarantees `make artifacts` ran first).
+        PjrtRuntime::open(&artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn manifest_lists_entries() {
+        let Some(rt) = runtime() else { return };
+        let entries = rt.entries();
+        assert!(entries.iter().any(|e| e == "ep"));
+        assert!(entries.iter().any(|e| e.starts_with("train_step_")));
+        assert!(rt.signature("ep").is_some());
+    }
+
+    #[test]
+    fn ep_kernel_runs_and_matches_rust_oracle() {
+        let Some(rt) = runtime() else { return };
+        let out = rt
+            .call("ep", &[Tensor::scalar_u32(42), Tensor::scalar_u32(0)])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let q = out[0].as_f32();
+        let s = out[1].as_f32();
+        let n: f32 = 65536.0;
+        let rate = s[2] / n;
+        assert!((rate - std::f32::consts::FRAC_PI_4).abs() < 0.01, "rate={rate}");
+        assert!(q[0] > q[1] && q[1] > q[2]);
+        // Matches the pure-Rust EP implementation (same counter hash).
+        let (rq, racc) = crate::workloads::ep::ep_tally_rust(42, 0, 65536);
+        for i in 0..10 {
+            assert_eq!(q[i] as u64, rq[i], "decile {i}");
+        }
+        assert_eq!(s[2] as u64, racc);
+    }
+
+    #[test]
+    fn train_step_decreases_loss() {
+        let Some(rt) = runtime() else { return };
+        let mut params = crate::workloads::trainer::init_params_rust("mlp-small", 7);
+        let batch = rt.manifest_i64("train_batch").unwrap() as usize;
+        let (x, y) = crate::workloads::dataset::synthetic_batch(batch, 0);
+        let lr = Tensor::scalar_f32(0.05);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..10 {
+            let mut inputs = params.clone();
+            inputs.push(x.clone());
+            inputs.push(y.clone());
+            inputs.push(lr.clone());
+            let out = rt.call("train_step_mlp-small", &inputs).unwrap();
+            let loss = out.last().unwrap().as_f32()[0];
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            params = out[..out.len() - 1].to_vec();
+        }
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn concurrent_calls_are_safe() {
+        let Some(rt) = runtime() else { return };
+        let rt = std::sync::Arc::new(rt);
+        rt.load("ep").unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let rt = rt.clone();
+            handles.push(std::thread::spawn(move || {
+                rt.call("ep", &[Tensor::scalar_u32(t), Tensor::scalar_u32(0)])
+                    .unwrap()
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out[0].as_f32().len(), 10);
+        }
+        assert_eq!(rt.call_count("ep"), 4);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(rt) = runtime() else { return };
+        let bad = Tensor::from_f32(vec![0.0; 4], &[4]);
+        assert!(rt.call("ep", &[bad.clone(), bad]).is_err());
+        assert!(rt.call("nonexistent", &[]).is_err());
+    }
+}

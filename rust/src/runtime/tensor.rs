@@ -1,0 +1,221 @@
+//! Host tensors: the f32/i32/u32 arrays crossing the PJRT boundary.
+
+use std::sync::Arc;
+
+/// Element storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
+    U32(Arc<Vec<u32>>),
+}
+
+/// A host tensor (shape + typed data), cheap to clone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+impl Tensor {
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(Arc::new(data)) }
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(Arc::new(data)) }
+    }
+
+    pub fn from_u32(data: Vec<u32>, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape: shape.to_vec(), data: TensorData::U32(Arc::new(data)) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(vec![v], &[])
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::from_u32(vec![v], &[])
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::from_f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+            TensorData::U32(_) => "uint32",
+        }
+    }
+
+    /// f32 view (panics on other dtypes — test/metric paths only).
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            other => panic!("tensor is {other:?}, not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            other => panic!("tensor is {other:?}, not i32"),
+        }
+    }
+
+    /// Convert to an XLA literal of the right primitive type and shape.
+    pub fn to_literal(&self) -> Result<xla::Literal, String> {
+        let dims: Vec<i64> = self.shape.iter().map(|d| *d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::U32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        lit.reshape(&dims).map_err(|e| format!("reshape: {e}"))
+    }
+
+    /// Read a literal back into a tensor of the manifest-declared dtype.
+    pub fn from_literal(lit: &xla::Literal, dtype: &str) -> Result<Tensor, String> {
+        let shape: Vec<usize> = lit
+            .array_shape()
+            .map_err(|e| format!("shape: {e}"))?
+            .dims()
+            .iter()
+            .map(|d| *d as usize)
+            .collect();
+        let data = match dtype {
+            "float32" => TensorData::F32(Arc::new(
+                lit.to_vec::<f32>().map_err(|e| format!("to_vec f32: {e}"))?,
+            )),
+            "int32" => TensorData::I32(Arc::new(
+                lit.to_vec::<i32>().map_err(|e| format!("to_vec i32: {e}"))?,
+            )),
+            "uint32" => TensorData::U32(Arc::new(
+                lit.to_vec::<u32>().map_err(|e| format!("to_vec u32: {e}"))?,
+            )),
+            other => return Err(format!("unsupported dtype {other}")),
+        };
+        Ok(Tensor { shape, data })
+    }
+
+    /// Elementwise in-place add (gradient all-reduce accumulation).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<(), String> {
+        if self.shape != other.shape {
+            return Err(format!(
+                "add_assign shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            ));
+        }
+        match (&mut self.data, &other.data) {
+            (TensorData::F32(a), TensorData::F32(b)) => {
+                let a = Arc::make_mut(a);
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    *x += *y;
+                }
+                Ok(())
+            }
+            _ => Err("add_assign needs f32 tensors".to_string()),
+        }
+    }
+
+    /// Scale in place (gradient averaging).
+    pub fn scale(&mut self, factor: f32) -> Result<(), String> {
+        match &mut self.data {
+            TensorData::F32(a) => {
+                let a = Arc::make_mut(a);
+                for x in a.iter_mut() {
+                    *x *= factor;
+                }
+                Ok(())
+            }
+            _ => Err("scale needs f32 tensors".to_string()),
+        }
+    }
+
+    /// `self -= lr * grad` (the SGD update applied coordinator-side).
+    pub fn sgd_update(&mut self, grad: &Tensor, lr: f32) -> Result<(), String> {
+        if self.shape != grad.shape {
+            return Err("sgd_update shape mismatch".to_string());
+        }
+        match (&mut self.data, &grad.data) {
+            (TensorData::F32(p), TensorData::F32(g)) => {
+                let p = Arc::make_mut(p);
+                for (x, dg) in p.iter_mut().zip(g.iter()) {
+                    *x -= lr * dg;
+                }
+                Ok(())
+            }
+            _ => Err("sgd_update needs f32 tensors".to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_dtypes() {
+        let t = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dtype(), "float32");
+        assert_eq!(Tensor::scalar_u32(7).dtype(), "uint32");
+        assert_eq!(Tensor::scalar_u32(7).shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(vec![1.5, -2.0, 0.0, 9.0, 3.0, 4.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, "float32").unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_u32() {
+        let t = Tensor::from_i32(vec![-1, 2, 3], &[3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap(), "int32").unwrap();
+        assert_eq!(t, back);
+        let u = Tensor::from_u32(vec![1, 2], &[2]);
+        let back = Tensor::from_literal(&u.to_literal().unwrap(), "uint32").unwrap();
+        assert_eq!(u, back);
+    }
+
+    #[test]
+    fn allreduce_math() {
+        let mut a = Tensor::from_f32(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_f32(vec![3.0, 4.0], &[2]);
+        a.add_assign(&b).unwrap();
+        a.scale(0.5).unwrap();
+        assert_eq!(a.as_f32(), &[2.0, 3.0]);
+        let g = Tensor::from_f32(vec![1.0, 1.0], &[2]);
+        a.sgd_update(&g, 0.1).unwrap();
+        assert_eq!(a.as_f32(), &[1.9, 2.9]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let mut a = Tensor::from_f32(vec![1.0], &[1]);
+        let b = Tensor::from_f32(vec![1.0, 2.0], &[2]);
+        assert!(a.add_assign(&b).is_err());
+        assert!(a.sgd_update(&b, 0.1).is_err());
+    }
+}

@@ -1,0 +1,558 @@
+//! The Slurm controller daemon (`slurmctld`): queue, lifecycle,
+//! scheduling loop, accounting.
+
+use super::sched;
+use super::types::*;
+use crate::hpcsim::Cluster;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Controller tuning knobs.
+#[derive(Debug, Clone)]
+pub struct SlurmConfig {
+    /// Applied when a job submits with no `--time` (simulated ms).
+    pub default_time_limit_ms: u64,
+    /// EASY backfill on/off (ablation: DESIGN.md SS5).
+    pub backfill: bool,
+    /// Real-time milliseconds between scheduler passes.
+    pub sched_interval_ms: u64,
+}
+
+impl Default for SlurmConfig {
+    fn default() -> SlurmConfig {
+        SlurmConfig {
+            default_time_limit_ms: 60 * 60 * 1000, // 1 simulated hour
+            backfill: true,
+            sched_interval_ms: 1,
+        }
+    }
+}
+
+struct JobRecord {
+    spec: JobSpec,
+    state: JobState,
+    submit_ms: u64,
+    start_ms: Option<u64>,
+    end_ms: Option<u64>,
+    allocation: Allocation,
+    cancel: CancelToken,
+    time_limit_ms: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: HashMap<JobId, JobRecord>,
+    /// Pending job ids in submission order.
+    queue: Vec<JobId>,
+    next_id: JobId,
+    acct: Vec<AcctRecord>,
+    /// Scheduler-pass counter (perf introspection).
+    passes: u64,
+}
+
+/// Handle to the controller; cheap to clone.
+#[derive(Clone)]
+pub struct Slurmctld {
+    inner: Arc<Mutex<Inner>>,
+    cluster: Cluster,
+    executor: Arc<dyn JobExecutor>,
+    config: SlurmConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Slurmctld {
+    /// Boot the controller and its scheduling thread.
+    pub fn start(
+        cluster: Cluster,
+        executor: Arc<dyn JobExecutor>,
+        config: SlurmConfig,
+    ) -> Slurmctld {
+        let ctld = Slurmctld {
+            inner: Arc::new(Mutex::new(Inner {
+                next_id: 1,
+                ..Inner::default()
+            })),
+            cluster,
+            executor,
+            config,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        };
+        let loop_handle = ctld.clone();
+        thread::Builder::new()
+            .name("slurmctld-sched".to_string())
+            .spawn(move || loop_handle.scheduler_loop())
+            .expect("spawn scheduler");
+        ctld
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// `sbatch`: enqueue a job, returning its id.
+    pub fn submit(&self, mut spec: JobSpec) -> Result<JobId, String> {
+        if spec.ntasks == 0 || spec.cpus_per_task == 0 {
+            return Err("ntasks and cpus-per-task must be >= 1".to_string());
+        }
+        let time_limit = if spec.time_limit_ms == 0 {
+            self.config.default_time_limit_ms
+        } else {
+            spec.time_limit_ms
+        };
+        spec.time_limit_ms = time_limit;
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.jobs.insert(
+            id,
+            JobRecord {
+                spec,
+                state: JobState::Pending("Priority".to_string()),
+                submit_ms: self.cluster.clock.now_ms(),
+                start_ms: None,
+                end_ms: None,
+                allocation: Allocation::default(),
+                cancel: CancelToken::new(),
+                time_limit_ms: time_limit,
+            },
+        );
+        inner.queue.push(id);
+        Ok(id)
+    }
+
+    /// `sbatch` from script text (parses `#SBATCH` directives).
+    pub fn submit_script(&self, text: &str) -> Result<JobId, String> {
+        self.submit(super::script::parse_script(text)?)
+    }
+
+    /// `scancel`: cancel a pending or running job. Returns false if the
+    /// job is unknown or already terminal.
+    pub fn cancel(&self, id: JobId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let now = self.cluster.clock.now_ms();
+        let Some(rec) = inner.jobs.get_mut(&id) else {
+            return false;
+        };
+        match rec.state {
+            JobState::Pending(_) => {
+                rec.state = JobState::Cancelled;
+                rec.end_ms = Some(now);
+                rec.cancel.cancel();
+                let acct = Self::acct_record(id, rec);
+                inner.acct.push(acct);
+                inner.queue.retain(|q| *q != id);
+                true
+            }
+            JobState::Running => {
+                // Cooperative: flag the token; the scheduler loop will
+                // reap it as Cancelled when the executor returns, or
+                // forcefully after the grace period.
+                rec.cancel.cancel();
+                rec.state = JobState::Cancelled;
+                rec.end_ms = Some(now);
+                let acct = Self::acct_record(id, rec);
+                let alloc = std::mem::take(&mut rec.allocation);
+                inner.acct.push(acct);
+                drop(inner);
+                self.release_nodes(id, &alloc);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Snapshot of one job.
+    pub fn job_info(&self, id: JobId) -> Option<JobInfo> {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.get(&id).map(|rec| JobInfo {
+            job_id: id,
+            name: rec.spec.name.clone(),
+            state: rec.state.clone(),
+            partition: rec.spec.partition.clone(),
+            account: rec.spec.account.clone(),
+            comment: rec.spec.comment.clone(),
+            submit_ms: rec.submit_ms,
+            start_ms: rec.start_ms,
+            end_ms: rec.end_ms,
+            alloc_cpus: rec.spec.total_cpus(),
+            nodes: rec.allocation.node_names(),
+        })
+    }
+
+    /// `squeue`: all non-terminal jobs.
+    pub fn squeue(&self) -> Vec<JobInfo> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<JobInfo> = inner
+            .jobs
+            .iter()
+            .filter(|(_, r)| !r.state.is_terminal())
+            .map(|(id, rec)| JobInfo {
+                job_id: *id,
+                name: rec.spec.name.clone(),
+                state: rec.state.clone(),
+                partition: rec.spec.partition.clone(),
+                account: rec.spec.account.clone(),
+                comment: rec.spec.comment.clone(),
+                submit_ms: rec.submit_ms,
+                start_ms: rec.start_ms,
+                end_ms: rec.end_ms,
+                alloc_cpus: rec.spec.total_cpus(),
+                nodes: rec.allocation.node_names(),
+            })
+            .collect();
+        out.sort_by_key(|j| j.job_id);
+        out
+    }
+
+    /// `sinfo`: (node name, used cpus, total cpus, state) per node.
+    pub fn sinfo(&self) -> Vec<(String, u32, u32, String)> {
+        self.cluster.with_nodes(|nodes| {
+            nodes
+                .iter()
+                .map(|n| {
+                    (
+                        n.name.clone(),
+                        n.resources.cpus - n.free_cpus(),
+                        n.resources.cpus,
+                        format!("{:?}", n.state).to_lowercase(),
+                    )
+                })
+                .collect()
+        })
+    }
+
+    /// `sacct`: accounting rows for terminated jobs, oldest first.
+    pub fn sacct(&self) -> Vec<AcctRecord> {
+        self.inner.lock().unwrap().acct.clone()
+    }
+
+    /// Scheduler passes executed so far (perf counter).
+    pub fn sched_passes(&self) -> u64 {
+        self.inner.lock().unwrap().passes
+    }
+
+    /// Block until the job reaches a terminal state (or `timeout_real_ms`
+    /// real milliseconds pass). Returns the final state if terminal.
+    pub fn wait_terminal(&self, id: JobId, timeout_real_ms: u64) -> Option<JobState> {
+        let t0 = std::time::Instant::now();
+        loop {
+            let state = self.job_info(id)?.state;
+            if state.is_terminal() {
+                return Some(state);
+            }
+            if t0.elapsed().as_millis() as u64 > timeout_real_ms {
+                return None;
+            }
+            thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    fn acct_record(id: JobId, rec: &JobRecord) -> AcctRecord {
+        AcctRecord {
+            job_id: id,
+            name: rec.spec.name.clone(),
+            account: rec.spec.account.clone(),
+            partition: rec.spec.partition.clone(),
+            state: rec.state.clone(),
+            submit_ms: rec.submit_ms,
+            start_ms: rec.start_ms.unwrap_or(rec.submit_ms),
+            end_ms: rec.end_ms.unwrap_or(rec.submit_ms),
+            alloc_cpus: rec.spec.total_cpus(),
+            nodes: rec.allocation.node_names(),
+            comment: rec.spec.comment.clone(),
+        }
+    }
+
+    fn release_nodes(&self, id: JobId, alloc: &Allocation) {
+        if alloc.tasks.is_empty() {
+            return;
+        }
+        self.cluster.with_nodes(|nodes| {
+            for n in nodes.iter_mut() {
+                n.release(id);
+            }
+        });
+    }
+
+    // ---- scheduling loop ------------------------------------------------
+
+    fn scheduler_loop(&self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            self.scheduler_pass();
+            thread::sleep(std::time::Duration::from_millis(
+                self.config.sched_interval_ms,
+            ));
+        }
+    }
+
+    /// One pass: dependencies, health, timeouts, then placement.
+    fn scheduler_pass(&self) {
+        let now = self.cluster.clock.now_ms();
+        // Phase 1: under the job lock, update dependency/timeout/failure
+        // state and compute the placement plan.
+        let mut to_start: Vec<(JobId, JobSpec, Allocation, CancelToken)> = Vec::new();
+        let mut to_release: Vec<(JobId, Allocation)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.passes += 1;
+
+            // Dependencies: resolve or cancel.
+            let mut dep_cancel = Vec::new();
+            let mut ready: HashMap<JobId, bool> = HashMap::new();
+            for (&id, rec) in inner.jobs.iter() {
+                if !matches!(rec.state, JobState::Pending(_)) {
+                    continue;
+                }
+                let mut ok = true;
+                for (kind, dep_id) in &rec.spec.dependencies {
+                    match inner.jobs.get(dep_id).map(|d| &d.state) {
+                        Some(JobState::Completed) => {}
+                        Some(s) if s.is_terminal() => {
+                            if *kind == DepKind::AfterOk {
+                                dep_cancel.push(id);
+                                ok = false;
+                            }
+                        }
+                        Some(_) => ok = false, // still pending/running
+                        None => {
+                            // Unknown dependency: never satisfiable.
+                            dep_cancel.push(id);
+                            ok = false;
+                        }
+                    }
+                    if !ok {
+                        break;
+                    }
+                }
+                ready.insert(id, ok);
+            }
+            for id in dep_cancel {
+                if let Some(rec) = inner.jobs.get_mut(&id) {
+                    rec.state = JobState::Cancelled;
+                    rec.end_ms = Some(now);
+                    let acct = Self::acct_record(id, rec);
+                    inner.acct.push(acct);
+                }
+                inner.queue.retain(|q| *q != id);
+                ready.remove(&id);
+            }
+
+            // Node failures: fail running jobs on down nodes.
+            let down: Vec<String> = self.cluster.with_nodes(|nodes| {
+                nodes
+                    .iter()
+                    .filter(|n| n.state == crate::hpcsim::NodeState::Down)
+                    .map(|n| n.name.clone())
+                    .collect()
+            });
+            if !down.is_empty() {
+                let victims: Vec<JobId> = inner
+                    .jobs
+                    .iter()
+                    .filter(|(_, r)| {
+                        r.state == JobState::Running
+                            && r.allocation
+                                .node_names()
+                                .iter()
+                                .any(|n| down.contains(n))
+                    })
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in victims {
+                    if let Some(rec) = inner.jobs.get_mut(&id) {
+                        rec.cancel.cancel();
+                        rec.state = JobState::Failed("NodeFail".to_string());
+                        rec.end_ms = Some(now);
+                        let acct = Self::acct_record(id, rec);
+                        let alloc = std::mem::take(&mut rec.allocation);
+                        inner.acct.push(acct);
+                        to_release.push((id, alloc));
+                    }
+                }
+            }
+
+            // Timeouts.
+            let timed_out: Vec<JobId> = inner
+                .jobs
+                .iter()
+                .filter(|(_, r)| {
+                    r.state == JobState::Running
+                        && r.start_ms
+                            .map(|s| now.saturating_sub(s) > r.time_limit_ms)
+                            .unwrap_or(false)
+                })
+                .map(|(id, _)| *id)
+                .collect();
+            for id in timed_out {
+                if let Some(rec) = inner.jobs.get_mut(&id) {
+                    rec.cancel.cancel();
+                    rec.state = JobState::Timeout;
+                    rec.end_ms = Some(now);
+                    let acct = Self::acct_record(id, rec);
+                    let alloc = std::mem::take(&mut rec.allocation);
+                    inner.acct.push(acct);
+                    to_release.push((id, alloc));
+                }
+            }
+
+            // Release before placement so freed capacity is visible.
+            for (id, alloc) in &to_release {
+                if !alloc.tasks.is_empty() {
+                    self.cluster.with_nodes(|nodes| {
+                        for n in nodes.iter_mut() {
+                            n.release(*id);
+                        }
+                    });
+                }
+            }
+            to_release.clear();
+
+            // Placement: priority desc, then FIFO.
+            let mut order: Vec<JobId> = inner
+                .queue
+                .iter()
+                .copied()
+                .filter(|id| *ready.get(id).unwrap_or(&false))
+                .collect();
+            order.sort_by_key(|id| {
+                let p = inner.jobs.get(id).map(|r| r.spec.priority).unwrap_or(0);
+                (-(p as i64), *id)
+            });
+
+            let mut blocked_head: Option<u32> = None; // head job cpus
+            let mut shadow: u64 = u64::MAX;
+            for id in order {
+                let (spec, never_fits) = {
+                    let rec = inner.jobs.get(&id).unwrap();
+                    let never = !self.cluster.with_nodes(|nodes| {
+                        sched::can_ever_fit(nodes, &rec.spec)
+                    });
+                    (rec.spec.clone(), never)
+                };
+                if never_fits {
+                    if let Some(rec) = inner.jobs.get_mut(&id) {
+                        rec.state = JobState::Pending(
+                            "Resources (can never be satisfied)".to_string(),
+                        );
+                    }
+                    continue;
+                }
+                if let Some(head_cpus) = blocked_head {
+                    // Backfill mode: only start if it won't delay the head.
+                    if !self.config.backfill {
+                        continue;
+                    }
+                    let fits_window = now.saturating_add(spec.time_limit_ms) <= shadow;
+                    let _ = head_cpus;
+                    if !fits_window {
+                        continue;
+                    }
+                }
+                let placed = self
+                    .cluster
+                    .with_nodes(|nodes| sched::place(nodes, id, &spec));
+                match placed {
+                    Some(alloc) => {
+                        let rec = inner.jobs.get_mut(&id).unwrap();
+                        rec.state = JobState::Running;
+                        rec.start_ms = Some(now);
+                        rec.allocation = alloc.clone();
+                        to_start.push((id, spec, alloc, rec.cancel.clone()));
+                        inner.queue.retain(|q| *q != id);
+                    }
+                    None => {
+                        if blocked_head.is_none() {
+                            // This becomes the protected head job.
+                            blocked_head = Some(spec.total_cpus());
+                            let free =
+                                self.cluster.cpu_summary().1;
+                            let running: Vec<(u64, u32)> = inner
+                                .jobs
+                                .values()
+                                .filter(|r| r.state == JobState::Running)
+                                .map(|r| {
+                                    (
+                                        r.start_ms.unwrap_or(now) + r.time_limit_ms,
+                                        r.spec.total_cpus(),
+                                    )
+                                })
+                                .collect();
+                            shadow = sched::shadow_time(
+                                now,
+                                free,
+                                &running,
+                                spec.total_cpus(),
+                            );
+                            if let Some(rec) = inner.jobs.get_mut(&id) {
+                                rec.state = JobState::Pending(
+                                    "Resources".to_string(),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Phase 2: spawn executor threads outside the lock.
+        for (id, spec, alloc, cancel) in to_start {
+            let this = self.clone();
+            let executor = self.executor.clone();
+            let clock = self.cluster.clock.clone();
+            thread::Builder::new()
+                .name(format!("slurm-job-{id}"))
+                .spawn(move || {
+                    let ctx = JobContext {
+                        job_id: id,
+                        spec,
+                        allocation: alloc,
+                        cancel,
+                        clock,
+                    };
+                    let result = executor.execute(&ctx);
+                    this.finish(id, result);
+                })
+                .expect("spawn job thread");
+        }
+    }
+
+    /// Called by the job thread when the executor returns.
+    fn finish(&self, id: JobId, result: Result<(), String>) {
+        let now = self.cluster.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let Some(rec) = inner.jobs.get_mut(&id) else {
+            return;
+        };
+        if rec.state.is_terminal() {
+            // Timeout/cancel/node-fail already recorded it; just make
+            // sure nodes are free (idempotent).
+            drop(inner);
+            self.cluster.with_nodes(|nodes| {
+                for n in nodes.iter_mut() {
+                    n.release(id);
+                }
+            });
+            return;
+        }
+        rec.state = match result {
+            Ok(()) => JobState::Completed,
+            Err(e) if rec.cancel.is_cancelled() => {
+                let _ = e;
+                JobState::Cancelled
+            }
+            Err(e) => JobState::Failed(e),
+        };
+        rec.end_ms = Some(now);
+        let acct = Self::acct_record(id, rec);
+        let alloc = std::mem::take(&mut rec.allocation);
+        inner.acct.push(acct);
+        drop(inner);
+        self.release_nodes(id, &alloc);
+    }
+}

@@ -1,0 +1,298 @@
+//! Slurm workload-manager simulator.
+//!
+//! HPK's compliance requirement (SS3) is that *all* resource-management
+//! decisions are delegated to Slurm and that Kubernetes workloads show up
+//! in Slurm queues as ordinary jobs. This module reproduces the slice of
+//! Slurm that HPK interacts with:
+//!
+//! - `sbatch`-style submission of scripts with `#SBATCH` directives
+//!   ([`script`]), including the generic directives hpk-kubelet emits
+//!   (`--job-name`, `--ntasks`, `--cpus-per-task`, `--mem`, `--time`,
+//!   `--dependency`, `--comment`).
+//! - a FIFO + EASY-backfill scheduler over the [`crate::hpcsim`] nodes
+//!   ([`sched`]).
+//! - the job lifecycle (PENDING/RUNNING/COMPLETED/FAILED/CANCELLED/
+//!   TIMEOUT) with time-limit enforcement and `scancel`.
+//! - accounting records (`sacct`) and queue/node introspection
+//!   (`squeue`, `sinfo`) — what the HPC center's policies observe.
+//!
+//! Execution is pluggable through [`JobExecutor`]: HPK supplies an
+//! executor that interprets the generated script's Apptainer commands;
+//! tests use closures.
+
+mod ctld;
+mod sched;
+pub mod script;
+mod types;
+
+pub use ctld::{Slurmctld, SlurmConfig};
+pub use types::{
+    Allocation, CancelToken, DepKind, JobContext, JobExecutor, JobId,
+    JobInfo, JobSpec, JobState, TaskSlot,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpcsim::{Cluster, ClusterSpec};
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    struct CountingExec {
+        ran: AtomicU32,
+    }
+
+    impl JobExecutor for CountingExec {
+        fn execute(&self, ctx: &JobContext) -> Result<(), String> {
+            self.ran.fetch_add(1, Ordering::SeqCst);
+            if ctx.spec.script.contains("exit 1") {
+                return Err("script failed".to_string());
+            }
+            if ctx.spec.script.contains("sleep") {
+                // Simulated long job: sleep until cancelled or 2000 sim ms.
+                let t0 = ctx.clock.now_ms();
+                while ctx.clock.now_ms() - t0 < 20_000 {
+                    if ctx.cancel.is_cancelled() {
+                        return Err("cancelled".to_string());
+                    }
+                    ctx.clock.tick();
+                }
+            }
+            Ok(())
+        }
+    }
+
+    fn setup(nodes: usize, cpus: u32) -> (Slurmctld, Arc<CountingExec>) {
+        let cluster = Cluster::new(ClusterSpec::uniform(nodes, cpus, 64));
+        let exec = Arc::new(CountingExec { ran: AtomicU32::new(0) });
+        let ctld = Slurmctld::start(cluster, exec.clone(), SlurmConfig::default());
+        (ctld, exec)
+    }
+
+    fn wait_done(ctld: &Slurmctld, id: JobId) -> JobState {
+        for _ in 0..20_000 {
+            let info = ctld.job_info(id).unwrap();
+            if info.state.is_terminal() {
+                return info.state;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        panic!("job {id} did not finish");
+    }
+
+    #[test]
+    fn submit_runs_to_completion() {
+        let (ctld, exec) = setup(2, 8);
+        let id = ctld.submit(JobSpec::new("hello").with_script("echo hi")).unwrap();
+        assert_eq!(wait_done(&ctld, id), JobState::Completed);
+        assert_eq!(exec.ran.load(Ordering::SeqCst), 1);
+        let acct = ctld.sacct();
+        assert_eq!(acct.len(), 1);
+        assert!(acct[0].end_ms >= acct[0].start_ms);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn failed_script_is_failed() {
+        let (ctld, _) = setup(1, 4);
+        let id = ctld.submit(JobSpec::new("bad").with_script("exit 1")).unwrap();
+        assert!(matches!(wait_done(&ctld, id), JobState::Failed(_)));
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn oversized_job_stays_pending_with_reason() {
+        let (ctld, _) = setup(1, 4);
+        let spec = JobSpec::new("big").with_tasks(1, 16, 1 << 20);
+        let id = ctld.submit(spec).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let info = ctld.job_info(id).unwrap();
+        match info.state {
+            JobState::Pending(reason) => {
+                assert!(reason.contains("Resources") || reason.contains("never"), "{reason}")
+            }
+            other => panic!("expected pending, got {other:?}"),
+        }
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn queue_drains_in_fifo_order_per_resources() {
+        let (ctld, _) = setup(1, 2);
+        // Each job takes both cpus; they must serialize.
+        let mut ids = Vec::new();
+        for i in 0..3 {
+            let spec = JobSpec::new(&format!("j{i}"))
+                .with_tasks(1, 2, 1 << 20)
+                .with_script("sleep");
+            ids.push(ctld.submit(spec).unwrap());
+        }
+        for id in &ids {
+            assert_eq!(wait_done(&ctld, *id), JobState::Completed);
+        }
+        // Start order must follow submission order.
+        let acct = ctld.sacct();
+        let mut starts: Vec<(JobId, u64)> =
+            acct.iter().map(|r| (r.job_id, r.start_ms)).collect();
+        starts.sort_by_key(|(id, _)| *id);
+        assert!(starts.windows(2).all(|w| w[0].1 <= w[1].1));
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn cancel_pending_and_running() {
+        let (ctld, _) = setup(1, 2);
+        let a = ctld
+            .submit(JobSpec::new("a").with_tasks(1, 2, 1).with_script("sleep"))
+            .unwrap();
+        let b = ctld
+            .submit(JobSpec::new("b").with_tasks(1, 2, 1).with_script("sleep"))
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(ctld.cancel(b)); // still pending
+        assert!(ctld.cancel(a)); // running
+        assert!(matches!(wait_done(&ctld, a), JobState::Cancelled | JobState::Failed(_)));
+        assert_eq!(wait_done(&ctld, b), JobState::Cancelled);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn time_limit_triggers_timeout() {
+        let (ctld, _) = setup(1, 2);
+        let spec = JobSpec::new("t")
+            .with_tasks(1, 1, 1)
+            .with_script("sleep")
+            .with_time_limit_ms(2_000); // sim ms; the sleep wants 20000
+        let id = ctld.submit(spec).unwrap();
+        assert_eq!(wait_done(&ctld, id), JobState::Timeout);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn dependency_afterok_waits() {
+        let (ctld, _) = setup(2, 8);
+        let a = ctld
+            .submit(JobSpec::new("a").with_script("sleep"))
+            .unwrap();
+        let spec_b = JobSpec::new("b").with_dependency(DepKind::AfterOk, a);
+        let b = ctld.submit(spec_b).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let b_state = ctld.job_info(b).unwrap().state;
+        assert!(matches!(b_state, JobState::Pending(_)), "b={b_state:?} a={:?}", ctld.job_info(a).unwrap().state);
+        assert_eq!(wait_done(&ctld, a), JobState::Completed);
+        assert_eq!(wait_done(&ctld, b), JobState::Completed);
+        let acct = ctld.sacct();
+        let ra = acct.iter().find(|r| r.job_id == a).unwrap();
+        let rb = acct.iter().find(|r| r.job_id == b).unwrap();
+        assert!(rb.start_ms >= ra.end_ms);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn dependency_afterok_cancelled_if_parent_fails() {
+        let (ctld, _) = setup(1, 4);
+        let a = ctld.submit(JobSpec::new("a").with_script("exit 1")).unwrap();
+        let b = ctld
+            .submit(JobSpec::new("b").with_dependency(DepKind::AfterOk, a))
+            .unwrap();
+        assert!(matches!(wait_done(&ctld, a), JobState::Failed(_)));
+        assert_eq!(wait_done(&ctld, b), JobState::Cancelled);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn backfill_lets_small_job_jump_blocked_queue() {
+        let (ctld, _) = setup(1, 4);
+        // Long job A holds 3 of 4 cpus; 1 cpu stays free.
+        let a = ctld
+            .submit(
+                JobSpec::new("a")
+                    .with_tasks(1, 3, 1)
+                    .with_script("sleep")
+                    .with_time_limit_ms(40_000),
+            )
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // B needs 4 cpus -> blocked head. C needs 1 cpu and is short:
+        // with backfill it must start before B.
+        let b = ctld
+            .submit(
+                JobSpec::new("b")
+                    .with_tasks(1, 4, 1)
+                    .with_time_limit_ms(40_000)
+                    .with_script("sleep"),
+            )
+            .unwrap();
+        let _c_blockable = ctld
+            .submit(
+                JobSpec::new("c")
+                    .with_tasks(1, 1, 1)
+                    .with_time_limit_ms(1_000)
+                    .with_script("echo quick"),
+            )
+            .unwrap();
+        let c = _c_blockable;
+        assert_eq!(wait_done(&ctld, c), JobState::Completed);
+        // B should still be pending (A runs ~20000 sim ms).
+        let b_state = ctld.job_info(b).unwrap().state;
+        assert!(matches!(b_state, JobState::Pending(_)), "b={b_state:?} a={:?}", ctld.job_info(a).unwrap().state);
+        assert_eq!(wait_done(&ctld, a), JobState::Completed);
+        assert_eq!(wait_done(&ctld, b), JobState::Completed);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn multi_task_job_spans_nodes() {
+        let (ctld, _) = setup(2, 2);
+        // 4 tasks x 1 cpu over two 2-cpu nodes.
+        let id = ctld
+            .submit(JobSpec::new("mpi").with_tasks(4, 1, 1))
+            .unwrap();
+        assert_eq!(wait_done(&ctld, id), JobState::Completed);
+        let acct = ctld.sacct();
+        let rec = acct.iter().find(|r| r.job_id == id).unwrap();
+        assert_eq!(rec.alloc_cpus, 4);
+        assert_eq!(rec.nodes.len(), 2);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn squeue_and_sinfo_report() {
+        let (ctld, _) = setup(1, 2);
+        let a = ctld
+            .submit(JobSpec::new("a").with_tasks(1, 2, 1).with_script("sleep"))
+            .unwrap();
+        let b = ctld
+            .submit(JobSpec::new("b").with_tasks(1, 2, 1).with_script("sleep"))
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        let q = ctld.squeue();
+        assert_eq!(q.len(), 2);
+        assert!(q.iter().any(|j| j.job_id == a && j.state == JobState::Running));
+        assert!(q
+            .iter()
+            .any(|j| j.job_id == b && matches!(j.state, JobState::Pending(_))));
+        let nodes = ctld.sinfo();
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].1, 2); // all cpus busy
+        ctld.cancel(a);
+        ctld.cancel(b);
+        ctld.shutdown();
+    }
+
+    #[test]
+    fn node_failure_fails_running_job() {
+        let (ctld, _) = setup(1, 2);
+        let id = ctld
+            .submit(JobSpec::new("a").with_script("sleep"))
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        ctld.cluster().fail_node("node01");
+        let st = wait_done(&ctld, id);
+        assert!(
+            matches!(st, JobState::Failed(_) | JobState::Cancelled),
+            "{st:?}"
+        );
+        ctld.shutdown();
+    }
+}

@@ -1,0 +1,127 @@
+//! Placement + EASY backfill over the simulated nodes.
+
+use super::types::{Allocation, JobId, JobSpec, TaskSlot};
+use crate::hpcsim::{Node, NodeState};
+
+/// Try to place every task of `spec` (first-fit, spreading across
+/// nodes). On success resources are reserved on the nodes and the
+/// allocation is returned; on failure nothing is reserved.
+pub fn place(nodes: &mut [Node], job_id: JobId, spec: &JobSpec) -> Option<Allocation> {
+    let mut tasks = Vec::with_capacity(spec.ntasks as usize);
+    let mut placed_nodes: Vec<usize> = Vec::new();
+    for task_id in 0..spec.ntasks {
+        let slot = nodes.iter_mut().enumerate().find_map(|(i, n)| {
+            if n.allocate(job_id, spec.cpus_per_task, spec.mem_per_task) {
+                Some((i, n.name.clone()))
+            } else {
+                None
+            }
+        });
+        match slot {
+            Some((i, name)) => {
+                placed_nodes.push(i);
+                tasks.push(TaskSlot {
+                    node: name,
+                    cpus: spec.cpus_per_task,
+                    task_id,
+                });
+            }
+            None => {
+                // Roll back everything reserved so far.
+                for &i in &placed_nodes {
+                    nodes[i].release(job_id);
+                }
+                return None;
+            }
+        }
+    }
+    Some(Allocation { tasks })
+}
+
+/// Whether the job could *ever* run on this cluster (all nodes up and
+/// empty). Used for the "never satisfiable" pending reason.
+pub fn can_ever_fit(nodes: &[Node], spec: &JobSpec) -> bool {
+    // Simulate placement against empty copies.
+    let mut copies: Vec<Node> = nodes
+        .iter()
+        .filter(|n| n.state != NodeState::Down)
+        .map(|n| Node::new(&n.name, n.resources.cpus, n.resources.memory_bytes))
+        .collect();
+    place(&mut copies, u64::MAX, spec).is_some()
+}
+
+/// EASY-backfill shadow time: the earliest simulated time at which the
+/// blocked head job is *estimated* to fit, assuming running jobs end at
+/// their time limits. Aggregate-CPU estimate (standard simplification).
+///
+/// `running` is `(end_estimate_ms, cpus)` per running job.
+pub fn shadow_time(
+    now_ms: u64,
+    total_free_cpus: u32,
+    running: &[(u64, u32)],
+    head_cpus: u32,
+) -> u64 {
+    if total_free_cpus >= head_cpus {
+        return now_ms;
+    }
+    let mut events: Vec<(u64, u32)> = running.to_vec();
+    events.sort_by_key(|(end, _)| *end);
+    let mut free = total_free_cpus;
+    for (end, cpus) in events {
+        free += cpus;
+        if free >= head_cpus {
+            return end.max(now_ms);
+        }
+    }
+    u64::MAX
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes2x4() -> Vec<Node> {
+        vec![Node::new("n1", 4, 8 << 30), Node::new("n2", 4, 8 << 30)]
+    }
+
+    #[test]
+    fn place_spreads_tasks() {
+        let mut nodes = nodes2x4();
+        let spec = JobSpec::new("j").with_tasks(6, 1, 1 << 20);
+        let alloc = place(&mut nodes, 1, &spec).unwrap();
+        assert_eq!(alloc.tasks.len(), 6);
+        assert_eq!(alloc.node_names().len(), 2);
+        assert_eq!(nodes[0].free_cpus() + nodes[1].free_cpus(), 2);
+    }
+
+    #[test]
+    fn failed_place_rolls_back() {
+        let mut nodes = nodes2x4();
+        let spec = JobSpec::new("j").with_tasks(9, 1, 1 << 20);
+        assert!(place(&mut nodes, 1, &spec).is_none());
+        assert_eq!(nodes[0].free_cpus(), 4);
+        assert_eq!(nodes[1].free_cpus(), 4);
+    }
+
+    #[test]
+    fn can_ever_fit_checks_capacity_not_occupancy() {
+        let mut nodes = nodes2x4();
+        let spec = JobSpec::new("big").with_tasks(1, 4, 1 << 20);
+        // Fill the cluster first.
+        let filler = JobSpec::new("filler").with_tasks(8, 1, 1 << 20);
+        place(&mut nodes, 1, &filler).unwrap();
+        assert!(place(&mut nodes, 2, &spec).is_none());
+        assert!(can_ever_fit(&nodes, &spec));
+        let too_big = JobSpec::new("xxl").with_tasks(1, 5, 1 << 20);
+        assert!(!can_ever_fit(&nodes, &too_big));
+    }
+
+    #[test]
+    fn shadow_time_accumulates_until_fit() {
+        // 0 free now; jobs of 2 cpus end at t=100, t=200, t=300.
+        let running = vec![(300, 2), (100, 2), (200, 2)];
+        assert_eq!(shadow_time(50, 0, &running, 4), 200);
+        assert_eq!(shadow_time(50, 4, &running, 4), 50);
+        assert_eq!(shadow_time(50, 0, &running, 7), u64::MAX);
+    }
+}

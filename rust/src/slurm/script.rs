@@ -1,0 +1,319 @@
+//! `#SBATCH` batch-script parsing.
+//!
+//! hpk-kubelet emits *generic* Slurm directives (the paper stresses the
+//! scripts are not tied to a Slurm version); this parser accepts exactly
+//! that generic set plus the flags HPK forwards from pod annotations.
+
+use super::types::{DepKind, JobSpec};
+use crate::util::{parse_cpu_millis, parse_memory_bytes};
+
+/// Parse a batch script: `#SBATCH` directives populate a [`JobSpec`];
+/// the remaining lines become the script body.
+pub fn parse_script(text: &str) -> Result<JobSpec, String> {
+    let mut spec = JobSpec::new("batch");
+    let mut body = String::new();
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if let Some(directive) = trimmed.strip_prefix("#SBATCH") {
+            apply_flags(&mut spec, directive.trim())?;
+        } else if trimmed.starts_with("#!") || trimmed.is_empty() {
+            // shebang / blank lines: keep in body verbatim.
+            body.push_str(line);
+            body.push('\n');
+        } else {
+            body.push_str(line);
+            body.push('\n');
+        }
+    }
+    spec.script = body;
+    Ok(spec)
+}
+
+/// Apply a whitespace-separated flag string (also used for the pod
+/// annotation pass-through, e.g. `slurm-job.hpk.io/flags: --ntasks=4`).
+pub fn apply_flags(spec: &mut JobSpec, flags: &str) -> Result<(), String> {
+    let tokens = tokenize(flags);
+    let mut i = 0;
+    while i < tokens.len() {
+        let tok = &tokens[i];
+        let (flag, inline_val) = match tok.split_once('=') {
+            Some((f, v)) => (f.to_string(), Some(v.to_string())),
+            None => (tok.clone(), None),
+        };
+        let mut take_value = || -> Result<String, String> {
+            if let Some(v) = &inline_val {
+                return Ok(v.clone());
+            }
+            i += 1;
+            tokens
+                .get(i)
+                .cloned()
+                .ok_or_else(|| format!("flag {flag} expects a value"))
+        };
+        match flag.as_str() {
+            "--job-name" | "-J" => spec.name = take_value()?,
+            "--partition" | "-p" => spec.partition = take_value()?,
+            "--account" | "-A" => spec.account = take_value()?,
+            "--comment" => spec.comment = take_value()?,
+            "--ntasks" | "-n" => {
+                spec.ntasks = take_value()?
+                    .parse()
+                    .map_err(|_| "bad --ntasks".to_string())?
+            }
+            "--cpus-per-task" | "-c" => {
+                let v = take_value()?;
+                let millis = parse_cpu_millis(&v)
+                    .ok_or_else(|| format!("bad --cpus-per-task {v}"))?;
+                // Slurm allocates whole CPUs; round up like HPK does.
+                spec.cpus_per_task = ((millis + 999) / 1000).max(1) as u32;
+            }
+            "--mem" => {
+                let v = take_value()?;
+                spec.mem_per_task = parse_memory_bytes(&v)
+                    .ok_or_else(|| format!("bad --mem {v}"))?
+                    as u64;
+            }
+            "--time" | "-t" => {
+                spec.time_limit_ms = parse_time_limit(&take_value()?)?;
+            }
+            "--priority" => {
+                spec.priority = take_value()?
+                    .parse()
+                    .map_err(|_| "bad --priority".to_string())?
+            }
+            "--dependency" | "-d" => {
+                let v = take_value()?;
+                for dep in parse_dependencies(&v)? {
+                    spec.dependencies.push(dep);
+                }
+            }
+            "--export" => {
+                let v = take_value()?;
+                for pair in v.split(',') {
+                    if pair == "ALL" || pair == "NONE" {
+                        continue;
+                    }
+                    if let Some((k, val)) = pair.split_once('=') {
+                        spec.env.push((k.to_string(), val.to_string()));
+                    }
+                }
+            }
+            // Accepted-and-ignored flags that real-world scripts carry;
+            // unknown flags are an error (catches typos in annotations).
+            "--exclusive" | "--requeue" | "--no-requeue" | "--overcommit" => {}
+            "--mpi" => {
+                let _ = take_value()?; // e.g. pmix; recorded nowhere yet
+            }
+            other => return Err(format!("unsupported sbatch flag: {other}")),
+        }
+        i += 1;
+    }
+    Ok(())
+}
+
+fn tokenize(s: &str) -> Vec<String> {
+    // Split on whitespace but respect double quotes (annotation values
+    // arrive as `"--ntasks=4"` from YAML folded scalars).
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    for c in s.chars() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            c if c.is_whitespace() && !in_quotes => {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// `--time` formats: `M`, `M:S`, `H:M:S`, `D-H`, `D-H:M`, `D-H:M:S`.
+/// Returns *simulated milliseconds* (1 minute = 60_000 sim ms).
+pub fn parse_time_limit(s: &str) -> Result<u64, String> {
+    let bad = || format!("bad --time {s}");
+    let (days, rest) = match s.split_once('-') {
+        Some((d, r)) => (d.parse::<u64>().map_err(|_| bad())?, r),
+        None => (0, s),
+    };
+    let parts: Vec<&str> = rest.split(':').collect();
+    let nums: Vec<u64> = parts
+        .iter()
+        .map(|p| p.parse::<u64>().map_err(|_| bad()))
+        .collect::<Result<_, _>>()?;
+    let (h, m, sec) = if days > 0 {
+        // D-H[:M[:S]]
+        match nums.as_slice() {
+            [h] => (*h, 0, 0),
+            [h, m] => (*h, *m, 0),
+            [h, m, s] => (*h, *m, *s),
+            _ => return Err(bad()),
+        }
+    } else {
+        // M | M:S | H:M:S
+        match nums.as_slice() {
+            [m] => (0, *m, 0),
+            [m, s] => (0, *m, *s),
+            [h, m, s] => (*h, *m, *s),
+            _ => return Err(bad()),
+        }
+    };
+    Ok((((days * 24 + h) * 60 + m) * 60 + sec) * 1000)
+}
+
+fn parse_dependencies(s: &str) -> Result<Vec<(DepKind, u64)>, String> {
+    let mut out = Vec::new();
+    for clause in s.split(',') {
+        let (kind, ids) = clause
+            .split_once(':')
+            .ok_or_else(|| format!("bad dependency {clause}"))?;
+        let dep = match kind {
+            "afterok" => DepKind::AfterOk,
+            "afterany" => DepKind::AfterAny,
+            other => return Err(format!("unsupported dependency kind {other}")),
+        };
+        for id in ids.split(':') {
+            out.push((dep, id.parse().map_err(|_| format!("bad job id {id}"))?));
+        }
+    }
+    Ok(out)
+}
+
+/// Render a [`JobSpec`] back into an sbatch script (what hpk-kubelet
+/// writes to the user's home directory for transparency/debugging).
+pub fn render_script(spec: &JobSpec) -> String {
+    let mut out = String::from("#!/bin/bash\n");
+    out.push_str(&format!("#SBATCH --job-name={}\n", spec.name));
+    out.push_str(&format!("#SBATCH --partition={}\n", spec.partition));
+    out.push_str(&format!("#SBATCH --account={}\n", spec.account));
+    out.push_str(&format!("#SBATCH --ntasks={}\n", spec.ntasks));
+    out.push_str(&format!("#SBATCH --cpus-per-task={}\n", spec.cpus_per_task));
+    out.push_str(&format!(
+        "#SBATCH --mem={}\n",
+        crate::util::format_memory(spec.mem_per_task as i64)
+    ));
+    if spec.time_limit_ms > 0 {
+        let total_s = spec.time_limit_ms / 1000;
+        out.push_str(&format!(
+            "#SBATCH --time={}:{:02}:{:02}\n",
+            total_s / 3600,
+            (total_s % 3600) / 60,
+            total_s % 60
+        ));
+    }
+    if !spec.comment.is_empty() {
+        out.push_str(&format!("#SBATCH --comment={}\n", spec.comment));
+    }
+    for (kind, id) in &spec.dependencies {
+        let k = match kind {
+            DepKind::AfterOk => "afterok",
+            DepKind::AfterAny => "afterany",
+        };
+        out.push_str(&format!("#SBATCH --dependency={k}:{id}\n"));
+    }
+    for (k, v) in &spec.env {
+        out.push_str(&format!("export {k}={v}\n"));
+    }
+    out.push_str(&spec.script);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_script() {
+        let script = "#!/bin/bash\n#SBATCH --job-name=tpcds-exec-1\n#SBATCH --ntasks=1\n#SBATCH --cpus-per-task=2\n#SBATCH --mem=8Gi\n#SBATCH --time=1:00:00\n#SBATCH --comment=spark/tpcds-exec-1\napptainer exec img cmd\n";
+        let spec = parse_script(script).unwrap();
+        assert_eq!(spec.name, "tpcds-exec-1");
+        assert_eq!(spec.cpus_per_task, 2);
+        assert_eq!(spec.mem_per_task, 8 << 30);
+        assert_eq!(spec.time_limit_ms, 3_600_000);
+        assert_eq!(spec.comment, "spark/tpcds-exec-1");
+        assert!(spec.script.contains("apptainer exec img cmd"));
+        assert!(!spec.script.contains("#SBATCH"));
+    }
+
+    #[test]
+    fn annotation_flags_roundtrip() {
+        // Exactly Listing 2's pass-through form.
+        let mut spec = JobSpec::new("npb");
+        apply_flags(&mut spec, "\"--ntasks=8\"").unwrap();
+        assert_eq!(spec.ntasks, 8);
+    }
+
+    #[test]
+    fn space_separated_values() {
+        let mut spec = JobSpec::new("x");
+        apply_flags(&mut spec, "-n 4 -c 2 --mem 1Gi -p debug").unwrap();
+        assert_eq!(spec.ntasks, 4);
+        assert_eq!(spec.cpus_per_task, 2);
+        assert_eq!(spec.partition, "debug");
+    }
+
+    #[test]
+    fn fractional_cpu_rounds_up() {
+        let mut spec = JobSpec::new("x");
+        apply_flags(&mut spec, "--cpus-per-task=500m").unwrap();
+        assert_eq!(spec.cpus_per_task, 1);
+        apply_flags(&mut spec, "--cpus-per-task=1.5").unwrap();
+        assert_eq!(spec.cpus_per_task, 2);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut spec = JobSpec::new("x");
+        assert!(apply_flags(&mut spec, "--bogus=1").is_err());
+    }
+
+    #[test]
+    fn time_formats() {
+        assert_eq!(parse_time_limit("90").unwrap(), 90 * 60_000);
+        assert_eq!(parse_time_limit("10:30").unwrap(), (10 * 60 + 30) * 1000);
+        assert_eq!(parse_time_limit("2:00:00").unwrap(), 7_200_000);
+        assert_eq!(
+            parse_time_limit("1-12").unwrap(),
+            36 * 3_600_000
+        );
+        assert!(parse_time_limit("abc").is_err());
+    }
+
+    #[test]
+    fn dependencies_parse() {
+        let mut spec = JobSpec::new("x");
+        apply_flags(&mut spec, "--dependency=afterok:3:4,afterany:9").unwrap();
+        assert_eq!(spec.dependencies.len(), 3);
+        assert_eq!(spec.dependencies[2], (DepKind::AfterAny, 9));
+    }
+
+    #[test]
+    fn export_env() {
+        let mut spec = JobSpec::new("x");
+        apply_flags(&mut spec, "--export=ALL,FOO=bar,BAZ=1").unwrap();
+        assert_eq!(spec.env, vec![("FOO".into(), "bar".into()), ("BAZ".into(), "1".into())]);
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let spec = JobSpec::new("job")
+            .with_tasks(2, 3, 1 << 30)
+            .with_time_limit_ms(90_000)
+            .with_comment("ns/pod")
+            .with_script("echo run\n");
+        let script = render_script(&spec);
+        let parsed = parse_script(&script).unwrap();
+        assert_eq!(parsed.name, "job");
+        assert_eq!(parsed.ntasks, 2);
+        assert_eq!(parsed.cpus_per_task, 3);
+        assert_eq!(parsed.time_limit_ms, 90_000);
+        assert_eq!(parsed.comment, "ns/pod");
+        assert!(parsed.script.contains("echo run"));
+    }
+}

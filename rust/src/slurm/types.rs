@@ -1,0 +1,292 @@
+//! Slurm job types: specs, states, allocations, executor interface.
+
+use crate::hpcsim::Clock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub type JobId = u64;
+
+/// Job lifecycle states (the subset HPK maps to pod phases).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    /// Queued; the string is the Slurm "reason" (Priority, Resources,
+    /// Dependency, ...).
+    Pending(String),
+    Running,
+    Completed,
+    Failed(String),
+    Cancelled,
+    Timeout,
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Pending(_) | JobState::Running)
+    }
+
+    /// Short Slurm-style code (PD, R, CD, F, CA, TO).
+    pub fn code(&self) -> &'static str {
+        match self {
+            JobState::Pending(_) => "PD",
+            JobState::Running => "R",
+            JobState::Completed => "CD",
+            JobState::Failed(_) => "F",
+            JobState::Cancelled => "CA",
+            JobState::Timeout => "TO",
+        }
+    }
+}
+
+/// Dependency kinds (subset of `--dependency`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepKind {
+    /// Start only after the given job completed successfully; if it
+    /// fails the dependent is cancelled (Slurm's DependencyNeverSatisfied).
+    AfterOk,
+    /// Start after the given job terminates in any state.
+    AfterAny,
+}
+
+/// A batch job specification (what `sbatch` submits).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub partition: String,
+    pub account: String,
+    pub ntasks: u32,
+    pub cpus_per_task: u32,
+    pub mem_per_task: u64,
+    /// Simulated-ms wall limit; 0 means the partition default.
+    pub time_limit_ms: u64,
+    /// Larger runs earlier among pending jobs (then FIFO).
+    pub priority: i32,
+    pub dependencies: Vec<(DepKind, JobId)>,
+    pub env: Vec<(String, String)>,
+    /// Script body (without `#SBATCH` directive lines).
+    pub script: String,
+    /// Free-form comment; hpk-kubelet stores `namespace/pod` here so
+    /// workloads are identifiable in `squeue` (the compliance story).
+    pub comment: String,
+}
+
+impl JobSpec {
+    pub fn new(name: &str) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            partition: "main".to_string(),
+            account: "default".to_string(),
+            ntasks: 1,
+            cpus_per_task: 1,
+            mem_per_task: 256 << 20,
+            time_limit_ms: 0,
+            priority: 0,
+            dependencies: Vec::new(),
+            env: Vec::new(),
+            script: String::new(),
+            comment: String::new(),
+        }
+    }
+
+    pub fn with_script(mut self, script: &str) -> JobSpec {
+        self.script = script.to_string();
+        self
+    }
+
+    pub fn with_tasks(mut self, ntasks: u32, cpus_per_task: u32, mem_per_task: u64) -> JobSpec {
+        self.ntasks = ntasks.max(1);
+        self.cpus_per_task = cpus_per_task.max(1);
+        self.mem_per_task = mem_per_task;
+        self
+    }
+
+    pub fn with_time_limit_ms(mut self, ms: u64) -> JobSpec {
+        self.time_limit_ms = ms;
+        self
+    }
+
+    pub fn with_dependency(mut self, kind: DepKind, id: JobId) -> JobSpec {
+        self.dependencies.push((kind, id));
+        self
+    }
+
+    pub fn with_env(mut self, k: &str, v: &str) -> JobSpec {
+        self.env.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn with_priority(mut self, p: i32) -> JobSpec {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_comment(mut self, c: &str) -> JobSpec {
+        self.comment = c.to_string();
+        self
+    }
+
+    /// Total CPUs this job allocates.
+    pub fn total_cpus(&self) -> u32 {
+        self.ntasks * self.cpus_per_task
+    }
+
+    pub fn total_memory(&self) -> u64 {
+        self.ntasks as u64 * self.mem_per_task
+    }
+}
+
+/// One task slot of an allocation (what `srun` would bind to).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSlot {
+    pub node: String,
+    pub cpus: u32,
+    pub task_id: u32,
+}
+
+/// Where a job landed.
+#[derive(Debug, Clone, Default)]
+pub struct Allocation {
+    pub tasks: Vec<TaskSlot>,
+}
+
+impl Allocation {
+    pub fn node_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.tasks.iter().map(|t| t.node.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+/// Cooperative cancellation flag shared between the controller and the
+/// job's executor thread.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// Everything an executor needs to run one job.
+pub struct JobContext {
+    pub job_id: JobId,
+    pub spec: JobSpec,
+    pub allocation: Allocation,
+    pub cancel: CancelToken,
+    pub clock: Clock,
+}
+
+/// Pluggable execution backend (HPK plugs the Apptainer interpreter in).
+pub trait JobExecutor: Send + Sync {
+    fn execute(&self, ctx: &JobContext) -> Result<(), String>;
+}
+
+/// `squeue`/`scontrol show job`-style info snapshot.
+#[derive(Debug, Clone)]
+pub struct JobInfo {
+    pub job_id: JobId,
+    pub name: String,
+    pub state: JobState,
+    pub partition: String,
+    pub account: String,
+    pub comment: String,
+    pub submit_ms: u64,
+    pub start_ms: Option<u64>,
+    pub end_ms: Option<u64>,
+    pub alloc_cpus: u32,
+    pub nodes: Vec<String>,
+}
+
+/// One accounting row (`sacct`).
+#[derive(Debug, Clone)]
+pub struct AcctRecord {
+    pub job_id: JobId,
+    pub name: String,
+    pub account: String,
+    pub partition: String,
+    pub state: JobState,
+    pub submit_ms: u64,
+    pub start_ms: u64,
+    pub end_ms: u64,
+    pub alloc_cpus: u32,
+    pub nodes: Vec<String>,
+    pub comment: String,
+}
+
+impl AcctRecord {
+    /// CPU-milliseconds consumed (the accounting unit HPC sites bill).
+    pub fn cpu_ms(&self) -> u64 {
+        self.alloc_cpus as u64 * (self.end_ms.saturating_sub(self.start_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builder_totals() {
+        let s = JobSpec::new("x").with_tasks(4, 2, 1 << 20);
+        assert_eq!(s.total_cpus(), 8);
+        assert_eq!(s.total_memory(), 4 << 20);
+    }
+
+    #[test]
+    fn state_codes() {
+        assert_eq!(JobState::Running.code(), "R");
+        assert_eq!(JobState::Pending("Priority".into()).code(), "PD");
+        assert!(JobState::Timeout.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+    }
+
+    #[test]
+    fn cancel_token_propagates() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn allocation_node_names_dedup() {
+        let a = Allocation {
+            tasks: vec![
+                TaskSlot { node: "n2".into(), cpus: 1, task_id: 0 },
+                TaskSlot { node: "n1".into(), cpus: 1, task_id: 1 },
+                TaskSlot { node: "n2".into(), cpus: 1, task_id: 2 },
+            ],
+        };
+        assert_eq!(a.node_names(), vec!["n1".to_string(), "n2".to_string()]);
+    }
+
+    #[test]
+    fn acct_cpu_ms() {
+        let r = AcctRecord {
+            job_id: 1,
+            name: "x".into(),
+            account: "a".into(),
+            partition: "main".into(),
+            state: JobState::Completed,
+            submit_ms: 0,
+            start_ms: 100,
+            end_ms: 600,
+            alloc_cpus: 4,
+            nodes: vec![],
+            comment: String::new(),
+        };
+        assert_eq!(r.cpu_ms(), 2000);
+    }
+}

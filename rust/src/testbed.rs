@@ -1,0 +1,277 @@
+//! Full-stack assembly: the "user session" from SS4 of the paper.
+//!
+//! "For each experiment, we connect as a non-root user to the cluster's
+//! login node and run both HPK's control plane container, as well as
+//! hpk-kubelet. By setting the KUBECONFIG environment variable to the
+//! configuration file produced, we can interface with HPK using common
+//! tools, such as kubectl and helm." — this module is that session:
+//! deploy HPK, helm-install the operators, register the workload
+//! images, and hand back the handles. Shared by the integration tests,
+//! the examples and the benches.
+
+use crate::hpcsim::ClusterSpec;
+use crate::hpk::{ControlPlane, HpkConfig};
+use crate::operators;
+use crate::runtime::PjrtRuntime;
+use crate::slurm::SlurmConfig;
+use std::sync::Arc;
+
+/// A fully provisioned HPK session.
+pub struct Testbed {
+    pub cp: ControlPlane,
+    /// PJRT runtime when artifacts are built; `None` lets non-ML tests
+    /// run without `make artifacts`.
+    pub pjrt: Option<Arc<PjrtRuntime>>,
+}
+
+/// Deploy HPK on `nodes` x `cpus` and install the full workload layer.
+pub fn deploy(nodes: usize, cpus: u32) -> Testbed {
+    deploy_with(nodes, cpus, SlurmConfig::default())
+}
+
+/// Deploy with custom Slurm behaviour (backfill ablations etc.).
+pub fn deploy_with(nodes: usize, cpus: u32, slurm: SlurmConfig) -> Testbed {
+    let cp = ControlPlane::deploy(HpkConfig {
+        cluster: ClusterSpec::uniform(nodes, cpus, 64),
+        slurm,
+        fakeroot_allowed: true,
+    });
+
+    // Base + workload images.
+    crate::workloads::register_base_images(&cp.runtime);
+    crate::workloads::ep::register_ep_image(&cp.runtime);
+    operators::minio::register_minio_image(&cp.runtime);
+
+    // PJRT artifacts (optional).
+    let pjrt = PjrtRuntime::open(&crate::runtime::artifacts_dir())
+        .ok()
+        .map(Arc::new);
+    if let Some(rt) = &pjrt {
+        operators::training::install_runtime_services(&cp, rt.clone());
+    } else {
+        // Spark still needs API/DNS in the hub.
+        cp.runtime.hub.insert(Arc::new(cp.api.clone()));
+        cp.runtime.hub.insert(Arc::new(cp.dns.clone()));
+    }
+
+    // "helm install" the operators.
+    operators::argo::install(&cp);
+    operators::spark::install(&cp);
+    operators::training::install(&cp);
+
+    // Storage controller.
+    let fs = cp.fs.clone();
+    let api = cp.api.clone();
+    std::thread::Builder::new()
+        .name("openebs".to_string())
+        .spawn(move || {
+            let c = operators::openebs::OpenEbsController { fs };
+            loop {
+                use crate::kube::controllers::Reconciler;
+                c.reconcile(&api);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        })
+        .expect("spawn openebs");
+
+    Testbed { cp, pjrt }
+}
+
+/// The "regular Cloud setting" baseline of SS4.1: the same Kubernetes
+/// core and workloads, but with the default scheduler binding pods to
+/// per-node kubelets that exec containers directly — no Slurm.
+pub struct VanillaBed {
+    pub api: crate::kube::ApiServer,
+    pub dns: crate::kube::CoreDns,
+    pub runtime: Arc<crate::apptainer::ApptainerRuntime>,
+    pub fs: crate::virtfs::VirtFs,
+    pub pjrt: Option<Arc<PjrtRuntime>>,
+    kubelets: Vec<Arc<crate::kube::kubelet::VanillaKubelet>>,
+    cm: Option<crate::kube::controllers::ControllerManager>,
+}
+
+/// Deploy the vanilla-Kubernetes baseline on the same simulated nodes.
+pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
+    use crate::kube::controllers::*;
+    let cluster = crate::hpcsim::Cluster::new(ClusterSpec::uniform(nodes, cpus, 64));
+    let fs = crate::virtfs::VirtFs::new();
+    fs.add_mount("/home", "lustre-home", 0, false);
+    let runtime = Arc::new(crate::apptainer::ApptainerRuntime::new(
+        fs.clone(),
+        cluster.clock.clone(),
+        true,
+    ));
+    let api = crate::kube::ApiServer::new();
+    // No HPK admission: ClusterIP services stay as requested (the
+    // baseline has a kube-proxy equivalent conceptually).
+    let cm = ControllerManager::start(
+        api.clone(),
+        vec![
+            Box::new(DeploymentController),
+            Box::new(ReplicaSetController),
+            Box::new(JobController),
+            Box::new(EndpointsController),
+            Box::new(GcController),
+            Box::new(crate::kube::scheduler::DefaultScheduler),
+        ],
+        2,
+    );
+    let dns = crate::kube::CoreDns::new(api.clone());
+    let mut kubelets = Vec::new();
+    for name in cluster.node_names() {
+        crate::kube::scheduler::register_node(
+            &api,
+            &name,
+            cpus,
+            64 << 30,
+        );
+        kubelets.push(crate::kube::kubelet::VanillaKubelet::start(
+            api.clone(),
+            &name,
+            runtime.clone(),
+        ));
+    }
+
+    crate::workloads::register_base_images(&runtime);
+    crate::workloads::ep::register_ep_image(&runtime);
+    operators::minio::register_minio_image(&runtime);
+    operators::spark::driver::register_spark_image(&runtime);
+    operators::training::register_trainer_image(&runtime);
+    operators::training::register_ingest_image(&runtime);
+    operators::training::register_serving_image(&runtime);
+    runtime.hub.insert(Arc::new(api.clone()));
+    runtime.hub.insert(Arc::new(dns.clone()));
+    let pjrt = PjrtRuntime::open(&crate::runtime::artifacts_dir())
+        .ok()
+        .map(Arc::new);
+    if let Some(rt) = &pjrt {
+        runtime.hub.insert(rt.clone());
+        runtime
+            .hub
+            .insert(Arc::new(operators::training::TrainerRegistry::new()));
+    }
+
+    // Operator loops (same reconcilers as the HPK session).
+    let fs2 = fs.clone();
+    for (name, reconciler) in [
+        (
+            "argo-vanilla",
+            Box::new(operators::argo::WorkflowController { fs: Some(fs2.clone()) })
+                as Box<dyn crate::kube::controllers::Reconciler>,
+        ),
+        ("spark-vanilla", Box::new(operators::spark::SparkOperator)),
+    ] {
+        let api2 = api.clone();
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || loop {
+                reconciler.reconcile(&api2);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            })
+            .expect("spawn vanilla operator");
+    }
+    if pjrt.is_some() {
+        let registry = runtime
+            .hub
+            .get::<operators::training::TrainerRegistry>()
+            .unwrap();
+        let api2 = api.clone();
+        std::thread::Builder::new()
+            .name("tfjob-vanilla".to_string())
+            .spawn(move || {
+                let c = operators::training::TfJobOperator { registry };
+                loop {
+                    use crate::kube::controllers::Reconciler;
+                    c.reconcile(&api2);
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            })
+            .expect("spawn vanilla tfjob operator");
+    }
+
+    VanillaBed { api, dns, runtime, fs, pjrt, kubelets, cm: Some(cm) }
+}
+
+impl VanillaBed {
+    /// Block until `cond(api)` holds (same contract as ControlPlane).
+    pub fn wait_until(
+        &self,
+        timeout_ms: u64,
+        mut cond: impl FnMut(&crate::kube::ApiServer) -> bool,
+    ) -> bool {
+        let t0 = std::time::Instant::now();
+        loop {
+            if cond(&self.api) {
+                return true;
+            }
+            if t0.elapsed().as_millis() as u64 > timeout_ms {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    pub fn install_minio(&self, service_name: &str) -> Result<(), String> {
+        self.api
+            .apply_manifest(&operators::minio::helm_manifest(service_name, "default"))
+            .map_err(|e| e.to_string())?;
+        if !self.wait_until(20_000, |_| {
+            self.dns
+                .resolve_one(service_name)
+                .map(|ip| {
+                    self.runtime
+                        .fabric
+                        .is_bound(ip, operators::minio::MINIO_PORT)
+                })
+                .unwrap_or(false)
+        }) {
+            return Err("minio did not come up".to_string());
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(mut self) {
+        for k in &self.kubelets {
+            k.shutdown();
+        }
+        if let Some(cm) = self.cm.take() {
+            cm.shutdown();
+        }
+    }
+}
+
+impl Testbed {
+    /// Install MinIO behind `service_name` and wait until it serves.
+    pub fn install_minio(&self, service_name: &str) -> Result<(), String> {
+        self.cp
+            .kubectl_apply(&operators::minio::helm_manifest(service_name, "default"))
+            .map_err(|e| e.to_string())?;
+        if !self.cp.wait_until(20_000, |_| {
+            self.cp
+                .dns
+                .resolve_one(service_name)
+                .map(|ip| {
+                    self.cp
+                        .runtime
+                        .fabric
+                        .is_bound(ip, operators::minio::MINIO_PORT)
+                })
+                .unwrap_or(false)
+        }) {
+            return Err("minio did not come up".to_string());
+        }
+        Ok(())
+    }
+
+    /// Object-store client via service discovery.
+    pub fn object_store(
+        &self,
+        service_name: &str,
+    ) -> Result<Arc<operators::minio::ObjectStore>, String> {
+        operators::minio::connect(&self.cp.dns, &self.cp.runtime.fabric, service_name)
+    }
+
+    pub fn shutdown(self) {
+        self.cp.shutdown();
+    }
+}

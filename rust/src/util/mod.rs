@@ -1,0 +1,50 @@
+//! Small shared utilities: deterministic RNG, ID generation, quantity
+//! parsing, and wall-clock helpers.
+
+pub mod rng;
+mod quantity;
+
+pub use quantity::{parse_cpu_millis, parse_memory_bytes, format_memory};
+pub use rng::Rng;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ID_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// Cluster-unique suffix generator (Kubernetes-style `-x7f2a` suffixes).
+pub fn unique_suffix() -> String {
+    let n = ID_COUNTER.fetch_add(1, Ordering::Relaxed);
+    // Mix so consecutive ids don't look sequential, like apiserver's
+    // rand-suffix; deterministic across runs for reproducibility.
+    let mut x = n.wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x >> 31;
+    let alphabet = b"bcdfghjklmnpqrstvwxz2456789";
+    let mut s = String::with_capacity(5);
+    for _ in 0..5 {
+        s.push(alphabet[(x % alphabet.len() as u64) as usize] as char);
+        x /= alphabet.len() as u64;
+    }
+    s
+}
+
+/// Monotonic milliseconds since process start (used for real-time
+/// metrics; simulated time lives in [`crate::hpcsim::Clock`]).
+pub fn monotonic_ms() -> u64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suffixes_unique() {
+        let a = unique_suffix();
+        let b = unique_suffix();
+        assert_ne!(a, b);
+        assert_eq!(a.len(), 5);
+    }
+}

@@ -1,0 +1,98 @@
+//! Kubernetes resource-quantity parsing (`500m` CPU, `8Gi` memory) and
+//! Slurm-facing formatting. HPK forwards pod resource requests to Slurm
+//! (`--cpus-per-task`, `--mem`), so both notations meet here.
+
+/// Parse a Kubernetes CPU quantity into millicores.
+///
+/// Accepts `"2"` (cores), `"500m"` (millicores), `"1.5"` (fractional
+/// cores), and bare integers from YAML.
+pub fn parse_cpu_millis(s: &str) -> Option<i64> {
+    let t = s.trim();
+    if let Some(m) = t.strip_suffix('m') {
+        return m.parse::<i64>().ok().filter(|v| *v >= 0);
+    }
+    if let Ok(cores) = t.parse::<i64>() {
+        return (cores >= 0).then_some(cores * 1000);
+    }
+    if let Ok(cores) = t.parse::<f64>() {
+        return (cores >= 0.0).then_some((cores * 1000.0).round() as i64);
+    }
+    None
+}
+
+/// Parse a Kubernetes memory quantity into bytes.
+///
+/// Supports binary suffixes (`Ki`, `Mi`, `Gi`, `Ti`), decimal (`k`/`K`,
+/// `M`, `G`, `T`), and the Spark-ism `8000m` meaning mebibytes-less
+/// (Spark operator YAMLs use `m` for MiB) is NOT applied here — `m`
+/// means milli-bytes in Kubernetes and is rounded up to bytes.
+pub fn parse_memory_bytes(s: &str) -> Option<i64> {
+    let t = s.trim();
+    let (num, mult): (&str, i64) = if let Some(p) = t.strip_suffix("Ki") {
+        (p, 1 << 10)
+    } else if let Some(p) = t.strip_suffix("Mi") {
+        (p, 1 << 20)
+    } else if let Some(p) = t.strip_suffix("Gi") {
+        (p, 1 << 30)
+    } else if let Some(p) = t.strip_suffix("Ti") {
+        (p, 1 << 40)
+    } else if let Some(p) = t.strip_suffix('k').or_else(|| t.strip_suffix('K')) {
+        (p, 1_000)
+    } else if let Some(p) = t.strip_suffix('M') {
+        (p, 1_000_000)
+    } else if let Some(p) = t.strip_suffix('G') {
+        (p, 1_000_000_000)
+    } else if let Some(p) = t.strip_suffix('T') {
+        (p, 1_000_000_000_000)
+    } else if let Some(p) = t.strip_suffix('m') {
+        // milli-bytes: round up to whole bytes.
+        let v = p.parse::<f64>().ok()?;
+        return (v >= 0.0).then_some((v / 1000.0).ceil() as i64);
+    } else {
+        (t, 1)
+    };
+    if let Ok(i) = num.parse::<i64>() {
+        return (i >= 0).then_some(i * mult);
+    }
+    let f = num.parse::<f64>().ok()?;
+    (f >= 0.0).then_some((f * mult as f64).round() as i64)
+}
+
+/// Format bytes as a Slurm `--mem` value (MiB, minimum 1M).
+pub fn format_memory(bytes: i64) -> String {
+    let mib = (bytes + (1 << 20) - 1) / (1 << 20);
+    format!("{}M", mib.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_quantities() {
+        assert_eq!(parse_cpu_millis("2"), Some(2000));
+        assert_eq!(parse_cpu_millis("500m"), Some(500));
+        assert_eq!(parse_cpu_millis("1.5"), Some(1500));
+        assert_eq!(parse_cpu_millis("0"), Some(0));
+        assert_eq!(parse_cpu_millis("-1"), None);
+        assert_eq!(parse_cpu_millis("abc"), None);
+    }
+
+    #[test]
+    fn memory_quantities() {
+        assert_eq!(parse_memory_bytes("1Ki"), Some(1024));
+        assert_eq!(parse_memory_bytes("4Gi"), Some(4 << 30));
+        assert_eq!(parse_memory_bytes("2G"), Some(2_000_000_000));
+        assert_eq!(parse_memory_bytes("512Mi"), Some(512 << 20));
+        assert_eq!(parse_memory_bytes("100"), Some(100));
+        assert_eq!(parse_memory_bytes("1.5Gi"), Some((1.5 * (1u64 << 30) as f64) as i64));
+        assert_eq!(parse_memory_bytes("8000m"), Some(8)); // milli-bytes
+    }
+
+    #[test]
+    fn slurm_mem_format() {
+        assert_eq!(format_memory(1 << 30), "1024M");
+        assert_eq!(format_memory(1), "1M");
+        assert_eq!(format_memory((512 << 20) + 1), "513M");
+    }
+}

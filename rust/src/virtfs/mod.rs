@@ -1,0 +1,314 @@
+//! In-memory shared filesystem model.
+//!
+//! Stands in for the HPC cluster's storage: the Lustre-backed home
+//! directory (shared across nodes) and per-node NVMe scratch. HPK's
+//! HostPath volumes, the OpenEBS-style storage classes (SS3), MinIO's
+//! bucket storage and Spark's shuffle files all live here.
+//!
+//! Paths are `/`-separated strings; directories are implicit (created by
+//! writing files under them), like an object store with a filesystem
+//! facade — which matches how the paper's storage stack (MinIO over
+//! HostPath over Lustre) behaves.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Error type for filesystem operations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FsError {
+    NotFound(String),
+    ReadOnly(String),
+    QuotaExceeded { path: String, used: u64, quota: u64 },
+}
+
+impl std::fmt::Display for FsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsError::NotFound(p) => write!(f, "no such file: {p}"),
+            FsError::ReadOnly(p) => write!(f, "read-only mount: {p}"),
+            FsError::QuotaExceeded { path, used, quota } => {
+                write!(f, "quota exceeded on {path}: {used} > {quota} bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FsError {}
+
+#[derive(Debug, Clone)]
+struct Mount {
+    prefix: String,
+    read_only: bool,
+    /// Byte quota for everything under the mount (0 = unlimited).
+    quota: u64,
+    /// Storage-class label (e.g. "lustre-home", "nvme-local") consumed
+    /// by the OpenEBS-style controller.
+    class: String,
+}
+
+#[derive(Default)]
+struct Inner {
+    files: BTreeMap<String, Arc<Vec<u8>>>,
+    mounts: Vec<Mount>,
+    writes: u64,
+    reads: u64,
+}
+
+/// A shared, thread-safe virtual filesystem.
+#[derive(Clone, Default)]
+pub struct VirtFs {
+    inner: Arc<Mutex<Inner>>,
+}
+
+fn norm(path: &str) -> String {
+    let mut out = String::with_capacity(path.len() + 1);
+    out.push('/');
+    for part in path.split('/') {
+        if part.is_empty() || part == "." {
+            continue;
+        }
+        if !out.ends_with('/') {
+            out.push('/');
+        }
+        out.push_str(part);
+    }
+    out
+}
+
+impl VirtFs {
+    pub fn new() -> VirtFs {
+        VirtFs::default()
+    }
+
+    /// Register a mount point with semantics (quota, read-only, class).
+    pub fn add_mount(&self, prefix: &str, class: &str, quota: u64, read_only: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.mounts.push(Mount {
+            prefix: norm(prefix),
+            read_only,
+            quota,
+            class: class.to_string(),
+        });
+    }
+
+    fn mount_for<'a>(inner: &'a Inner, path: &str) -> Option<&'a Mount> {
+        inner
+            .mounts
+            .iter()
+            .filter(|m| path.starts_with(&m.prefix))
+            .max_by_key(|m| m.prefix.len())
+    }
+
+    /// Write (create or replace) a file.
+    pub fn write(&self, path: &str, data: impl Into<Vec<u8>>) -> Result<(), FsError> {
+        let path = norm(path);
+        let data = data.into();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = Self::mount_for(&inner, &path) {
+            if m.read_only {
+                return Err(FsError::ReadOnly(path));
+            }
+            if m.quota > 0 {
+                let prefix = m.prefix.clone();
+                let quota = m.quota;
+                let used: u64 = inner
+                    .files
+                    .range(prefix.clone()..)
+                    .take_while(|(k, _)| k.starts_with(&prefix))
+                    .filter(|(k, _)| **k != path)
+                    .map(|(_, v)| v.len() as u64)
+                    .sum();
+                if used + data.len() as u64 > quota {
+                    return Err(FsError::QuotaExceeded { path, used: used + data.len() as u64, quota });
+                }
+            }
+        }
+        inner.writes += 1;
+        inner.files.insert(path, Arc::new(data));
+        Ok(())
+    }
+
+    /// Write a UTF-8 string.
+    pub fn write_str(&self, path: &str, data: &str) -> Result<(), FsError> {
+        self.write(path, data.as_bytes().to_vec())
+    }
+
+    /// Read a file (cheap Arc clone).
+    pub fn read(&self, path: &str) -> Result<Arc<Vec<u8>>, FsError> {
+        let path = norm(path);
+        let mut inner = self.inner.lock().unwrap();
+        inner.reads += 1;
+        inner
+            .files
+            .get(&path)
+            .cloned()
+            .ok_or(FsError::NotFound(path))
+    }
+
+    /// Read as UTF-8 string.
+    pub fn read_str(&self, path: &str) -> Result<String, FsError> {
+        let data = self.read(path)?;
+        Ok(String::from_utf8_lossy(&data).into_owned())
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        let path = norm(path);
+        self.inner.lock().unwrap().files.contains_key(&path)
+    }
+
+    /// List files under a directory prefix (recursive, sorted).
+    pub fn list(&self, dir: &str) -> Vec<String> {
+        let mut prefix = norm(dir);
+        if !prefix.ends_with('/') {
+            prefix.push('/');
+        }
+        let inner = self.inner.lock().unwrap();
+        inner
+            .files
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Delete one file.
+    pub fn remove(&self, path: &str) -> Result<(), FsError> {
+        let path = norm(path);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = Self::mount_for(&inner, &path) {
+            if m.read_only {
+                return Err(FsError::ReadOnly(path));
+            }
+        }
+        inner
+            .files
+            .remove(&path)
+            .map(|_| ())
+            .ok_or(FsError::NotFound(path))
+    }
+
+    /// Delete a whole subtree; returns number of files removed.
+    pub fn remove_tree(&self, dir: &str) -> usize {
+        let mut prefix = norm(dir);
+        if !prefix.ends_with('/') {
+            prefix.push('/');
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let keys: Vec<String> = inner
+            .files
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &keys {
+            inner.files.remove(k);
+        }
+        keys.len()
+    }
+
+    /// Total bytes under a prefix.
+    pub fn usage(&self, dir: &str) -> u64 {
+        let mut prefix = norm(dir);
+        if !prefix.ends_with('/') {
+            prefix.push('/');
+        }
+        let inner = self.inner.lock().unwrap();
+        inner
+            .files
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .map(|(_, v)| v.len() as u64)
+            .sum()
+    }
+
+    /// Storage class of the mount containing `path`, if any.
+    pub fn class_of(&self, path: &str) -> Option<String> {
+        let path = norm(path);
+        let inner = self.inner.lock().unwrap();
+        Self::mount_for(&inner, &path).map(|m| m.class.clone())
+    }
+
+    /// (reads, writes) op counters — used by the perf pass.
+    pub fn io_stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.reads, inner.writes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let fs = VirtFs::new();
+        fs.write_str("/home/user/a.txt", "hello").unwrap();
+        assert_eq!(fs.read_str("/home/user/a.txt").unwrap(), "hello");
+        assert!(fs.exists("/home/user/a.txt"));
+        assert!(!fs.exists("/home/user/b.txt"));
+    }
+
+    #[test]
+    fn normalization() {
+        let fs = VirtFs::new();
+        fs.write_str("home//user/./x", "1").unwrap();
+        assert_eq!(fs.read_str("/home/user/x").unwrap(), "1");
+    }
+
+    #[test]
+    fn list_is_recursive_and_scoped() {
+        let fs = VirtFs::new();
+        fs.write_str("/data/a/1", "x").unwrap();
+        fs.write_str("/data/a/b/2", "y").unwrap();
+        fs.write_str("/data/c", "z").unwrap();
+        fs.write_str("/datax/d", "w").unwrap();
+        let listed = fs.list("/data/a");
+        assert_eq!(listed, vec!["/data/a/1".to_string(), "/data/a/b/2".to_string()]);
+        assert_eq!(fs.list("/data").len(), 3);
+    }
+
+    #[test]
+    fn read_only_mount_rejects_writes() {
+        let fs = VirtFs::new();
+        fs.write_str("/apps/tool", "bin").unwrap();
+        fs.add_mount("/apps", "system", 0, true);
+        assert!(matches!(
+            fs.write_str("/apps/other", "x"),
+            Err(FsError::ReadOnly(_))
+        ));
+        assert!(fs.remove("/apps/tool").is_err());
+    }
+
+    #[test]
+    fn quota_enforced() {
+        let fs = VirtFs::new();
+        fs.add_mount("/mnt/nvme/n1", "nvme-local", 10, false);
+        fs.write("/mnt/nvme/n1/a", vec![0u8; 6]).unwrap();
+        assert!(matches!(
+            fs.write("/mnt/nvme/n1/b", vec![0u8; 6]),
+            Err(FsError::QuotaExceeded { .. })
+        ));
+        // Replacing the same file within quota is fine.
+        fs.write("/mnt/nvme/n1/a", vec![0u8; 9]).unwrap();
+    }
+
+    #[test]
+    fn remove_tree_counts() {
+        let fs = VirtFs::new();
+        for i in 0..5 {
+            fs.write_str(&format!("/tmp/t/{i}"), "x").unwrap();
+        }
+        assert_eq!(fs.remove_tree("/tmp/t"), 5);
+        assert!(fs.list("/tmp/t").is_empty());
+    }
+
+    #[test]
+    fn usage_and_class() {
+        let fs = VirtFs::new();
+        fs.add_mount("/home", "lustre-home", 0, false);
+        fs.write("/home/u/f", vec![0u8; 100]).unwrap();
+        assert_eq!(fs.usage("/home"), 100);
+        assert_eq!(fs.class_of("/home/u/f").as_deref(), Some("lustre-home"));
+        assert_eq!(fs.class_of("/elsewhere"), None);
+    }
+}

@@ -1,0 +1,161 @@
+//! Synthetic Fashion-MNIST-like dataset.
+//!
+//! The paper's SS4.3 pipeline ingests Fashion-MNIST (10 classes of
+//! 28x28 grayscale). We generate a statistically similar, fully
+//! deterministic surrogate: each class has a fixed random template; a
+//! sample is `0.72 * template + 0.28 * noise`, clipped to [0, 1]. The
+//! classes are linearly separable enough to train on but noisy enough
+//! that model capacity matters (the three MLP variants reach different
+//! accuracies, which the SS4.3 "select the best model" step needs).
+
+use crate::runtime::Tensor;
+use crate::util::Rng;
+
+pub const IMAGE_DIM: usize = 28 * 28;
+pub const NUM_CLASSES: usize = 10;
+
+/// Template pixel for (class, pixel): deterministic, independent of any
+/// RNG stream position.
+fn template_pixel(class: usize, pixel: usize) -> f32 {
+    let h = crate::util::rng::murmur3_mix(
+        (class as u32).wrapping_mul(0x01000193) ^ (pixel as u32),
+    );
+    (h >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
+/// One sample: (pixels, label).
+pub fn sample(rng: &mut Rng) -> (Vec<f32>, i32) {
+    let class = rng.below(NUM_CLASSES as u64) as usize;
+    let mut pixels = Vec::with_capacity(IMAGE_DIM);
+    for p in 0..IMAGE_DIM {
+        let noise = rng.next_f32();
+        let v = 0.42 * template_pixel(class, p) + 0.58 * noise;
+        pixels.push(v.clamp(0.0, 1.0));
+    }
+    (pixels, class as i32)
+}
+
+/// A deterministic batch: `(x [batch, 784] f32, y [batch] i32)`.
+pub fn synthetic_batch(batch: usize, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(0xFA510 ^ seed);
+    let mut xs = Vec::with_capacity(batch * IMAGE_DIM);
+    let mut ys = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let (pixels, label) = sample(&mut rng);
+        xs.extend(pixels);
+        ys.push(label);
+    }
+    (
+        Tensor::from_f32(xs, &[batch, IMAGE_DIM]),
+        Tensor::from_i32(ys, &[batch]),
+    )
+}
+
+/// Serialize a batch into the "dataset shard" format the ingestion step
+/// writes to storage (little-endian f32 pixels then i32 labels).
+pub fn encode_shard(x: &Tensor, y: &Tensor) -> Vec<u8> {
+    let mut out = Vec::with_capacity(x.len() * 4 + y.len() * 4 + 8);
+    out.extend((y.len() as u32).to_le_bytes());
+    out.extend((x.len() as u32 / y.len().max(1) as u32).to_le_bytes());
+    for v in x.as_f32() {
+        out.extend(v.to_le_bytes());
+    }
+    for v in y.as_i32() {
+        out.extend(v.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a shard back into tensors.
+pub fn decode_shard(bytes: &[u8]) -> Result<(Tensor, Tensor), String> {
+    if bytes.len() < 8 {
+        return Err("shard too short".to_string());
+    }
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let dim = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let need = 8 + n * dim * 4 + n * 4;
+    if bytes.len() != need {
+        return Err(format!("shard length {} != expected {need}", bytes.len()));
+    }
+    let mut xs = Vec::with_capacity(n * dim);
+    let mut off = 8;
+    for _ in 0..n * dim {
+        xs.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+        off += 4;
+    }
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        ys.push(i32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+        off += 4;
+    }
+    Ok((
+        Tensor::from_f32(xs, &[n, dim]),
+        Tensor::from_i32(ys, &[n]),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_batches() {
+        let (x1, y1) = synthetic_batch(32, 5);
+        let (x2, y2) = synthetic_batch(32, 5);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let (x3, _) = synthetic_batch(32, 6);
+        assert_ne!(x1, x3);
+    }
+
+    #[test]
+    fn pixels_in_unit_range_and_labels_valid() {
+        let (x, y) = synthetic_batch(64, 0);
+        assert!(x.as_f32().iter().all(|v| (0.0..=1.0).contains(v)));
+        assert!(y.as_i32().iter().all(|l| (0..10).contains(l)));
+        // All ten classes appear in a reasonably sized batch... at least 5.
+        let distinct: std::collections::HashSet<i32> =
+            y.as_i32().iter().copied().collect();
+        assert!(distinct.len() >= 5);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Same-class samples must be closer (L2) than cross-class, on
+        // average — the property that makes training converge.
+        let (x, y) = synthetic_batch(128, 1);
+        let xs = x.as_f32();
+        let ys = y.as_i32();
+        let dist = |a: usize, b: usize| -> f32 {
+            (0..IMAGE_DIM)
+                .map(|p| {
+                    let d = xs[a * IMAGE_DIM + p] - xs[b * IMAGE_DIM + p];
+                    d * d
+                })
+                .sum()
+        };
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0f32, 0u32, 0f32, 0u32);
+        for i in 0..64 {
+            for j in (i + 1)..64 {
+                if ys[i] == ys[j] {
+                    same += dist(i, j);
+                    same_n += 1;
+                } else {
+                    diff += dist(i, j);
+                    diff_n += 1;
+                }
+            }
+        }
+        assert!(same / same_n as f32 * 1.5 < diff / diff_n as f32);
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let (x, y) = synthetic_batch(16, 2);
+        let bytes = encode_shard(&x, &y);
+        let (x2, y2) = decode_shard(&bytes).unwrap();
+        assert_eq!(x, x2);
+        assert_eq!(y, y2);
+        assert!(decode_shard(&bytes[..10]).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Container workload payloads: what runs *inside* the simulated
+//! containers.
+//!
+//! Images map to Rust entrypoints (see [`crate::apptainer`]); the
+//! heavyweight ones dispatch into the PJRT runtime (training,
+//! inference, EP) — all compute goes through the AOT artifacts, never
+//! through Python.
+
+pub mod dataset;
+pub mod ep;
+pub mod trainer;
+
+use crate::apptainer::{ApptainerRuntime, ImageSpec};
+
+/// Register the small utility images every scenario uses.
+pub fn register_base_images(rt: &ApptainerRuntime) {
+    rt.registry
+        .register(ImageSpec::new("busybox:latest", "busybox").with_size(5 << 20));
+    rt.table.register("busybox", |ctx| {
+        // `busybox sleep N` | `busybox true` | `busybox sh -c exit`
+        match ctx.args.first().map(|s| s.as_str()) {
+            Some("sleep") => {
+                let sim_ms: u64 = ctx
+                    .args
+                    .get(1)
+                    .and_then(|s| s.parse::<f64>().ok())
+                    .map(|secs| (secs * 1000.0) as u64)
+                    .unwrap_or(1000);
+                let t0 = ctx.clock.now_ms();
+                while ctx.clock.now_ms() - t0 < sim_ms {
+                    if ctx.cancel.is_cancelled() {
+                        return Err("terminated".to_string());
+                    }
+                    ctx.clock.tick();
+                }
+                Ok(0)
+            }
+            Some("false") => Ok(1),
+            _ => Ok(0),
+        }
+    });
+
+    rt.registry
+        .register(ImageSpec::new("pause:3.9", "pause").with_size(1 << 20));
+    rt.table.register("pause", |ctx| {
+        while !ctx.cancel.is_cancelled() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        Err("terminated".to_string())
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpcsim::Clock;
+    use crate::slurm::CancelToken;
+    use crate::virtfs::VirtFs;
+
+    #[test]
+    fn busybox_modes() {
+        let rt = ApptainerRuntime::new(VirtFs::new(), Clock::new(1000), true);
+        register_base_images(&rt);
+        let net = rt.create_sandbox("n1").unwrap();
+        assert!(rt
+            .run_container(&net, "busybox:latest", &[], &[], false, CancelToken::new())
+            .is_ok());
+        assert!(rt
+            .run_container(
+                &net,
+                "busybox:latest",
+                &["false".to_string()],
+                &[],
+                false,
+                CancelToken::new()
+            )
+            .is_err());
+        assert!(rt
+            .run_container(
+                &net,
+                "busybox:latest",
+                &["sleep".to_string(), "0.1".to_string()],
+                &[],
+                false,
+                CancelToken::new()
+            )
+            .is_ok());
+    }
+}

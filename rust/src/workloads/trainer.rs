@@ -1,0 +1,125 @@
+//! Training helpers: parameter init and the distributed trainer image.
+//!
+//! The TFJob worker image (`tf-trainer`) runs here: each worker pod
+//! computes gradients on its data shard via the `grad_step_*` PJRT
+//! artifact; a coordinator object (registered in the [`ServiceHub`] by
+//! the Training Operator) performs the synchronous all-reduce and the
+//! identical SGD update on every worker — MultiWorkerMirroredStrategy
+//! semantics (SS4.3).
+//!
+//! [`ServiceHub`]: crate::apptainer::ServiceHub
+
+use crate::runtime::{PjrtRuntime, Tensor};
+use crate::util::Rng;
+
+/// Hidden sizes per variant — must mirror `python/compile/model.py`.
+pub fn variant_dims(variant: &str) -> Option<(usize, usize)> {
+    match variant {
+        "mlp-small" => Some((256, 128)),
+        "mlp-medium" => Some((512, 256)),
+        "mlp-large" => Some((1024, 512)),
+        _ => None,
+    }
+}
+
+pub const INPUT_DIM: usize = 28 * 28;
+pub const NUM_CLASSES: usize = 10;
+
+/// He-initialised parameters (w1,b1,w2,b2,w3,b3) as tensors, matching
+/// the artifact signatures. Deterministic in `seed`.
+pub fn init_params_rust(variant: &str, seed: u64) -> Vec<Tensor> {
+    let (h1, h2) = variant_dims(variant)
+        .unwrap_or_else(|| panic!("unknown variant {variant}"));
+    let mut rng = Rng::new(seed);
+    let mut he = |fan_in: usize, rows: usize, cols: usize| -> Tensor {
+        let scale = (2.0 / fan_in as f64).sqrt();
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        Tensor::from_f32(data, &[rows, cols])
+    };
+    let w1 = he(INPUT_DIM, INPUT_DIM, h1);
+    let w2 = he(h1, h1, h2);
+    let w3 = he(h2, h2, NUM_CLASSES);
+    vec![
+        w1,
+        Tensor::zeros(&[h1]),
+        w2,
+        Tensor::zeros(&[h2]),
+        w3,
+        Tensor::zeros(&[NUM_CLASSES]),
+    ]
+}
+
+/// Parameter count of a variant (reporting).
+pub fn param_count(variant: &str) -> usize {
+    let (h1, h2) = variant_dims(variant).unwrap_or((0, 0));
+    INPUT_DIM * h1 + h1 + h1 * h2 + h2 + h2 * NUM_CLASSES + NUM_CLASSES
+}
+
+/// Evaluate `params` on a held-out set: (mean nll, accuracy).
+pub fn evaluate(
+    rt: &PjrtRuntime,
+    variant: &str,
+    params: &[Tensor],
+    eval_seed: u64,
+    batches: usize,
+) -> Result<(f32, f32), String> {
+    let entry = format!("eval_{variant}");
+    rt.load(&entry)?;
+    let batch = rt.manifest_i64("eval_batch").unwrap_or(256) as usize;
+    let mut nll_sum = 0f32;
+    let mut correct = 0f32;
+    let mut total = 0f32;
+    for b in 0..batches {
+        let (x, y) = super::dataset::synthetic_batch(batch, eval_seed + b as u64);
+        let mut inputs = params.to_vec();
+        inputs.push(x);
+        inputs.push(y);
+        let out = rt.call(&entry, &inputs)?;
+        nll_sum += out[0].as_f32()[0];
+        correct += out[1].as_f32()[0];
+        total += batch as f32;
+    }
+    Ok((nll_sum / total, correct / total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_shapes_match_variants() {
+        let p = init_params_rust("mlp-small", 0);
+        assert_eq!(p[0].shape(), &[784, 256]);
+        assert_eq!(p[1].shape(), &[256]);
+        assert_eq!(p[2].shape(), &[256, 128]);
+        assert_eq!(p[4].shape(), &[128, 10]);
+        assert_eq!(p[5].shape(), &[10]);
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let a = init_params_rust("mlp-medium", 3);
+        let b = init_params_rust("mlp-medium", 3);
+        let c = init_params_rust("mlp-medium", 4);
+        assert_eq!(a[0], b[0]);
+        assert_ne!(a[0], c[0]);
+    }
+
+    #[test]
+    fn he_scale_reasonable() {
+        let p = init_params_rust("mlp-small", 1);
+        let w1 = p[0].as_f32();
+        let var: f32 =
+            w1.iter().map(|v| v * v).sum::<f32>() / w1.len() as f32;
+        let expected = 2.0 / 784.0;
+        assert!((var - expected).abs() < expected * 0.2, "var={var}");
+    }
+
+    #[test]
+    fn param_counts() {
+        assert_eq!(param_count("mlp-small"), 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10);
+        assert!(param_count("mlp-large") > 1_000_000);
+    }
+}

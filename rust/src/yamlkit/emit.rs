@@ -1,0 +1,246 @@
+//! YAML and JSON emission for [`Value`] trees.
+
+use super::Value;
+
+/// Render a value as a YAML document (no leading `---`).
+pub fn to_yaml_string(v: &Value) -> String {
+    let mut out = String::new();
+    emit_yaml(v, 0, false, &mut out);
+    if !out.ends_with('\n') {
+        out.push('\n');
+    }
+    out
+}
+
+fn needs_quotes(s: &str) -> bool {
+    if s.is_empty() {
+        return true;
+    }
+    // Strings that would re-parse as a different type, or contain YAML
+    // syntax characters, must be quoted.
+    let special = matches!(
+        s,
+        "true" | "false" | "null" | "~" | "True" | "False" | "Null"
+    );
+    let numeric = s.parse::<i64>().is_ok() || s.parse::<f64>().is_ok();
+    special
+        || numeric
+        || s.contains(':')
+        || s.contains('#')
+        || s.contains('\n')
+        || s.starts_with(['-', '[', '{', '&', '*', '!', '|', '>', '\'', '"', '%', '@'])
+        || s.starts_with(' ')
+        || s.ends_with(' ')
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn scalar_yaml(v: &Value) -> Option<String> {
+    match v {
+        Value::Null => Some("null".to_string()),
+        Value::Bool(b) => Some(b.to_string()),
+        Value::Int(i) => Some(i.to_string()),
+        Value::Float(f) => Some(format_float(*f)),
+        Value::Str(s) => Some(if needs_quotes(s) { quote(s) } else { s.clone() }),
+        _ => None,
+    }
+}
+
+fn format_float(f: f64) -> String {
+    if f == f.trunc() && f.abs() < 1e15 {
+        format!("{f:.1}")
+    } else {
+        format!("{f}")
+    }
+}
+
+fn emit_yaml(v: &Value, indent: usize, _in_seq: bool, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    match v {
+        Value::Map(entries) if entries.is_empty() => out.push_str("{}\n"),
+        Value::Seq(items) if items.is_empty() => out.push_str("[]\n"),
+        Value::Map(entries) => {
+            for (k, val) in entries {
+                out.push_str(&pad);
+                let key = if needs_quotes(k) { quote(k) } else { k.clone() };
+                out.push_str(&key);
+                out.push(':');
+                match scalar_yaml(val) {
+                    Some(s) => {
+                        out.push(' ');
+                        out.push_str(&s);
+                        out.push('\n');
+                    }
+                    None => {
+                        if matches!(val, Value::Map(m) if m.is_empty())
+                            || matches!(val, Value::Seq(s) if s.is_empty())
+                        {
+                            out.push(' ');
+                            emit_yaml(val, 0, false, out);
+                        } else {
+                            out.push('\n');
+                            emit_yaml(val, indent + 1, false, out);
+                        }
+                    }
+                }
+            }
+        }
+        Value::Seq(items) => {
+            for item in items {
+                out.push_str(&pad);
+                out.push_str("- ");
+                match scalar_yaml(item) {
+                    Some(s) => {
+                        out.push_str(&s);
+                        out.push('\n');
+                    }
+                    None => {
+                        // Emit the nested structure with its first line
+                        // inline after `- `.
+                        let mut tmp = String::new();
+                        emit_yaml(item, indent + 1, true, &mut tmp);
+                        let trimmed = tmp.trim_start_matches(' ');
+                        out.push_str(trimmed.lines().next().unwrap_or(""));
+                        out.push('\n');
+                        for line in trimmed.lines().skip(1) {
+                            out.push_str(line);
+                            out.push('\n');
+                        }
+                    }
+                }
+            }
+        }
+        scalar => {
+            out.push_str(&pad);
+            out.push_str(&scalar_yaml(scalar).unwrap());
+            out.push('\n');
+        }
+    }
+}
+
+/// Render a value as compact JSON.
+pub fn to_json_string(v: &Value) -> String {
+    let mut out = String::new();
+    emit_json(v, &mut out);
+    out
+}
+
+fn emit_json(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Float(f) => {
+            if f.is_finite() {
+                out.push_str(&format!("{f}"));
+            } else {
+                out.push_str("null");
+            }
+        }
+        Value::Str(s) => out.push_str(&quote(s)),
+        Value::Seq(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                emit_json(item, out);
+            }
+            out.push(']');
+        }
+        Value::Map(entries) => {
+            out.push('{');
+            for (i, (k, val)) in entries.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&quote(k));
+                out.push(':');
+                emit_json(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_one;
+    use super::*;
+
+    #[test]
+    fn yaml_roundtrip_pod() {
+        let src = "apiVersion: v1\nkind: Pod\nmetadata:\n  name: demo\nspec:\n  containers:\n  - name: main\n    image: nginx\n";
+        let v = parse_one(src).unwrap();
+        let emitted = to_yaml_string(&v);
+        let reparsed = parse_one(&emitted).unwrap();
+        assert_eq!(v, reparsed);
+    }
+
+    #[test]
+    fn yaml_roundtrip_tricky_scalars() {
+        let mut v = Value::map();
+        v.set("numeric_string", Value::from("8080"));
+        v.set("with_colon", Value::from("a: b"));
+        v.set("multiline", Value::from("l1\nl2"));
+        v.set("boolish", Value::from("true"));
+        v.set("int", Value::Int(-5));
+        v.set("float", Value::Float(2.5));
+        let reparsed = parse_one(&to_yaml_string(&v)).unwrap();
+        assert_eq!(v, reparsed);
+    }
+
+    #[test]
+    fn json_compact() {
+        let v = parse_one("a: 1\nb:\n- x\n- y\n").unwrap();
+        assert_eq!(to_json_string(&v), r#"{"a":1,"b":["x","y"]}"#);
+    }
+
+    #[test]
+    fn roundtrip_seq_of_maps() {
+        let src = "tasks:\n- name: a\n  deps:\n  - b\n  - c\n- name: b\n";
+        let v = parse_one(src).unwrap();
+        let reparsed = parse_one(&to_yaml_string(&v)).unwrap();
+        assert_eq!(v, reparsed);
+    }
+
+    #[test]
+    fn nested_seq_roundtrips() {
+        use super::super::parse_one;
+        // [[true, []]]
+        let a = Value::Map(vec![("k0".to_string(), Value::Seq(vec![Value::Seq(vec![
+            Value::Bool(true), Value::Seq(vec![])])]))]);
+        // [[true], []]
+        let b = Value::Map(vec![("k0".to_string(), Value::Seq(vec![
+            Value::Seq(vec![Value::Bool(true)]), Value::Seq(vec![])]))]);
+        for (i, t) in [a, b].iter().enumerate() {
+            let e = to_yaml_string(t);
+            let p = parse_one(&e).unwrap_or_else(|err| panic!("case {i}: {err}\n{e}"));
+            assert_eq!(&p, t, "case {i}:\n{e}");
+        }
+    }
+
+    #[test]
+    fn empty_collections() {
+        let mut v = Value::map();
+        v.set("m", Value::map());
+        v.set("s", Value::Seq(vec![]));
+        let reparsed = parse_one(&to_yaml_string(&v)).unwrap();
+        assert_eq!(v, reparsed);
+    }
+}

@@ -1,0 +1,258 @@
+//! YAML-subset + JSON parsing and emission.
+//!
+//! Kubernetes manifests are YAML and HPK's artifact manifest is JSON; no
+//! serde/serde_yaml is available in this offline environment, so this
+//! module implements the subset both need from scratch:
+//!
+//! - block mappings and sequences (indentation-based)
+//! - inline (flow) maps `{a: 1}` and lists `[1, 2]`
+//! - plain / single- / double-quoted scalars, comments, `---` documents
+//! - block scalars `|`, `|-`, `>`, `>-` (Listing 2 of the paper uses `>-`)
+//! - anchors are NOT supported (rejected with an error), matching the
+//!   subset Kubernetes examples in the paper actually use.
+//!
+//! The [`Value`] tree preserves mapping order (kubectl-style round-trips).
+
+mod parse;
+mod emit;
+mod json;
+mod path;
+
+pub use emit::{to_json_string, to_yaml_string};
+pub use json::parse_json;
+pub use parse::{parse_all, parse_one, ParseError};
+
+/// An ordered YAML/JSON value tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Value>),
+    /// Order-preserving mapping (manifests are small; linear lookup).
+    Map(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Empty mapping.
+    pub fn map() -> Value {
+        Value::Map(Vec::new())
+    }
+
+    /// Look up a key in a mapping.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(entries) => {
+                entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Mutable lookup.
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Value> {
+        match self {
+            Value::Map(entries) => {
+                entries.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Walk a `.`-separated path, e.g. `spec.template.metadata.name`.
+    pub fn path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = match part.parse::<usize>() {
+                Ok(idx) => match cur {
+                    Value::Seq(items) => items.get(idx)?,
+                    _ => cur.get(part)?,
+                },
+                Err(_) => cur.get(part)?,
+            };
+        }
+        Some(cur)
+    }
+
+    /// Insert or replace a key in a mapping (no-op on non-maps).
+    pub fn set(&mut self, key: &str, value: Value) {
+        if let Value::Map(entries) = self {
+            for (k, v) in entries.iter_mut() {
+                if k == key {
+                    *v = value;
+                    return;
+                }
+            }
+            entries.push((key.to_string(), value));
+        }
+    }
+
+    /// Remove a key from a mapping, returning its value.
+    pub fn remove(&mut self, key: &str) -> Option<Value> {
+        if let Value::Map(entries) = self {
+            if let Some(pos) = entries.iter().position(|(k, _)| k == key) {
+                return Some(entries.remove(pos).1);
+            }
+        }
+        None
+    }
+
+    /// Ensure `key` maps to a mapping, creating it if missing, and return
+    /// a mutable reference to it.
+    pub fn entry_map(&mut self, key: &str) -> &mut Value {
+        if let Value::Map(entries) = self {
+            if !entries.iter().any(|(k, _)| k == key) {
+                entries.push((key.to_string(), Value::map()));
+            }
+            return entries
+                .iter_mut()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .unwrap();
+        }
+        panic!("entry_map on non-map value");
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// String view with scalar coercion (ints/bools/floats render).
+    pub fn coerce_string(&self) -> Option<String> {
+        match self {
+            Value::Str(s) => Some(s.clone()),
+            Value::Int(i) => Some(i.to_string()),
+            Value::Float(f) => Some(format!("{f}")),
+            Value::Bool(b) => Some(b.to_string()),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Str(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            Value::Str(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Value]> {
+        match self {
+            Value::Seq(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Map(entries) => Some(entries),
+            _ => None,
+        }
+    }
+
+    /// Convenience: string at a path.
+    pub fn str_at(&self, path: &str) -> Option<&str> {
+        self.path(path).and_then(|v| v.as_str())
+    }
+
+    /// Convenience: i64 at a path.
+    pub fn i64_at(&self, path: &str) -> Option<i64> {
+        self.path(path).and_then(|v| v.as_i64())
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(i: i64) -> Value {
+        Value::Int(i)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+/// Build a `Value::Map` from key/value pairs.
+#[macro_export]
+macro_rules! vmap {
+    ($($k:expr => $v:expr),* $(,)?) => {
+        $crate::yamlkit::Value::Map(vec![
+            $(($k.to_string(), $crate::yamlkit::Value::from($v))),*
+        ])
+    };
+}
+
+pub use path::merge_patch;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_walks_nested_maps_and_seqs() {
+        let v = parse_one(
+            "spec:\n  containers:\n  - name: main\n    image: busybox\n",
+        )
+        .unwrap();
+        assert_eq!(v.str_at("spec.containers.0.name"), Some("main"));
+        assert_eq!(v.str_at("spec.containers.0.image"), Some("busybox"));
+    }
+
+    #[test]
+    fn set_replaces_and_appends() {
+        let mut v = Value::map();
+        v.set("a", Value::Int(1));
+        v.set("a", Value::Int(2));
+        v.set("b", Value::Int(3));
+        assert_eq!(v.i64_at("a"), Some(2));
+        assert_eq!(v.i64_at("b"), Some(3));
+    }
+
+    #[test]
+    fn entry_map_creates_nested() {
+        let mut v = Value::map();
+        v.entry_map("metadata").set("name", Value::from("x"));
+        assert_eq!(v.str_at("metadata.name"), Some("x"));
+    }
+
+    #[test]
+    fn coerce_string_renders_scalars() {
+        assert_eq!(Value::Int(5).coerce_string().unwrap(), "5");
+        assert_eq!(Value::Bool(true).coerce_string().unwrap(), "true");
+        assert!(Value::Seq(vec![]).coerce_string().is_none());
+    }
+}

@@ -1,0 +1,667 @@
+//! Indentation-based YAML-subset parser (see module docs for the subset).
+
+use super::Value;
+
+/// Parse error with 1-based line information.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err<T>(line: usize, message: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError { line, message: message.into() })
+}
+
+/// A logical line: indentation, content (comments stripped), line number.
+struct Line {
+    indent: usize,
+    text: String,
+    num: usize,
+}
+
+/// Strip a trailing comment that is not inside quotes.
+fn strip_comment(s: &str) -> &str {
+    let bytes = s.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'\\' if in_double => i += 1,
+            b'#' if !in_single && !in_double => {
+                // YAML requires '#' to be preceded by whitespace (or BOL).
+                if i == 0 || bytes[i - 1] == b' ' || bytes[i - 1] == b'\t' {
+                    return &s[..i];
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    s
+}
+
+fn logical_lines(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line {
+            indent,
+            text: trimmed.trim_start().to_string(),
+            num: idx + 1,
+        });
+    }
+    out
+}
+
+/// Parse a single-document source (the first document if several).
+pub fn parse_one(src: &str) -> Result<Value, ParseError> {
+    let docs = parse_all(src)?;
+    Ok(docs.into_iter().next().unwrap_or(Value::Null))
+}
+
+/// Parse a multi-document source split on `---` lines.
+pub fn parse_all(src: &str) -> Result<Vec<Value>, ParseError> {
+    let mut docs = Vec::new();
+    let mut current = String::new();
+    let mut line_offset = 0usize;
+    let mut starts = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        let t = line.trim();
+        if t == "---" || t.starts_with("--- ") {
+            starts.push((std::mem::take(&mut current), line_offset));
+            line_offset = i + 1;
+            if t.len() > 4 {
+                current.push_str(&line[line.find("--- ").unwrap() + 4..]);
+                current.push('\n');
+            }
+        } else {
+            current.push_str(line);
+            current.push('\n');
+        }
+    }
+    starts.push((current, line_offset));
+    for (chunk, _offset) in starts {
+        if chunk.trim().is_empty() {
+            continue;
+        }
+        let lines = logical_lines(&chunk);
+        if lines.is_empty() {
+            continue;
+        }
+        let mut parser = Parser { lines, pos: 0 };
+        let value = parser.parse_block(0)?;
+        if parser.pos < parser.lines.len() {
+            let l = &parser.lines[parser.pos];
+            return err(l.num, format!("unexpected content: {:?}", l.text));
+        }
+        docs.push(value);
+    }
+    Ok(docs)
+}
+
+struct Parser {
+    lines: Vec<Line>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Line> {
+        self.lines.get(self.pos)
+    }
+
+    /// Parse a block node whose lines are indented at least `min_indent`.
+    fn parse_block(&mut self, min_indent: usize) -> Result<Value, ParseError> {
+        let first = match self.peek() {
+            Some(l) if l.indent >= min_indent => l,
+            _ => return Ok(Value::Null),
+        };
+        let indent = first.indent;
+        if first.text.starts_with("- ") || first.text == "-" {
+            self.parse_seq(indent)
+        } else if looks_like_map_entry(&first.text) {
+            self.parse_map(indent)
+        } else {
+            // A bare scalar or flow collection (single line).
+            let line = &self.lines[self.pos];
+            let v = parse_flow_or_scalar(&line.text, line.num)?;
+            self.pos += 1;
+            Ok(v)
+        }
+    }
+
+    fn parse_seq(&mut self, indent: usize) -> Result<Value, ParseError> {
+        let mut items = Vec::new();
+        while let Some(l) = self.peek() {
+            if l.indent != indent || !(l.text.starts_with("- ") || l.text == "-") {
+                if l.indent > indent {
+                    return err(l.num, "bad indentation in sequence");
+                }
+                break;
+            }
+            let num = l.num;
+            let rest = if l.text == "-" { "" } else { &l.text[2..] }.to_string();
+            self.pos += 1;
+            if rest.is_empty() {
+                // Nested block on following lines.
+                items.push(self.parse_block(indent + 1)?);
+            } else if rest.starts_with("- ") || rest == "-" {
+                // Nested sequence starting inline: `- - item`.
+                let entry_indent = indent + 2;
+                self.lines.insert(
+                    self.pos,
+                    Line { indent: entry_indent, text: rest, num },
+                );
+                items.push(self.parse_seq(entry_indent)?);
+            } else if looks_like_map_entry(&rest) {
+                // Inline first entry of a mapping: `- name: x`.
+                // Rewrite as a map whose first line is the rest, at a
+                // virtual indent of indent+2.
+                let entry_indent = indent + 2;
+                self.lines.insert(
+                    self.pos,
+                    Line { indent: entry_indent, text: rest, num },
+                );
+                items.push(self.parse_map(entry_indent)?);
+            } else {
+                items.push(parse_flow_or_scalar(&rest, num)?);
+            }
+        }
+        Ok(Value::Seq(items))
+    }
+
+    fn parse_map(&mut self, indent: usize) -> Result<Value, ParseError> {
+        let mut entries: Vec<(String, Value)> = Vec::new();
+        while let Some(l) = self.peek() {
+            if l.indent != indent {
+                if l.indent > indent {
+                    return err(l.num, "bad indentation in mapping");
+                }
+                break;
+            }
+            let num = l.num;
+            let text = l.text.clone();
+            let (key, rest) = split_map_entry(&text, num)?;
+            if entries.iter().any(|(k, _)| *k == key) {
+                return err(num, format!("duplicate key {key:?}"));
+            }
+            self.pos += 1;
+            let value = if rest.is_empty() {
+                // Value is a nested block (or null).
+                match self.peek() {
+                    Some(next) if next.indent > indent => {
+                        self.parse_block(indent + 1)?
+                    }
+                    // `key:` followed by a sequence at the same indent is
+                    // also valid YAML.
+                    Some(next)
+                        if next.indent == indent
+                            && (next.text.starts_with("- ")
+                                || next.text == "-") =>
+                    {
+                        self.parse_seq(indent)?
+                    }
+                    _ => Value::Null,
+                }
+            } else if rest == "|" || rest == "|-" || rest == ">" || rest == ">-" {
+                self.parse_block_scalar(indent, &rest)?
+            } else {
+                parse_flow_or_scalar(&rest, num)?
+            };
+            entries.push((key, value));
+        }
+        Ok(Value::Map(entries))
+    }
+
+    /// Literal (`|`) and folded (`>`) block scalars with optional strip.
+    fn parse_block_scalar(
+        &mut self,
+        indent: usize,
+        style: &str,
+    ) -> Result<Value, ParseError> {
+        let mut lines = Vec::new();
+        while let Some(l) = self.peek() {
+            if l.indent <= indent {
+                break;
+            }
+            lines.push(l.text.clone());
+            self.pos += 1;
+        }
+        let mut s = if style.starts_with('|') {
+            lines.join("\n")
+        } else {
+            lines.join(" ")
+        };
+        if !style.ends_with('-') {
+            s.push('\n');
+        }
+        Ok(Value::Str(s))
+    }
+}
+
+/// True if the line starts a `key: ...` mapping entry.
+fn looks_like_map_entry(text: &str) -> bool {
+    split_map_entry(text, 0).is_ok()
+}
+
+/// Split `key: value` respecting quoted keys. Returns (key, rest).
+fn split_map_entry(text: &str, num: usize) -> Result<(String, String), ParseError> {
+    let bytes = text.as_bytes();
+    let (key, after) = if bytes[0] == b'"' || bytes[0] == b'\'' {
+        let quote = bytes[0];
+        let mut i = 1;
+        while i < bytes.len() && bytes[i] != quote {
+            if quote == b'"' && bytes[i] == b'\\' {
+                i += 1;
+            }
+            i += 1;
+        }
+        if i >= bytes.len() {
+            return err(num, "unterminated quoted key");
+        }
+        // A quoted key must be followed by ':' — otherwise this line is
+        // a plain quoted scalar, not a mapping entry.
+        let after = text[i + 1..].trim_start();
+        if !after.starts_with(':') {
+            return err(num, "quoted scalar, not a mapping entry");
+        }
+        (unquote(&text[..=i], num)?, &text[i + 1..])
+    } else {
+        // Find a ':' that is followed by space/EOL and not inside flow.
+        let mut depth = 0i32;
+        let mut split = None;
+        for (i, &b) in bytes.iter().enumerate() {
+            match b {
+                b'{' | b'[' => depth += 1,
+                b'}' | b']' => depth -= 1,
+                b':' if depth == 0 => {
+                    if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                        split = Some(i);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        match split {
+            Some(i) => (text[..i].trim().to_string(), &text[i + 1..]),
+            None => return err(num, format!("not a mapping entry: {text:?}")),
+        }
+    };
+    let after = after.trim_start();
+    let after = if let Some(stripped) = after.strip_prefix(':') {
+        stripped.trim_start()
+    } else {
+        after
+    };
+    Ok((key, after.trim().to_string()))
+}
+
+fn unquote(s: &str, num: usize) -> Result<String, ParseError> {
+    let bytes = s.as_bytes();
+    if bytes.len() < 2 {
+        return err(num, "bad quoted string");
+    }
+    let quote = bytes[0];
+    let inner = &s[1..s.len() - 1];
+    if quote == b'\'' {
+        return Ok(inner.replace("''", "'"));
+    }
+    // Double-quoted: handle common escapes.
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('0') => out.push('\0'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => return err(num, "dangling escape"),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a value that may be flow syntax (`{..}` / `[..]`) or a scalar.
+pub(super) fn parse_flow_or_scalar(s: &str, num: usize) -> Result<Value, ParseError> {
+    let t = s.trim();
+    if t.starts_with('{') || t.starts_with('[') {
+        let mut p = FlowParser { src: t.as_bytes(), pos: 0, num };
+        let v = p.parse_value()?;
+        p.skip_ws();
+        if p.pos != t.len() {
+            return err(num, "trailing characters after flow value");
+        }
+        return Ok(v);
+    }
+    parse_scalar_checked(t, num)
+}
+
+fn parse_scalar_checked(t: &str, num: usize) -> Result<Value, ParseError> {
+    if t.starts_with('&') || t.starts_with('*') {
+        return err(num, "YAML anchors/aliases are not supported");
+    }
+    Ok(parse_scalar(t, num)?)
+}
+
+/// Plain scalar typing rules (null / bool / int / float / string).
+fn parse_scalar(t: &str, num: usize) -> Result<Value, ParseError> {
+    if t.is_empty() || t == "~" || t == "null" || t == "Null" || t == "NULL" {
+        return Ok(Value::Null);
+    }
+    if t.starts_with('"') || t.starts_with('\'') {
+        return Ok(Value::Str(unquote(t, num)?));
+    }
+    match t {
+        "true" | "True" | "TRUE" => return Ok(Value::Bool(true)),
+        "false" | "False" | "FALSE" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        // Leading zeros (e.g. "007") stay strings, like YAML 1.2 core.
+        if !(t.len() > 1 && (t.starts_with('0') || t.starts_with("-0"))) {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        if t.contains('.') || t.contains('e') || t.contains('E') {
+            return Ok(Value::Float(f));
+        }
+    }
+    Ok(Value::Str(t.to_string()))
+}
+
+/// Minimal flow-syntax parser for `{...}` and `[...]`.
+struct FlowParser<'a> {
+    src: &'a [u8],
+    pos: usize,
+    num: usize,
+}
+
+impl<'a> FlowParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.src.len()
+            && (self.src[self.pos] == b' ' || self.src[self.pos] == b'\t')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn parse_value(&mut self) -> Result<Value, ParseError> {
+        self.skip_ws();
+        match self.src.get(self.pos) {
+            Some(b'{') => self.parse_flow_map(),
+            Some(b'[') => self.parse_flow_seq(),
+            Some(b'"') | Some(b'\'') => {
+                let s = self.take_quoted()?;
+                Ok(Value::Str(s))
+            }
+            Some(_) => {
+                let num = self.num;
+                let t = self.take_plain().trim().to_string();
+                parse_scalar(&t, num)
+            }
+            None => err(self.num, "unexpected end of flow value"),
+        }
+    }
+
+    fn parse_flow_map(&mut self) -> Result<Value, ParseError> {
+        self.pos += 1; // '{'
+        let mut entries = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.src.get(self.pos) {
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Map(entries));
+                }
+                None => return err(self.num, "unterminated flow map"),
+                _ => {}
+            }
+            let key = match self.src.get(self.pos) {
+                Some(b'"') | Some(b'\'') => self.take_quoted()?,
+                _ => {
+                    let start = self.pos;
+                    while self.pos < self.src.len()
+                        && self.src[self.pos] != b':'
+                        && self.src[self.pos] != b'}'
+                    {
+                        self.pos += 1;
+                    }
+                    std::str::from_utf8(&self.src[start..self.pos])
+                        .unwrap()
+                        .trim()
+                        .to_string()
+                }
+            };
+            self.skip_ws();
+            if self.src.get(self.pos) != Some(&b':') {
+                return err(self.num, "expected ':' in flow map");
+            }
+            self.pos += 1;
+            let value = self.parse_value()?;
+            entries.push((key, value));
+            self.skip_ws();
+            match self.src.get(self.pos) {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {}
+                _ => return err(self.num, "expected ',' or '}' in flow map"),
+            }
+        }
+    }
+
+    fn parse_flow_seq(&mut self) -> Result<Value, ParseError> {
+        self.pos += 1; // '['
+        let mut items = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.src.get(self.pos) {
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Seq(items));
+                }
+                None => return err(self.num, "unterminated flow sequence"),
+                _ => {}
+            }
+            items.push(self.parse_value()?);
+            self.skip_ws();
+            match self.src.get(self.pos) {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {}
+                _ => return err(self.num, "expected ',' or ']' in flow seq"),
+            }
+        }
+    }
+
+    fn take_quoted(&mut self) -> Result<String, ParseError> {
+        let quote = self.src[self.pos];
+        let start = self.pos;
+        self.pos += 1;
+        while self.pos < self.src.len() && self.src[self.pos] != quote {
+            if quote == b'"' && self.src[self.pos] == b'\\' {
+                self.pos += 1;
+            }
+            self.pos += 1;
+        }
+        if self.pos >= self.src.len() {
+            return err(self.num, "unterminated quoted string");
+        }
+        self.pos += 1;
+        unquote(
+            std::str::from_utf8(&self.src[start..self.pos]).unwrap(),
+            self.num,
+        )
+    }
+
+    fn take_plain(&mut self) -> &str {
+        let start = self.pos;
+        while self.pos < self.src.len()
+            && !matches!(self.src[self.pos], b',' | b']' | b'}')
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.src[start..self.pos]).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pod_manifest() {
+        let src = r#"
+apiVersion: v1
+kind: Pod
+metadata:
+  name: demo
+  labels:
+    app: web
+spec:
+  containers:
+  - name: main
+    image: nginx:1.25
+    command: ["nginx", "-g", "daemon off;"]
+    resources:
+      requests:
+        cpu: 2
+        memory: 4Gi
+"#;
+        let v = parse_one(src).unwrap();
+        assert_eq!(v.str_at("kind"), Some("Pod"));
+        assert_eq!(v.str_at("metadata.labels.app"), Some("web"));
+        assert_eq!(v.str_at("spec.containers.0.image"), Some("nginx:1.25"));
+        let cmd = v.path("spec.containers.0.command").unwrap().as_seq().unwrap();
+        assert_eq!(cmd.len(), 3);
+        assert_eq!(v.i64_at("spec.containers.0.resources.requests.cpu"), Some(2));
+        assert_eq!(
+            v.str_at("spec.containers.0.resources.requests.memory"),
+            Some("4Gi")
+        );
+    }
+
+    #[test]
+    fn parses_listing2_folded_scalar() {
+        // The paper's Listing 2 uses `>-` for the annotation value.
+        let src = "metadata:\n  annotations:\n    slurm-job.hpk.io/flags: >-\n      --ntasks=4\n      --exclusive\n";
+        let v = parse_one(src).unwrap();
+        // NB: annotation keys contain dots, so use get(), not path().
+        let flags = v
+            .path("metadata.annotations")
+            .and_then(|a| a.get("slurm-job.hpk.io/flags"))
+            .and_then(|f| f.as_str());
+        assert_eq!(flags, Some("--ntasks=4 --exclusive"));
+    }
+
+    #[test]
+    fn literal_block_scalar_keeps_newlines() {
+        let src = "script: |\n  line one\n  line two\n";
+        let v = parse_one(src).unwrap();
+        assert_eq!(v.str_at("script"), Some("line one\nline two\n"));
+    }
+
+    #[test]
+    fn multi_document() {
+        let docs = parse_all("a: 1\n---\nb: 2\n---\nc: 3\n").unwrap();
+        assert_eq!(docs.len(), 3);
+        assert_eq!(docs[1].i64_at("b"), Some(2));
+    }
+
+    #[test]
+    fn comments_stripped_quotes_respected() {
+        let v = parse_one("a: \"x # not comment\" # comment\nb: 2\n").unwrap();
+        assert_eq!(v.str_at("a"), Some("x # not comment"));
+        assert_eq!(v.i64_at("b"), Some(2));
+    }
+
+    #[test]
+    fn scalar_typing() {
+        let v = parse_one(
+            "i: 42\nneg: -3\nf: 1.5\nb: true\nn: null\ns: hello\nz: 007\nport: \"8080\"\n",
+        )
+        .unwrap();
+        assert_eq!(v.path("i"), Some(&Value::Int(42)));
+        assert_eq!(v.path("neg"), Some(&Value::Int(-3)));
+        assert_eq!(v.path("f"), Some(&Value::Float(1.5)));
+        assert_eq!(v.path("b"), Some(&Value::Bool(true)));
+        assert_eq!(v.path("n"), Some(&Value::Null));
+        assert_eq!(v.str_at("s"), Some("hello"));
+        assert_eq!(v.str_at("z"), Some("007")); // leading zero stays string
+        assert_eq!(v.str_at("port"), Some("8080"));
+    }
+
+    #[test]
+    fn seq_of_scalars_and_nested_seq() {
+        let v = parse_one("items:\n- 2\n- 4\n- 8\n- 16\n").unwrap();
+        let items = v.path("items").unwrap().as_seq().unwrap();
+        assert_eq!(items.len(), 4);
+        assert_eq!(items[3], Value::Int(16));
+    }
+
+    #[test]
+    fn withitems_inline_flow() {
+        let v =
+            parse_one("withItems: [{name: a, cpus: 2}, {name: b, cpus: 4}]\n")
+                .unwrap();
+        let items = v.path("withItems").unwrap().as_seq().unwrap();
+        assert_eq!(items[1].i64_at("cpus"), Some(4));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse_one("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn anchors_rejected() {
+        assert!(parse_one("a: &anchor 1\n").is_err());
+    }
+
+    #[test]
+    fn key_with_slash_and_dots() {
+        let v = parse_one("slurm-job.hpk.io/mpi-flags: \"-x LD_PRELOAD\"\n").unwrap();
+        assert_eq!(
+            v.get("slurm-job.hpk.io/mpi-flags").and_then(|f| f.as_str()),
+            Some("-x LD_PRELOAD")
+        );
+    }
+
+    #[test]
+    fn empty_value_is_null_then_sibling() {
+        let v = parse_one("a:\nb: 1\n").unwrap();
+        assert_eq!(v.path("a"), Some(&Value::Null));
+        assert_eq!(v.i64_at("b"), Some(1));
+    }
+
+    #[test]
+    fn seq_at_same_indent_as_key() {
+        let v = parse_one("tasks:\n- name: t1\n- name: t2\n").unwrap();
+        assert_eq!(v.path("tasks").unwrap().as_seq().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,62 @@
+//! Structural helpers: JSON-merge-patch-style updates used by the API
+//! server's PATCH verb and by admission mutation.
+
+use super::Value;
+
+/// RFC 7386-style merge patch: maps merge recursively, `Null` deletes,
+/// everything else replaces.
+pub fn merge_patch(target: &mut Value, patch: &Value) {
+    match patch {
+        Value::Map(patch_entries) => {
+            if !matches!(target, Value::Map(_)) {
+                *target = Value::map();
+            }
+            for (k, pv) in patch_entries {
+                match pv {
+                    Value::Null => {
+                        target.remove(k);
+                    }
+                    Value::Map(_) => {
+                        let slot = target.entry_map(k);
+                        merge_patch(slot, pv);
+                    }
+                    other => target.set(k, other.clone()),
+                }
+            }
+        }
+        other => *target = other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_one;
+    use super::*;
+
+    #[test]
+    fn merge_adds_and_overwrites() {
+        let mut t = parse_one("a: 1\nb:\n  c: 2\n").unwrap();
+        let p = parse_one("b:\n  d: 3\ne: 4\n").unwrap();
+        merge_patch(&mut t, &p);
+        assert_eq!(t.i64_at("a"), Some(1));
+        assert_eq!(t.i64_at("b.c"), Some(2));
+        assert_eq!(t.i64_at("b.d"), Some(3));
+        assert_eq!(t.i64_at("e"), Some(4));
+    }
+
+    #[test]
+    fn null_deletes() {
+        let mut t = parse_one("a: 1\nb: 2\n").unwrap();
+        let p = parse_one("b: null\n").unwrap();
+        merge_patch(&mut t, &p);
+        assert!(t.get("b").is_none());
+    }
+
+    #[test]
+    fn seq_replaces_wholesale() {
+        let mut t = parse_one("xs:\n- 1\n- 2\n").unwrap();
+        let p = parse_one("xs:\n- 9\n").unwrap();
+        merge_patch(&mut t, &p);
+        assert_eq!(t.path("xs").unwrap().as_seq().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,253 @@
+//! SS4.2 end-to-end: Argo Workflows on HPK, including the Listing-2
+//! MPI parameter sweep with per-step Slurm `--ntasks` annotations.
+
+use hpk::testbed;
+
+/// Paper Listing 2, adapted only in EP class (scaled-down sample count).
+fn listing2_workflow(ntasks: &[u32]) -> String {
+    let items = ntasks
+        .iter()
+        .map(|n| format!("        - {n}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    format!(
+        r#"kind: Workflow
+metadata:
+  name: npb-sweep
+spec:
+  entrypoint: npb-with-mpi
+  templates:
+  - name: npb-with-mpi
+    dag:
+      tasks:
+      - name: A
+        template: npb
+        arguments:
+          parameters:
+          - {{name: cpus, value: "{{{{item}}}}"}}
+        withItems:
+{items}
+  - name: npb
+    metadata:
+      annotations:
+        slurm-job.hpk.io/flags: >-
+          --ntasks={{{{inputs.parameters.cpus}}}}
+        slurm-job.hpk.io/mpi-flags: "-x HPK"
+    inputs:
+      parameters:
+      - name: cpus
+    container:
+      image: mpi-npb:latest
+      command: ["ep.S.{{{{inputs.parameters.cpus}}}}"]
+      env:
+      - name: EP_OUT_DIR
+        value: "/home/user/ep-results/{{{{inputs.parameters.cpus}}}}"
+"#
+    )
+}
+
+#[test]
+fn listing2_mpi_sweep_runs_with_ntasks() {
+    let tb = testbed::deploy(4, 8);
+    tb.cp
+        .kubectl_apply(&listing2_workflow(&[2, 4, 8]))
+        .unwrap();
+    assert!(
+        tb.cp.wait_until(60_000, |api| {
+            api.get("Workflow", "default", "npb-sweep")
+                .ok()
+                .and_then(|w| w.str_at("status.phase").map(|p| p == "Succeeded"))
+                .unwrap_or(false)
+        }),
+        "workflow did not succeed: {:?}",
+        tb.cp
+            .api
+            .get("Workflow", "default", "npb-sweep")
+            .ok()
+            .and_then(|w| w.path("status").cloned())
+    );
+
+    // Each step became a Slurm job with the annotated --ntasks.
+    let acct = tb.cp.slurm.sacct();
+    let mut seen = Vec::new();
+    for r in &acct {
+        if r.comment.contains("npb-sweep") {
+            seen.push(r.alloc_cpus);
+        }
+    }
+    seen.sort();
+    assert_eq!(seen, vec![2, 4, 8], "sacct alloc cpus per sweep step");
+
+    // Every rank of every step wrote its partial tally; aggregate EP
+    // results are identical across ntasks (same total sample space).
+    let mut totals = Vec::new();
+    for n in [2u32, 4, 8] {
+        let mut accepted = 0u64;
+        for rank in 0..n {
+            let line = tb
+                .cp
+                .fs
+                .read_str(&format!("/home/user/ep-results/{n}/rank-{rank}.txt"))
+                .unwrap_or_else(|e| panic!("rank file {n}/{rank}: {e}"));
+            accepted += line
+                .split_whitespace()
+                .next()
+                .unwrap()
+                .parse::<u64>()
+                .unwrap();
+        }
+        totals.push(accepted);
+    }
+    assert_eq!(totals[0], totals[1], "EP tally independent of ntasks");
+    assert_eq!(totals[1], totals[2]);
+    tb.shutdown();
+}
+
+#[test]
+fn argo_feature_matrix_runs_unmodified() {
+    // The repo examples the paper cites: dag deps, steps groups, nested
+    // dags, withItems over maps, parameters -- one workflow exercising
+    // all of them.
+    let tb = testbed::deploy(2, 8);
+    let wf = r#"
+kind: Workflow
+metadata:
+  name: features
+spec:
+  entrypoint: main
+  arguments:
+    parameters:
+    - {name: greeting, value: hello}
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: prep, template: hello}
+      - name: fan
+        template: hello
+        dependencies: [prep]
+        withItems:
+        - {who: a}
+        - {who: b}
+      - {name: inner, template: sub, dependencies: [fan]}
+  - name: sub
+    steps:
+    - - {name: s1, template: hello}
+      - {name: s2, template: hello}
+    - - {name: s3, template: hello}
+  - name: hello
+    container:
+      image: busybox:latest
+      command: ["echo", "{{workflow.parameters.greeting}}"]
+"#;
+    tb.cp.kubectl_apply(wf).unwrap();
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.get("Workflow", "default", "features")
+            .ok()
+            .and_then(|w| w.str_at("status.phase").map(|p| p == "Succeeded"))
+            .unwrap_or(false)
+    }));
+    let wf = tb.cp.api.get("Workflow", "default", "features").unwrap();
+    assert_eq!(wf.str_at("status.progress"), Some("6/6"));
+    tb.shutdown();
+}
+
+#[test]
+fn workflow_step_failure_propagates() {
+    let tb = testbed::deploy(2, 4);
+    let wf = r#"
+kind: Workflow
+metadata:
+  name: failing
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: boom, template: bad}
+      - {name: after, template: ok, dependencies: [boom]}
+  - name: bad
+    container:
+      image: busybox:latest
+      command: ["false"]
+  - name: ok
+    container:
+      image: busybox:latest
+"#;
+    tb.cp.kubectl_apply(wf).unwrap();
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.get("Workflow", "default", "failing")
+            .ok()
+            .and_then(|w| w.str_at("status.phase").map(|p| p == "Failed"))
+            .unwrap_or(false)
+    }));
+    // The dependent step never ran.
+    assert!(tb.cp.api.get("Pod", "default", "failing-main-after").is_err());
+    tb.shutdown();
+}
+
+#[test]
+fn with_param_fans_out_over_step_outputs() {
+    // "The 'items' used may be explicitly set or be dynamically
+    // generated as the output of a previous step" (SS4.2).
+    let tb = testbed::deploy(2, 8);
+    // An image that emits its items list as step outputs.
+    tb.cp.runtime.registry.register(
+        hpk::apptainer::ImageSpec::new("emitter:latest", "emitter").with_size(1 << 20),
+    );
+    tb.cp.runtime.table.register("emitter", |ctx| {
+        let ns = ctx.env_or("POD_NAMESPACE", "default");
+        let pod = ctx.env_or("POD_NAME", "");
+        ctx.fs
+            .write_str(
+                &format!("/home/user/.hpk/{ns}/{pod}/outputs/result.json"),
+                "[\"alpha\", \"beta\", \"gamma\"]",
+            )
+            .map_err(|e| e.to_string())?;
+        Ok(0)
+    });
+    tb.cp
+        .kubectl_apply(
+            r#"kind: Workflow
+metadata:
+  name: dynamic
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - {name: gen, template: gen}
+      - name: fan
+        template: consume
+        dependencies: [gen]
+        withParam: "{{tasks.gen.outputs.result}}"
+  - name: gen
+    container:
+      image: emitter:latest
+  - name: consume
+    container:
+      image: busybox:latest
+      command: ["echo", "{{item}}"]
+"#,
+        )
+        .unwrap();
+    assert!(
+        tb.cp.wait_until(60_000, |api| {
+            api.get("Workflow", "default", "dynamic")
+                .ok()
+                .and_then(|w| w.str_at("status.phase").map(|p| p == "Succeeded"))
+                .unwrap_or(false)
+        }),
+        "dynamic workflow: {:?}",
+        tb.cp
+            .api
+            .get("Workflow", "default", "dynamic")
+            .ok()
+            .and_then(|w| w.path("status").cloned())
+    );
+    let wf = tb.cp.api.get("Workflow", "default", "dynamic").unwrap();
+    assert_eq!(wf.str_at("status.progress"), Some("4/4"), "1 gen + 3 fan-out");
+    tb.shutdown();
+}

@@ -1,0 +1,184 @@
+//! Core HPK integration: the SS3 compatibility & compliance claims.
+
+use hpk::kube::object;
+use hpk::testbed;
+
+#[test]
+fn deployments_services_jobs_volumes_all_work() {
+    let tb = testbed::deploy(3, 8);
+    // One manifest exercising the base abstractions the paper lists:
+    // deployments, services, jobs, volumes (PVC via OpenEBS class).
+    tb.cp
+        .kubectl_apply(
+            r#"kind: Deployment
+metadata:
+  name: web
+spec:
+  replicas: 3
+  selector:
+    matchLabels:
+      app: web
+  template:
+    metadata:
+      labels:
+        app: web
+    spec:
+      containers:
+      - name: main
+        image: pause:3.9
+---
+kind: Service
+metadata:
+  name: web
+spec:
+  clusterIP: 10.96.0.10
+  selector:
+    app: web
+  ports:
+  - port: 80
+---
+kind: Job
+metadata:
+  name: once
+spec:
+  template:
+    spec:
+      containers:
+      - name: main
+        image: busybox:latest
+        command: ["echo", "done"]
+---
+kind: PersistentVolumeClaim
+metadata:
+  name: scratch
+spec:
+  storageClassName: nvme-local
+  resources:
+    requests:
+      storage: 5Gi
+"#,
+        )
+        .unwrap();
+
+    // Deployment: 3 running pods, visible in Slurm.
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.list("Pod")
+            .iter()
+            .filter(|p| {
+                object::pod_phase(p) == "Running"
+                    && object::name(p).starts_with("web-")
+            })
+            .count()
+            == 3
+    }));
+    assert!(tb.cp.slurm.squeue().len() >= 3);
+
+    // Admission forced the service headless; DNS serves pod IPs.
+    let svc = tb.cp.api.get("Service", "default", "web").unwrap();
+    assert_eq!(svc.str_at("spec.clusterIP"), Some("None"));
+    assert!(tb
+        .cp
+        .wait_until(30_000, |_| tb.cp.dns.resolve("web").len() == 3));
+
+    // Job completed.
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.get("Job", "default", "once")
+            .ok()
+            .and_then(|j| j.str_at("status.state").map(|s| s == "Complete"))
+            .unwrap_or(false)
+    }));
+
+    // PVC bound by the storage controller.
+    assert!(tb.cp.wait_until(30_000, |api| {
+        api.get("PersistentVolumeClaim", "default", "scratch")
+            .ok()
+            .and_then(|p| p.str_at("status.phase").map(|s| s == "Bound"))
+            .unwrap_or(false)
+    }));
+
+    // Scale to zero -> queue drains (jobs cancelled via scancel).
+    let mut dep = tb.cp.api.get("Deployment", "default", "web").unwrap();
+    dep.entry_map("spec").set("replicas", hpk::Value::Int(0));
+    tb.cp.api.update(dep).unwrap();
+    assert!(tb
+        .cp
+        .wait_until(60_000, |_| tb.cp.slurm.squeue().is_empty()));
+    assert_eq!(tb.cp.runtime.cni.live_count(), 0, "no leaked pod IPs");
+    tb.shutdown();
+}
+
+#[test]
+fn nodeport_services_rejected_per_paper() {
+    let tb = testbed::deploy(1, 4);
+    let err = tb
+        .cp
+        .kubectl_apply(
+            "kind: Service\nmetadata:\n  name: np\nspec:\n  type: NodePort\n  ports:\n  - port: 80\n",
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("NodePort"));
+    tb.shutdown();
+}
+
+#[test]
+fn rbac_like_namespacing_isolates_workloads() {
+    let tb = testbed::deploy(2, 8);
+    tb.cp
+        .kubectl_apply(
+            "kind: Pod\nmetadata:\n  name: a\n  namespace: team1\nspec:\n  containers:\n  - name: c\n    image: pause:3.9\n---\nkind: Pod\nmetadata:\n  name: a\n  namespace: team2\nspec:\n  containers:\n  - name: c\n    image: pause:3.9\n",
+        )
+        .unwrap();
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.list("Pod")
+            .iter()
+            .filter(|p| object::pod_phase(p) == "Running")
+            .count()
+            == 2
+    }));
+    // Same name, different namespaces, distinct Slurm jobs.
+    let q = tb.cp.slurm.squeue();
+    let comments: Vec<&str> = q.iter().map(|j| j.comment.as_str()).collect();
+    assert!(comments.contains(&"team1/a"));
+    assert!(comments.contains(&"team2/a"));
+    tb.shutdown();
+}
+
+#[test]
+fn pod_failure_is_reported_with_reason() {
+    let tb = testbed::deploy(1, 4);
+    tb.cp
+        .kubectl_apply(
+            "kind: Pod\nmetadata:\n  name: crash\nspec:\n  containers:\n  - name: main\n    image: busybox:latest\n    command: [\"false\"]\n",
+        )
+        .unwrap();
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.get("Pod", "default", "crash")
+            .ok()
+            .map(|p| object::pod_phase(&p) == "Failed")
+            .unwrap_or(false)
+    }));
+    let pod = tb.cp.api.get("Pod", "default", "crash").unwrap();
+    assert!(pod.str_at("status.reason").is_some());
+    tb.shutdown();
+}
+
+#[test]
+fn time_limit_annotation_enforced_by_slurm() {
+    let tb = testbed::deploy(1, 4);
+    tb.cp
+        .kubectl_apply(
+            "kind: Pod\nmetadata:\n  name: limited\n  annotations:\n    slurm-job.hpk.io/flags: \"--time=0:0:2\"\nspec:\n  containers:\n  - name: main\n    image: pause:3.9\n",
+        )
+        .unwrap();
+    // 2 simulated seconds @ scale 100 = ~20ms real; the pause container
+    // would run forever, so Slurm must kill it.
+    assert!(tb.cp.wait_until(60_000, |api| {
+        api.get("Pod", "default", "limited")
+            .ok()
+            .map(|p| object::pod_phase(&p) == "Failed")
+            .unwrap_or(false)
+    }));
+    let pod = tb.cp.api.get("Pod", "default", "limited").unwrap();
+    assert_eq!(pod.str_at("status.reason"), Some("DeadlineExceeded"));
+    tb.shutdown();
+}

@@ -1,0 +1,120 @@
+//! SS4.1 end-to-end: Spark TPC-DS through HPK.
+//!
+//! Reproduces the paper's flow: helm-install the Spark Operator + MinIO
+//! (service name `spark-k8s-data`, as the benchmark YAMLs require),
+//! submit the data-generation SparkApplication, then the benchmark
+//! SparkApplication — all pods travel Kubernetes -> hpk-kubelet ->
+//! Slurm -> Apptainer.
+
+use hpk::kube::object;
+use hpk::operators::spark::operator::spark_application_manifest;
+use hpk::testbed;
+
+fn wait_app_state(tb: &testbed::Testbed, name: &str, state: &str, ms: u64) -> bool {
+    tb.cp.wait_until(ms, |api| {
+        api.get("SparkApplication", "default", name)
+            .ok()
+            .and_then(|a| {
+                a.str_at("status.applicationState.state").map(|s| s == state)
+            })
+            .unwrap_or(false)
+    })
+}
+
+#[test]
+fn tpcds_datagen_and_benchmark_run_on_hpk() {
+    let tb = testbed::deploy(4, 8);
+    tb.install_minio("spark-k8s-data").unwrap();
+
+    // Phase 1: data generation (Listing 1's first SparkApplication).
+    tb.cp
+        .kubectl_apply(&spark_application_manifest(
+            "tpcds-datagen-1g",
+            "default",
+            "datagen",
+            1,
+            8,
+            "",
+            3,
+            1,
+            "1Gi",
+        ))
+        .unwrap();
+    assert!(
+        wait_app_state(&tb, "tpcds-datagen-1g", "COMPLETED", 60_000),
+        "datagen did not complete"
+    );
+    let store = tb.object_store("spark-k8s-data").unwrap();
+    assert!(store.get("spark", "tpcds/sf1/_SUCCESS").is_ok());
+    assert_eq!(store.list("spark", "tpcds/sf1/store_sales/").len(), 8);
+
+    // Phase 2: the benchmark queries.
+    tb.cp
+        .kubectl_apply(&spark_application_manifest(
+            "tpcds-benchmark-1g",
+            "default",
+            "benchmark",
+            1,
+            8,
+            "q3,q55,q7",
+            3,
+            1,
+            "1Gi",
+        ))
+        .unwrap();
+    assert!(
+        wait_app_state(&tb, "tpcds-benchmark-1g", "COMPLETED", 60_000),
+        "benchmark did not complete"
+    );
+    for q in ["q3", "q55", "q7"] {
+        let csv = store
+            .get("spark", &format!("results/tpcds-benchmark-1g/{q}.csv"))
+            .unwrap_or_else(|e| panic!("{q}: {e}"));
+        let text = String::from_utf8_lossy(&csv);
+        assert!(text.lines().count() > 1, "{q} result is empty:\n{text}");
+    }
+
+    // Compliance: every pod of the run went through Slurm accounting.
+    let acct = tb.cp.slurm.sacct();
+    assert!(
+        acct.iter().any(|r| r.comment.contains("tpcds-datagen-1g-driver")),
+        "driver job missing from sacct"
+    );
+    let exec_jobs = acct
+        .iter()
+        .filter(|r| r.comment.contains("-exec-"))
+        .count();
+    assert!(exec_jobs >= 6, "expected >=6 executor jobs, saw {exec_jobs}");
+
+    // All spark pods (drivers + executors) terminal; only the MinIO
+    // service pod keeps running.
+    assert!(tb.cp.wait_until(20_000, |api| {
+        api.list("Pod")
+            .iter()
+            .filter(|p| object::name(p).starts_with("tpcds-"))
+            .all(|p| {
+                let ph = object::pod_phase(p);
+                ph == "Succeeded" || ph == "Failed"
+            })
+    }));
+    tb.shutdown();
+}
+
+#[test]
+fn executor_resources_forwarded_to_slurm() {
+    let tb = testbed::deploy(2, 8);
+    tb.install_minio("spark-k8s-data").unwrap();
+    tb.cp
+        .kubectl_apply(&spark_application_manifest(
+            "rsrc", "default", "datagen", 1, 2, "", 2, 2, "3Gi",
+        ))
+        .unwrap();
+    assert!(wait_app_state(&tb, "rsrc", "COMPLETED", 60_000));
+    let acct = tb.cp.slurm.sacct();
+    let exec = acct
+        .iter()
+        .find(|r| r.comment.contains("rsrc-exec-0"))
+        .expect("executor job in sacct");
+    assert_eq!(exec.alloc_cpus, 2, "executor cores forwarded to Slurm");
+    tb.shutdown();
+}
