@@ -9,6 +9,7 @@
 
 use super::translate;
 use crate::kube::api::ApiServer;
+use crate::kube::informer::{SharedInformer, WatchSpec, WorkQueue};
 use crate::kube::object;
 use crate::slurm::{JobId, JobState, Slurmctld};
 use crate::virtfs::VirtFs;
@@ -28,6 +29,11 @@ struct PodBinding {
 }
 
 /// The kubelet; cheap to clone (shared state inside).
+///
+/// Watch-driven on the Kubernetes side: a private informer feeds Pod
+/// keys to the submit path, so translate+sbatch work scales with pod
+/// churn. The Slurm side still walks active bindings (that set is the
+/// kubelet's own working set, not the cluster object count).
 #[derive(Clone)]
 pub struct HpkKubelet {
     api: ApiServer,
@@ -38,6 +44,8 @@ pub struct HpkKubelet {
     shutdown: Arc<AtomicBool>,
     /// Pods translated since boot (metrics).
     translated: Arc<Mutex<u64>>,
+    informer: Arc<SharedInformer>,
+    queue: WorkQueue,
 }
 
 impl HpkKubelet {
@@ -51,6 +59,9 @@ impl HpkKubelet {
             .with_nodes(|ns| ns.iter().map(|n| n.resources.memory_bytes).sum());
         crate::kube::scheduler::register_node(&api, VIRTUAL_NODE, total_cpus, total_mem);
 
+        // Pod-scoped: this informer never caches or indexes other kinds.
+        let informer = Arc::new(SharedInformer::for_kinds(api.clone(), &["Pod"]));
+        let queue = informer.register(vec![WatchSpec::of("Pod")]);
         let kubelet = HpkKubelet {
             api,
             slurm,
@@ -58,6 +69,8 @@ impl HpkKubelet {
             bindings: Arc::new(Mutex::new(HashMap::new())),
             shutdown: Arc::new(AtomicBool::new(false)),
             translated: Arc::new(Mutex::new(0)),
+            informer,
+            queue,
         };
         let k = kubelet.clone();
         std::thread::Builder::new()
@@ -83,12 +96,19 @@ impl HpkKubelet {
 
     /// One reconcile pass (public for deterministic tests/benches).
     pub fn sync_once(&self) {
-        // 1. New pods bound to us -> translate + sbatch.
-        for pod in self.api.list_refs("Pod") {
+        // 1. Changed pods bound to us -> translate + sbatch.
+        self.informer.sync();
+        for key in self.queue.drain() {
+            if key.kind != "Pod" {
+                continue;
+            }
+            let Some(pod) = self.informer.get(&key) else {
+                continue; // deletion: handled via the binding sweep below
+            };
             if pod.str_at("spec.nodeName") != Some(VIRTUAL_NODE) {
                 continue;
             }
-            let full = object::full_name(&pod);
+            let full = key.full_name();
             if self.bindings.lock().unwrap().contains_key(&full) {
                 continue;
             }
@@ -286,7 +306,7 @@ mod tests {
     use crate::hpcsim::{Cluster, ClusterSpec};
     use crate::hpk::executor::ApptainerExecutor;
     use crate::hpk::PassThroughScheduler;
-    use crate::kube::controllers::Reconciler;
+    use crate::kube::controllers::testutil::reconcile_once;
     use crate::slurm::SlurmConfig;
     use crate::yamlkit::parse_one;
 
@@ -361,7 +381,7 @@ mod tests {
     fn pod_runs_through_slurm_to_success() {
         let w = world();
         w.api.create(quick_pod("p1")).unwrap();
-        PassThroughScheduler.reconcile(&w.api);
+        reconcile_once(&w.api, &PassThroughScheduler);
         assert!(wait_phase(&w.api, "default", "p1", "Succeeded", 5000));
         // The pod was visible in Slurm accounting with the ns/name comment.
         let acct = w.slurm.sacct();
@@ -389,7 +409,7 @@ mod tests {
                 .unwrap(),
             )
             .unwrap();
-        PassThroughScheduler.reconcile(&w.api);
+        reconcile_once(&w.api, &PassThroughScheduler);
         assert!(wait_phase(&w.api, "default", "srv", "Running", 5000));
         // IP handshake published.
         let t0 = std::time::Instant::now();
@@ -423,7 +443,7 @@ mod tests {
                 .unwrap(),
             )
             .unwrap();
-        PassThroughScheduler.reconcile(&w.api);
+        reconcile_once(&w.api, &PassThroughScheduler);
         assert!(wait_phase(&w.api, "default", "ghost", "Failed", 5000));
         w.kubelet.shutdown();
         w.slurm.shutdown();
@@ -448,7 +468,7 @@ mod tests {
                 .unwrap(),
             )
             .unwrap();
-        PassThroughScheduler.reconcile(&w.api);
+        reconcile_once(&w.api, &PassThroughScheduler);
         assert!(wait_phase(&w.api, "default", "cfg", "Succeeded", 5000));
         let script = w
             .kubelet
@@ -464,7 +484,7 @@ mod tests {
     fn job_id_annotation_recorded() {
         let w = world();
         w.api.create(quick_pod("p2")).unwrap();
-        PassThroughScheduler.reconcile(&w.api);
+        reconcile_once(&w.api, &PassThroughScheduler);
         assert!(wait_phase(&w.api, "default", "p2", "Succeeded", 5000));
         let pod = w.api.get("Pod", "default", "p2").unwrap();
         assert!(object::annotation(&pod, super::super::annotations::JOB_ID).is_some());

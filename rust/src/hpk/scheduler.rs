@@ -5,9 +5,12 @@
 //! scheduling decisions, but always selects hpk-kubelet to run
 //! workloads" (SS3). Placement intelligence lives entirely in the Slurm
 //! simulator; this controller just binds.
+//!
+//! Event-driven: it processes only queued Pod keys, so binding cost
+//! scales with pod churn, not with the number of objects in the store.
 
-use crate::kube::api::ApiServer;
-use crate::kube::controllers::Reconciler;
+use crate::kube::controllers::{Context, Reconciler};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
 
@@ -18,8 +21,19 @@ impl Reconciler for PassThroughScheduler {
         "hpk-scheduler"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for pod in api.list_refs("Pod") {
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![WatchSpec::of("Pod")]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let pods = ctx.api("Pod");
+        for key in ctx.drain() {
+            if key.kind != "Pod" {
+                continue;
+            }
+            let Some(pod) = ctx.cached(&key) else {
+                continue; // deleted before we got to it
+            };
             if pod.str_at("spec.nodeName").is_some()
                 || object::pod_phase(&pod) != "Pending"
             {
@@ -29,7 +43,7 @@ impl Reconciler for PassThroughScheduler {
             patch
                 .entry_map("spec")
                 .set("nodeName", Value::from(super::VIRTUAL_NODE));
-            let _ = api.patch("Pod", object::namespace(&pod), object::name(&pod), &patch);
+            let _ = pods.patch(&key.namespace, &key.name, &patch);
         }
     }
 }
@@ -37,6 +51,8 @@ impl Reconciler for PassThroughScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kube::api::ApiServer;
+    use crate::kube::controllers::testutil::reconcile_once;
     use crate::yamlkit::parse_one;
 
     #[test]
@@ -51,7 +67,7 @@ mod tests {
             )
             .unwrap();
         }
-        PassThroughScheduler.reconcile(&api);
+        reconcile_once(&api, &PassThroughScheduler);
         for p in api.list("Pod") {
             assert_eq!(p.str_at("spec.nodeName"), Some(super::super::VIRTUAL_NODE));
         }
@@ -65,7 +81,7 @@ mod tests {
                 .unwrap(),
         )
         .unwrap();
-        PassThroughScheduler.reconcile(&api);
+        reconcile_once(&api, &PassThroughScheduler);
         assert!(api
             .get("Pod", "default", "done")
             .unwrap()

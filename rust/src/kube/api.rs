@@ -5,12 +5,17 @@
 //! (Figure 1: "the main interface to the cluster and the synchronization
 //! point for all controllers").
 
+use super::client::ListParams;
 use super::object;
 use super::store::{Store, StoreEvent};
 use crate::util::unique_suffix;
 use crate::yamlkit::{merge_patch, Value};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Attempts a read-modify-write commit makes before giving up with a
+/// Conflict (each retry re-reads the current object).
+const COMMIT_RETRIES: usize = 16;
 
 /// API error surface (maps to HTTP statuses in real Kubernetes).
 #[derive(Debug, Clone, PartialEq)]
@@ -137,19 +142,23 @@ impl ApiServer {
         Ok((kind, namespace, name))
     }
 
-    /// CREATE: defaulting + admission + uniqueness.
+    /// CREATE: defaulting + admission + uniqueness (atomic insert).
     pub fn create(&self, mut obj: Value) -> Result<Value, ApiError> {
         self.run_admission(AdmissionOp::Create, &mut obj)?;
         let (kind, namespace, name) = self.default_metadata(&mut obj)?;
-        if self.store.get(&kind, &namespace, &name).is_some() {
-            return Err(ApiError::AlreadyExists(format!("{kind} {namespace}/{name}")));
-        }
-        self.store.put(&kind, &namespace, &name, obj.clone());
-        Ok(self
+        let mut committed = obj.clone();
+        match self
             .store
-            .get(&kind, &namespace, &name)
-            .map(|a| (*a).clone())
-            .unwrap())
+            .compare_and_put(&kind, &namespace, &name, None, obj)
+        {
+            Ok(rev) => {
+                committed
+                    .entry_map("metadata")
+                    .set("resourceVersion", Value::Int(rev as i64));
+                Ok(committed)
+            }
+            Err(_) => Err(ApiError::AlreadyExists(format!("{kind} {namespace}/{name}"))),
+        }
     }
 
     /// GET by coordinates.
@@ -165,8 +174,9 @@ impl ApiServer {
         self.store.list(kind).iter().map(|a| (**a).clone()).collect()
     }
 
-    /// LIST without copying: shared snapshots for read-only reconciler
-    /// passes (the hot path — controllers poll every couple of ms).
+    /// LIST without copying: shared snapshots. Reconcilers no longer
+    /// call this directly — they consume [`crate::kube::informer`]
+    /// caches; it remains for read-only tooling, tests and benches.
     pub fn list_refs(&self, kind: &str) -> Vec<std::sync::Arc<Value>> {
         self.store.list(kind)
     }
@@ -180,37 +190,98 @@ impl ApiServer {
             .collect()
     }
 
+    /// LIST with server-side selector evaluation
+    /// ([`ListParams`] label/field selectors + namespace scoping):
+    /// only matching objects leave the server, as shared snapshots.
+    pub fn select(&self, kind: &str, params: &ListParams) -> Vec<Arc<Value>> {
+        let unfiltered = match &params.namespace {
+            Some(ns) => self.store.list_namespaced(kind, ns),
+            None => self.store.list(kind),
+        };
+        if params.labels.is_empty() && params.fields.is_empty() {
+            return unfiltered;
+        }
+        unfiltered
+            .into_iter()
+            .filter(|o| params.matches(o))
+            .collect()
+    }
+
+    /// Consistent full-state snapshot (see [`Store::snapshot`]) — the
+    /// re-list path watchers fall back to after log compaction.
+    pub fn snapshot(&self) -> (u64, Vec<Arc<Value>>) {
+        self.store.snapshot()
+    }
+
+    /// The shared read-modify-write commit path behind `update`, `patch`
+    /// and `update_status`: every mutation verb honors the same
+    /// optimistic-concurrency and admission contract. `build` derives
+    /// the replacement object from the current one; `pinned_rv` is a
+    /// caller-supplied resourceVersion precondition (a mismatch is a
+    /// Conflict). Unpinned commits retry against concurrent writers via
+    /// the store's compare-and-put, so lost updates cannot slip through
+    /// the read-modify-write window.
+    fn commit_update(
+        &self,
+        kind: &str,
+        namespace: &str,
+        name: &str,
+        pinned_rv: Option<i64>,
+        build: impl Fn(&Value) -> Value,
+    ) -> Result<Value, ApiError> {
+        for _ in 0..COMMIT_RETRIES {
+            let current = self.store.get(kind, namespace, name).ok_or_else(|| {
+                ApiError::NotFound(format!("{kind} {namespace}/{name}"))
+            })?;
+            let cur_rv = current.i64_at("metadata.resourceVersion").unwrap_or(0);
+            if let Some(rv) = pinned_rv {
+                if rv != cur_rv {
+                    return Err(ApiError::Conflict(format!(
+                        "{kind} {namespace}/{name}: resourceVersion {rv} != {cur_rv}"
+                    )));
+                }
+            }
+            let mut obj = build(&current);
+            self.run_admission(AdmissionOp::Update, &mut obj)?;
+            // uid is immutable.
+            let uid = current.str_at("metadata.uid").unwrap_or("").to_string();
+            obj.entry_map("metadata").set("uid", Value::from(uid));
+            // Return what we wrote rather than re-reading: a concurrent
+            // delete between the commit and a re-read must not panic.
+            let mut committed = obj.clone();
+            match self
+                .store
+                .compare_and_put(kind, namespace, name, Some(cur_rv as u64), obj)
+            {
+                Ok(rev) => {
+                    committed
+                        .entry_map("metadata")
+                        .set("resourceVersion", Value::Int(rev as i64));
+                    return Ok(committed);
+                }
+                // Raced with another writer: retry from the new current
+                // (a pinned rv fails the precondition next iteration).
+                Err(_) => continue,
+            }
+        }
+        Err(ApiError::Conflict(format!(
+            "{kind} {namespace}/{name}: too many concurrent writers"
+        )))
+    }
+
     /// UPDATE (replace). Enforces optimistic concurrency when the caller
     /// provides `metadata.resourceVersion`.
-    pub fn update(&self, mut obj: Value) -> Result<Value, ApiError> {
-        self.run_admission(AdmissionOp::Update, &mut obj)?;
+    pub fn update(&self, obj: Value) -> Result<Value, ApiError> {
         let kind = object::kind(&obj).to_string();
         let namespace = object::namespace(&obj).to_string();
         let name = object::name(&obj).to_string();
-        let current = self
-            .store
-            .get(&kind, &namespace, &name)
-            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))?;
-        if let Some(rv) = obj.i64_at("metadata.resourceVersion") {
-            let cur_rv = current.i64_at("metadata.resourceVersion").unwrap_or(0);
-            if rv != cur_rv {
-                return Err(ApiError::Conflict(format!(
-                    "{kind} {namespace}/{name}: resourceVersion {rv} != {cur_rv}"
-                )));
-            }
-        }
-        // uid is immutable.
-        let uid = current.str_at("metadata.uid").unwrap_or("").to_string();
-        obj.entry_map("metadata").set("uid", Value::from(uid));
-        self.store.put(&kind, &namespace, &name, obj.clone());
-        Ok(self
-            .store
-            .get(&kind, &namespace, &name)
-            .map(|a| (*a).clone())
-            .unwrap())
+        let pinned = obj.i64_at("metadata.resourceVersion");
+        self.commit_update(&kind, &namespace, &name, pinned, move |_| obj.clone())
     }
 
-    /// PATCH (JSON-merge-patch semantics).
+    /// PATCH (JSON-merge-patch semantics). A `metadata.resourceVersion`
+    /// in the patch is an optimistic-concurrency precondition, exactly
+    /// as on `update`.
     pub fn patch(
         &self,
         kind: &str,
@@ -218,19 +289,17 @@ impl ApiServer {
         name: &str,
         patch: &Value,
     ) -> Result<Value, ApiError> {
-        let current = self
-            .store
-            .get(kind, namespace, name)
-            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))?;
-        let mut obj = (*current).clone();
-        merge_patch(&mut obj, patch);
-        let mut obj2 = obj;
-        self.run_admission(AdmissionOp::Update, &mut obj2)?;
-        self.store.put(kind, namespace, name, obj2);
-        Ok((*self.store.get(kind, namespace, name).unwrap()).clone())
+        let pinned = patch.i64_at("metadata.resourceVersion");
+        self.commit_update(kind, namespace, name, pinned, |current| {
+            let mut obj = current.clone();
+            merge_patch(&mut obj, patch);
+            obj
+        })
     }
 
-    /// Update only the `status` subtree (the status subresource).
+    /// Update only the `status` subtree (the status subresource). Runs
+    /// the full admission chain and commits through the same
+    /// optimistic-concurrency path as `update`.
     pub fn update_status(
         &self,
         kind: &str,
@@ -238,14 +307,11 @@ impl ApiServer {
         name: &str,
         status: Value,
     ) -> Result<Value, ApiError> {
-        let current = self
-            .store
-            .get(kind, namespace, name)
-            .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))?;
-        let mut obj = (*current).clone();
-        obj.set("status", status);
-        self.store.put(kind, namespace, name, obj);
-        Ok((*self.store.get(kind, namespace, name).unwrap()).clone())
+        self.commit_update(kind, namespace, name, None, |current| {
+            let mut obj = current.clone();
+            obj.set("status", status.clone());
+            obj
+        })
     }
 
     /// DELETE.
@@ -421,5 +487,107 @@ mod tests {
         let api = ApiServer::new();
         api.record_event("default", "Pod/p1", "Scheduled", "ok");
         assert_eq!(api.list("Event").len(), 1);
+    }
+
+    #[test]
+    fn update_status_runs_admission() {
+        let api = ApiServer::new();
+        api.register_admission(Arc::new(|op, obj| {
+            if op == AdmissionOp::Update && obj.str_at("status.phase") == Some("Evil") {
+                return Err("phase Evil is not allowed".into());
+            }
+            Ok(())
+        }));
+        api.create(pod_yaml("p1")).unwrap();
+        assert!(matches!(
+            api.update_status("Pod", "default", "p1", parse_one("phase: Evil\n").unwrap()),
+            Err(ApiError::Denied(_))
+        ));
+        // The denied write left the object untouched.
+        assert!(api.get("Pod", "default", "p1").unwrap().str_at("status.phase").is_none());
+        api.update_status("Pod", "default", "p1", parse_one("phase: Running\n").unwrap())
+            .unwrap();
+    }
+
+    #[test]
+    fn patch_runs_admission() {
+        let api = ApiServer::new();
+        api.register_admission(Arc::new(|op, obj| {
+            if op == AdmissionOp::Update
+                && obj.str_at("metadata.labels.bad") == Some("forbidden")
+            {
+                return Err("bad label".into());
+            }
+            Ok(())
+        }));
+        api.create(pod_yaml("p1")).unwrap();
+        let patch = parse_one("metadata:\n  labels:\n    bad: forbidden\n").unwrap();
+        assert!(matches!(
+            api.patch("Pod", "default", "p1", &patch),
+            Err(ApiError::Denied(_))
+        ));
+    }
+
+    #[test]
+    fn patch_honors_resource_version_precondition() {
+        let api = ApiServer::new();
+        let created = api.create(pod_yaml("p1")).unwrap();
+        let rv = created.i64_at("metadata.resourceVersion").unwrap();
+        // Pinned to the live rv: applies.
+        let ok = parse_one(&format!(
+            "metadata:\n  resourceVersion: {rv}\n  labels:\n    a: x\n"
+        ))
+        .unwrap();
+        api.patch("Pod", "default", "p1", &ok).unwrap();
+        // Pinned to the now-stale rv: Conflict, and nothing applied.
+        let stale = parse_one(&format!(
+            "metadata:\n  resourceVersion: {rv}\n  labels:\n    b: y\n"
+        ))
+        .unwrap();
+        assert!(matches!(
+            api.patch("Pod", "default", "p1", &stale),
+            Err(ApiError::Conflict(_))
+        ));
+        let live = api.get("Pod", "default", "p1").unwrap();
+        assert_eq!(live.str_at("metadata.labels.a"), Some("x"));
+        assert!(live.str_at("metadata.labels.b").is_none());
+    }
+
+    #[test]
+    fn update_status_preserves_uid_and_bumps_rv() {
+        let api = ApiServer::new();
+        let created = api.create(pod_yaml("p1")).unwrap();
+        let uid = created.str_at("metadata.uid").unwrap().to_string();
+        let rv0 = created.i64_at("metadata.resourceVersion").unwrap();
+        let updated = api
+            .update_status("Pod", "default", "p1", parse_one("phase: Running\n").unwrap())
+            .unwrap();
+        assert_eq!(updated.str_at("metadata.uid"), Some(uid.as_str()));
+        assert!(updated.i64_at("metadata.resourceVersion").unwrap() > rv0);
+    }
+
+    #[test]
+    fn select_filters_server_side() {
+        use crate::kube::client::ListParams;
+        let api = ApiServer::new();
+        api.create(
+            parse_one("kind: Pod\nmetadata:\n  name: a\n  labels:\n    app: web\nspec:\n  nodeName: n1\n")
+                .unwrap(),
+        )
+        .unwrap();
+        api.create(
+            parse_one("kind: Pod\nmetadata:\n  name: b\n  labels:\n    app: db\nspec: {}\n")
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(api.select("Pod", &ListParams::all()).len(), 2);
+        assert_eq!(
+            api.select("Pod", &ListParams::all().with_label("app", "web")).len(),
+            1
+        );
+        assert_eq!(
+            api.select("Pod", &ListParams::all().with_field("spec.nodeName", "")).len(),
+            1
+        );
     }
 }

@@ -1,0 +1,373 @@
+//! The typed client surface over [`ApiServer`]: resource coordinates,
+//! per-kind API handles, and server-side list filtering.
+//!
+//! This is the bottom layer of the client stack
+//! (`Client`/[`Api`] → [`crate::kube::watch::Watcher`] →
+//! [`crate::kube::informer::SharedInformer`]): controllers no longer
+//! pass ad-hoc `(kind, namespace, name)` string triples around — a
+//! [`ResourceKey`] names an object, a [`GroupVersionKind`] names a
+//! type, and [`ListParams`] carries label/field selectors that the API
+//! server evaluates before anything is copied out of the store.
+
+use super::api::{ApiError, ApiServer};
+use super::object;
+use crate::yamlkit::Value;
+use std::sync::Arc;
+
+/// A fully-qualified resource type, mirroring Kubernetes's
+/// group/version/kind coordinates (`apps/v1 ReplicaSet`). The
+/// simulation stores objects by bare kind, but manifests carry
+/// `apiVersion`, so the typed coordinate is recoverable.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupVersionKind {
+    pub group: String,
+    pub version: String,
+    pub kind: String,
+}
+
+impl GroupVersionKind {
+    /// A core-group (`v1`) kind.
+    pub fn core(kind: &str) -> GroupVersionKind {
+        GroupVersionKind {
+            group: String::new(),
+            version: "v1".to_string(),
+            kind: kind.to_string(),
+        }
+    }
+
+    pub fn new(group: &str, version: &str, kind: &str) -> GroupVersionKind {
+        GroupVersionKind {
+            group: group.to_string(),
+            version: version.to_string(),
+            kind: kind.to_string(),
+        }
+    }
+
+    /// Parse from a manifest's `apiVersion` + `kind` fields.
+    pub fn of(obj: &Value) -> GroupVersionKind {
+        let api_version = obj.str_at("apiVersion").unwrap_or("v1");
+        let (group, version) = match api_version.split_once('/') {
+            Some((g, v)) => (g, v),
+            None => ("", api_version),
+        };
+        GroupVersionKind::new(group, version, object::kind(obj))
+    }
+
+    /// The `apiVersion` string this coordinate serializes to.
+    pub fn api_version(&self) -> String {
+        if self.group.is_empty() {
+            self.version.clone()
+        } else {
+            format!("{}/{}", self.group, self.version)
+        }
+    }
+}
+
+impl std::fmt::Display for GroupVersionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.api_version(), self.kind)
+    }
+}
+
+/// The typed coordinate of one object: what reconcilers queue, cache
+/// and look up instead of `(kind, namespace, name)` string triples.
+/// Ordered kind-first so a sorted map groups a kind's objects together
+/// (the informer cache exploits this for range scans).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceKey {
+    pub kind: String,
+    pub namespace: String,
+    pub name: String,
+}
+
+impl ResourceKey {
+    pub fn new(kind: &str, namespace: &str, name: &str) -> ResourceKey {
+        ResourceKey {
+            kind: kind.to_string(),
+            namespace: namespace.to_string(),
+            name: name.to_string(),
+        }
+    }
+
+    /// The coordinate of a manifest (namespace defaults to `default`).
+    pub fn of(obj: &Value) -> ResourceKey {
+        ResourceKey::new(object::kind(obj), object::namespace(obj), object::name(obj))
+    }
+
+    /// `namespace/name` (the store key within a kind).
+    pub fn full_name(&self) -> String {
+        format!("{}/{}", self.namespace, self.name)
+    }
+}
+
+impl std::fmt::Display for ResourceKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}/{}", self.kind, self.namespace, self.name)
+    }
+}
+
+/// List-verb parameters: namespace scoping plus label- and
+/// field-selectors, evaluated server-side so only matching objects are
+/// handed back (as shared snapshots — no deep copies on the read path).
+///
+/// Field selectors compare the string form of the value at a dot path;
+/// an empty wanted value matches objects where the path is absent
+/// (e.g. `spec.nodeName=""` selects unbound pods).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ListParams {
+    pub namespace: Option<String>,
+    pub labels: Vec<(String, String)>,
+    pub fields: Vec<(String, String)>,
+}
+
+impl ListParams {
+    /// Everything, all namespaces.
+    pub fn all() -> ListParams {
+        ListParams::default()
+    }
+
+    /// Scope to one namespace.
+    pub fn in_namespace(namespace: &str) -> ListParams {
+        ListParams {
+            namespace: Some(namespace.to_string()),
+            ..ListParams::default()
+        }
+    }
+
+    /// Require label `key=value`.
+    pub fn with_label(mut self, key: &str, value: &str) -> ListParams {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Require the value at `path` to stringify to `value` (empty
+    /// `value` = path absent).
+    pub fn with_field(mut self, path: &str, value: &str) -> ListParams {
+        self.fields.push((path.to_string(), value.to_string()));
+        self
+    }
+
+    /// Whether an object satisfies every selector.
+    pub fn matches(&self, obj: &Value) -> bool {
+        if let Some(ns) = &self.namespace {
+            if object::namespace(obj) != ns {
+                return false;
+            }
+        }
+        if !self.labels.is_empty() {
+            let have = object::labels(obj);
+            for (k, v) in &self.labels {
+                if !have.iter().any(|(hk, hv)| hk == k && hv == v) {
+                    return false;
+                }
+            }
+        }
+        for (path, wanted) in &self.fields {
+            let actual = obj.path(path).and_then(|v| v.coerce_string());
+            match actual {
+                Some(s) => {
+                    if &s != wanted {
+                        return false;
+                    }
+                }
+                None => {
+                    if !wanted.is_empty() {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// The cluster client: the one handle components hold instead of a raw
+/// [`ApiServer`]. Cheap to clone; [`Client::api`] scopes it to a kind.
+#[derive(Clone)]
+pub struct Client {
+    server: ApiServer,
+}
+
+impl Client {
+    pub fn new(server: ApiServer) -> Client {
+        Client { server }
+    }
+
+    /// A typed per-kind handle.
+    pub fn api(&self, kind: &str) -> Api {
+        Api {
+            server: self.server.clone(),
+            kind: kind.to_string(),
+        }
+    }
+
+    /// The underlying server (watch plumbing, admission registration).
+    pub fn server(&self) -> &ApiServer {
+        &self.server
+    }
+
+    /// GET by typed coordinate.
+    pub fn get(&self, key: &ResourceKey) -> Result<Value, ApiError> {
+        self.server.get(&key.kind, &key.namespace, &key.name)
+    }
+
+    /// DELETE by typed coordinate.
+    pub fn delete(&self, key: &ResourceKey) -> Result<Value, ApiError> {
+        self.server.delete(&key.kind, &key.namespace, &key.name)
+    }
+}
+
+/// A kind-scoped API handle (the `Api<K>` of kube-rs, untyped payloads).
+#[derive(Clone)]
+pub struct Api {
+    server: ApiServer,
+    kind: String,
+}
+
+impl Api {
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    pub fn get(&self, namespace: &str, name: &str) -> Result<Value, ApiError> {
+        self.server.get(&self.kind, namespace, name)
+    }
+
+    /// LIST with server-side selector evaluation; returns shared
+    /// snapshots (no deep copies).
+    pub fn list(&self, params: &ListParams) -> Vec<Arc<Value>> {
+        self.server.select(&self.kind, params)
+    }
+
+    /// CREATE; stamps the handle's kind if the manifest omits it.
+    pub fn create(&self, mut obj: Value) -> Result<Value, ApiError> {
+        if object::kind(&obj).is_empty() {
+            obj.set("kind", Value::from(self.kind.as_str()));
+        }
+        self.server.create(obj)
+    }
+
+    pub fn update(&self, obj: Value) -> Result<Value, ApiError> {
+        self.server.update(obj)
+    }
+
+    pub fn patch(&self, namespace: &str, name: &str, patch: &Value) -> Result<Value, ApiError> {
+        self.server.patch(&self.kind, namespace, name, patch)
+    }
+
+    pub fn update_status(
+        &self,
+        namespace: &str,
+        name: &str,
+        status: Value,
+    ) -> Result<Value, ApiError> {
+        self.server.update_status(&self.kind, namespace, name, status)
+    }
+
+    pub fn delete(&self, namespace: &str, name: &str) -> Result<Value, ApiError> {
+        self.server.delete(&self.kind, namespace, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn labeled_pod(name: &str, app: &str, node: Option<&str>) -> Value {
+        let node_line = node
+            .map(|n| format!("  nodeName: {n}\n"))
+            .unwrap_or_default();
+        parse_one(&format!(
+            "kind: Pod\nmetadata:\n  name: {name}\n  labels:\n    app: {app}\nspec:\n{node_line}  containers:\n  - name: c\n    image: x\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn gvk_roundtrip() {
+        let rs = parse_one("apiVersion: apps/v1\nkind: ReplicaSet\nmetadata:\n  name: r\n")
+            .unwrap();
+        let gvk = GroupVersionKind::of(&rs);
+        assert_eq!(gvk, GroupVersionKind::new("apps", "v1", "ReplicaSet"));
+        assert_eq!(gvk.api_version(), "apps/v1");
+        let pod = parse_one("kind: Pod\nmetadata:\n  name: p\n").unwrap();
+        assert_eq!(GroupVersionKind::of(&pod), GroupVersionKind::core("Pod"));
+        assert_eq!(GroupVersionKind::core("Pod").api_version(), "v1");
+    }
+
+    #[test]
+    fn resource_key_orders_kind_first() {
+        let a = ResourceKey::new("Pod", "zz", "z");
+        let b = ResourceKey::new("Service", "aa", "a");
+        assert!(a < b, "kind dominates the ordering");
+        let obj = parse_one("kind: Pod\nmetadata:\n  name: p\n").unwrap();
+        let key = ResourceKey::of(&obj);
+        assert_eq!(key, ResourceKey::new("Pod", "default", "p"));
+        assert_eq!(key.full_name(), "default/p");
+    }
+
+    #[test]
+    fn list_params_label_and_field_selectors() {
+        let api = ApiServer::new();
+        api.create(labeled_pod("a", "web", Some("n1"))).unwrap();
+        api.create(labeled_pod("b", "web", None)).unwrap();
+        api.create(labeled_pod("c", "db", Some("n1"))).unwrap();
+        let client = Client::new(api);
+        let pods = client.api("Pod");
+
+        assert_eq!(pods.list(&ListParams::all()).len(), 3);
+        assert_eq!(
+            pods.list(&ListParams::all().with_label("app", "web")).len(),
+            2
+        );
+        assert_eq!(
+            pods.list(&ListParams::all().with_field("spec.nodeName", "n1")).len(),
+            2
+        );
+        // Empty field value selects objects where the path is absent.
+        let unbound = pods.list(&ListParams::all().with_field("spec.nodeName", ""));
+        assert_eq!(unbound.len(), 1);
+        assert_eq!(unbound[0].str_at("metadata.name"), Some("b"));
+        // Combined selectors intersect.
+        assert_eq!(
+            pods.list(
+                &ListParams::all()
+                    .with_label("app", "web")
+                    .with_field("spec.nodeName", "n1")
+            )
+            .len(),
+            1
+        );
+    }
+
+    #[test]
+    fn namespace_scoping() {
+        let api = ApiServer::new();
+        let mut p = labeled_pod("a", "web", None);
+        p.entry_map("metadata").set("namespace", Value::from("prod"));
+        api.create(p).unwrap();
+        api.create(labeled_pod("b", "web", None)).unwrap();
+        let client = Client::new(api);
+        assert_eq!(
+            client.api("Pod").list(&ListParams::in_namespace("prod")).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn typed_handle_verbs() {
+        let api = ApiServer::new();
+        let client = Client::new(api);
+        let pods = client.api("Pod");
+        // Kind stamped on create when omitted.
+        let created = pods
+            .create(parse_one("metadata:\n  name: p\nspec: {}\n").unwrap())
+            .unwrap();
+        assert_eq!(created.str_at("kind"), Some("Pod"));
+        let key = ResourceKey::of(&created);
+        assert!(client.get(&key).is_ok());
+        client.delete(&key).unwrap();
+        assert!(client.get(&key).is_err());
+    }
+}

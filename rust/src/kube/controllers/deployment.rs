@@ -1,7 +1,11 @@
 //! Deployment controller: manage ReplicaSets per template revision.
+//!
+//! Event-driven: watches Deployments and the ReplicaSets they own
+//! (owned RS changes requeue the owning Deployment), reconciling only
+//! queued keys against the informer's by-owner index.
 
-use super::{template_hash, Reconciler};
-use crate::kube::api::ApiServer;
+use super::{template_hash, Context, Reconciler};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
 
@@ -12,10 +16,26 @@ impl Reconciler for DeploymentController {
         "deployment"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for dep in api.list("Deployment") {
-            let ns = object::namespace(&dep);
-            let dep_name = object::name(&dep);
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![
+            WatchSpec::of("Deployment"),
+            WatchSpec::owners("ReplicaSet", "Deployment"),
+        ]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let deployments = ctx.api("Deployment");
+        let replicasets = ctx.api("ReplicaSet");
+        for key in ctx.drain() {
+            if key.kind != "Deployment" {
+                continue;
+            }
+            // Fresh read: the key may be stale (deleted -> GC's job).
+            let Ok(dep) = deployments.get(&key.namespace, &key.name) else {
+                continue;
+            };
+            let ns = &key.namespace;
+            let dep_name = &key.name;
             let replicas = dep.i64_at("spec.replicas").unwrap_or(1).max(0);
             let template = dep
                 .path("spec.template")
@@ -25,11 +45,11 @@ impl Reconciler for DeploymentController {
             let rs_name = format!("{dep_name}-{hash}");
 
             // Current-revision ReplicaSet.
-            match api.get("ReplicaSet", ns, &rs_name) {
+            match replicasets.get(ns, &rs_name) {
                 Ok(mut rs) => {
                     if rs.i64_at("spec.replicas") != Some(replicas) {
                         rs.entry_map("spec").set("replicas", Value::Int(replicas));
-                        let _ = api.update(rs);
+                        let _ = replicasets.update(rs);
                     }
                 }
                 Err(_) => {
@@ -51,43 +71,38 @@ impl Reconciler for DeploymentController {
                         dep_name,
                         object::uid(&dep),
                     );
-                    let _ = api.create(rs);
+                    let _ = replicasets.create(rs);
                 }
             }
 
-            // Old-revision ReplicaSets: scale to 0, then delete when empty.
-            for rs in api.list_namespaced("ReplicaSet", ns) {
-                let owned = object::owner_refs(&rs)
-                    .iter()
-                    .any(|(_, _, u)| u == object::uid(&dep));
-                if !owned || object::name(&rs) == rs_name {
+            // Old-revision ReplicaSets (by-owner index): scale to 0,
+            // then delete when drained.
+            let owned = ctx
+                .informer
+                .owned_by(object::uid(&dep), Some("ReplicaSet"));
+            for rs in &owned {
+                if object::name(rs) == rs_name {
                     continue;
                 }
                 if rs.i64_at("spec.replicas").unwrap_or(0) != 0 {
-                    let mut rs2 = rs.clone();
+                    let mut rs2 = (**rs).clone();
                     rs2.entry_map("spec").set("replicas", Value::Int(0));
-                    let _ = api.update(rs2);
+                    let _ = replicasets.update(rs2);
                 } else if rs.i64_at("status.replicas").unwrap_or(0) == 0 {
-                    let _ = api.delete("ReplicaSet", ns, object::name(&rs));
+                    let _ = replicasets.delete(ns, object::name(rs));
                 }
             }
 
-            // Roll up status.
-            let ready: i64 = api
-                .list_namespaced("ReplicaSet", ns)
+            // Roll up status from owned ReplicaSets.
+            let ready: i64 = owned
                 .iter()
-                .filter(|rs| {
-                    object::owner_refs(rs)
-                        .iter()
-                        .any(|(_, _, u)| u == object::uid(&dep))
-                })
                 .map(|rs| rs.i64_at("status.readyReplicas").unwrap_or(0))
                 .sum();
             if dep.i64_at("status.readyReplicas") != Some(ready) {
                 let mut status = Value::map();
                 status.set("readyReplicas", Value::Int(ready));
                 status.set("replicas", Value::Int(replicas));
-                let _ = api.update_status("Deployment", ns, dep_name, status);
+                let _ = deployments.update_status(ns, dep_name, status);
             }
         }
     }
@@ -98,6 +113,7 @@ mod tests {
     use super::super::testutil::reconcile_until;
     use super::super::ReplicaSetController;
     use super::*;
+    use crate::kube::api::ApiServer;
     use crate::yamlkit::parse_one;
 
     fn deployment(replicas: i64, image: &str) -> Value {
@@ -126,16 +142,10 @@ mod tests {
         reconcile_until(&api, &[&d, &r], |a| a.list("Pod").len() == 2, 20);
         let old_rs = object::name(&api.list("ReplicaSet")[0]).to_string();
 
-        let mut dep = api.get("Deployment", "default", "web").unwrap();
-        dep.entry_map("spec")
-            .entry_map("template")
-            .entry_map("spec")
-            .path("containers")
-            .map(|_| ());
-        // Easier: re-apply with new image.
-        let dep2 = deployment(2, "nginx:2");
+        // Re-apply with a new image.
+        let dep = api.get("Deployment", "default", "web").unwrap();
         let rv = dep.i64_at("metadata.resourceVersion").unwrap();
-        let mut dep2 = dep2;
+        let mut dep2 = deployment(2, "nginx:2");
         dep2.entry_map("metadata")
             .set("resourceVersion", Value::Int(rv));
         api.update(dep2).unwrap();

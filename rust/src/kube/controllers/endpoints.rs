@@ -4,9 +4,15 @@
 //! from these Endpoints, so "service discovery continues to function, as
 //! CoreDNS maps the service name to the actual pod IPs instead of the
 //! virtual service address" (SS3).
+//!
+//! Event-driven: watches Services, and Pods through the selector
+//! mapping — a pod change requeues exactly the services whose selector
+//! matches its (old or new) labels, answered from the informer's
+//! by-label index.
 
-use super::Reconciler;
-use crate::kube::api::ApiServer;
+use super::{Context, Reconciler};
+use crate::kube::client::ListParams;
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
 
@@ -17,25 +23,50 @@ impl Reconciler for EndpointsController {
         "endpoints"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for svc in api.list("Service") {
-            let ns = object::namespace(&svc);
-            let svc_name = object::name(&svc);
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![
+            WatchSpec::of("Service"),
+            WatchSpec::selectors("Pod", "Service"),
+            WatchSpec::owners("Endpoints", "Service"),
+        ]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let services = ctx.api("Service");
+        let endpoints = ctx.api("Endpoints");
+        for key in ctx.drain() {
+            if key.kind != "Service" {
+                continue;
+            }
+            let Ok(svc) = services.get(&key.namespace, &key.name) else {
+                continue;
+            };
+            let ns = &key.namespace;
+            let svc_name = &key.name;
             let Some(selector) = svc.path("spec.selector") else {
                 continue;
             };
             // Ready addresses: Running pods matching the selector that
-            // have an IP.
-            let mut addrs: Vec<String> = api
-                .list_namespaced("Pod", ns)
-                .iter()
-                .filter(|p| object::selector_matches(selector, p))
-                .filter(|p| object::pod_phase(p) == "Running")
-                .filter_map(|p| p.str_at("status.podIP").map(|s| s.to_string()))
-                .collect();
+            // have an IP (label-indexed informer query). An empty
+            // selector matches nothing (Kubernetes semantics) — but the
+            // Endpoints must still be reconciled down to zero addresses.
+            let mut params = ListParams::in_namespace(ns)
+                .with_field("status.phase", "Running");
+            for (k, v) in object::selector_labels(selector) {
+                params = params.with_label(&k, &v);
+            }
+            let mut addrs: Vec<String> = if params.labels.is_empty() {
+                Vec::new()
+            } else {
+                ctx.informer
+                    .select("Pod", &params)
+                    .iter()
+                    .filter_map(|p| p.str_at("status.podIP").map(|s| s.to_string()))
+                    .collect()
+            };
             addrs.sort();
 
-            let current = api.get("Endpoints", ns, svc_name).ok();
+            let current = endpoints.get(ns, svc_name).ok();
             let cur_addrs: Vec<String> = current
                 .as_ref()
                 .and_then(|e| e.path("addresses"))
@@ -57,9 +88,9 @@ impl Reconciler for EndpointsController {
             );
             object::add_owner_ref(&mut ep, "Service", svc_name, object::uid(&svc));
             if current.is_some() {
-                let _ = api.update(ep);
+                let _ = endpoints.update(ep);
             } else {
-                let _ = api.create(ep);
+                let _ = endpoints.create(ep);
             }
         }
     }
@@ -67,8 +98,9 @@ impl Reconciler for EndpointsController {
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::reconcile_until;
+    use super::super::testutil::{reconcile_once, reconcile_until};
     use super::*;
+    use crate::kube::api::ApiServer;
     use crate::yamlkit::parse_one;
 
     fn svc() -> Value {
@@ -135,7 +167,7 @@ mod tests {
         )
         .unwrap();
         let c = EndpointsController;
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         let ep = api.get("Endpoints", "default", "db").unwrap();
         assert_eq!(ep.path("addresses").unwrap().as_seq().unwrap().len(), 0);
     }
@@ -149,7 +181,7 @@ mod tests {
         )
         .unwrap();
         let c = EndpointsController;
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         assert!(api.get("Endpoints", "default", "ext").is_err());
     }
 }

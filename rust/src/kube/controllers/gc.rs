@@ -1,35 +1,98 @@
-//! Garbage collector: cascade-delete orphans whose owners are gone.
+//! Garbage collector: cascade-delete orphans whose owners are gone,
+//! and sweep the Event kind so long-running clusters don't leak memory.
+//!
+//! Event-driven: owned kinds enqueue themselves, and *deletions* of any
+//! kind enqueue the deleted object's cached children (the informer's
+//! by-owner index), which is what makes cascades propagate without
+//! scanning every object per tick.
 
-use super::Reconciler;
-use crate::kube::api::ApiServer;
+use super::{Context, Reconciler};
+use crate::kube::client::ListParams;
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
+use std::collections::BTreeSet;
 
 pub struct GcController;
 
 /// Kinds the GC scans (owner-managed objects).
 const MANAGED_KINDS: &[&str] = &["ReplicaSet", "Pod", "Endpoints"];
 
+/// Events kept per namespace; the oldest beyond this are swept.
+pub const EVENT_CAP_PER_NAMESPACE: usize = 256;
+
+/// Events older than this (monotonic ms) are swept regardless of count.
+pub const EVENT_TTL_MS: u64 = 300_000;
+
 impl Reconciler for GcController {
     fn name(&self) -> &'static str {
         "gc"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for kind in MANAGED_KINDS {
-            for obj in api.list(kind) {
-                let refs = object::owner_refs(&obj);
-                if refs.is_empty() {
-                    continue;
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![
+            WatchSpec::of("ReplicaSet"),
+            WatchSpec::of("Pod"),
+            WatchSpec::of("Endpoints"),
+            WatchSpec::of("Event"),
+            WatchSpec::deleted_children(),
+        ]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let mut event_namespaces: BTreeSet<String> = BTreeSet::new();
+        for key in ctx.drain() {
+            if key.kind == "Event" {
+                event_namespaces.insert(key.namespace.clone());
+                continue;
+            }
+            if !MANAGED_KINDS.contains(&key.kind.as_str()) {
+                continue;
+            }
+            let Some(obj) = ctx.cached(&key) else {
+                continue; // already gone
+            };
+            let refs = object::owner_refs(&obj);
+            if refs.is_empty() {
+                continue;
+            }
+            let orphaned = refs.iter().any(|(okind, oname, ouid)| {
+                match ctx.api(okind).get(&key.namespace, oname) {
+                    Ok(owner) => object::uid(&owner) != ouid,
+                    Err(_) => true,
                 }
-                let orphaned = refs.iter().any(|(okind, oname, ouid)| {
-                    match api.get(okind, object::namespace(&obj), oname) {
-                        Ok(owner) => object::uid(&owner) != ouid,
-                        Err(_) => true,
-                    }
-                });
-                if orphaned {
-                    let _ = api.delete(kind, object::namespace(&obj), object::name(&obj));
-                }
+            });
+            if orphaned {
+                let _ = ctx.client.delete(&key);
+            }
+        }
+        for ns in event_namespaces {
+            self.sweep_events(ctx, &ns);
+        }
+    }
+}
+
+impl GcController {
+    /// Enforce the per-namespace Event cap and TTL: keep the newest
+    /// `EVENT_CAP_PER_NAMESPACE`, drop anything older than
+    /// `EVENT_TTL_MS`.
+    fn sweep_events(&self, ctx: &Context, namespace: &str) {
+        let now = crate::util::monotonic_ms() as i64;
+        let mut events = ctx
+            .informer
+            .select("Event", &ListParams::in_namespace(namespace));
+        // Oldest first (timestamp, then name for determinism).
+        events.sort_by_key(|e| {
+            (e.i64_at("timestamp").unwrap_or(0), object::name(e).to_string())
+        });
+        let expired: Vec<bool> = events
+            .iter()
+            .map(|e| now - e.i64_at("timestamp").unwrap_or(0) > EVENT_TTL_MS as i64)
+            .collect();
+        let overflow = events.len().saturating_sub(EVENT_CAP_PER_NAMESPACE);
+        let event_api = ctx.api("Event");
+        for (i, e) in events.iter().enumerate() {
+            if i < overflow || expired[i] {
+                let _ = event_api.delete(namespace, object::name(e));
             }
         }
     }
@@ -37,9 +100,10 @@ impl Reconciler for GcController {
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::reconcile_until;
+    use super::super::testutil::{reconcile_once, reconcile_until};
     use super::super::{DeploymentController, ReplicaSetController};
     use super::*;
+    use crate::kube::api::ApiServer;
     use crate::yamlkit::parse_one;
 
     #[test]
@@ -88,7 +152,44 @@ mod tests {
         object::add_owner_ref(&mut pod, "Job", "j", object::uid(&job));
         api.create(pod).unwrap();
         let g = GcController;
-        g.reconcile(&api);
+        reconcile_once(&api, &g);
         assert_eq!(api.list("Pod").len(), 1);
+    }
+
+    #[test]
+    fn event_cap_swept_per_namespace() {
+        let api = ApiServer::new();
+        for i in 0..(EVENT_CAP_PER_NAMESPACE + 40) {
+            api.record_event("default", "Pod/x", "Tick", &format!("{i}"));
+        }
+        // A second namespace stays under its own cap.
+        api.record_event("prod", "Pod/y", "Tick", "0");
+        let g = GcController;
+        reconcile_once(&api, &g);
+        assert_eq!(api.list("Event").len(), EVENT_CAP_PER_NAMESPACE + 1);
+        assert_eq!(api.list_namespaced("Event", "prod").len(), 1);
+    }
+
+    #[test]
+    fn expired_events_swept_by_ttl() {
+        let api = ApiServer::new();
+        // An ancient event (timestamp 0 is > TTL behind monotonic now
+        // only if the process has been up long enough, so place it
+        // explicitly far in the past relative to now).
+        let now = crate::util::monotonic_ms() as i64;
+        let old_ts = now - (EVENT_TTL_MS as i64) - 10_000;
+        api.create(
+            parse_one(&format!(
+                "kind: Event\nmetadata:\n  name: old\nreason: Tick\ntimestamp: {old_ts}\n"
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        api.record_event("default", "Pod/x", "Tick", "fresh");
+        let g = GcController;
+        reconcile_once(&api, &g);
+        let remaining = api.list("Event");
+        assert_eq!(remaining.len(), 1);
+        assert_ne!(remaining[0].str_at("metadata.name"), Some("old"));
     }
 }

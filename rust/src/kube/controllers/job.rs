@@ -1,7 +1,11 @@
 //! Job controller: run pods to completion with parallelism/backoff.
+//!
+//! Event-driven: watches Jobs and their owned Pods (pod completions
+//! requeue the Job), counting children through the informer's
+//! by-owner index.
 
-use super::{pod_from_template, Reconciler};
-use crate::kube::api::ApiServer;
+use super::{pod_from_template, Context, Reconciler};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
 
@@ -12,10 +16,21 @@ impl Reconciler for JobController {
         "job"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for job in api.list("Job") {
-            let ns = object::namespace(&job);
-            let job_name = object::name(&job);
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![WatchSpec::of("Job"), WatchSpec::owners("Pod", "Job")]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let jobs = ctx.api("Job");
+        let pod_api = ctx.api("Pod");
+        for key in ctx.drain() {
+            if key.kind != "Job" {
+                continue;
+            }
+            let Ok(job) = jobs.get(&key.namespace, &key.name) else {
+                continue;
+            };
+            let job_name = &key.name;
             // Terminal jobs are left alone.
             if job.str_at("status.state") == Some("Complete")
                 || job.str_at("status.state") == Some("Failed")
@@ -26,15 +41,7 @@ impl Reconciler for JobController {
             let parallelism = job.i64_at("spec.parallelism").unwrap_or(1).max(1);
             let backoff_limit = job.i64_at("spec.backoffLimit").unwrap_or(3);
 
-            let pods: Vec<Value> = api
-                .list_namespaced("Pod", ns)
-                .into_iter()
-                .filter(|p| {
-                    object::owner_refs(p)
-                        .iter()
-                        .any(|(_, _, u)| u == object::uid(&job))
-                })
-                .collect();
+            let pods = ctx.informer.owned_by(object::uid(&job), Some("Pod"));
             let succeeded = pods
                 .iter()
                 .filter(|p| object::pod_phase(p) == "Succeeded")
@@ -66,7 +73,7 @@ impl Reconciler for JobController {
                     for _ in 0..want {
                         let pod =
                             pod_from_template(&template, &job, job_name, &[]);
-                        let _ = api.create(pod);
+                        let _ = pod_api.create(pod);
                     }
                 }
             }
@@ -81,7 +88,7 @@ impl Reconciler for JobController {
                 status.set("failed", Value::Int(failed));
                 status.set("active", Value::Int(active));
                 status.set("state", Value::from(state));
-                let _ = api.update_status("Job", ns, job_name, status);
+                let _ = jobs.update_status(&key.namespace, job_name, status);
             }
         }
     }
@@ -89,8 +96,9 @@ impl Reconciler for JobController {
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::reconcile_until;
+    use super::super::testutil::{reconcile_once, reconcile_until};
     use super::*;
+    use crate::kube::api::ApiServer;
     use crate::yamlkit::parse_one;
 
     fn job(completions: i64, parallelism: i64) -> Value {
@@ -137,10 +145,10 @@ mod tests {
         let api = ApiServer::new();
         api.create(job(4, 2)).unwrap();
         let c = JobController;
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         assert_eq!(api.list("Pod").len(), 2);
         finish_pods(&api, "Succeeded");
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         assert_eq!(api.list("Pod").len(), 4, "2 done + 2 new");
         finish_pods(&api, "Succeeded");
         reconcile_until(
@@ -162,7 +170,7 @@ mod tests {
         api.create(j).unwrap();
         let c = JobController;
         for _ in 0..3 {
-            c.reconcile(&api);
+            reconcile_once(&api, &c);
             finish_pods(&api, "Failed");
         }
         reconcile_until(
@@ -181,9 +189,9 @@ mod tests {
         let api = ApiServer::new();
         api.create(job(1, 1)).unwrap();
         let c = JobController;
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         finish_pods(&api, "Failed");
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         // One failed + one fresh attempt.
         let pods = api.list("Pod");
         assert_eq!(pods.len(), 2);

@@ -1,9 +1,14 @@
 //! ReplicaSet controller: keep `spec.replicas` pods alive.
+//!
+//! Event-driven: watches ReplicaSets and the Pods they own (a pod
+//! phase change requeues its owner), reading children from the
+//! informer's by-owner index instead of namespace-wide list scans.
 
-use super::{pod_from_template, Reconciler};
-use crate::kube::api::ApiServer;
+use super::{pod_from_template, Context, Reconciler};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
+use std::sync::Arc;
 
 pub struct ReplicaSetController;
 
@@ -12,25 +17,34 @@ impl Reconciler for ReplicaSetController {
         "replicaset"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for rs in api.list("ReplicaSet") {
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![
+            WatchSpec::of("ReplicaSet"),
+            WatchSpec::owners("Pod", "ReplicaSet"),
+        ]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let replicasets = ctx.api("ReplicaSet");
+        let pod_api = ctx.api("Pod");
+        for key in ctx.drain() {
+            if key.kind != "ReplicaSet" {
+                continue;
+            }
+            let Ok(rs) = replicasets.get(&key.namespace, &key.name) else {
+                continue;
+            };
             let desired = rs.i64_at("spec.replicas").unwrap_or(1).max(0);
             let rs_uid = object::uid(&rs);
-            let ns = object::namespace(&rs);
-            let pods: Vec<Value> = api
-                .list_namespaced("Pod", ns)
-                .into_iter()
-                .filter(|p| {
-                    object::owner_refs(p).iter().any(|(_, _, uid)| uid == rs_uid)
-                })
-                .collect();
+            let ns = &key.namespace;
+            let pods: Vec<Arc<Value>> = ctx.informer.owned_by(rs_uid, Some("Pod"));
 
             // Replace terminally failed pods (delete; recreate below).
-            let mut live: Vec<&Value> = Vec::new();
+            let mut live: Vec<&Arc<Value>> = Vec::new();
             for p in &pods {
                 let phase = object::pod_phase(p);
                 if phase == "Failed" || phase == "Succeeded" {
-                    let _ = api.delete("Pod", ns, object::name(p));
+                    let _ = pod_api.delete(ns, object::name(p));
                 } else {
                     live.push(p);
                 }
@@ -46,21 +60,23 @@ impl Reconciler for ReplicaSetController {
                         object::name(&rs),
                         &[],
                     );
-                    let _ = api.create(pod);
+                    let _ = pod_api.create(pod);
                 }
             } else if have > desired {
                 // Prefer deleting not-yet-running pods first.
-                let mut victims: Vec<&&Value> = live
+                let mut victims: Vec<&Arc<Value>> = live
                     .iter()
+                    .copied()
                     .filter(|p| object::pod_phase(p) != "Running")
                     .collect();
-                let runners: Vec<&&Value> = live
+                let runners: Vec<&Arc<Value>> = live
                     .iter()
+                    .copied()
                     .filter(|p| object::pod_phase(p) == "Running")
                     .collect();
                 victims.extend(runners);
                 for p in victims.into_iter().take((have - desired) as usize) {
-                    let _ = api.delete("Pod", ns, object::name(p));
+                    let _ = pod_api.delete(ns, object::name(p));
                 }
             }
 
@@ -75,7 +91,7 @@ impl Reconciler for ReplicaSetController {
                 let mut status = Value::map();
                 status.set("replicas", Value::Int(have));
                 status.set("readyReplicas", Value::Int(ready));
-                let _ = api.update_status("ReplicaSet", ns, object::name(&rs), status);
+                let _ = replicasets.update_status(ns, &key.name, status);
             }
         }
     }
@@ -83,8 +99,9 @@ impl Reconciler for ReplicaSetController {
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::reconcile_until;
+    use super::super::testutil::{reconcile_once, reconcile_until};
     use super::*;
+    use crate::kube::api::ApiServer;
     use crate::yamlkit::parse_one;
 
     fn rs_yaml(replicas: i64) -> Value {
@@ -101,7 +118,9 @@ mod tests {
         let c = ReplicaSetController;
         reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 3, 10);
         // Stable: more reconciles don't overshoot.
-        c.reconcile(&api);
+        for _ in 0..3 {
+            reconcile_once(&api, &c);
+        }
         assert_eq!(api.list("Pod").len(), 3);
     }
 
@@ -148,7 +167,9 @@ mod tests {
         .unwrap();
         let c = ReplicaSetController;
         reconcile_until(&api, &[&c], |a| a.list("Pod").len() == 2, 10);
-        c.reconcile(&api);
+        for _ in 0..3 {
+            reconcile_once(&api, &c);
+        }
         assert_eq!(api.list("Pod").len(), 2, "stray pod untouched");
         assert!(api.get("Pod", "default", "stray").is_ok());
     }

@@ -78,7 +78,8 @@ impl CoreDns {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kube::controllers::{EndpointsController, Reconciler};
+    use crate::kube::controllers::testutil::reconcile_once;
+    use crate::kube::controllers::EndpointsController;
     use crate::yamlkit::parse_one;
 
     fn setup_headless() -> ApiServer {
@@ -97,7 +98,7 @@ mod tests {
             .unwrap(),
         )
         .unwrap();
-        EndpointsController.reconcile(&api);
+        reconcile_once(&api, &EndpointsController);
         api
     }
 

@@ -1,0 +1,653 @@
+//! The shared-informer layer: a watch-fed object cache with secondary
+//! indexes and per-reconciler work queues.
+//!
+//! This is what retires the poll-and-clone control plane: instead of
+//! every controller re-listing `O(n)` objects per tick, one
+//! [`SharedInformer`] consumes the store's event stream (through a
+//! [`Watcher`], so resourceVersion resume and compaction re-lists are
+//! handled), maintains a local cache with by-label, by-owner and
+//! by-node indexes, and fans each event out to registered
+//! [`WorkQueue`]s according to the owning reconciler's [`WatchSpec`]s.
+//! Reconcile work then scales with events processed, not with cluster
+//! object count.
+
+use super::api::ApiServer;
+use super::client::{ListParams, ResourceKey};
+use super::object;
+use super::store::EventType;
+use super::watch::{WatchOutcome, Watcher};
+use crate::yamlkit::Value;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// How events of one kind feed a reconciler's work queue.
+#[derive(Clone, Debug)]
+pub enum Mapping {
+    /// Enqueue the changed object's own key.
+    ToSelf,
+    /// Enqueue the keys of owner references of the given kind — a Pod
+    /// change requeues its owning ReplicaSet, etc.
+    ToOwner(&'static str),
+    /// Enqueue same-namespace objects of the given kind whose
+    /// `spec.selector` matches the changed object's labels (old *or*
+    /// new state, so label removals still requeue the previous match).
+    ToSelectors(&'static str),
+    /// On deletions only: enqueue every cached object that lists the
+    /// deleted object as an owner (the GC cascade trigger).
+    DeletedToChildren,
+}
+
+/// One event source for a work queue: a kind (`"*"` = all kinds) plus
+/// the mapping from its events to reconcile keys.
+#[derive(Clone, Debug)]
+pub struct WatchSpec {
+    pub kind: &'static str,
+    pub mapping: Mapping,
+}
+
+impl WatchSpec {
+    /// Watch a kind, enqueueing changed objects themselves.
+    pub fn of(kind: &'static str) -> WatchSpec {
+        WatchSpec { kind, mapping: Mapping::ToSelf }
+    }
+
+    /// Watch a kind, enqueueing owners of `owner_kind`.
+    pub fn owners(kind: &'static str, owner_kind: &'static str) -> WatchSpec {
+        WatchSpec { kind, mapping: Mapping::ToOwner(owner_kind) }
+    }
+
+    /// Watch a kind, enqueueing selector-matching objects of `target`.
+    pub fn selectors(kind: &'static str, target: &'static str) -> WatchSpec {
+        WatchSpec { kind, mapping: Mapping::ToSelectors(target) }
+    }
+
+    /// Watch all kinds for deletions, enqueueing orphaned children.
+    pub fn deleted_children() -> WatchSpec {
+        WatchSpec { kind: "*", mapping: Mapping::DeletedToChildren }
+    }
+
+    fn covers(&self, kind: &str) -> bool {
+        self.kind == "*" || self.kind == kind
+    }
+}
+
+struct QueueInner {
+    specs: Vec<WatchSpec>,
+    pending: Mutex<BTreeSet<ResourceKey>>,
+}
+
+/// A deduplicating work queue of [`ResourceKey`]s. Cheap to clone
+/// (shared state); the informer pushes, the owning reconciler drains.
+#[derive(Clone)]
+pub struct WorkQueue {
+    inner: Arc<QueueInner>,
+}
+
+impl WorkQueue {
+    fn new(specs: Vec<WatchSpec>) -> WorkQueue {
+        WorkQueue {
+            inner: Arc::new(QueueInner {
+                specs,
+                pending: Mutex::new(BTreeSet::new()),
+            }),
+        }
+    }
+
+    fn specs(&self) -> &[WatchSpec] {
+        &self.inner.specs
+    }
+
+    /// Enqueue a key (deduplicated). Also the retry hook for
+    /// reconcilers that want another pass at an object.
+    pub fn push(&self, key: ResourceKey) {
+        self.inner.pending.lock().unwrap().insert(key);
+    }
+
+    /// Take everything currently queued, in key order.
+    pub fn drain(&self) -> Vec<ResourceKey> {
+        let mut pending = self.inner.pending.lock().unwrap();
+        std::mem::take(&mut *pending).into_iter().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.pending.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Counters for observability and the informer-vs-poll bench.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InformerStats {
+    /// Incremental events applied to the cache.
+    pub events_applied: u64,
+    /// Full re-lists forced by event-log compaction.
+    pub resyncs: u64,
+}
+
+struct Inner {
+    watcher: Watcher,
+    cache: BTreeMap<ResourceKey, Arc<Value>>,
+    /// owner uid -> keys of objects that reference it.
+    by_owner: HashMap<String, BTreeSet<ResourceKey>>,
+    /// (label key, label value) -> keys carrying that label.
+    by_label: HashMap<(String, String), BTreeSet<ResourceKey>>,
+    /// `spec.nodeName` -> Pod keys (`""` = unbound pods).
+    by_node: HashMap<String, BTreeSet<ResourceKey>>,
+    queues: Vec<WorkQueue>,
+    stats: InformerStats,
+}
+
+/// The shared cache + dispatcher. One instance serves any number of
+/// reconcilers; each [`register`](SharedInformer::register)ed queue
+/// sees only the keys its [`WatchSpec`]s map to.
+pub struct SharedInformer {
+    inner: Mutex<Inner>,
+}
+
+impl SharedInformer {
+    /// Build over an API server, watching every kind from revision 0
+    /// (the first [`sync`](SharedInformer::sync) replays or re-lists
+    /// history).
+    pub fn new(api: ApiServer) -> SharedInformer {
+        Self::from_watcher(Watcher::from_start(api))
+    }
+
+    /// Build watching only the given kinds: the cache, indexes and
+    /// per-event work stay proportional to the kinds actually consumed
+    /// (what single-purpose informers like the kubelets use).
+    pub fn for_kinds(api: ApiServer, kinds: &[&str]) -> SharedInformer {
+        Self::from_watcher(Watcher::from_start(api).for_kinds(kinds))
+    }
+
+    fn from_watcher(watcher: Watcher) -> SharedInformer {
+        SharedInformer {
+            inner: Mutex::new(Inner {
+                watcher,
+                cache: BTreeMap::new(),
+                by_owner: HashMap::new(),
+                by_label: HashMap::new(),
+                by_node: HashMap::new(),
+                queues: Vec::new(),
+                stats: InformerStats::default(),
+            }),
+        }
+    }
+
+    /// Register a work queue fed by the given specs. Existing cached
+    /// objects matching a `ToSelf` spec are seeded immediately so late
+    /// registrants reconcile pre-existing state. On a
+    /// [`for_kinds`](SharedInformer::for_kinds)-scoped informer, every
+    /// spec kind (and `ToSelectors` target) must be within the watched
+    /// set — events outside it are never delivered.
+    pub fn register(&self, specs: Vec<WatchSpec>) -> WorkQueue {
+        let queue = WorkQueue::new(specs);
+        let mut inner = self.inner.lock().unwrap();
+        Self::seed_queue(&inner, &queue);
+        inner.queues.push(queue.clone());
+        queue
+    }
+
+    /// Seed a queue's `ToSelf` specs from the current cache (shared by
+    /// registration and the level-triggered resync).
+    fn seed_queue(inner: &Inner, queue: &WorkQueue) {
+        for spec in queue.specs() {
+            if matches!(spec.mapping, Mapping::ToSelf) {
+                for key in inner.cache.keys() {
+                    if spec.covers(&key.kind) {
+                        queue.push(key.clone());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pull pending events from the watch and apply them to the cache,
+    /// indexes and queues. Returns the number of objects touched.
+    pub fn sync(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.watcher.poll() {
+            WatchOutcome::Events(events) => {
+                let n = events.len();
+                for ev in events {
+                    let key = ResourceKey::new(&ev.kind, &ev.namespace, &ev.name);
+                    let new = match ev.event_type {
+                        EventType::Deleted => None,
+                        _ => Some(ev.object.clone()),
+                    };
+                    Self::apply(&mut inner, key, new);
+                }
+                inner.stats.events_applied += n as u64;
+                n
+            }
+            WatchOutcome::Resync { objects, .. } => {
+                inner.stats.resyncs += 1;
+                let live: BTreeSet<ResourceKey> =
+                    objects.iter().map(|o| ResourceKey::of(o)).collect();
+                let stale: Vec<ResourceKey> = inner
+                    .cache
+                    .keys()
+                    .filter(|k| !live.contains(*k))
+                    .cloned()
+                    .collect();
+                for key in stale {
+                    Self::apply(&mut inner, key, None);
+                }
+                let n = objects.len();
+                for obj in objects {
+                    let key = ResourceKey::of(&obj);
+                    Self::apply(&mut inner, key, Some(obj));
+                }
+                n
+            }
+        }
+    }
+
+    /// Re-seed every queue's `ToSelf` specs from the cache: the
+    /// level-triggered safety net the controller manager fires at a low
+    /// cadence so a missed edge can never stall a reconciler forever.
+    pub fn resync_queues(&self) {
+        let inner = self.inner.lock().unwrap();
+        for queue in &inner.queues {
+            Self::seed_queue(&inner, queue);
+        }
+    }
+
+    fn apply(inner: &mut Inner, key: ResourceKey, new: Option<Arc<Value>>) {
+        let old = match &new {
+            Some(obj) => inner.cache.insert(key.clone(), obj.clone()),
+            None => inner.cache.remove(&key),
+        };
+        if let Some(o) = &old {
+            Self::unindex(inner, &key, o);
+        }
+        if let Some(n) = &new {
+            Self::index(inner, &key, n);
+        }
+        Self::fanout(inner, &key, old.as_ref(), new.as_ref());
+    }
+
+    fn index(inner: &mut Inner, key: &ResourceKey, obj: &Arc<Value>) {
+        for (_, _, uid) in object::owner_refs(obj) {
+            if !uid.is_empty() {
+                inner.by_owner.entry(uid).or_default().insert(key.clone());
+            }
+        }
+        for (k, v) in object::labels(obj) {
+            inner.by_label.entry((k, v)).or_default().insert(key.clone());
+        }
+        if key.kind == "Pod" {
+            let node = obj.str_at("spec.nodeName").unwrap_or("").to_string();
+            inner.by_node.entry(node).or_default().insert(key.clone());
+        }
+    }
+
+    fn unindex(inner: &mut Inner, key: &ResourceKey, obj: &Arc<Value>) {
+        for (_, _, uid) in object::owner_refs(obj) {
+            if let Some(set) = inner.by_owner.get_mut(&uid) {
+                set.remove(key);
+                if set.is_empty() {
+                    inner.by_owner.remove(&uid);
+                }
+            }
+        }
+        for pair in object::labels(obj) {
+            if let Some(set) = inner.by_label.get_mut(&pair) {
+                set.remove(key);
+                if set.is_empty() {
+                    inner.by_label.remove(&pair);
+                }
+            }
+        }
+        if key.kind == "Pod" {
+            let node = obj.str_at("spec.nodeName").unwrap_or("").to_string();
+            if let Some(set) = inner.by_node.get_mut(&node) {
+                set.remove(key);
+                if set.is_empty() {
+                    inner.by_node.remove(&node);
+                }
+            }
+        }
+    }
+
+    fn fanout(
+        inner: &Inner,
+        key: &ResourceKey,
+        old: Option<&Arc<Value>>,
+        new: Option<&Arc<Value>>,
+    ) {
+        for queue in &inner.queues {
+            for spec in queue.specs() {
+                if !spec.covers(&key.kind) {
+                    continue;
+                }
+                match &spec.mapping {
+                    Mapping::ToSelf => queue.push(key.clone()),
+                    Mapping::ToOwner(owner_kind) => {
+                        if let Some(obj) = new.or(old) {
+                            for (okind, oname, _) in object::owner_refs(obj) {
+                                if okind.as_str() == *owner_kind {
+                                    queue.push(ResourceKey::new(
+                                        owner_kind,
+                                        &key.namespace,
+                                        &oname,
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    Mapping::ToSelectors(target) => {
+                        let start = ResourceKey::new(target, &key.namespace, "");
+                        for (tkey, tobj) in inner.cache.range(start..) {
+                            if tkey.kind.as_str() != *target
+                                || tkey.namespace != key.namespace
+                            {
+                                break;
+                            }
+                            let Some(sel) = tobj.path("spec.selector") else {
+                                continue;
+                            };
+                            let hit = old.map(|o| object::selector_matches(sel, o))
+                                == Some(true)
+                                || new.map(|o| object::selector_matches(sel, o))
+                                    == Some(true);
+                            if hit {
+                                queue.push(tkey.clone());
+                            }
+                        }
+                    }
+                    Mapping::DeletedToChildren => {
+                        if new.is_none() {
+                            if let Some(obj) = old {
+                                if let Some(children) =
+                                    inner.by_owner.get(object::uid(obj))
+                                {
+                                    for child in children {
+                                        queue.push(child.clone());
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cached object by key.
+    pub fn get(&self, key: &ResourceKey) -> Option<Arc<Value>> {
+        self.inner.lock().unwrap().cache.get(key).cloned()
+    }
+
+    /// All cached objects of a kind (all namespaces), key order.
+    pub fn list(&self, kind: &str) -> Vec<Arc<Value>> {
+        let inner = self.inner.lock().unwrap();
+        let start = ResourceKey::new(kind, "", "");
+        inner
+            .cache
+            .range(start..)
+            .take_while(|(k, _)| k.kind == kind)
+            .map(|(_, v)| v.clone())
+            .collect()
+    }
+
+    /// Selector query over the cache; the first label selector is
+    /// answered from the by-label index.
+    pub fn select(&self, kind: &str, params: &ListParams) -> Vec<Arc<Value>> {
+        let inner = self.inner.lock().unwrap();
+        if let Some((k, v)) = params.labels.first() {
+            let Some(keys) = inner.by_label.get(&(k.clone(), v.clone())) else {
+                return Vec::new();
+            };
+            return keys
+                .iter()
+                .filter(|key| key.kind == kind)
+                .filter_map(|key| inner.cache.get(key))
+                .filter(|o| params.matches(o))
+                .cloned()
+                .collect();
+        }
+        let start = ResourceKey::new(kind, "", "");
+        inner
+            .cache
+            .range(start..)
+            .take_while(|(k, _)| k.kind == kind)
+            .filter(|(_, o)| params.matches(o))
+            .map(|(_, v)| v.clone())
+            .collect()
+    }
+
+    /// Cached objects referencing `owner_uid`, optionally kind-scoped —
+    /// the by-owner index that replaces list-and-filter child scans.
+    pub fn owned_by(&self, owner_uid: &str, kind: Option<&str>) -> Vec<Arc<Value>> {
+        let inner = self.inner.lock().unwrap();
+        let Some(keys) = inner.by_owner.get(owner_uid) else {
+            return Vec::new();
+        };
+        keys.iter()
+            .filter(|key| kind.map(|k| key.kind == k).unwrap_or(true))
+            .filter_map(|key| inner.cache.get(key))
+            .cloned()
+            .collect()
+    }
+
+    /// Cached pods bound to a node (`""` = unbound).
+    pub fn pods_on_node(&self, node: &str) -> Vec<Arc<Value>> {
+        let inner = self.inner.lock().unwrap();
+        let Some(keys) = inner.by_node.get(node) else {
+            return Vec::new();
+        };
+        keys.iter()
+            .filter_map(|key| inner.cache.get(key))
+            .cloned()
+            .collect()
+    }
+
+    /// Cached object count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The resourceVersion the cache is current at.
+    pub fn revision(&self) -> u64 {
+        self.inner.lock().unwrap().watcher.revision()
+    }
+
+    pub fn stats(&self) -> InformerStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn pod(name: &str, app: &str, node: Option<&str>) -> Value {
+        let node_line = node
+            .map(|n| format!("  nodeName: {n}\n"))
+            .unwrap_or_default();
+        parse_one(&format!(
+            "kind: Pod\nmetadata:\n  name: {name}\n  labels:\n    app: {app}\nspec:\n{node_line}  containers: []\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn cache_and_indexes_track_store() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::new(api.clone());
+        api.create(pod("a", "web", Some("n1"))).unwrap();
+        api.create(pod("b", "web", None)).unwrap();
+        api.create(pod("c", "db", Some("n1"))).unwrap();
+        informer.sync();
+        assert_eq!(informer.len(), 3);
+        assert_eq!(informer.list("Pod").len(), 3);
+        assert_eq!(
+            informer
+                .select("Pod", &ListParams::all().with_label("app", "web"))
+                .len(),
+            2
+        );
+        assert_eq!(informer.pods_on_node("n1").len(), 2);
+        assert_eq!(informer.pods_on_node("").len(), 1);
+        // Deletion evicts cache and indexes.
+        api.delete("Pod", "default", "a").unwrap();
+        informer.sync();
+        assert_eq!(informer.pods_on_node("n1").len(), 1);
+        assert!(informer
+            .get(&ResourceKey::new("Pod", "default", "a"))
+            .is_none());
+    }
+
+    #[test]
+    fn owner_index_and_mapping() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::new(api.clone());
+        let rs = api
+            .create(
+                parse_one("kind: ReplicaSet\nmetadata:\n  name: web-abc\nspec: {}\n")
+                    .unwrap(),
+            )
+            .unwrap();
+        let queue = informer.register(vec![
+            WatchSpec::of("ReplicaSet"),
+            WatchSpec::owners("Pod", "ReplicaSet"),
+        ]);
+        informer.sync();
+        // The RS itself was queued on sync.
+        assert_eq!(
+            queue.drain(),
+            vec![ResourceKey::new("ReplicaSet", "default", "web-abc")]
+        );
+        // An owned pod's event maps back to the RS key.
+        let mut p = pod("web-abc-x", "web", None);
+        object::add_owner_ref(&mut p, "ReplicaSet", "web-abc", object::uid(&rs));
+        api.create(p).unwrap();
+        informer.sync();
+        assert_eq!(
+            queue.drain(),
+            vec![ResourceKey::new("ReplicaSet", "default", "web-abc")]
+        );
+        // And the by-owner index resolves children.
+        assert_eq!(informer.owned_by(object::uid(&rs), Some("Pod")).len(), 1);
+        assert!(informer.owned_by("uid-nope", None).is_empty());
+    }
+
+    #[test]
+    fn selector_mapping_requeues_services() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::new(api.clone());
+        api.create(
+            parse_one(
+                "kind: Service\nmetadata:\n  name: db\nspec:\n  selector:\n    app: db\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let queue = informer.register(vec![
+            WatchSpec::of("Service"),
+            WatchSpec::selectors("Pod", "Service"),
+        ]);
+        informer.sync();
+        queue.drain();
+        // Matching pod requeues the service; non-matching does not.
+        api.create(pod("db-0", "db", None)).unwrap();
+        informer.sync();
+        assert_eq!(
+            queue.drain(),
+            vec![ResourceKey::new("Service", "default", "db")]
+        );
+        api.create(pod("web-0", "web", None)).unwrap();
+        informer.sync();
+        assert!(queue.drain().is_empty());
+        // Deleting the matching pod requeues it again (old state matched).
+        api.delete("Pod", "default", "db-0").unwrap();
+        informer.sync();
+        assert_eq!(queue.drain().len(), 1);
+    }
+
+    #[test]
+    fn deleted_owner_enqueues_children() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::new(api.clone());
+        let job = api
+            .create(parse_one("kind: Job\nmetadata:\n  name: j\nspec: {}\n").unwrap())
+            .unwrap();
+        let mut p = pod("j-worker", "x", None);
+        object::add_owner_ref(&mut p, "Job", "j", object::uid(&job));
+        api.create(p).unwrap();
+        let queue = informer.register(vec![WatchSpec::deleted_children()]);
+        informer.sync();
+        assert!(queue.drain().is_empty(), "no deletions yet");
+        api.delete("Job", "default", "j").unwrap();
+        informer.sync();
+        assert_eq!(
+            queue.drain(),
+            vec![ResourceKey::new("Pod", "default", "j-worker")]
+        );
+    }
+
+    #[test]
+    fn compaction_resync_keeps_cache_consistent() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::new(api.clone());
+        api.create(pod("keeper", "web", None)).unwrap();
+        api.create(pod("goner", "web", None)).unwrap();
+        informer.sync();
+        assert_eq!(informer.len(), 2);
+        // While the informer sleeps, the log overflows and one object
+        // disappears entirely — its Deleted event is compacted away.
+        api.delete("Pod", "default", "goner").unwrap();
+        for i in 0..9000 {
+            api.record_event("default", "Pod/keeper", "Tick", &format!("{i}"));
+        }
+        informer.sync();
+        assert!(informer.stats().resyncs >= 1, "compaction must force a re-list");
+        assert!(informer
+            .get(&ResourceKey::new("Pod", "default", "keeper"))
+            .is_some());
+        assert!(
+            informer
+                .get(&ResourceKey::new("Pod", "default", "goner"))
+                .is_none(),
+            "stale cache entry must be evicted on resync"
+        );
+        assert_eq!(informer.revision(), api.revision());
+    }
+
+    #[test]
+    fn kind_scoped_informer_ignores_other_kinds() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::for_kinds(api.clone(), &["Pod"]);
+        let queue = informer.register(vec![WatchSpec::of("Pod")]);
+        api.create(pod("p", "web", None)).unwrap();
+        api.create(parse_one("kind: Job\nmetadata:\n  name: j\nspec: {}\n").unwrap())
+            .unwrap();
+        api.record_event("default", "Pod/p", "Tick", "x");
+        informer.sync();
+        // Only the pod is cached/queued; Jobs and Events never enter.
+        assert_eq!(informer.len(), 1);
+        assert!(informer.list("Job").is_empty());
+        assert_eq!(queue.drain(), vec![ResourceKey::new("Pod", "default", "p")]);
+    }
+
+    #[test]
+    fn late_registration_seeds_existing_state() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::new(api.clone());
+        api.create(pod("early", "web", None)).unwrap();
+        informer.sync();
+        let queue = informer.register(vec![WatchSpec::of("Pod")]);
+        assert_eq!(
+            queue.drain(),
+            vec![ResourceKey::new("Pod", "default", "early")]
+        );
+    }
+}

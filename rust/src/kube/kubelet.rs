@@ -2,6 +2,7 @@
 //! (Cloud baseline) and HPK's Slurm-side executor.
 
 use super::api::ApiServer;
+use super::informer::{SharedInformer, WatchSpec, WorkQueue};
 use super::object;
 use crate::apptainer::{ApptainerRuntime, NetContext};
 use crate::slurm::CancelToken;
@@ -94,12 +95,18 @@ pub fn run_pod_containers(
 /// The vanilla kubelet: runs pods bound to `node_name` directly on the
 /// container runtime (no Slurm) — the "regular Cloud setting" baseline
 /// the paper compares against in SS4.1.
+///
+/// Watch-driven: a private informer feeds it Pod keys; each sync pass
+/// touches only changed pods (start newly-bound ones, cancel deleted
+/// ones) instead of re-listing every pod in the cluster.
 pub struct VanillaKubelet {
     api: ApiServer,
     node_name: String,
     runtime: Arc<ApptainerRuntime>,
     shutdown: Arc<AtomicBool>,
     running: Arc<Mutex<HashMap<String, CancelToken>>>, // pod full name
+    informer: Arc<SharedInformer>,
+    queue: WorkQueue,
 }
 
 impl VanillaKubelet {
@@ -108,12 +115,17 @@ impl VanillaKubelet {
         node_name: &str,
         runtime: Arc<ApptainerRuntime>,
     ) -> Arc<VanillaKubelet> {
+        // Pod-scoped: this informer never caches or indexes other kinds.
+        let informer = Arc::new(SharedInformer::for_kinds(api.clone(), &["Pod"]));
+        let queue = informer.register(vec![WatchSpec::of("Pod")]);
         let kubelet = Arc::new(VanillaKubelet {
             api,
             node_name: node_name.to_string(),
             runtime,
             shutdown: Arc::new(AtomicBool::new(false)),
             running: Arc::new(Mutex::new(HashMap::new())),
+            informer,
+            queue,
         });
         let k = kubelet.clone();
         std::thread::Builder::new()
@@ -139,33 +151,31 @@ impl VanillaKubelet {
     }
 
     fn sync_once(&self) {
-        for pod in self.api.list("Pod") {
-            if pod.str_at("spec.nodeName") != Some(&self.node_name) {
+        self.informer.sync();
+        for key in self.queue.drain() {
+            if key.kind != "Pod" {
                 continue;
             }
-            let full = object::full_name(&pod);
-            let phase = object::pod_phase(&pod);
-            let started = self.running.lock().unwrap().contains_key(&full);
-            if phase == "Pending" && !started {
-                self.start_pod(pod.clone(), full);
+            let full = key.full_name();
+            match self.informer.get(&key) {
+                None => {
+                    // Deleted from the API: cancel if we were running it.
+                    if let Some(tok) = self.running.lock().unwrap().remove(&full) {
+                        tok.cancel();
+                    }
+                }
+                Some(pod) => {
+                    if pod.str_at("spec.nodeName") != Some(&self.node_name) {
+                        continue;
+                    }
+                    let phase = object::pod_phase(&pod);
+                    let started = self.running.lock().unwrap().contains_key(&full);
+                    if phase == "Pending" && !started {
+                        self.start_pod((*pod).clone(), full);
+                    }
+                }
             }
         }
-        // Cancel pods that were deleted from the API.
-        let live: Vec<String> = self
-            .api
-            .list("Pod")
-            .iter()
-            .map(object::full_name)
-            .collect();
-        let mut running = self.running.lock().unwrap();
-        running.retain(|full, tok| {
-            if !live.contains(full) {
-                tok.cancel();
-                false
-            } else {
-                true
-            }
-        });
     }
 
     fn start_pod(&self, pod: Value, full: String) {

@@ -5,11 +5,14 @@
 //! This module re-implements their documented behaviour so the HPK
 //! modules in [`crate::hpk`] integrate against the same surfaces:
 //!
-//! - [`store`] — the etcd role: versioned objects + a watchable event log.
+//! - [`store`] — the etcd role: versioned objects + a watchable event log
+//!   with compare-and-put and consistent snapshots.
 //! - [`object`] — helpers over manifest [`crate::Value`]s (names, labels,
 //!   owner refs, selectors).
-//! - [`api`] — the API-server role: CRUD verbs, defaulting, admission
-//!   chain, namespaces, field validation.
+//! - [`api`] — the API-server role: CRUD verbs, defaulting, the
+//!   admission chain shared by *every* mutation verb (update, patch and
+//!   the status subresource all commit through one
+//!   optimistic-concurrency path), and server-side list filtering.
 //! - [`controllers`] — the controller-manager role: Deployment,
 //!   ReplicaSet, Job, Endpoints and garbage collection, plus the
 //!   controller-runtime harness they share.
@@ -19,15 +22,45 @@
 //!   ClusterIP) backed by Endpoints.
 //! - [`kubelet`] — the kubelet interface + a vanilla node agent for the
 //!   Cloud-baseline comparison.
+//!
+//! # The client stack
+//!
+//! Controllers do not poll `list` snapshots; they consume the layered
+//! client surface, bottom to top:
+//!
+//! 1. [`client`] — typed coordinates ([`client::ResourceKey`],
+//!    [`client::GroupVersionKind`]) and per-kind [`client::Api`]
+//!    handles over a [`client::Client`], with [`client::ListParams`]
+//!    label/field selectors evaluated server-side.
+//! 2. [`watch`] — [`watch::Watcher`]: incremental event delivery with
+//!    resourceVersion resume, falling back to an automatic re-list
+//!    ([`watch::WatchOutcome::Resync`]) when the event log has been
+//!    compacted past the resume point.
+//! 3. [`informer`] — [`informer::SharedInformer`]: a watch-fed cache
+//!    with by-label, by-owner and by-node indexes, fanning events out
+//!    to per-reconciler [`informer::WorkQueue`]s as declared by
+//!    [`informer::WatchSpec`] mappings (self, owner, selector,
+//!    deleted-children). Reconcile work scales with events processed,
+//!    not with cluster object count.
+//!
+//! The [`controllers::ControllerManager`] builds one `SharedInformer`
+//! per manager and hands each reconciler a [`controllers::Context`]
+//! (client + informer + its own work queue).
 
 pub mod api;
+pub mod client;
 pub mod controllers;
 pub mod coredns;
+pub mod informer;
 pub mod kubelet;
 pub mod object;
 pub mod scheduler;
 pub mod store;
+pub mod watch;
 
 pub use api::{AdmissionCheck, AdmissionOp, ApiError, ApiServer};
+pub use client::{Api, Client, GroupVersionKind, ListParams, ResourceKey};
 pub use coredns::CoreDns;
+pub use informer::{SharedInformer, WatchSpec, WorkQueue};
 pub use store::{EventType, Store, StoreEvent};
+pub use watch::{WatchOutcome, Watcher};

@@ -45,24 +45,33 @@ pub fn annotation<'a>(obj: &'a Value, key: &str) -> Option<&'a str> {
     obj.path("metadata.annotations")?.get(key)?.as_str()
 }
 
+/// The label pairs a selector (matchLabels or a bare map) requires.
+pub fn selector_labels(selector: &Value) -> Vec<(String, String)> {
+    selector
+        .get("matchLabels")
+        .or(Some(selector))
+        .and_then(|m| m.as_map())
+        .map(|entries| {
+            entries
+                .iter()
+                .filter_map(|(k, v)| v.coerce_string().map(|s| (k.clone(), s)))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
 /// Whether `selector` (matchLabels or a bare map) matches the object's
 /// labels. An empty selector matches nothing (Kubernetes semantics for
 /// absent selectors on services are handled by callers).
 pub fn selector_matches(selector: &Value, obj: &Value) -> bool {
-    let wanted = selector
-        .get("matchLabels")
-        .or(Some(selector))
-        .and_then(|m| m.as_map())
-        .map(|entries| entries.to_vec())
-        .unwrap_or_default();
+    let wanted = selector_labels(selector);
     if wanted.is_empty() {
         return false;
     }
     let have = labels(obj);
-    wanted.iter().all(|(k, v)| {
-        let vs = v.coerce_string().unwrap_or_default();
-        have.iter().any(|(hk, hv)| hk == k && *hv == vs)
-    })
+    wanted
+        .iter()
+        .all(|(k, v)| have.iter().any(|(hk, hv)| hk == k && hv == v))
 }
 
 /// Owner references as (kind, name, uid) triples.

@@ -4,9 +4,15 @@
 //! ([`crate::hpk::PassThroughScheduler`]); the vanilla one is kept for
 //! the Cloud-baseline comparison in the benches: it scores Node objects
 //! by free resources and binds pods to the least-loaded fitting node.
+//!
+//! Event-driven: pod and node changes wake it, and it walks only the
+//! informer's by-node index — unbound pods live under the `""` node
+//! bucket, so scheduling work scales with pending pods, not with the
+//! cluster's total object count.
 
 use super::api::ApiServer;
-use super::controllers::Reconciler;
+use super::controllers::{Context, Reconciler};
+use super::informer::WatchSpec;
 use super::object;
 use crate::yamlkit::Value;
 
@@ -32,35 +38,39 @@ impl Reconciler for DefaultScheduler {
         "default-scheduler"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        let nodes = api.list("Node");
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![WatchSpec::of("Pod"), WatchSpec::of("Node")]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        // Any pod/node change wakes us; pending pods are then read off
+        // the informer's unbound bucket (level within the event).
+        if ctx.drain().is_empty() {
+            return;
+        }
+        let nodes = ctx.informer.list("Node");
         if nodes.is_empty() {
             return;
         }
-        // Usage per node from bound, non-terminal pods.
-        let pods = api.list("Pod");
-        let mut usage: Vec<(String, i64, i64)> = nodes
-            .iter()
-            .map(|n| (object::name(n).to_string(), 0i64, 0i64))
-            .collect();
-        for p in &pods {
-            let phase = object::pod_phase(p);
-            if phase == "Succeeded" || phase == "Failed" {
-                continue;
-            }
-            if let Some(node_name) = p.str_at("spec.nodeName") {
-                let (cpu, mem) = object::pod_resource_totals(p);
-                if let Some(u) = usage.iter_mut().find(|(n, _, _)| n == node_name) {
-                    u.1 += cpu;
-                    u.2 += mem;
+        // Usage per node from bound, non-terminal pods (by-node index).
+        let mut usage: Vec<(String, i64, i64)> = Vec::new();
+        for n in &nodes {
+            let name = object::name(n).to_string();
+            let (mut cpu, mut mem) = (0i64, 0i64);
+            for p in ctx.informer.pods_on_node(&name) {
+                let phase = object::pod_phase(&p);
+                if phase == "Succeeded" || phase == "Failed" {
+                    continue;
                 }
+                let (c, m) = object::pod_resource_totals(&p);
+                cpu += c;
+                mem += m;
             }
+            usage.push((name, cpu, mem));
         }
 
-        for p in pods {
-            if p.str_at("spec.nodeName").is_some() {
-                continue;
-            }
+        let pod_api = ctx.api("Pod");
+        for p in ctx.informer.pods_on_node("") {
             if object::pod_phase(&p) != "Pending" {
                 continue;
             }
@@ -94,8 +104,8 @@ impl Reconciler for DefaultScheduler {
                 patch
                     .entry_map("spec")
                     .set("nodeName", Value::from(node_name.as_str()));
-                if api
-                    .patch("Pod", object::namespace(&p), object::name(&p), &patch)
+                if pod_api
+                    .patch(object::namespace(&p), object::name(&p), &patch)
                     .is_ok()
                 {
                     if let Some(u) =
@@ -104,7 +114,7 @@ impl Reconciler for DefaultScheduler {
                         u.1 += need_cpu;
                         u.2 += need_mem;
                     }
-                    api.record_event(
+                    ctx.client.server().record_event(
                         object::namespace(&p),
                         &format!("Pod/{}", object::name(&p)),
                         "Scheduled",
@@ -129,6 +139,7 @@ pub fn register_node(api: &ApiServer, name: &str, cpus: u32, memory_bytes: u64) 
 
 #[cfg(test)]
 mod tests {
+    use super::super::controllers::testutil::reconcile_once;
     use super::*;
     use crate::yamlkit::parse_one;
 
@@ -144,8 +155,7 @@ mod tests {
         let api = ApiServer::new();
         register_node(&api, "n1", 2, 8 << 30);
         api.create(pod("p1", 1500)).unwrap();
-        let s = DefaultScheduler;
-        s.reconcile(&api);
+        reconcile_once(&api, &DefaultScheduler);
         let p = api.get("Pod", "default", "p1").unwrap();
         assert_eq!(p.str_at("spec.nodeName"), Some("n1"));
     }
@@ -158,8 +168,7 @@ mod tests {
         for i in 0..4 {
             api.create(pod(&format!("p{i}"), 1000)).unwrap();
         }
-        let s = DefaultScheduler;
-        s.reconcile(&api);
+        reconcile_once(&api, &DefaultScheduler);
         let mut counts = std::collections::HashMap::new();
         for p in api.list("Pod") {
             *counts
@@ -176,8 +185,7 @@ mod tests {
         let api = ApiServer::new();
         register_node(&api, "n1", 1, 1 << 30);
         api.create(pod("huge", 64_000)).unwrap();
-        let s = DefaultScheduler;
-        s.reconcile(&api);
+        reconcile_once(&api, &DefaultScheduler);
         let p = api.get("Pod", "default", "huge").unwrap();
         assert!(p.str_at("spec.nodeName").is_none());
     }
@@ -190,7 +198,7 @@ mod tests {
         p.entry_map("spec")
             .set("schedulerName", Value::from("hpk-scheduler"));
         api.create(p).unwrap();
-        DefaultScheduler.reconcile(&api);
+        reconcile_once(&api, &DefaultScheduler);
         assert!(api
             .get("Pod", "default", "p1")
             .unwrap()

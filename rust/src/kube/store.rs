@@ -57,8 +57,18 @@ impl Store {
     }
 
     /// Insert or replace; returns the new revision.
-    pub fn put(&self, kind: &str, namespace: &str, name: &str, mut obj: Value) -> u64 {
+    pub fn put(&self, kind: &str, namespace: &str, name: &str, obj: Value) -> u64 {
         let mut inner = self.inner.lock().unwrap();
+        Self::put_locked(&mut inner, kind, namespace, name, obj)
+    }
+
+    fn put_locked(
+        inner: &mut Inner,
+        kind: &str,
+        namespace: &str,
+        name: &str,
+        mut obj: Value,
+    ) -> u64 {
         inner.revision += 1;
         let rev = inner.revision;
         obj.entry_map("metadata")
@@ -83,6 +93,32 @@ impl Store {
             inner.log.pop_front();
         }
         rev
+    }
+
+    /// Compare-and-put: atomically replace the object only if its current
+    /// `metadata.resourceVersion` equals `expected` (`None` = the object
+    /// must not exist yet). Returns the new revision, or the actual
+    /// current revision (`None` if absent) on mismatch. This is the
+    /// primitive the API server's optimistic-concurrency contract rests
+    /// on — the get-check-put window of `put` is closed here.
+    pub fn compare_and_put(
+        &self,
+        kind: &str,
+        namespace: &str,
+        name: &str,
+        expected: Option<u64>,
+        obj: Value,
+    ) -> Result<u64, Option<u64>> {
+        let mut inner = self.inner.lock().unwrap();
+        let current_rv: Option<u64> = inner
+            .objects
+            .get(kind)
+            .and_then(|m| m.get(&nskey(namespace, name)))
+            .map(|o| o.i64_at("metadata.resourceVersion").unwrap_or(0) as u64);
+        if current_rv != expected {
+            return Err(current_rv);
+        }
+        Ok(Self::put_locked(&mut inner, kind, namespace, name, obj))
     }
 
     /// Fetch one object.
@@ -158,6 +194,20 @@ impl Store {
         (events, complete)
     }
 
+    /// A consistent snapshot of every object together with the revision
+    /// it is valid at — what a watcher re-lists from after the event log
+    /// has been compacted past its resume point. Taken under one lock so
+    /// no event can fall between the revision and the object set.
+    pub fn snapshot(&self) -> (u64, Vec<Arc<Value>>) {
+        let inner = self.inner.lock().unwrap();
+        let objects = inner
+            .objects
+            .values()
+            .flat_map(|m| m.values().cloned())
+            .collect();
+        (inner.revision, objects)
+    }
+
     /// Kinds present in the store.
     pub fn kinds(&self) -> Vec<String> {
         let inner = self.inner.lock().unwrap();
@@ -228,6 +278,60 @@ mod tests {
         assert!(complete);
         assert_eq!(events.len(), 1);
         assert_eq!(events[0].name, "b");
+    }
+
+    #[test]
+    fn compare_and_put_enforces_expectation() {
+        let s = Store::new();
+        // Must-not-exist insert.
+        let r1 = s.compare_and_put("Pod", "default", "a", None, obj("a")).unwrap();
+        // Second must-not-exist insert fails and reports the actual rv.
+        assert_eq!(
+            s.compare_and_put("Pod", "default", "a", None, obj("a")),
+            Err(Some(r1))
+        );
+        // Matching expectation succeeds.
+        let r2 = s
+            .compare_and_put("Pod", "default", "a", Some(r1), obj("a"))
+            .unwrap();
+        assert!(r2 > r1);
+        // Stale expectation fails.
+        assert_eq!(
+            s.compare_and_put("Pod", "default", "a", Some(r1), obj("a")),
+            Err(Some(r2))
+        );
+        // Expectation on a missing object fails with None.
+        assert_eq!(
+            s.compare_and_put("Pod", "default", "ghost", Some(1), obj("g")),
+            Err(None)
+        );
+    }
+
+    #[test]
+    fn snapshot_is_consistent_with_revision() {
+        let s = Store::new();
+        s.put("Pod", "default", "a", obj("a"));
+        let r = s.put("Job", "default", "b", obj("b"));
+        let (rev, objects) = s.snapshot();
+        assert_eq!(rev, r);
+        assert_eq!(objects.len(), 2);
+    }
+
+    #[test]
+    fn compaction_reported_incomplete() {
+        let s = Store::new();
+        let first = s.put("Pod", "default", "seed", obj("seed"));
+        for i in 0..(EVENT_LOG_CAP + 10) {
+            s.put("Pod", "default", &format!("p{i}"), obj("x"));
+        }
+        // The log no longer reaches back to `first`.
+        let (_, complete) = s.events_since(first);
+        assert!(!complete, "log must report compaction");
+        // But a recent revision is still served incrementally.
+        let recent = s.revision() - 5;
+        let (events, complete) = s.events_since(recent);
+        assert!(complete);
+        assert_eq!(events.len(), 5);
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //! - [`hpcsim`] — nodes, resources, virtual time, failure injection.
 //! - [`slurm`] — the Slurm workload-manager simulator.
 //! - [`apptainer`] — the container runtime + Flannel CNI.
-//! - [`kube`] — the Kubernetes core: store, API server, controllers.
+//! - [`kube`] — the Kubernetes core: store, API server, and the layered
+//!   client stack (typed `Client`/`Api` handles with server-side
+//!   selectors → resumable `Watcher` streams → `SharedInformer` caches
+//!   with indexed work queues) that every controller reconciles
+//!   against; reconcile work scales with events, not object count.
 //! - [`hpk`] — **the paper's contribution**: hpk-kubelet, pass-through
 //!   scheduler, service admission controller, control-plane bootstrap.
 //! - [`runtime`] — PJRT loading/execution of the AOT compute artifacts.

@@ -1,8 +1,8 @@
 //! The Argo workflow controller: drives expanded DAGs by creating pods.
 
 use super::engine::{expand_workflow_with, WorkflowNode};
-use crate::kube::api::ApiServer;
-use crate::kube::controllers::Reconciler;
+use crate::kube::controllers::{Context, Reconciler, Runner};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::virtfs::VirtFs;
 use crate::yamlkit::Value;
@@ -18,7 +18,8 @@ pub struct WorkflowController {
 }
 
 /// Register the controllers with a running control plane ("helm install
-/// argo"): the Workflow driver plus the CronWorkflow scheduler.
+/// argo"): the Workflow driver plus the CronWorkflow scheduler, sharing
+/// one informer through a [`Runner`].
 pub fn install(cp: &crate::hpk::ControlPlane) {
     let api = cp.api.clone();
     let clock = cp.cluster.clock.clone();
@@ -26,11 +27,15 @@ pub fn install(cp: &crate::hpk::ControlPlane) {
     std::thread::Builder::new()
         .name("argo-controller".to_string())
         .spawn(move || {
-            let c = WorkflowController { fs: Some(fs) };
-            let cron = super::cron::CronWorkflowController::new(clock);
+            let runner = Runner::new(
+                &api,
+                vec![
+                    Box::new(WorkflowController { fs: Some(fs) }),
+                    Box::new(super::cron::CronWorkflowController::new(clock)),
+                ],
+            );
             loop {
-                c.reconcile(&api);
-                cron.reconcile(&api);
+                runner.run_once();
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
         })
@@ -63,14 +68,29 @@ impl Reconciler for WorkflowController {
         "argo-workflow"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for wf in api.list("Workflow") {
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![
+            WatchSpec::of("Workflow"),
+            WatchSpec::owners("Pod", "Workflow"),
+        ]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let workflows = ctx.api("Workflow");
+        let pod_api = ctx.api("Pod");
+        for wf_key in ctx.drain() {
+            if wf_key.kind != "Workflow" {
+                continue;
+            }
+            let Ok(wf) = workflows.get(&wf_key.namespace, &wf_key.name) else {
+                continue;
+            };
             let phase = wf.str_at("status.phase").unwrap_or("");
             if phase == "Succeeded" || phase == "Failed" || phase == "Error" {
                 continue;
             }
-            let ns = object::namespace(&wf);
-            let wf_name = object::name(&wf);
+            let ns = &wf_key.namespace;
+            let wf_name = &wf_key.name;
             // Output resolver: node id -> its pod's outputs JSON array.
             let fs = self.fs.clone();
             let wf_name_owned = wf_name.to_string();
@@ -99,7 +119,7 @@ impl Reconciler for WorkflowController {
                     let mut st = Value::map();
                     st.set("phase", Value::from("Error"));
                     st.set("message", Value::from(e.as_str()));
-                    let _ = api.update_status("Workflow", ns, wf_name, st);
+                    let _ = workflows.update_status(ns, wf_name, st);
                     continue;
                 }
             };
@@ -109,7 +129,7 @@ impl Reconciler for WorkflowController {
                 std::collections::HashMap::new();
             for node in &nodes {
                 let pod_name = node_pod_name(wf_name, node);
-                let p = api.get("Pod", ns, &pod_name).ok();
+                let p = pod_api.get(ns, &pod_name).ok();
                 let phase = p
                     .as_ref()
                     .map(|p| object::pod_phase(p).to_string())
@@ -143,7 +163,7 @@ impl Reconciler for WorkflowController {
                 }
                 pod.entry_map("metadata")
                     .entry_map("labels")
-                    .set("workflows.argoproj.io/workflow", Value::from(wf_name));
+                    .set("workflows.argoproj.io/workflow", Value::from(wf_name.as_str()));
                 let mut container = node
                     .template
                     .get("container")
@@ -153,7 +173,7 @@ impl Reconciler for WorkflowController {
                 pod.entry_map("spec")
                     .set("containers", Value::Seq(vec![container]));
                 object::add_owner_ref(&mut pod, "Workflow", wf_name, object::uid(&wf));
-                if api.create(pod).is_ok() {
+                if pod_api.create(pod).is_ok() {
                     node_phase.insert(node.id.as_str(), "Pending".to_string());
                 }
             }
@@ -188,7 +208,7 @@ impl Reconciler for WorkflowController {
                     Value::from(format!("{succeeded}/{}", nodes.len())),
                 );
                 st.set("nodes", progress_nodes);
-                let _ = api.update_status("Workflow", ns, wf_name, st);
+                let _ = workflows.update_status(ns, wf_name, st);
             }
         }
     }
@@ -197,6 +217,8 @@ impl Reconciler for WorkflowController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kube::api::ApiServer;
+    use crate::kube::controllers::testutil::reconcile_once;
     use crate::yamlkit::parse_one;
 
     fn finish_pods(api: &ApiServer, phase: &str) {
@@ -241,16 +263,16 @@ spec:
         let api = ApiServer::new();
         api.create(diamond()).unwrap();
         let c = WorkflowController::default();
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         assert_eq!(api.list("Pod").len(), 1, "only the root starts");
         finish_pods(&api, "Succeeded");
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         assert_eq!(api.list("Pod").len(), 3, "b and c fan out");
         finish_pods(&api, "Succeeded");
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         assert_eq!(api.list("Pod").len(), 4);
         finish_pods(&api, "Succeeded");
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         let wf = api.get("Workflow", "default", "dia").unwrap();
         assert_eq!(wf.str_at("status.phase"), Some("Succeeded"));
         assert_eq!(wf.str_at("status.progress"), Some("4/4"));
@@ -261,9 +283,9 @@ spec:
         let api = ApiServer::new();
         api.create(diamond()).unwrap();
         let c = WorkflowController::default();
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         finish_pods(&api, "Failed");
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         let wf = api.get("Workflow", "default", "dia").unwrap();
         assert_eq!(wf.str_at("status.phase"), Some("Failed"));
         assert_eq!(api.list("Pod").len(), 1, "no descendants launched");
@@ -303,7 +325,7 @@ spec:
             .unwrap(),
         )
         .unwrap();
-        WorkflowController::default().reconcile(&api);
+        reconcile_once(&api, &WorkflowController::default());
         let pods = api.list("Pod");
         assert_eq!(pods.len(), 1);
         assert_eq!(
@@ -320,7 +342,7 @@ spec:
                 .unwrap(),
         )
         .unwrap();
-        WorkflowController::default().reconcile(&api);
+        reconcile_once(&api, &WorkflowController::default());
         let wf = api.get("Workflow", "default", "bad").unwrap();
         assert_eq!(wf.str_at("status.phase"), Some("Error"));
     }

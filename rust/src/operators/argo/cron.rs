@@ -7,7 +7,8 @@
 //! the default 100x time scale).
 
 use crate::hpcsim::Clock;
-use crate::kube::api::ApiServer;
+use crate::kube::controllers::Context;
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
 
@@ -106,9 +107,19 @@ impl crate::kube::controllers::Reconciler for CronWorkflowController {
         "cron-workflow"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![WatchSpec::of("CronWorkflow")]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        // Time-driven: schedules fire on clock minutes, not object
+        // events, so scan the (cheap, Arc-shared) informer cache every
+        // pass; the queue is drained only to stay empty.
+        ctx.drain();
+        let cron_api = ctx.api("CronWorkflow");
+        let wf_api = ctx.api("Workflow");
         let minute = self.clock.now_ms() / 60_000;
-        for cwf in api.list("CronWorkflow") {
+        for cwf in ctx.informer.list("CronWorkflow") {
             let ns = object::namespace(&cwf);
             let name = object::name(&cwf);
             let full = format!("{ns}/{name}");
@@ -116,10 +127,12 @@ impl crate::kube::controllers::Reconciler for CronWorkflowController {
                 continue;
             };
             let Ok(schedule) = Schedule::parse(schedule_s) else {
-                let mut st = Value::map();
-                st.set("phase", Value::from("Error"));
-                st.set("message", Value::from("bad schedule"));
-                let _ = api.update_status("CronWorkflow", ns, name, st);
+                if cwf.str_at("status.phase") != Some("Error") {
+                    let mut st = Value::map();
+                    st.set("phase", Value::from("Error"));
+                    st.set("message", Value::from("bad schedule"));
+                    let _ = cron_api.update_status(ns, name, st);
+                }
                 continue;
             };
             let mut fired = self.fired.lock().unwrap();
@@ -141,11 +154,11 @@ impl crate::kube::controllers::Reconciler for CronWorkflowController {
                 .set("workflows.argoproj.io/cron-workflow", Value::from(name));
             wf.set("spec", wf_spec.clone());
             object::add_owner_ref(&mut wf, "CronWorkflow", name, object::uid(&cwf));
-            if api.create(wf).is_ok() {
+            if wf_api.create(wf).is_ok() {
                 fired.insert(full, minute);
                 let mut st = Value::map();
                 st.set("lastScheduledMinute", Value::Int(minute as i64));
-                let _ = api.update_status("CronWorkflow", ns, name, st);
+                let _ = cron_api.update_status(ns, name, st);
             }
         }
     }
@@ -154,7 +167,8 @@ impl crate::kube::controllers::Reconciler for CronWorkflowController {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kube::controllers::Reconciler;
+    use crate::kube::api::ApiServer;
+    use crate::kube::controllers::testutil::reconcile_once;
     use crate::yamlkit::parse_one;
 
     #[test]
@@ -214,14 +228,14 @@ spec:
         let c = CronWorkflowController::new(clock);
         // Several reconciles within one simulated minute must fire once.
         let before = api.list("Workflow").len();
-        c.reconcile(&api);
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
+        reconcile_once(&api, &c);
         let after_burst = api.list("Workflow").len();
         assert_eq!(after_burst - before, 1);
         // Wait > 1 simulated minute (60_000 sim ms = ~1 real ms here,
         // but reconcile needs a *different* minute value).
         std::thread::sleep(std::time::Duration::from_millis(3));
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         assert!(api.list("Workflow").len() > after_burst);
         // The stamped workflow carries the owner + spec.
         let wf = &api.list("Workflow")[0];
@@ -238,7 +252,7 @@ spec:
         )
         .unwrap();
         let c = CronWorkflowController::new(Clock::new(100));
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         let cwf = api.get("CronWorkflow", "default", "bad").unwrap();
         assert_eq!(cwf.str_at("status.phase"), Some("Error"));
     }

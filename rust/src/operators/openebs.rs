@@ -7,7 +7,8 @@
 //! directory out of the class's mount, and binds a PersistentVolume.
 
 use crate::kube::api::ApiServer;
-use crate::kube::controllers::Reconciler;
+use crate::kube::controllers::{Context, Reconciler};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::virtfs::VirtFs;
 use crate::yamlkit::Value;
@@ -30,24 +31,38 @@ impl Reconciler for OpenEbsController {
         "openebs"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for pvc in api.list("PersistentVolumeClaim") {
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![WatchSpec::of("PersistentVolumeClaim")]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let pvcs = ctx.api("PersistentVolumeClaim");
+        let pvs = ctx.api("PersistentVolume");
+        for key in ctx.drain() {
+            if key.kind != "PersistentVolumeClaim" {
+                continue;
+            }
+            let Ok(pvc) = pvcs.get(&key.namespace, &key.name) else {
+                continue;
+            };
             if pvc.str_at("status.phase") == Some("Bound") {
                 continue;
             }
-            let ns = object::namespace(&pvc);
-            let name = object::name(&pvc);
+            let ns = &key.namespace;
+            let name = &key.name;
             let class = pvc
                 .str_at("spec.storageClassName")
                 .unwrap_or("nvme-local");
             let Some(root) = class_root(class) else {
-                let mut st = Value::map();
-                st.set("phase", Value::from("Pending"));
-                st.set(
-                    "reason",
-                    Value::from(format!("unknown storage class {class}")),
-                );
-                let _ = api.update_status("PersistentVolumeClaim", ns, name, st);
+                if pvc.str_at("status.phase") != Some("Pending") {
+                    let mut st = Value::map();
+                    st.set("phase", Value::from("Pending"));
+                    st.set(
+                        "reason",
+                        Value::from(format!("unknown storage class {class}")),
+                    );
+                    let _ = pvcs.update_status(ns, name, st);
+                }
                 continue;
             };
             let pv_name = format!("pv-{ns}-{name}");
@@ -62,19 +77,19 @@ impl Reconciler for OpenEbsController {
             hp.set("path", Value::from(path.as_str()));
             spec.set("hostPath", hp);
             let mut claim_ref = Value::map();
-            claim_ref.set("namespace", Value::from(ns));
-            claim_ref.set("name", Value::from(name));
+            claim_ref.set("namespace", Value::from(ns.as_str()));
+            claim_ref.set("name", Value::from(name.as_str()));
             spec.set("claimRef", claim_ref);
             if let Some(cap) = pvc.path("spec.resources.requests.storage") {
                 spec.entry_map("capacity").set("storage", cap.clone());
             }
-            let _ = api.create(pv);
+            let _ = pvs.create(pv);
 
             let mut st = Value::map();
             st.set("phase", Value::from("Bound"));
             st.set("volumeName", Value::from(pv_name.as_str()));
             st.set("hostPath", Value::from(path.as_str()));
-            let _ = api.update_status("PersistentVolumeClaim", ns, name, st);
+            let _ = pvcs.update_status(ns, name, st);
         }
     }
 }
@@ -88,6 +103,7 @@ pub fn pvc_host_path(api: &ApiServer, namespace: &str, name: &str) -> Option<Str
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kube::controllers::testutil::reconcile_once;
     use crate::yamlkit::parse_one;
 
     fn pvc(name: &str, class: &str) -> Value {
@@ -103,7 +119,7 @@ mod tests {
         let fs = VirtFs::new();
         api.create(pvc("scratch", "nvme-local")).unwrap();
         let c = OpenEbsController { fs: fs.clone() };
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         let bound = api.get("PersistentVolumeClaim", "default", "scratch").unwrap();
         assert_eq!(bound.str_at("status.phase"), Some("Bound"));
         let path = bound.str_at("status.hostPath").unwrap();
@@ -122,7 +138,7 @@ mod tests {
         let c = OpenEbsController { fs: VirtFs::new() };
         api.create(pvc("a", "nvme-local")).unwrap();
         api.create(pvc("b", "lustre-home")).unwrap();
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         let a = pvc_host_path(&api, "default", "a").unwrap();
         let b = pvc_host_path(&api, "default", "b").unwrap();
         assert!(a.starts_with("/mnt/nvme/"));
@@ -134,7 +150,7 @@ mod tests {
         let api = ApiServer::new();
         let c = OpenEbsController { fs: VirtFs::new() };
         api.create(pvc("x", "gluster")).unwrap();
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
         let x = api.get("PersistentVolumeClaim", "default", "x").unwrap();
         assert_eq!(x.str_at("status.phase"), Some("Pending"));
     }
@@ -144,8 +160,8 @@ mod tests {
         let api = ApiServer::new();
         let c = OpenEbsController { fs: VirtFs::new() };
         api.create(pvc("a", "nvme-local")).unwrap();
-        c.reconcile(&api);
-        c.reconcile(&api);
+        reconcile_once(&api, &c);
+        reconcile_once(&api, &c);
         assert_eq!(api.list("PersistentVolume").len(), 1);
     }
 }

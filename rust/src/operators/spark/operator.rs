@@ -5,8 +5,8 @@
 //! CRD. It handles the entire lifecycle of execution, including
 //! submission, scaling, and cleanup" (SS4.1).
 
-use crate::kube::api::ApiServer;
-use crate::kube::controllers::Reconciler;
+use crate::kube::controllers::{Context, Reconciler, Runner};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
 
@@ -23,9 +23,9 @@ pub fn install(cp: &crate::hpk::ControlPlane) {
     std::thread::Builder::new()
         .name("spark-operator".to_string())
         .spawn(move || {
-            let c = SparkOperator;
+            let runner = Runner::new(&api, vec![Box::new(SparkOperator)]);
             loop {
-                c.reconcile(&api);
+                runner.run_once();
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
         })
@@ -44,16 +44,31 @@ impl Reconciler for SparkOperator {
         "spark-operator"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for app in api.list("SparkApplication") {
-            let ns = object::namespace(&app);
-            let name = object::name(&app);
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![
+            WatchSpec::of("SparkApplication"),
+            WatchSpec::owners("Pod", "SparkApplication"),
+        ]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let apps = ctx.api("SparkApplication");
+        let pod_api = ctx.api("Pod");
+        for key in ctx.drain() {
+            if key.kind != "SparkApplication" {
+                continue;
+            }
+            let Ok(app) = apps.get(&key.namespace, &key.name) else {
+                continue;
+            };
+            let ns = &key.namespace;
+            let name = &key.name;
             let state = app.str_at("status.applicationState.state").unwrap_or("");
             if state == "COMPLETED" || state == "FAILED" {
                 continue;
             }
             let driver_name = format!("{name}-driver");
-            match api.get("Pod", ns, &driver_name) {
+            match pod_api.get(ns, &driver_name) {
                 Err(_) => {
                     // Submit: build the driver pod from the spec.
                     let mode = app
@@ -92,7 +107,7 @@ impl Reconciler for SparkOperator {
                     let mut pod = object::new_object("Pod", ns, &driver_name);
                     let mut labels = Value::map();
                     labels.set("spark-role", Value::from("driver"));
-                    labels.set("spark-app", Value::from(name));
+                    labels.set("spark-app", Value::from(name.as_str()));
                     pod.entry_map("metadata").set("labels", labels);
                     let mut container = Value::map();
                     container.set("name", Value::from("driver"));
@@ -133,11 +148,11 @@ impl Reconciler for SparkOperator {
                         name,
                         object::uid(&app),
                     );
-                    if api.create(pod).is_ok() {
+                    if pod_api.create(pod).is_ok() {
                         let mut st = Value::map();
                         st.entry_map("applicationState")
                             .set("state", Value::from("SUBMITTED"));
-                        let _ = api.update_status("SparkApplication", ns, name, st);
+                        let _ = apps.update_status(ns, name, st);
                     }
                 }
                 Ok(driver) => {
@@ -157,7 +172,7 @@ impl Reconciler for SparkOperator {
                                     .set("errorMessage", Value::from(r));
                             }
                         }
-                        let _ = api.update_status("SparkApplication", ns, name, st);
+                        let _ = apps.update_status(ns, name, st);
                     }
                 }
             }
@@ -205,6 +220,8 @@ spec:
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kube::api::ApiServer;
+    use crate::kube::controllers::testutil::reconcile_once;
     use crate::yamlkit::parse_all;
 
     #[test]
@@ -236,7 +253,7 @@ mod tests {
         ))
         .unwrap();
         let op = SparkOperator;
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         let driver = api.get("Pod", "default", "app-driver").unwrap();
         assert_eq!(driver.str_at("metadata.labels.spark-role"), Some("driver"));
         let env = driver.path("spec.containers.0.env").unwrap().as_seq().unwrap();
@@ -252,7 +269,7 @@ mod tests {
             crate::yamlkit::parse_one("phase: Succeeded\n").unwrap(),
         )
         .unwrap();
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         let app = api.get("SparkApplication", "default", "app").unwrap();
         assert_eq!(
             app.str_at("status.applicationState.state"),

@@ -1,8 +1,8 @@
 //! The TFJob operator: CRD -> worker pods + coordinator lifecycle.
 
 use super::allreduce::{AllReduce, TrainerRegistry};
-use crate::kube::api::ApiServer;
-use crate::kube::controllers::Reconciler;
+use crate::kube::controllers::{Context, Reconciler, Runner};
+use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::workloads::trainer;
 use crate::yamlkit::Value;
@@ -28,9 +28,9 @@ pub fn install(cp: &crate::hpk::ControlPlane) {
     std::thread::Builder::new()
         .name("training-operator".to_string())
         .spawn(move || {
-            let c = TfJobOperator { registry };
+            let runner = Runner::new(&api, vec![Box::new(TfJobOperator { registry })]);
             loop {
-                c.reconcile(&api);
+                runner.run_once();
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
         })
@@ -49,10 +49,22 @@ impl Reconciler for TfJobOperator {
         "tfjob-operator"
     }
 
-    fn reconcile(&self, api: &ApiServer) {
-        for job in api.list("TFJob") {
-            let ns = object::namespace(&job);
-            let name = object::name(&job);
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![WatchSpec::of("TFJob"), WatchSpec::owners("Pod", "TFJob")]
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let jobs = ctx.api("TFJob");
+        let pod_api = ctx.api("Pod");
+        for key in ctx.drain() {
+            if key.kind != "TFJob" {
+                continue;
+            }
+            let Ok(job) = jobs.get(&key.namespace, &key.name) else {
+                continue;
+            };
+            let ns = &key.namespace;
+            let name = &key.name;
             let state = job.str_at("status.state").unwrap_or("");
             if state == "Succeeded" || state == "Failed" {
                 continue;
@@ -66,7 +78,7 @@ impl Reconciler for TfJobOperator {
                 let mut st = Value::map();
                 st.set("state", Value::from("Failed"));
                 st.set("reason", Value::from(format!("unknown variant {variant}")));
-                let _ = api.update_status("TFJob", ns, name, st);
+                let _ = jobs.update_status(ns, name, st);
                 continue;
             }
             let steps = job.i64_at("spec.steps").unwrap_or(100);
@@ -92,11 +104,14 @@ impl Reconciler for TfJobOperator {
             let mut pods_failed = 0usize;
             for r in 0..replicas {
                 let pod_name = format!("{name}-worker-{r}");
-                match api.get("Pod", ns, &pod_name) {
+                match pod_api.get(ns, &pod_name) {
                     Err(_) => {
                         let mut pod = object::new_object("Pod", ns, &pod_name);
                         let mut labels = Value::map();
-                        labels.set("training.kubeflow.org/job-name", Value::from(name));
+                        labels.set(
+                            "training.kubeflow.org/job-name",
+                            Value::from(name.as_str()),
+                        );
                         labels.set("training.kubeflow.org/replica-type", Value::from("worker"));
                         pod.entry_map("metadata").set("labels", labels);
                         // Training outlives the site's default batch
@@ -140,7 +155,7 @@ impl Reconciler for TfJobOperator {
                         pod.entry_map("spec")
                             .set("containers", Value::Seq(vec![container]));
                         object::add_owner_ref(&mut pod, "TFJob", name, object::uid(&job));
-                        let _ = api.create(pod);
+                        let _ = pod_api.create(pod);
                     }
                     Ok(p) => match object::pod_phase(&p) {
                         "Succeeded" => pods_done += 1,
@@ -166,7 +181,7 @@ impl Reconciler for TfJobOperator {
                 let mut st = Value::map();
                 st.set("state", Value::from(new_state));
                 st.set("succeededWorkers", Value::Int(pods_done as i64));
-                let _ = api.update_status("TFJob", ns, name, st);
+                let _ = jobs.update_status(ns, name, st);
             }
         }
     }
@@ -204,6 +219,8 @@ spec:
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kube::api::ApiServer;
+    use crate::kube::controllers::testutil::reconcile_once;
     use crate::yamlkit::parse_one;
 
     #[test]
@@ -214,7 +231,7 @@ mod tests {
         ))
         .unwrap();
         let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         let pods = api.list("Pod");
         assert_eq!(pods.len(), 3);
         let ranks: Vec<String> = pods
@@ -246,7 +263,7 @@ mod tests {
         ))
         .unwrap();
         let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         for p in api.list("Pod") {
             api.update_status(
                 "Pod",
@@ -256,7 +273,7 @@ mod tests {
             )
             .unwrap();
         }
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         let job = api.get("TFJob", "default", "t").unwrap();
         assert_eq!(job.str_at("status.state"), Some("Succeeded"));
         assert!(op.registry.get("default/t").is_none(), "registry cleaned");
@@ -270,7 +287,7 @@ mod tests {
         ))
         .unwrap();
         let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         let pods = api.list("Pod");
         api.update_status(
             "Pod",
@@ -279,7 +296,7 @@ mod tests {
             parse_one("phase: Failed\n").unwrap(),
         )
         .unwrap();
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         let job = api.get("TFJob", "default", "t").unwrap();
         assert_eq!(job.str_at("status.state"), Some("Failed"));
     }
@@ -292,7 +309,7 @@ mod tests {
         ))
         .unwrap();
         let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
-        op.reconcile(&api);
+        reconcile_once(&api, &op);
         let job = api.get("TFJob", "default", "t").unwrap();
         assert_eq!(job.str_at("status.state"), Some("Failed"));
         assert!(api.list("Pod").is_empty());

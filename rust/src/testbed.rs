@@ -65,10 +65,12 @@ pub fn deploy_with(nodes: usize, cpus: u32, slurm: SlurmConfig) -> Testbed {
     std::thread::Builder::new()
         .name("openebs".to_string())
         .spawn(move || {
-            let c = operators::openebs::OpenEbsController { fs };
+            let runner = crate::kube::controllers::Runner::new(
+                &api,
+                vec![Box::new(operators::openebs::OpenEbsController { fs })],
+            );
             loop {
-                use crate::kube::controllers::Reconciler;
-                c.reconcile(&api);
+                runner.run_once();
                 std::thread::sleep(std::time::Duration::from_millis(5));
             }
         })
@@ -103,19 +105,9 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
     ));
     let api = crate::kube::ApiServer::new();
     // No HPK admission: ClusterIP services stay as requested (the
-    // baseline has a kube-proxy equivalent conceptually).
-    let cm = ControllerManager::start(
-        api.clone(),
-        vec![
-            Box::new(DeploymentController),
-            Box::new(ReplicaSetController),
-            Box::new(JobController),
-            Box::new(EndpointsController),
-            Box::new(GcController),
-            Box::new(crate::kube::scheduler::DefaultScheduler),
-        ],
-        2,
-    );
+    // baseline has a kube-proxy equivalent conceptually). The
+    // controller manager (and the operators it bundles below) starts
+    // after the hub is provisioned.
     let dns = crate::kube::CoreDns::new(api.clone());
     let mut kubelets = Vec::new();
     for name in cluster.node_names() {
@@ -151,43 +143,29 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
             .insert(Arc::new(operators::training::TrainerRegistry::new()));
     }
 
-    // Operator loops (same reconcilers as the HPK session).
+    // One controller manager bundles the built-in controllers, the
+    // default scheduler, and the workload operators: one shared
+    // informer, one thread per reconciler (same concurrency as the
+    // HPK session), one shutdown handle.
     let fs2 = fs.clone();
-    for (name, reconciler) in [
-        (
-            "argo-vanilla",
-            Box::new(operators::argo::WorkflowController { fs: Some(fs2.clone()) })
-                as Box<dyn crate::kube::controllers::Reconciler>,
-        ),
-        ("spark-vanilla", Box::new(operators::spark::SparkOperator)),
-    ] {
-        let api2 = api.clone();
-        std::thread::Builder::new()
-            .name(name.to_string())
-            .spawn(move || loop {
-                reconciler.reconcile(&api2);
-                std::thread::sleep(std::time::Duration::from_millis(2));
-            })
-            .expect("spawn vanilla operator");
-    }
+    let mut reconcilers: Vec<Box<dyn crate::kube::controllers::Reconciler>> = vec![
+        Box::new(DeploymentController),
+        Box::new(ReplicaSetController),
+        Box::new(JobController),
+        Box::new(EndpointsController),
+        Box::new(GcController),
+        Box::new(crate::kube::scheduler::DefaultScheduler),
+        Box::new(operators::argo::WorkflowController { fs: Some(fs2) }),
+        Box::new(operators::spark::SparkOperator),
+    ];
     if pjrt.is_some() {
         let registry = runtime
             .hub
             .get::<operators::training::TrainerRegistry>()
             .unwrap();
-        let api2 = api.clone();
-        std::thread::Builder::new()
-            .name("tfjob-vanilla".to_string())
-            .spawn(move || {
-                let c = operators::training::TfJobOperator { registry };
-                loop {
-                    use crate::kube::controllers::Reconciler;
-                    c.reconcile(&api2);
-                    std::thread::sleep(std::time::Duration::from_millis(2));
-                }
-            })
-            .expect("spawn vanilla tfjob operator");
+        reconcilers.push(Box::new(operators::training::TfJobOperator { registry }));
     }
+    let cm = ControllerManager::start(api.clone(), reconcilers, 2);
 
     VanillaBed { api, dns, runtime, fs, pjrt, kubelets, cm: Some(cm) }
 }

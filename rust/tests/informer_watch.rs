@@ -1,0 +1,188 @@
+//! Watch/informer semantics through the public client surface:
+//! resourceVersion resume, event-log compaction forcing re-lists,
+//! label-selector ListParams, and informer-driven reconciliation.
+
+use hpk::kube::controllers::{ControllerManager, ReplicaSetController, Runner};
+use hpk::kube::informer::{SharedInformer, WatchSpec};
+use hpk::kube::object;
+use hpk::kube::{ApiServer, ListParams, ResourceKey, WatchOutcome, Watcher};
+use hpk::yamlkit::parse_one;
+use hpk::Value;
+
+fn pod(name: &str, app: &str) -> Value {
+    parse_one(&format!(
+        "kind: Pod\nmetadata:\n  name: {name}\n  labels:\n    app: {app}\nspec:\n  containers: []\n"
+    ))
+    .unwrap()
+}
+
+#[test]
+fn watcher_resumes_from_resource_version() {
+    let api = ApiServer::new();
+    let first = api.create(pod("a", "web")).unwrap();
+    let rv = first.i64_at("metadata.resourceVersion").unwrap() as u64;
+    api.create(pod("b", "web")).unwrap();
+    api.create(pod("c", "db")).unwrap();
+
+    // Resume from the revision of the first create: only later events.
+    let mut w = Watcher::from_revision(api.clone(), rv);
+    match w.poll() {
+        WatchOutcome::Events(events) => {
+            let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+            assert_eq!(names, vec!["b", "c"]);
+        }
+        other => panic!("expected incremental events, got {other:?}"),
+    }
+}
+
+#[test]
+fn compaction_forces_relist_and_watcher_recovers() {
+    let api = ApiServer::new();
+    api.create(pod("survivor", "web")).unwrap();
+    api.create(pod("casualty", "web")).unwrap();
+    let mut w = Watcher::from_start(api.clone());
+    // Drain the initial history.
+    assert!(matches!(w.poll(), WatchOutcome::Events(_)));
+    let stale_rv = w.revision();
+
+    // While the watcher sleeps: a deletion, then enough churn to
+    // compact the log past the watcher's resume point.
+    api.delete("Pod", "default", "casualty").unwrap();
+    for i in 0..9000 {
+        api.record_event("default", "Pod/survivor", "Churn", &format!("{i}"));
+    }
+    let (_, complete) = api.events_since(stale_rv);
+    assert!(!complete, "the log must report compaction to stale watchers");
+
+    // The watcher re-lists instead of silently missing the deletion.
+    match w.poll() {
+        WatchOutcome::Resync { revision, objects } => {
+            assert_eq!(revision, api.revision());
+            let pods: Vec<&str> = objects
+                .iter()
+                .filter(|o| object::kind(o) == "Pod")
+                .map(|o| object::name(o))
+                .collect();
+            assert!(pods.contains(&"survivor"));
+            assert!(!pods.contains(&"casualty"));
+        }
+        other => panic!("expected resync after compaction, got {other:?}"),
+    }
+    // And it is incremental again afterwards.
+    api.create(pod("later", "web")).unwrap();
+    match w.poll() {
+        WatchOutcome::Events(events) => {
+            assert_eq!(events.len(), 1);
+            assert_eq!(events[0].name, "later");
+        }
+        other => panic!("expected events after resync, got {other:?}"),
+    }
+}
+
+#[test]
+fn informer_cache_survives_compaction() {
+    let api = ApiServer::new();
+    let informer = SharedInformer::new(api.clone());
+    let queue = informer.register(vec![WatchSpec::of("Pod")]);
+    api.create(pod("keeper", "web")).unwrap();
+    api.create(pod("goner", "web")).unwrap();
+    informer.sync();
+    queue.drain();
+    assert_eq!(informer.list("Pod").len(), 2);
+
+    api.delete("Pod", "default", "goner").unwrap();
+    for i in 0..9000 {
+        api.record_event("default", "Pod/keeper", "Churn", &format!("{i}"));
+    }
+    informer.sync();
+    assert!(informer.stats().resyncs >= 1);
+    assert_eq!(informer.list("Pod").len(), 1);
+    assert!(informer
+        .get(&ResourceKey::new("Pod", "default", "goner"))
+        .is_none());
+    // The deletion surfaced on the queue even though its event was
+    // compacted away.
+    assert!(queue
+        .drain()
+        .contains(&ResourceKey::new("Pod", "default", "goner")));
+}
+
+#[test]
+fn list_params_filter_server_side() {
+    let api = ApiServer::new();
+    api.create(pod("w1", "web")).unwrap();
+    api.create(pod("w2", "web")).unwrap();
+    api.create(pod("d1", "db")).unwrap();
+    let mut other_ns = pod("w3", "web");
+    other_ns
+        .entry_map("metadata")
+        .set("namespace", Value::from("prod"));
+    api.create(other_ns).unwrap();
+
+    let client = hpk::kube::Client::new(api);
+    let pods = client.api("Pod");
+    assert_eq!(pods.list(&ListParams::all()).len(), 4);
+    assert_eq!(pods.list(&ListParams::all().with_label("app", "web")).len(), 3);
+    assert_eq!(
+        pods.list(
+            &ListParams::in_namespace("default").with_label("app", "web")
+        )
+        .len(),
+        2
+    );
+    assert_eq!(
+        pods.list(&ListParams::all().with_label("app", "cache")).len(),
+        0
+    );
+}
+
+#[test]
+fn runner_reconciles_replicaset_via_informer() {
+    let api = ApiServer::new();
+    api.create(
+        parse_one(
+            "kind: ReplicaSet\nmetadata:\n  name: web\nspec:\n  replicas: 3\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: c\n        image: nginx\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let runner = Runner::new(&api, vec![Box::new(ReplicaSetController)]);
+    runner.run_once();
+    assert_eq!(api.list("Pod").len(), 3);
+    // Kill one pod out-of-band: the pod event requeues the owner and
+    // the controller replaces it without any full scan.
+    let victim = object::name(&api.list("Pod")[0]).to_string();
+    api.update_status("Pod", "default", &victim, parse_one("phase: Failed\n").unwrap())
+        .unwrap();
+    runner.run_once();
+    runner.run_once();
+    let pods = api.list("Pod");
+    assert_eq!(pods.len(), 3);
+    assert!(pods.iter().all(|p| object::name(p) != victim));
+}
+
+#[test]
+fn controller_manager_threads_converge() {
+    let api = ApiServer::new();
+    let cm = ControllerManager::standard(api.clone());
+    api.apply_manifest(
+        "kind: Deployment\nmetadata:\n  name: web\nspec:\n  replicas: 2\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: c\n        image: nginx\n",
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    while api.list("Pod").len() != 2 && t0.elapsed().as_secs() < 10 {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(api.list("Pod").len(), 2);
+    // Deleting the deployment cascades through GC, watch-driven.
+    api.delete("Deployment", "default", "web").unwrap();
+    let t0 = std::time::Instant::now();
+    while !(api.list("Pod").is_empty() && api.list("ReplicaSet").is_empty())
+        && t0.elapsed().as_secs() < 10
+    {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(api.list("Pod").is_empty());
+    assert!(api.list("ReplicaSet").is_empty());
+    cm.shutdown();
+}
