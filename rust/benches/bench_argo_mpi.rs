@@ -105,7 +105,10 @@ spec:
             n, elapsed, speedup, pairs, accepted
         );
     }
-    println!("# NOTE: this host has {} core(s); EP compute is real and serializes, so the", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    println!(
+        "# NOTE: this host has {} core(s); EP compute is real and serializes, so the",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
     println!("# observed speedup under-states the ideal (= ntasks ratio) a real per-core");
     println!("# cluster gives. Work division is exact: pairs column is identical, split");
     println!("# bit-exactly across ranks (rank files), tallies identical across rows.");

@@ -6,16 +6,26 @@
 //! pass-through scheduler keeps the control plane out of the placement
 //! path; EASY backfill (in the Slurm substrate) improves mixed-size
 //! makespan — the "better scheduling flexibility and finer-grain
-//! resource sharing" argument of SS2.
+//! resource sharing" argument of SS2. E5.3c quantifies the push-bus
+//! claim: kind-sharded subscriptions mean single-kind churn never wakes
+//! cold-kind informers, and an idle cluster costs zero wakeups (the old
+//! informer loop woke every 2 ms regardless).
 //!
 //! Run: `cargo bench --bench bench_hpk_overhead`
+//!
+//! Env: `BENCH_SMOKE=1` caps iteration counts for CI smoke runs;
+//! `BENCH_JSON=path.json` writes the headline numbers as JSON (the
+//! artifact CI uploads so the perf trajectory accumulates).
 
 use hpk::hpk::translate;
+use hpk::kube::informer::{SharedInformer, WatchSpec};
 use hpk::kube::object;
+use hpk::kube::WakeReason;
 use hpk::slurm::{JobSpec, SlurmConfig};
 use hpk::testbed;
 use hpk::yamlkit::parse_one;
-use std::time::Instant;
+use hpk::yamlkit::Value;
+use std::time::{Duration, Instant};
 
 fn pod_manifest(name: &str) -> String {
     format!(
@@ -28,12 +38,34 @@ fn median(mut xs: Vec<f64>) -> f64 {
     xs[xs.len() / 2]
 }
 
+/// Write the headline numbers to `$BENCH_JSON` (no-op when unset).
+fn write_json(results: &[(&str, f64)]) {
+    let Some(path) = std::env::var_os("BENCH_JSON") else {
+        return;
+    };
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        out.push_str(&format!("  \"{k}\": {v}"));
+        out.push_str(if i + 1 == results.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("}\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("# wrote {}", path.to_string_lossy()),
+        Err(e) => eprintln!("BENCH_JSON write failed: {e}"),
+    }
+}
+
 fn main() {
+    // CI smoke mode: same sections, capped iterations.
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let mut results: Vec<(&str, f64)> = vec![("smoke", if smoke { 1.0 } else { 0.0 })];
+
     // ---- 1. pod-launch latency: HPK vs vanilla ----
-    println!("# E5.1: pod create -> Running latency (real ms, median of 20)");
+    let lat_iters = if smoke { 5 } else { 20 };
+    println!("# E5.1: pod create -> Running latency (real ms, median of {lat_iters})");
     let tb = testbed::deploy(4, 8);
     let mut hpk_lat = Vec::new();
-    for i in 0..20 {
+    for i in 0..lat_iters {
         let name = format!("lat-{i}");
         let t0 = Instant::now();
         tb.cp.kubectl_apply(&pod_manifest(&name)).unwrap();
@@ -50,7 +82,7 @@ fn main() {
 
     let vb = testbed::deploy_vanilla(4, 8);
     let mut van_lat = Vec::new();
-    for i in 0..20 {
+    for i in 0..lat_iters {
         let name = format!("lat-{i}");
         let t0 = Instant::now();
         vb.api.apply_manifest(&pod_manifest(&name)).unwrap();
@@ -69,11 +101,13 @@ fn main() {
     println!("{:<12} {:>10.1} ms", "hpk", h);
     println!("{:<12} {:>10.1} ms", "vanilla", v);
     println!("# hpk overhead: {:+.1} ms (translation + sbatch + slurm dispatch)\n", h - v);
+    results.push(("e51_hpk_latency_ms", h));
+    results.push(("e51_vanilla_latency_ms", v));
 
     // ---- 2. translation cost ----
     println!("# E5.2: pod -> Slurm script translation microbench");
     let pod = parse_one(&pod_manifest("micro")).unwrap();
-    let iters = 20_000;
+    let iters = if smoke { 2_000 } else { 20_000 };
     let t0 = Instant::now();
     for _ in 0..iters {
         let spec = translate::pod_to_jobspec(&pod).unwrap();
@@ -85,12 +119,13 @@ fn main() {
         per * 1e6,
         1.0 / per
     );
+    results.push(("e52_translate_us", per * 1e6));
 
     // ---- 3. API-server store throughput ----
     println!("# E5.3: API server object throughput");
     let api = hpk::kube::ApiServer::new();
     let t0 = Instant::now();
-    let n = 5_000;
+    let n: usize = if smoke { 1_000 } else { 5_000 };
     for i in 0..n {
         api.create(parse_one(&pod_manifest(&format!("p-{i}"))).unwrap())
             .unwrap();
@@ -98,9 +133,9 @@ fn main() {
     let create_s = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
     let (events, complete) = api.events_since(0);
-    assert!(!complete || events.len() <= n as usize);
+    assert!(!complete || events.len() <= n);
     let list = api.list("Pod");
-    assert_eq!(list.len(), n as usize);
+    assert_eq!(list.len(), n);
     let list_s = t0.elapsed().as_secs_f64();
     // Deep-copy list vs shared-snapshot list (the controller hot path;
     // reconcilers were switched to list_refs in the perf pass).
@@ -126,19 +161,18 @@ fn main() {
         arc * 1000.0,
         deep / arc.max(1e-9)
     );
+    results.push(("e53_create_per_s", n as f64 / create_s));
 
     // ---- 3b. informer deltas vs poll-and-clone reconcile passes ----
     // The api_redesign claim: with the watch/informer surface, one
     // reconcile tick costs O(events since last tick), not O(objects in
     // the store). Same cluster of `n` pods, 10 status changes per tick.
     println!("# E5.3b: reconcile-tick cost, informer (events) vs poll (full list)");
-    use hpk::kube::informer::{SharedInformer, WatchSpec};
-    use hpk::yamlkit::Value;
     let informer = SharedInformer::new(api.clone());
     let queue = informer.register(vec![WatchSpec::of("Pod")]);
     informer.sync();
     queue.drain(); // consume the initial seeding
-    let ticks = 40;
+    let ticks = if smoke { 10 } else { 40 };
     let per_tick = 10usize;
     let mut running = Value::map();
     running.set("phase", Value::from("Running"));
@@ -149,7 +183,7 @@ fn main() {
     for t in 0..ticks {
         // Mutate a sliding window of pods (outside both timers).
         for i in 0..per_tick {
-            let name = format!("p-{}", (t * per_tick + i) % n as usize);
+            let name = format!("p-{}", (t * per_tick + i) % n);
             api.update_status("Pod", "default", &name, running.clone())
                 .unwrap();
         }
@@ -190,13 +224,82 @@ fn main() {
         "informer stats: {} events applied, {} resyncs\n",
         stats.events_applied, stats.resyncs
     );
+    results.push(("e53b_poll_us_per_tick", poll_cost / ticks as f64 * 1e6));
+    results.push(("e53b_informer_us_per_tick", inf_cost / ticks as f64 * 1e6));
+
+    // ---- 3c. idle cost + single-kind churn on the push bus ----
+    // The event-bus claim: informers park on kind-scoped subscriptions,
+    // so a cluster with one hot kind performs *zero* wakeups in any
+    // informer subscribed to a cold kind, and an idle cluster performs
+    // zero wakeups anywhere — the old loop woke every informer every
+    // 2 ms no matter what.
+    println!("# E5.3c: push-bus wakeups, hot kind vs cold kind ({n}-object cluster)");
+    for i in 0..40 {
+        api.create(
+            parse_one(&format!(
+                "kind: ConfigMap\nmetadata:\n  name: cm-{i}\ndata:\n  a: 1\n"
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+    }
+    let hot = SharedInformer::for_kinds(api.clone(), &["Pod"]);
+    let cold = SharedInformer::for_kinds(api.clone(), &["ConfigMap"]);
+    let hot_sub = hot.subscribe();
+    let cold_sub = cold.subscribe();
+    hot.sync();
+    cold.sync();
+    // Consume the born-signaled edges so the counters start clean.
+    while hot_sub.wait(Duration::ZERO) == WakeReason::Notified {}
+    while cold_sub.wait(Duration::ZERO) == WakeReason::Notified {}
+    let churn = if smoke { 200 } else { 2_000 };
+    let hot0 = hot_sub.notify_count();
+    let cold0 = cold_sub.notify_count();
+    let t0 = Instant::now();
+    for i in 0..churn {
+        api.update_status("Pod", "default", &format!("p-{}", i % n), running.clone())
+            .unwrap();
+        // Consume like a real informer loop: wake, then sync the delta.
+        if hot_sub.wait(Duration::ZERO) == WakeReason::Notified {
+            hot.sync();
+        }
+    }
+    let churn_s = t0.elapsed().as_secs_f64();
+    let hot_wakeups = hot_sub.notify_count() - hot0;
+    let cold_wakeups = cold_sub.notify_count() - cold0;
+    assert!(hot_wakeups > 0, "hot informer must be woken by its kind");
+    assert_eq!(
+        cold_wakeups, 0,
+        "cold-kind informer woke during single-kind churn"
+    );
+    println!(
+        "single-kind churn: {churn} Pod updates ({:.0}/s) -> hot informer {hot_wakeups} wakeups, cold informer {cold_wakeups}",
+        churn as f64 / churn_s
+    );
+    // Idle cluster: nobody writes, nobody wakes (vs one wakeup per
+    // informer per 2 ms under the poll tick).
+    let idle_ms: u64 = if smoke { 100 } else { 300 };
+    let idle0 = hot_sub.notify_count() + cold_sub.notify_count();
+    let reason = hot_sub.wait(Duration::from_millis(idle_ms));
+    assert_eq!(reason, WakeReason::TimedOut, "idle cluster must not wake");
+    let idle_wakeups = hot_sub.notify_count() + cold_sub.notify_count() - idle0;
+    assert_eq!(idle_wakeups, 0, "idle cluster must cost zero wakeups");
+    println!(
+        "idle {idle_ms} ms: {idle_wakeups} wakeups (2 ms poll-tick baseline: {} per informer)\n",
+        idle_ms / 2
+    );
+    results.push(("e53c_hot_wakeups", hot_wakeups as f64));
+    results.push(("e53c_cold_wakeups", cold_wakeups as f64));
+    results.push(("e53c_idle_wakeups", idle_wakeups as f64));
+    results.push(("e53c_idle_window_ms", idle_ms as f64));
 
     // ---- 4. scheduler throughput (pass-through + kubelet + slurm) ----
-    println!("# E5.4: pod throughput, 120 short pods on 4x8 cpus");
+    let burst = if smoke { 24 } else { 120 };
+    println!("# E5.4: pod throughput, {burst} short pods on 4x8 cpus");
     let tb = testbed::deploy(4, 8);
     let t0 = Instant::now();
     let mut manifest = String::new();
-    for i in 0..120 {
+    for i in 0..burst {
         manifest.push_str(&format!(
             "kind: Pod\nmetadata:\n  name: burst-{i}\nspec:\n  containers:\n  - name: main\n    image: busybox:latest\n    command: [\"true\"]\n---\n"
         ));
@@ -207,87 +310,96 @@ fn main() {
             .iter()
             .filter(|p| object::pod_phase(p) == "Succeeded")
             .count()
-            == 120
+            == burst
     }));
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "120 pods completed in {:.2} s ({:.1} pods/s); sched passes: {}\n",
+        "{burst} pods completed in {:.2} s ({:.1} pods/s); sched passes: {}\n",
         dt,
-        120.0 / dt,
+        burst as f64 / dt,
         tb.cp.slurm.sched_passes()
     );
+    results.push(("e54_pods_per_s", burst as f64 / dt));
     tb.shutdown();
 
     // ---- 5. ablation: EASY backfill on/off ----
     // Dedicated Slurm instance with a sleeping executor (testbed's
-    // Apptainer executor ignores plain batch scripts).
-    println!("# E5.5: Slurm backfill ablation (mixed job sizes)");
-    struct SleepExec;
-    impl hpk::slurm::JobExecutor for SleepExec {
-        fn execute(&self, ctx: &hpk::slurm::JobContext) -> Result<(), String> {
-            let ms: u64 = ctx.spec.script.trim().parse().unwrap_or(0);
-            let t0 = ctx.clock.now_ms();
-            while ctx.clock.now_ms() - t0 < ms {
-                if ctx.cancel.is_cancelled() {
-                    return Err("cancelled".to_string());
+    // Apptainer executor ignores plain batch scripts). Skipped in smoke
+    // mode (time-driven, dominated by simulated sleeps).
+    if !smoke {
+        println!("# E5.5: Slurm backfill ablation (mixed job sizes)");
+        struct SleepExec;
+        impl hpk::slurm::JobExecutor for SleepExec {
+            fn execute(&self, ctx: &hpk::slurm::JobContext) -> Result<(), String> {
+                let ms: u64 = ctx.spec.script.trim().parse().unwrap_or(0);
+                let t0 = ctx.clock.now_ms();
+                while ctx.clock.now_ms() - t0 < ms {
+                    if ctx.cancel.is_cancelled() {
+                        return Err("cancelled".to_string());
+                    }
+                    ctx.clock.tick();
                 }
-                ctx.clock.tick();
+                Ok(())
             }
-            Ok(())
         }
-    }
-    for backfill in [true, false] {
-        let cluster = hpk::hpcsim::Cluster::new(hpk::hpcsim::ClusterSpec::uniform(1, 4, 16));
-        let slurm = hpk::slurm::Slurmctld::start(
-            cluster,
-            std::sync::Arc::new(SleepExec),
-            SlurmConfig { backfill, ..SlurmConfig::default() },
-        );
-        // wide-a holds 3/4 cpus for 20k sim ms; wide-b (4 cpus) blocks
-        // behind it; 4 narrow 1-cpu jobs can only jump with backfill.
-        let _a = slurm
-            .submit(
-                JobSpec::new("wide-a")
-                    .with_tasks(1, 3, 1 << 20)
-                    .with_script("20000")
-                    .with_time_limit_ms(30_000),
-            )
-            .unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(10));
-        let b = slurm
-            .submit(
-                JobSpec::new("wide-b")
-                    .with_tasks(1, 4, 1 << 20)
-                    .with_script("20000")
-                    .with_time_limit_ms(30_000),
-            )
-            .unwrap();
-        let mut narrow = Vec::new();
-        for i in 0..4 {
-            narrow.push(
-                slurm
-                    .submit(
-                        JobSpec::new(&format!("narrow-{i}"))
-                            .with_tasks(1, 1, 1 << 20)
-                            .with_script("1000")
-                            .with_time_limit_ms(2_000),
-                    )
-                    .unwrap(),
+        for backfill in [true, false] {
+            let cluster =
+                hpk::hpcsim::Cluster::new(hpk::hpcsim::ClusterSpec::uniform(1, 4, 16));
+            let slurm = hpk::slurm::Slurmctld::start(
+                cluster,
+                std::sync::Arc::new(SleepExec),
+                SlurmConfig { backfill, ..SlurmConfig::default() },
             );
+            // wide-a holds 3/4 cpus for 20k sim ms; wide-b (4 cpus) blocks
+            // behind it; 4 narrow 1-cpu jobs can only jump with backfill.
+            let _a = slurm
+                .submit(
+                    JobSpec::new("wide-a")
+                        .with_tasks(1, 3, 1 << 20)
+                        .with_script("20000")
+                        .with_time_limit_ms(30_000),
+                )
+                .unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let b = slurm
+                .submit(
+                    JobSpec::new("wide-b")
+                        .with_tasks(1, 4, 1 << 20)
+                        .with_script("20000")
+                        .with_time_limit_ms(30_000),
+                )
+                .unwrap();
+            let mut narrow = Vec::new();
+            for i in 0..4 {
+                narrow.push(
+                    slurm
+                        .submit(
+                            JobSpec::new(&format!("narrow-{i}"))
+                                .with_tasks(1, 1, 1 << 20)
+                                .with_script("1000")
+                                .with_time_limit_ms(2_000),
+                        )
+                        .unwrap(),
+                );
+            }
+            let t0 = Instant::now();
+            for id in &narrow {
+                slurm.wait_terminal(*id, 60_000).expect("narrow finished");
+            }
+            let narrow_done = t0.elapsed().as_secs_f64() * 1000.0;
+            slurm.wait_terminal(b, 60_000).expect("b finished");
+            println!(
+                "backfill={:<5}  4 narrow 1-cpu jobs done after {:>6.0} real ms (wide queue blocked: {})",
+                backfill,
+                narrow_done,
+                if backfill { "jumped" } else { "waited" }
+            );
+            slurm.shutdown();
         }
-        let t0 = Instant::now();
-        for id in &narrow {
-            slurm.wait_terminal(*id, 60_000).expect("narrow finished");
-        }
-        let narrow_done = t0.elapsed().as_secs_f64() * 1000.0;
-        slurm.wait_terminal(b, 60_000).expect("b finished");
         println!(
-            "backfill={:<5}  4 narrow 1-cpu jobs done after {:>6.0} real ms (wide queue blocked: {})",
-            backfill,
-            narrow_done,
-            if backfill { "jumped" } else { "waited" }
+            "# expectation: backfill=true completes narrow jobs ~immediately; false waits for the wide queue"
         );
-        slurm.shutdown();
     }
-    println!("# expectation: backfill=true completes narrow jobs ~immediately; false waits for the wide queue");
+
+    write_json(&results);
 }

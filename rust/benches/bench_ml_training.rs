@@ -74,10 +74,14 @@ fn main() {
         );
         tb.shutdown();
     }
-    println!("# expectation: samples/s grows with workers until the single CPU PJRT device saturates");
+    println!(
+        "# expectation: samples/s grows with workers until the single CPU PJRT device saturates"
+    );
 
     // ---- L2 fusion ablation: fused train_step vs grad_step+update ----
-    println!("\n# L2 ablation: fused train_step vs grad_step + host update (1 worker, {STEPS} steps)");
+    println!(
+        "\n# L2 ablation: fused train_step vs grad_step + host update (1 worker, {STEPS} steps)"
+    );
     rt.load("train_step_mlp-small").unwrap();
     rt.load("grad_step_mlp-small").unwrap();
     let lr = 0.15f32;

@@ -116,5 +116,7 @@ fn main() {
         );
         vb.shutdown();
     }
-    println!("# expectation: makespan decreases with executors on both; hpk ~= vanilla + queueing constant");
+    println!(
+        "# expectation: makespan decreases with executors on both; hpk ~= vanilla + queueing constant"
+    );
 }

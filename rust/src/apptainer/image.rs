@@ -86,7 +86,12 @@ impl ImageRegistry {
 
     /// Ensure the image is present on `node`, paying the simulated pull
     /// cost on first use (Apptainer's SIF cache behaviour).
-    pub fn ensure_pulled(&self, node: &str, reference: &str, clock: &Clock) -> Result<ImageSpec, String> {
+    pub fn ensure_pulled(
+        &self,
+        node: &str,
+        reference: &str,
+        clock: &Clock,
+    ) -> Result<ImageSpec, String> {
         let spec = self
             .resolve(reference)
             .ok_or_else(|| format!("image not found: {reference}"))?;

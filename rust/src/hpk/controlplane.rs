@@ -91,7 +91,9 @@ impl ControlPlane {
             config.slurm.clone(),
         );
 
-        // ... then the controller manager (+ HPK's scheduler), ...
+        // ... then the controller manager (+ HPK's scheduler): one
+        // push-woken thread per reconciler, no poll tick — the control
+        // plane costs nothing while the cluster is quiet.
         let controller_manager = ControllerManager::start(
             api.clone(),
             vec![
@@ -102,7 +104,6 @@ impl ControlPlane {
                 Box::new(GcController),
                 Box::new(PassThroughScheduler),
             ],
-            2,
         );
 
         // ... then CoreDNS and finally the kubelet announcing its node.

@@ -11,6 +11,7 @@ use super::translate;
 use crate::kube::api::ApiServer;
 use crate::kube::informer::{SharedInformer, WatchSpec, WorkQueue};
 use crate::kube::object;
+use crate::kube::store::{Subscription, WakeReason};
 use crate::slurm::{JobId, JobState, Slurmctld};
 use crate::virtfs::VirtFs;
 use crate::yamlkit::Value;
@@ -20,6 +21,16 @@ use std::sync::{Arc, Mutex};
 
 /// The name of the single virtual node.
 pub const VIRTUAL_NODE: &str = "hpk-kubelet";
+
+/// How long the sync loop parks on its Pod subscription while no Slurm
+/// jobs are in flight (pod events wake it immediately; this is only the
+/// missed-edge backstop).
+const IDLE_RESYNC_MS: u64 = 500;
+
+/// Poll cadence while bindings are active: Slurm job state changes
+/// outside the Kubernetes store, so the kubelet must look at squeue —
+/// but only while it actually has jobs to mirror.
+const ACTIVE_POLL_MS: u64 = 2;
 
 struct PodBinding {
     job_id: JobId,
@@ -32,8 +43,10 @@ struct PodBinding {
 ///
 /// Watch-driven on the Kubernetes side: a private informer feeds Pod
 /// keys to the submit path, so translate+sbatch work scales with pod
-/// churn. The Slurm side still walks active bindings (that set is the
-/// kubelet's own working set, not the cluster object count).
+/// churn, and the sync loop blocks on a Pod-kind subscription while
+/// idle (zero wakeups with no jobs in flight). The Slurm side still
+/// walks active bindings (that set is the kubelet's own working set,
+/// not the cluster object count), polled only while non-empty.
 #[derive(Clone)]
 pub struct HpkKubelet {
     api: ApiServer,
@@ -46,6 +59,7 @@ pub struct HpkKubelet {
     translated: Arc<Mutex<u64>>,
     informer: Arc<SharedInformer>,
     queue: WorkQueue,
+    subscription: Subscription,
 }
 
 impl HpkKubelet {
@@ -59,9 +73,11 @@ impl HpkKubelet {
             .with_nodes(|ns| ns.iter().map(|n| n.resources.memory_bytes).sum());
         crate::kube::scheduler::register_node(&api, VIRTUAL_NODE, total_cpus, total_mem);
 
-        // Pod-scoped: this informer never caches or indexes other kinds.
+        // Pod-scoped: this informer never caches or indexes other
+        // kinds, and its subscription never wakes for them either.
         let informer = Arc::new(SharedInformer::for_kinds(api.clone(), &["Pod"]));
         let queue = informer.register(vec![WatchSpec::of("Pod")]);
+        let subscription = informer.subscribe();
         let kubelet = HpkKubelet {
             api,
             slurm,
@@ -71,6 +87,7 @@ impl HpkKubelet {
             translated: Arc::new(Mutex::new(0)),
             informer,
             queue,
+            subscription,
         };
         let k = kubelet.clone();
         std::thread::Builder::new()
@@ -78,7 +95,21 @@ impl HpkKubelet {
             .spawn(move || {
                 while !k.shutdown.load(Ordering::SeqCst) {
                     k.sync_once();
-                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    // Push-driven on the Kubernetes side. While Slurm
+                    // jobs are in flight their state changes outside
+                    // the store, so fall back to a short poll until the
+                    // bindings drain; idle, block until a pod event (or
+                    // the shutdown close) arrives.
+                    let timeout = if k.bindings.lock().unwrap().is_empty() {
+                        IDLE_RESYNC_MS
+                    } else {
+                        ACTIVE_POLL_MS
+                    };
+                    if k.subscription.wait(std::time::Duration::from_millis(timeout))
+                        == WakeReason::Closed
+                    {
+                        break;
+                    }
                 }
             })
             .expect("spawn hpk-kubelet");
@@ -87,6 +118,8 @@ impl HpkKubelet {
 
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the (possibly blocked) sync loop so it exits now.
+        self.subscription.close();
     }
 
     /// Pods translated to Slurm scripts since boot.
@@ -243,6 +276,13 @@ impl HpkKubelet {
 
         let mut status = Value::map();
         status.set("phase", Value::from(phase));
+        if phase == "Succeeded" || phase == "Failed" {
+            // Stamp the tombstone time the GC's cap/TTL sweep keys on.
+            status.set(
+                "terminatedAt",
+                Value::Int(crate::util::monotonic_ms() as i64),
+            );
+        }
         if let Some(r) = reason {
             status.set("reason", Value::from(r));
         }

@@ -7,7 +7,9 @@
 //! simulator; this controller just binds.
 //!
 //! Event-driven: it processes only queued Pod keys, so binding cost
-//! scales with pod churn, not with the number of objects in the store.
+//! scales with pod churn, not with the number of objects in the store —
+//! and its controller-manager thread blocks on a Pod-kind subscription
+//! (push wakeup, no sleep loop), so an idle queue costs nothing.
 
 use crate::kube::controllers::{Context, Reconciler};
 use crate::kube::informer::WatchSpec;

@@ -7,7 +7,7 @@
 
 use super::client::ListParams;
 use super::object;
-use super::store::{Store, StoreEvent};
+use super::store::{Store, StoreEvent, Subscription};
 use crate::util::unique_suffix;
 use crate::yamlkit::{merge_patch, Value};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -325,9 +325,41 @@ impl ApiServer {
             .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))
     }
 
-    /// Watch support: events after `since` (see [`Store::events_since`]).
+    /// Legacy merged watch view: events of *every* kind after `since`
+    /// (see [`Store::events_since`]). Watchers use the per-kind surface
+    /// ([`ApiServer::kind_events_since`]); this remains for read-only
+    /// tooling and benches.
     pub fn events_since(&self, since: u64) -> (Vec<StoreEvent>, bool) {
         self.store.events_since(since)
+    }
+
+    /// Watch support: one kind's events after that kind's resume token
+    /// (see [`Store::kind_events_since`]). The bool is false when the
+    /// kind's log was compacted past `since` — the watcher re-lists
+    /// that kind only.
+    pub fn kind_events_since(&self, kind: &str, since: u64) -> (Vec<StoreEvent>, bool) {
+        self.store.kind_events_since(kind, since)
+    }
+
+    /// Cheap completeness probe (see [`Store::kind_complete_since`]):
+    /// true when an incremental read of `kind` from `since` misses
+    /// nothing.
+    pub fn kind_complete_since(&self, kind: &str, since: u64) -> bool {
+        self.store.kind_complete_since(kind, since)
+    }
+
+    /// Consistent snapshot of the given kinds (see
+    /// [`Store::snapshot_kinds`]) — the per-kind compaction re-list
+    /// path.
+    pub fn snapshot_kinds(&self, kinds: &[String]) -> (u64, Vec<Arc<Value>>) {
+        self.store.snapshot_kinds(kinds)
+    }
+
+    /// Subscribe to push notifications for `kinds` (`None` = every
+    /// kind): the blocking-wakeup handle watchers and run loops park on
+    /// instead of polling (see [`Store::subscribe`]).
+    pub fn subscribe(&self, kinds: Option<&[&str]>) -> Subscription {
+        self.store.subscribe(kinds)
     }
 
     pub fn revision(&self) -> u64 {
@@ -453,10 +485,13 @@ mod tests {
             }
             Ok(())
         }));
-        let svc = parse_one("kind: Service\nmetadata:\n  name: s\nspec:\n  selector:\n    app: x\n").unwrap();
+        let svc =
+            parse_one("kind: Service\nmetadata:\n  name: s\nspec:\n  selector:\n    app: x\n")
+                .unwrap();
         let created = api.create(svc).unwrap();
         assert_eq!(created.str_at("spec.clusterIP"), Some("None"));
-        let np = parse_one("kind: Service\nmetadata:\n  name: s2\nspec:\n  type: NodePort\n").unwrap();
+        let np =
+            parse_one("kind: Service\nmetadata:\n  name: s2\nspec:\n  type: NodePort\n").unwrap();
         assert!(matches!(api.create(np), Err(ApiError::Denied(_))));
     }
 

@@ -11,6 +11,7 @@
 
 use super::api::{ApiError, ApiServer};
 use super::object;
+use super::watch::Watcher;
 use crate::yamlkit::Value;
 use std::sync::Arc;
 
@@ -267,6 +268,20 @@ impl Api {
     pub fn delete(&self, namespace: &str, name: &str) -> Result<Value, ApiError> {
         self.server.delete(&self.kind, namespace, name)
     }
+
+    /// A kind-scoped watch stream from the beginning of history: the
+    /// per-kind resume token starts at 0, so the first poll replays (or
+    /// re-lists) everything of this kind — and nothing of any other.
+    pub fn watch(&self) -> Watcher {
+        Watcher::from_start(self.server.clone()).for_kinds(&[self.kind.as_str()])
+    }
+
+    /// A kind-scoped watch stream resuming from a known per-kind
+    /// resourceVersion token.
+    pub fn watch_from(&self, revision: u64) -> Watcher {
+        Watcher::from_revision(self.server.clone(), revision)
+            .for_kinds(&[self.kind.as_str()])
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +368,34 @@ mod tests {
             client.api("Pod").list(&ListParams::in_namespace("prod")).len(),
             1
         );
+    }
+
+    #[test]
+    fn api_watch_is_kind_scoped() {
+        use crate::kube::watch::WatchOutcome;
+        let api = ApiServer::new();
+        let client = Client::new(api.clone());
+        let mut w = client.api("Pod").watch();
+        api.create(labeled_pod("a", "web", None)).unwrap();
+        api.create(parse_one("kind: Job\nmetadata:\n  name: j\nspec: {}\n").unwrap())
+            .unwrap();
+        match w.poll() {
+            WatchOutcome::Events(evs) => {
+                assert_eq!(evs.len(), 1);
+                assert_eq!(evs[0].kind, "Pod");
+            }
+            other => panic!("expected events, got {other:?}"),
+        }
+        // Resuming from the consumed token delivers only later events.
+        let mut resumed = client.api("Pod").watch_from(w.token("Pod"));
+        api.create(labeled_pod("b", "web", None)).unwrap();
+        match resumed.poll() {
+            WatchOutcome::Events(evs) => {
+                assert_eq!(evs.len(), 1);
+                assert_eq!(evs[0].name, "b");
+            }
+            other => panic!("expected events, got {other:?}"),
+        }
     }
 
     #[test]

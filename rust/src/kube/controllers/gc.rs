@@ -1,16 +1,26 @@
 //! Garbage collector: cascade-delete orphans whose owners are gone,
-//! and sweep the Event kind so long-running clusters don't leak memory.
+//! and sweep the Event kind and terminal pod tombstones so long-running
+//! clusters don't leak memory.
 //!
 //! Event-driven: owned kinds enqueue themselves, and *deletions* of any
 //! kind enqueue the deleted object's cached children (the informer's
 //! by-owner index), which is what makes cascades propagate without
 //! scanning every object per tick.
+//!
+//! Terminal pods (Succeeded/Failed) get the same cap/TTL treatment as
+//! Events: a huge Job fan-out leaves one tombstone per finished pod in
+//! the store *and in the Pod shard of the event bus*, so beyond a
+//! per-namespace cap (or a TTL keyed on `status.terminatedAt`) they are
+//! deleted — but never while a live owner still accounts for them
+//! (Jobs count Succeeded children until they complete).
 
 use super::{Context, Reconciler};
-use crate::kube::client::ListParams;
+use crate::kube::client::{ListParams, ResourceKey};
 use crate::kube::informer::WatchSpec;
 use crate::kube::object;
+use crate::yamlkit::Value;
 use std::collections::BTreeSet;
+use std::sync::Arc;
 
 pub struct GcController;
 
@@ -22,6 +32,14 @@ pub const EVENT_CAP_PER_NAMESPACE: usize = 256;
 
 /// Events older than this (monotonic ms) are swept regardless of count.
 pub const EVENT_TTL_MS: u64 = 300_000;
+
+/// Terminal (Succeeded/Failed) pods kept per namespace; the oldest
+/// tombstones beyond this are swept.
+pub const TERMINAL_POD_CAP_PER_NAMESPACE: usize = 512;
+
+/// Terminal pods older than this (monotonic ms since termination) are
+/// swept regardless of count.
+pub const TERMINAL_POD_TTL_MS: u64 = 300_000;
 
 impl Reconciler for GcController {
     fn name(&self) -> &'static str {
@@ -40,6 +58,7 @@ impl Reconciler for GcController {
 
     fn reconcile(&self, ctx: &Context) {
         let mut event_namespaces: BTreeSet<String> = BTreeSet::new();
+        let mut pod_namespaces: BTreeSet<String> = BTreeSet::new();
         for key in ctx.drain() {
             if key.kind == "Event" {
                 event_namespaces.insert(key.namespace.clone());
@@ -47,6 +66,9 @@ impl Reconciler for GcController {
             }
             if !MANAGED_KINDS.contains(&key.kind.as_str()) {
                 continue;
+            }
+            if key.kind == "Pod" {
+                pod_namespaces.insert(key.namespace.clone());
             }
             let Some(obj) = ctx.cached(&key) else {
                 continue; // already gone
@@ -68,7 +90,48 @@ impl Reconciler for GcController {
         for ns in event_namespaces {
             self.sweep_events(ctx, &ns);
         }
+        for ns in pod_namespaces {
+            self.sweep_terminal_pods(ctx, &ns);
+        }
     }
+}
+
+/// When a terminal pod became a tombstone: the `status.terminatedAt`
+/// stamp the kubelets write, falling back to the creation timestamp for
+/// pods driven terminal by other paths.
+fn terminated_at(pod: &Value) -> i64 {
+    pod.i64_at("status.terminatedAt")
+        .or_else(|| pod.i64_at("metadata.creationTimestamp"))
+        .unwrap_or(0)
+}
+
+/// Whether a terminal pod is a collectable tombstone: true only when no
+/// live owner still accounts for it. Pods of an active Job are kept
+/// (the Job controller counts Succeeded children until completion);
+/// pods of any other live owner are that owner's business (ReplicaSets
+/// replace their own terminal pods). Missing owners are fine — the
+/// orphan path reaps those pods regardless of phase. Owners are read
+/// from the informer cache (like every other GC lookup), not with a
+/// per-pod API round trip.
+fn tombstone_collectable(ctx: &Context, pod: &Value) -> bool {
+    let ns = object::namespace(pod);
+    for (okind, oname, ouid) in object::owner_refs(pod) {
+        let Some(owner) = ctx.cached(&ResourceKey::new(&okind, ns, &oname)) else {
+            continue;
+        };
+        if object::uid(&owner) != ouid {
+            continue;
+        }
+        if okind == "Job" {
+            let state = owner.str_at("status.state").unwrap_or("");
+            if state != "Complete" && state != "Failed" {
+                return false;
+            }
+        } else {
+            return false;
+        }
+    }
+    true
 }
 
 impl GcController {
@@ -93,6 +156,33 @@ impl GcController {
         for (i, e) in events.iter().enumerate() {
             if i < overflow || expired[i] {
                 let _ = event_api.delete(namespace, object::name(e));
+            }
+        }
+    }
+
+    /// The Event cap/TTL pattern applied to terminal pod tombstones:
+    /// keep the newest [`TERMINAL_POD_CAP_PER_NAMESPACE`] collectable
+    /// terminal pods, drop any terminated longer than
+    /// [`TERMINAL_POD_TTL_MS`] ago — so huge Job fan-outs don't leak
+    /// finished pods in the store or the Pod event-log shard.
+    fn sweep_terminal_pods(&self, ctx: &Context, namespace: &str) {
+        let now = crate::util::monotonic_ms() as i64;
+        let mut terminal: Vec<Arc<Value>> = ctx
+            .informer
+            .select("Pod", &ListParams::in_namespace(namespace))
+            .into_iter()
+            .filter(|p| matches!(object::pod_phase(p), "Succeeded" | "Failed"))
+            .filter(|p| tombstone_collectable(ctx, p))
+            .collect();
+        // Oldest tombstones first (termination time, then name for
+        // determinism).
+        terminal.sort_by_key(|p| (terminated_at(p), object::name(p).to_string()));
+        let overflow = terminal.len().saturating_sub(TERMINAL_POD_CAP_PER_NAMESPACE);
+        let pod_api = ctx.api("Pod");
+        for (i, p) in terminal.iter().enumerate() {
+            let expired = now - terminated_at(p) > TERMINAL_POD_TTL_MS as i64;
+            if i < overflow || expired {
+                let _ = pod_api.delete(namespace, object::name(p));
             }
         }
     }
@@ -168,6 +258,94 @@ mod tests {
         reconcile_once(&api, &g);
         assert_eq!(api.list("Event").len(), EVENT_CAP_PER_NAMESPACE + 1);
         assert_eq!(api.list_namespaced("Event", "prod").len(), 1);
+    }
+
+    #[test]
+    fn terminal_pod_cap_swept_per_namespace() {
+        let api = ApiServer::new();
+        // Stamp termination times relative to now so none is ever
+        // TTL-expired no matter how long the test process has run;
+        // done-0000 is the oldest tombstone.
+        let base = crate::util::monotonic_ms() as i64 - 1_000;
+        for i in 0..(TERMINAL_POD_CAP_PER_NAMESPACE + 25) {
+            let ts = base + i as i64;
+            api.create(
+                parse_one(&format!(
+                    "kind: Pod\nmetadata:\n  name: done-{i:04}\nspec: {{}}\nstatus:\n  phase: Succeeded\n  terminatedAt: {ts}\n"
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+        }
+        // A live pod is never a tombstone.
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: live\nspec: {}\nstatus:\n  phase: Running\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let g = GcController;
+        reconcile_once(&api, &g);
+        assert_eq!(api.list("Pod").len(), TERMINAL_POD_CAP_PER_NAMESPACE + 1);
+        assert!(api.get("Pod", "default", "live").is_ok());
+        // The oldest tombstones went first.
+        assert!(api.get("Pod", "default", "done-0000").is_err());
+    }
+
+    #[test]
+    fn expired_terminal_pods_swept_by_ttl() {
+        let api = ApiServer::new();
+        let now = crate::util::monotonic_ms() as i64;
+        let old = now - (TERMINAL_POD_TTL_MS as i64) - 10_000;
+        api.create(
+            parse_one(&format!(
+                "kind: Pod\nmetadata:\n  name: ancient\nspec: {{}}\nstatus:\n  phase: Failed\n  terminatedAt: {old}\n"
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: fresh\nspec: {}\nstatus:\n  phase: Succeeded\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let g = GcController;
+        reconcile_once(&api, &g);
+        assert!(api.get("Pod", "default", "ancient").is_err());
+        assert!(api.get("Pod", "default", "fresh").is_ok());
+    }
+
+    #[test]
+    fn active_job_pods_are_not_tombstones() {
+        let api = ApiServer::new();
+        let job = api
+            .create(
+                parse_one(
+                    "kind: Job\nmetadata:\n  name: j\nspec: {}\nstatus:\n  state: Active\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        let now = crate::util::monotonic_ms() as i64;
+        let old = now - (TERMINAL_POD_TTL_MS as i64) - 10_000;
+        let mut pod = parse_one(&format!(
+            "kind: Pod\nmetadata:\n  name: p\nspec: {{}}\nstatus:\n  phase: Succeeded\n  terminatedAt: {old}\n"
+        ))
+        .unwrap();
+        object::add_owner_ref(&mut pod, "Job", "j", object::uid(&job));
+        api.create(pod).unwrap();
+        let g = GcController;
+        reconcile_once(&api, &g);
+        // Kept while the Job still counts its Succeeded children...
+        assert!(api.get("Pod", "default", "p").is_ok());
+        // ...collected once the Job is terminal.
+        api.update_status("Job", "default", "j", parse_one("state: Complete\n").unwrap())
+            .unwrap();
+        reconcile_once(&api, &g);
+        assert!(api.get("Pod", "default", "p").is_err());
     }
 
     #[test]

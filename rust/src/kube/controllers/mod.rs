@@ -5,8 +5,15 @@
 //! as [`WatchSpec`]s; the [`ControllerManager`] runs every reconciler
 //! against one shared informer, so a reconcile pass drains a work
 //! queue of *changed* [`ResourceKey`]s instead of re-listing the world
-//! — the same watch-driven contract as upstream controller-runtime. A
-//! low-cadence level-triggered resync backstops missed edges.
+//! — the same watch-driven contract as upstream controller-runtime.
+//!
+//! Delivery is push-based: each controller thread parks on its own
+//! [`Subscription`] scoped to the kinds it watches, so an idle cluster
+//! costs zero wakeups and hot-kind churn never wakes a controller
+//! watching only cold kinds. A low-cadence level-triggered resync
+//! (fired off the wait timeout) backstops missed edges, and shutdown is
+//! an explicit [`Subscription::close`] — blocked threads wake
+//! immediately, drain once, and exit.
 
 mod deployment;
 mod endpoints;
@@ -23,8 +30,9 @@ pub use replicaset::ReplicaSetController;
 use super::api::ApiServer;
 use super::client::{Api, Client, ResourceKey};
 use super::informer::{Mapping, SharedInformer, WatchSpec, WorkQueue};
+use super::store::{Subscription, WakeReason};
 use crate::yamlkit::Value;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -57,9 +65,14 @@ fn informer_for(api: &ApiServer, spec_sets: &[Vec<WatchSpec>]) -> Arc<SharedInfo
     }
 }
 
-/// Ticks between level-triggered full requeues (safety net against a
-/// missed edge stalling an event-driven reconciler).
-const RESYNC_EVERY_TICKS: u64 = 256;
+/// Wall-clock cadence of the level-triggered full requeue (safety net
+/// against a missed edge stalling an event-driven reconciler), and how
+/// long a [`ControllerManager`] thread parks on its subscription before
+/// doing a pass anyway — the only periodic work left in a quiescent
+/// cluster (matching the old 256-tick x 2 ms resync cadence, minus the
+/// 500 polls/s that used to precede it). [`Runner`]-based loops share
+/// the same cadence via [`Runner::run_once`].
+const RESYNC_INTERVAL_MS: u64 = 500;
 
 /// What one reconciler sees: a typed client for writes and fresh
 /// reads, the shared informer cache for indexed lookups, and its own
@@ -110,7 +123,10 @@ pub trait Reconciler: Send + Sync + 'static {
 pub struct Runner {
     informer: Arc<SharedInformer>,
     entries: Vec<(Box<dyn Reconciler>, Context)>,
-    ticks: std::sync::atomic::AtomicU64,
+    /// `monotonic_ms` of the last level-triggered requeue — wall-clock,
+    /// so the backstop cadence is independent of how often the owning
+    /// loop gets woken (registration already seeds the queues).
+    last_resync_ms: AtomicU64,
 }
 
 impl Runner {
@@ -130,15 +146,18 @@ impl Runner {
         Runner {
             informer,
             entries,
-            ticks: std::sync::atomic::AtomicU64::new(0),
+            last_resync_ms: AtomicU64::new(crate::util::monotonic_ms()),
         }
     }
 
     /// One pass: pull watch events into the shared cache, then give
     /// every reconciler a chance to drain its queue.
     pub fn run_once(&self) {
-        let tick = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
-        if tick % RESYNC_EVERY_TICKS == 0 {
+        let now = crate::util::monotonic_ms();
+        if now.saturating_sub(self.last_resync_ms.load(Ordering::Relaxed))
+            >= RESYNC_INTERVAL_MS
+        {
+            self.last_resync_ms.store(now, Ordering::Relaxed);
             self.informer.resync_queues();
         }
         self.informer.sync();
@@ -150,32 +169,48 @@ impl Runner {
     pub fn informer(&self) -> &Arc<SharedInformer> {
         &self.informer
     }
+
+    /// A push handle over the runner's informer: callers block on it
+    /// between [`run_once`](Runner::run_once) passes instead of
+    /// sleeping a tick (each consumer thread needs its own handle).
+    pub fn subscribe(&self) -> Subscription {
+        self.informer.subscribe()
+    }
 }
 
 /// Runs a set of reconcilers until shutdown.
 pub struct ControllerManager {
-    shutdown: Arc<AtomicBool>,
+    subscriptions: Vec<Subscription>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl ControllerManager {
-    /// Start one thread per reconciler, each ticking every
-    /// `interval_ms` real milliseconds against one shared informer.
-    pub fn start(
-        api: ApiServer,
-        reconcilers: Vec<Box<dyn Reconciler>>,
-        interval_ms: u64,
-    ) -> ControllerManager {
-        let shutdown = Arc::new(AtomicBool::new(false));
+    /// Start one thread per reconciler against one shared informer.
+    /// Each thread parks on a [`Subscription`] scoped to *its own*
+    /// watch-spec kinds — not the informer's union — and wakes only
+    /// when an event for a kind it watches lands (or the 500 ms
+    /// level-trigger backstop fires); hot-kind churn never wakes a
+    /// controller watching only cold kinds. No tick anywhere.
+    pub fn start(api: ApiServer, reconcilers: Vec<Box<dyn Reconciler>>) -> ControllerManager {
         let spec_sets: Vec<Vec<WatchSpec>> =
             reconcilers.iter().map(|r| r.watches()).collect();
         let informer = informer_for(&api, &spec_sets);
+        let mut subscriptions = Vec::new();
         let mut handles = Vec::new();
         for (i, (r, specs)) in reconcilers.into_iter().zip(spec_sets).enumerate() {
-            let stop = shutdown.clone();
             let informer = informer.clone();
+            // Wake this thread only for the kinds its own specs name
+            // (a wildcard spec still means every kind).
+            let sub = match watched_kinds(std::slice::from_ref(&specs)) {
+                None => api.subscribe(None),
+                Some(kinds) => {
+                    let refs: Vec<&str> = kinds.iter().map(|k| k.as_str()).collect();
+                    api.subscribe(Some(&refs))
+                }
+            };
             let queue = informer.register(specs);
             let ctx = Context::new(&api, informer.clone(), queue);
+            subscriptions.push(sub.clone());
             // Exactly one thread owns the periodic level-triggered
             // resync (it reseeds every queue, not just its own).
             let owns_resync = i == 0;
@@ -183,23 +218,33 @@ impl ControllerManager {
                 std::thread::Builder::new()
                     .name(format!("controller-{}", r.name()))
                     .spawn(move || {
-                        let mut tick: u64 = 0;
-                        while !stop.load(Ordering::SeqCst) {
-                            tick += 1;
-                            if owns_resync && tick % RESYNC_EVERY_TICKS == 0 {
-                                informer.resync_queues();
-                            }
+                        let interval = std::time::Duration::from_millis(RESYNC_INTERVAL_MS);
+                        let mut last_resync = std::time::Instant::now();
+                        loop {
                             informer.sync();
                             r.reconcile(&ctx);
-                            std::thread::sleep(std::time::Duration::from_millis(
-                                interval_ms,
-                            ));
+                            if sub.wait(interval) == WakeReason::Closed {
+                                // Wake-on-close (the only exit): one
+                                // final drain so nothing that raced the
+                                // close is lost.
+                                informer.sync();
+                                r.reconcile(&ctx);
+                                break;
+                            }
+                            // Level-triggered backstop on a wall-clock
+                            // cadence, whether the wait was a wakeup or
+                            // a timeout — sustained event traffic must
+                            // not starve the resync.
+                            if owns_resync && last_resync.elapsed() >= interval {
+                                informer.resync_queues();
+                                last_resync = std::time::Instant::now();
+                            }
                         }
                     })
                     .expect("spawn controller"),
             );
         }
-        ControllerManager { shutdown, handles }
+        ControllerManager { subscriptions, handles }
     }
 
     /// The full upstream set (what HPK's control-plane container bundles).
@@ -213,12 +258,16 @@ impl ControllerManager {
                 Box::new(EndpointsController),
                 Box::new(GcController),
             ],
-            2,
         )
     }
 
     pub fn shutdown(mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        // Explicit wake-on-close: blocked threads return immediately
+        // (close dominates pending signals, and a thread mid-reconcile
+        // sees Closed at its next wait), each drains once, then exits.
+        for sub in &self.subscriptions {
+            sub.close();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }

@@ -3,18 +3,22 @@
 //!
 //! This is what retires the poll-and-clone control plane: instead of
 //! every controller re-listing `O(n)` objects per tick, one
-//! [`SharedInformer`] consumes the store's event stream (through a
-//! [`Watcher`], so resourceVersion resume and compaction re-lists are
-//! handled), maintains a local cache with by-label, by-owner and
-//! by-node indexes, and fans each event out to registered
-//! [`WorkQueue`]s according to the owning reconciler's [`WatchSpec`]s.
-//! Reconcile work then scales with events processed, not with cluster
-//! object count.
+//! [`SharedInformer`] consumes the store's kind-sharded event bus
+//! (through a [`Watcher`], so per-kind resourceVersion resume and
+//! kind-scoped compaction re-lists are handled), maintains a local
+//! cache with by-label, by-owner and by-node indexes, and fans each
+//! event out to registered [`WorkQueue`]s according to the owning
+//! reconciler's [`WatchSpec`]s. Reconcile work then scales with events
+//! processed, not with cluster object count — and consumers block on a
+//! [`Subscription`] (see [`SharedInformer::subscribe`]) instead of
+//! calling [`SharedInformer::sync`] on a tick, so an idle cluster costs
+//! zero wakeups and a cold-kind informer never wakes for hot-kind
+//! churn.
 
 use super::api::ApiServer;
 use super::client::{ListParams, ResourceKey};
 use super::object;
-use super::store::EventType;
+use super::store::{EventType, Subscription};
 use super::watch::{WatchOutcome, Watcher};
 use crate::yamlkit::Value;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
@@ -204,45 +208,66 @@ impl SharedInformer {
         }
     }
 
+    /// A fresh push handle scoped to this informer's watched kinds:
+    /// each consumer thread blocks on its own subscription between
+    /// [`sync`](SharedInformer::sync) passes instead of polling on a
+    /// tick (wakeup signals are consumed per handle, so threads must
+    /// not share one).
+    pub fn subscribe(&self) -> Subscription {
+        self.inner.lock().unwrap().watcher.subscribe()
+    }
+
     /// Pull pending events from the watch and apply them to the cache,
     /// indexes and queues. Returns the number of objects touched.
+    ///
+    /// A kind-scoped resync catches the compacted kinds up but leaves
+    /// the other kinds' events for the next outcome, so one sync keeps
+    /// polling until an incremental (possibly empty) batch lands —
+    /// bounded, so continuous compaction cannot wedge the caller (the
+    /// next sync simply continues).
     pub fn sync(&self) -> usize {
+        const MAX_SYNC_ROUNDS: usize = 8;
         let mut inner = self.inner.lock().unwrap();
-        match inner.watcher.poll() {
-            WatchOutcome::Events(events) => {
-                let n = events.len();
-                for ev in events {
-                    let key = ResourceKey::new(&ev.kind, &ev.namespace, &ev.name);
-                    let new = match ev.event_type {
-                        EventType::Deleted => None,
-                        _ => Some(ev.object.clone()),
-                    };
-                    Self::apply(&mut inner, key, new);
+        let mut touched = 0;
+        for _ in 0..MAX_SYNC_ROUNDS {
+            match inner.watcher.poll() {
+                WatchOutcome::Events(events) => {
+                    touched += events.len();
+                    inner.stats.events_applied += events.len() as u64;
+                    for ev in events {
+                        let key = ResourceKey::new(&ev.kind, &ev.namespace, &ev.name);
+                        let new = match ev.event_type {
+                            EventType::Deleted => None,
+                            _ => Some(ev.object.clone()),
+                        };
+                        Self::apply(&mut inner, key, new);
+                    }
+                    break;
                 }
-                inner.stats.events_applied += n as u64;
-                n
-            }
-            WatchOutcome::Resync { objects, .. } => {
-                inner.stats.resyncs += 1;
-                let live: BTreeSet<ResourceKey> =
-                    objects.iter().map(|o| ResourceKey::of(o)).collect();
-                let stale: Vec<ResourceKey> = inner
-                    .cache
-                    .keys()
-                    .filter(|k| !live.contains(*k))
-                    .cloned()
-                    .collect();
-                for key in stale {
-                    Self::apply(&mut inner, key, None);
+                WatchOutcome::Resync { kinds, objects, .. } => {
+                    inner.stats.resyncs += 1;
+                    // Evict stale cache entries of the resynced kinds
+                    // only; every other kind stays incremental.
+                    let live: BTreeSet<ResourceKey> =
+                        objects.iter().map(|o| ResourceKey::of(o)).collect();
+                    let stale: Vec<ResourceKey> = inner
+                        .cache
+                        .keys()
+                        .filter(|k| kinds.contains(&k.kind) && !live.contains(*k))
+                        .cloned()
+                        .collect();
+                    for key in stale {
+                        Self::apply(&mut inner, key, None);
+                    }
+                    touched += objects.len();
+                    for obj in objects {
+                        let key = ResourceKey::of(&obj);
+                        Self::apply(&mut inner, key, Some(obj));
+                    }
                 }
-                let n = objects.len();
-                for obj in objects {
-                    let key = ResourceKey::of(&obj);
-                    Self::apply(&mut inner, key, Some(obj));
-                }
-                n
             }
         }
+        touched
     }
 
     /// Re-seed every queue's `ToSelf` specs from the cache: the

@@ -4,12 +4,18 @@
 use super::api::ApiServer;
 use super::informer::{SharedInformer, WatchSpec, WorkQueue};
 use super::object;
+use super::store::{Subscription, WakeReason};
 use crate::apptainer::{ApptainerRuntime, NetContext};
 use crate::slurm::CancelToken;
 use crate::yamlkit::Value;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// How long the sync loop parks on its Pod subscription before doing a
+/// level-triggered pass anyway (missed-edge backstop; pod events wake
+/// it immediately).
+const POD_RESYNC_MS: u64 = 500;
 
 /// Env for one container: pod spec env + downward-API-style fields.
 pub fn container_env(pod: &Value, container: &Value, net: &NetContext) -> Vec<(String, String)> {
@@ -62,34 +68,31 @@ pub fn run_pod_containers(
     if containers.is_empty() {
         return Err("pod has no containers".to_string());
     }
-    let results: Arc<Mutex<Vec<Result<(), String>>>> =
-        Arc::new(Mutex::new(Vec::new()));
     let mut handles = Vec::new();
     for c in containers {
         let rt = runtime.clone();
         let net = net.clone();
         let pod = pod.clone();
         let cancel = cancel.clone();
-        let results = results.clone();
         handles.push(std::thread::spawn(move || {
             let image = c.str_at("image").unwrap_or("").to_string();
             let args = container_args(&c);
             let env = container_env(&pod, &c, &net);
             // HPK default: fakeroot on, for Docker-image compatibility.
-            let r = rt.run_container(&net, &image, &args, &env, true, cancel);
-            results.lock().unwrap().push(r);
+            rt.run_container(&net, &image, &args, &env, true, cancel)
         }));
     }
+    // Join everything before reporting: all containers get to unwind.
+    let mut first_err = None;
     for h in handles {
-        let _ = h.join();
-    }
-    let results = results.lock().unwrap();
-    for r in results.iter() {
-        if let Err(e) = r {
-            return Err(e.clone());
+        if let Ok(Err(e)) = h.join() {
+            first_err.get_or_insert(e);
         }
     }
-    Ok(())
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// The vanilla kubelet: runs pods bound to `node_name` directly on the
@@ -98,7 +101,9 @@ pub fn run_pod_containers(
 ///
 /// Watch-driven: a private informer feeds it Pod keys; each sync pass
 /// touches only changed pods (start newly-bound ones, cancel deleted
-/// ones) instead of re-listing every pod in the cluster.
+/// ones) instead of re-listing every pod in the cluster. The loop
+/// blocks on a Pod-kind subscription — no tick: an idle node costs
+/// zero wakeups, and shutdown wakes it via close.
 pub struct VanillaKubelet {
     api: ApiServer,
     node_name: String,
@@ -107,6 +112,7 @@ pub struct VanillaKubelet {
     running: Arc<Mutex<HashMap<String, CancelToken>>>, // pod full name
     informer: Arc<SharedInformer>,
     queue: WorkQueue,
+    subscription: Subscription,
 }
 
 impl VanillaKubelet {
@@ -115,9 +121,11 @@ impl VanillaKubelet {
         node_name: &str,
         runtime: Arc<ApptainerRuntime>,
     ) -> Arc<VanillaKubelet> {
-        // Pod-scoped: this informer never caches or indexes other kinds.
+        // Pod-scoped: this informer never caches or indexes other
+        // kinds, and its subscription never wakes for them either.
         let informer = Arc::new(SharedInformer::for_kinds(api.clone(), &["Pod"]));
         let queue = informer.register(vec![WatchSpec::of("Pod")]);
+        let subscription = informer.subscribe();
         let kubelet = Arc::new(VanillaKubelet {
             api,
             node_name: node_name.to_string(),
@@ -126,6 +134,7 @@ impl VanillaKubelet {
             running: Arc::new(Mutex::new(HashMap::new())),
             informer,
             queue,
+            subscription,
         });
         let k = kubelet.clone();
         std::thread::Builder::new()
@@ -137,8 +146,10 @@ impl VanillaKubelet {
 
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the (possibly blocked) sync loop so it exits now.
+        self.subscription.close();
         // Cancel everything we started.
-        for (_, tok) in self.running.lock().unwrap().iter() {
+        for tok in self.running.lock().unwrap().values() {
             tok.cancel();
         }
     }
@@ -146,7 +157,13 @@ impl VanillaKubelet {
     fn sync_loop(&self) {
         while !self.shutdown.load(Ordering::SeqCst) {
             self.sync_once();
-            std::thread::sleep(std::time::Duration::from_millis(2));
+            // Block until a Pod event lands (or the level-triggered
+            // backstop / shutdown close fires) — no poll tick.
+            if self.subscription.wait(std::time::Duration::from_millis(POD_RESYNC_MS))
+                == WakeReason::Closed
+            {
+                break;
+            }
         }
     }
 
@@ -198,6 +215,10 @@ impl VanillaKubelet {
                         let mut st = Value::map();
                         st.set("phase", Value::from("Failed"));
                         st.set("reason", Value::from(e.as_str()));
+                        st.set(
+                            "terminatedAt",
+                            Value::Int(crate::util::monotonic_ms() as i64),
+                        );
                         let _ = api.update_status("Pod", &ns, &name, st);
                         return;
                     }
@@ -228,6 +249,12 @@ impl VanillaKubelet {
                         st.set("reason", Value::from(e.as_str()));
                     }
                 }
+                // Stamp the tombstone time the GC's cap/TTL sweep keys
+                // on (see GcController's terminal-pod sweep).
+                st.set(
+                    "terminatedAt",
+                    Value::Int(crate::util::monotonic_ms() as i64),
+                );
                 let _ = api.update_status("Pod", &ns, &name, st);
             })
             .expect("spawn pod thread");

@@ -5,8 +5,10 @@
 //! This module re-implements their documented behaviour so the HPK
 //! modules in [`crate::hpk`] integrate against the same surfaces:
 //!
-//! - [`store`] — the etcd role: versioned objects + a watchable event log
-//!   with compare-and-put and consistent snapshots.
+//! - [`store`] — the etcd role: versioned objects + a kind-sharded,
+//!   push-notified event bus (one log and resourceVersion watermark per
+//!   kind, each compacted independently) with compare-and-put and
+//!   consistent snapshots.
 //! - [`object`] — helpers over manifest [`crate::Value`]s (names, labels,
 //!   owner refs, selectors).
 //! - [`api`] — the API-server role: CRUD verbs, defaulting, the
@@ -25,17 +27,18 @@
 //!
 //! # The client stack
 //!
-//! Controllers do not poll `list` snapshots; they consume the layered
-//! client surface, bottom to top:
+//! Controllers do not poll `list` snapshots — or anything else, on any
+//! tick; they consume the layered client surface, bottom to top:
 //!
 //! 1. [`client`] — typed coordinates ([`client::ResourceKey`],
 //!    [`client::GroupVersionKind`]) and per-kind [`client::Api`]
 //!    handles over a [`client::Client`], with [`client::ListParams`]
-//!    label/field selectors evaluated server-side.
+//!    label/field selectors evaluated server-side and kind-scoped
+//!    [`client::Api::watch`] streams.
 //! 2. [`watch`] — [`watch::Watcher`]: incremental event delivery with
-//!    resourceVersion resume, falling back to an automatic re-list
-//!    ([`watch::WatchOutcome::Resync`]) when the event log has been
-//!    compacted past the resume point.
+//!    *per-kind* resourceVersion resume tokens, falling back to an
+//!    automatic re-list ([`watch::WatchOutcome::Resync`]) of exactly
+//!    the kinds whose logs were compacted past their tokens.
 //! 3. [`informer`] — [`informer::SharedInformer`]: a watch-fed cache
 //!    with by-label, by-owner and by-node indexes, fanning events out
 //!    to per-reconciler [`informer::WorkQueue`]s as declared by
@@ -43,9 +46,25 @@
 //!    deleted-children). Reconcile work scales with events processed,
 //!    not with cluster object count.
 //!
+//! # The subscription/wakeup model
+//!
+//! Delivery is push-based end to end: every run loop parks on a
+//! [`store::Subscription`] scoped to the kinds it watches
+//! ([`store::Store::subscribe`], surfaced as
+//! [`informer::SharedInformer::subscribe`]), and the store wakes
+//! exactly the subscribers whose kinds an event touches. Signals
+//! coalesce (many events, one wakeup), a subscription is born signaled
+//! (pre-existing state is always processed before blocking), waits
+//! carry a timeout that doubles as the level-triggered resync backstop,
+//! and [`store::Subscription::close`] is the explicit shutdown edge
+//! that wakes a blocked loop immediately for one final drain. An idle
+//! cluster therefore costs zero wakeups, and churn on one kind never
+//! wakes an informer watching another.
+//!
 //! The [`controllers::ControllerManager`] builds one `SharedInformer`
 //! per manager and hands each reconciler a [`controllers::Context`]
-//! (client + informer + its own work queue).
+//! (client + informer + its own work queue) plus its own subscription
+//! to block on.
 
 pub mod api;
 pub mod client;
@@ -62,5 +81,5 @@ pub use api::{AdmissionCheck, AdmissionOp, ApiError, ApiServer};
 pub use client::{Api, Client, GroupVersionKind, ListParams, ResourceKey};
 pub use coredns::CoreDns;
 pub use informer::{SharedInformer, WatchSpec, WorkQueue};
-pub use store::{EventType, Store, StoreEvent};
+pub use store::{EventType, Store, StoreEvent, Subscription, WakeReason};
 pub use watch::{WatchOutcome, Watcher};

@@ -5,10 +5,11 @@
 //! the Cloud-baseline comparison in the benches: it scores Node objects
 //! by free resources and binds pods to the least-loaded fitting node.
 //!
-//! Event-driven: pod and node changes wake it, and it walks only the
-//! informer's by-node index — unbound pods live under the `""` node
-//! bucket, so scheduling work scales with pending pods, not with the
-//! cluster's total object count.
+//! Event-driven: pod and node changes *wake* it (its controller-manager
+//! thread blocks on a Pod/Node-scoped subscription — no sleep loop),
+//! and it walks only the informer's by-node index — unbound pods live
+//! under the `""` node bucket, so scheduling work scales with pending
+//! pods, not with the cluster's total object count.
 
 use super::api::ApiServer;
 use super::controllers::{Context, Reconciler};
@@ -93,10 +94,9 @@ impl Reconciler for DefaultScheduler {
                     .unwrap_or((0, 0));
                 let free_cpu = cap_cpu - used_cpu;
                 let free_mem = cap_mem - used_mem;
-                if free_cpu >= need_cpu && free_mem >= need_mem {
-                    if best.as_ref().map(|(_, f)| free_cpu > *f).unwrap_or(true) {
-                        best = Some((name, free_cpu));
-                    }
+                let fits = free_cpu >= need_cpu && free_mem >= need_mem;
+                if fits && best.as_ref().map(|(_, f)| free_cpu > *f).unwrap_or(true) {
+                    best = Some((name, free_cpu));
                 }
             }
             if let Some((node_name, _)) = best {

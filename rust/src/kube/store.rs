@@ -1,14 +1,23 @@
-//! The etcd role: versioned object storage with a watchable event log.
+//! The etcd role: versioned object storage with a kind-sharded,
+//! push-notified event bus.
 //!
 //! Objects are whole manifests ([`crate::Value`]) keyed by
 //! `(kind, namespace, name)`. Every mutation bumps a global revision and
-//! appends to a bounded event log that watchers poll with
-//! [`Store::events_since`] — the same contract Kubernetes watches give
-//! controllers (list + watch from a resourceVersion).
+//! appends to the *per-kind* append-only log — each
+//! `GroupVersionKind`-shard carries its own resourceVersion watermark
+//! and compacts independently ([`KIND_LOG_CAP`]), so a watcher that only
+//! follows Pods never re-lists because Events churned. Watchers resume
+//! with [`Store::kind_events_since`] (the list+watch contract Kubernetes
+//! gives controllers), and block on a [`Subscription`] instead of
+//! polling: the store wakes exactly the subscribers whose kinds an event
+//! touches, and [`Subscription::close`] wakes blocked waiters for
+//! shutdown (no tick, no cross-kind fanout).
 
 use crate::yamlkit::Value;
-use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
 
 /// Watch event types.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,7 +27,7 @@ pub enum EventType {
     Deleted,
 }
 
-/// One event in the log.
+/// One event in a kind's log.
 #[derive(Debug, Clone)]
 pub struct StoreEvent {
     pub revision: u64,
@@ -30,15 +39,183 @@ pub struct StoreEvent {
     pub object: Arc<Value>,
 }
 
-/// Bounded event log length; watchers lagging further re-list.
-const EVENT_LOG_CAP: usize = 8192;
+/// Bounded per-kind event log length; watchers lagging further behind on
+/// a kind re-list *that kind only*.
+pub const KIND_LOG_CAP: usize = 4096;
+
+/// One kind's shard of the event bus: its own append-only log and
+/// resourceVersion watermark, compacted independently of every other
+/// kind.
+#[derive(Default)]
+struct KindLog {
+    log: VecDeque<StoreEvent>,
+    /// Highest revision ever appended for this kind (survives
+    /// compaction).
+    watermark: u64,
+    /// Revision of the newest event dropped by compaction (0 = nothing
+    /// dropped yet). Revisions are allocated globally, so a shard's
+    /// first retained event can sit far above a resume token without
+    /// any loss — only actually-dropped events make a read incomplete.
+    compacted_through: u64,
+}
+
+impl KindLog {
+    /// Whether an incremental read from `since` misses nothing (i.e.
+    /// compaction has not dropped any event newer than `since`).
+    fn complete_since(&self, since: u64) -> bool {
+        since >= self.compacted_through
+    }
+}
+
+/// Why a blocked [`Subscription::wait`] returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WakeReason {
+    /// An event for a subscribed kind landed since the last wait.
+    Notified,
+    /// The subscription was closed (shutdown): do a final drain, then
+    /// stop waiting.
+    Closed,
+    /// The timeout elapsed with no event (the level-triggered resync
+    /// hook).
+    TimedOut,
+}
+
+struct SubState {
+    signaled: bool,
+    closed: bool,
+}
+
+struct SubShared {
+    state: Mutex<SubState>,
+    cond: Condvar,
+    /// `None` = all kinds.
+    kinds: Option<std::collections::BTreeSet<String>>,
+    /// Wakeup signals delivered (coalesced edges, not raw events).
+    notifications: AtomicU64,
+}
+
+impl SubShared {
+    fn wants(&self, kind: &str) -> bool {
+        match &self.kinds {
+            None => true,
+            Some(ks) => ks.contains(kind),
+        }
+    }
+
+    fn notify(&self) {
+        let mut state = self.state.lock().unwrap();
+        if !state.signaled && !state.closed {
+            state.signaled = true;
+            self.notifications.fetch_add(1, Ordering::Relaxed);
+            self.cond.notify_all();
+        }
+    }
+}
+
+/// A push-notification handle for a set of kinds: the replacement for
+/// the 2 ms informer poll tick. Consumers loop `sync -> wait`; the store
+/// sets the (coalescing) signal when an event for a subscribed kind
+/// lands, so a waiter wakes only for work it actually has. Cheap to
+/// clone (shared state): one clone blocks in the run loop while another
+/// calls [`Subscription::close`] from the shutdown path.
+#[derive(Clone)]
+pub struct Subscription {
+    shared: Arc<SubShared>,
+}
+
+impl Subscription {
+    fn new(kinds: Option<&[&str]>) -> Subscription {
+        Subscription {
+            shared: Arc::new(SubShared {
+                // Born signaled: the first wait returns immediately, so
+                // subscribers always process state that predates the
+                // subscription before blocking.
+                state: Mutex::new(SubState { signaled: true, closed: false }),
+                cond: Condvar::new(),
+                kinds: kinds.map(|ks| ks.iter().map(|k| k.to_string()).collect()),
+                notifications: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Block until an event for a subscribed kind lands, the
+    /// subscription is closed, or `timeout` elapses. A pending signal is
+    /// consumed immediately (events are never lost to the gap between a
+    /// drain and the next wait). Close dominates: once closed, every
+    /// wait returns [`WakeReason::Closed`] — callers do one final drain
+    /// on that reason, so nothing that raced the close is dropped.
+    pub fn wait(&self, timeout: Duration) -> WakeReason {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.shared.state.lock().unwrap();
+        loop {
+            if state.closed {
+                return WakeReason::Closed;
+            }
+            if state.signaled {
+                state.signaled = false;
+                return WakeReason::Notified;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return WakeReason::TimedOut;
+            }
+            state = self.shared.cond.wait_timeout(state, remaining).unwrap().0;
+        }
+    }
+
+    /// Permanently close the subscription and wake any blocked waiter —
+    /// the explicit shutdown edge that replaces "the loop notices a
+    /// stop flag within one tick".
+    pub fn close(&self) {
+        let mut state = self.shared.state.lock().unwrap();
+        state.closed = true;
+        self.shared.cond.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+
+    /// Wakeup signals delivered so far — the observability hook behind
+    /// the E5.3c "cold kinds never wake" bench.
+    pub fn notify_count(&self) -> u64 {
+        self.shared.notifications.load(Ordering::Relaxed)
+    }
+}
 
 #[derive(Default)]
 struct Inner {
     /// kind -> namespace/name -> object.
     objects: BTreeMap<String, BTreeMap<String, Arc<Value>>>,
     revision: u64,
-    log: std::collections::VecDeque<StoreEvent>,
+    /// kind -> that kind's event log shard.
+    logs: BTreeMap<String, KindLog>,
+    subscribers: Vec<Weak<SubShared>>,
+}
+
+impl Inner {
+    /// Append an event to its kind's shard and wake exactly the
+    /// subscribers watching that kind.
+    fn publish(&mut self, event: StoreEvent) {
+        let kind = event.kind.clone();
+        let shard = self.logs.entry(kind.clone()).or_default();
+        shard.watermark = event.revision;
+        shard.log.push_back(event);
+        if shard.log.len() > KIND_LOG_CAP {
+            if let Some(dropped) = shard.log.pop_front() {
+                shard.compacted_through = dropped.revision;
+            }
+        }
+        self.subscribers.retain(|weak| match weak.upgrade() {
+            Some(sub) => {
+                if sub.wants(&kind) {
+                    sub.notify();
+                }
+                true
+            }
+            None => false,
+        });
+    }
 }
 
 /// Thread-safe versioned store; cheap to clone.
@@ -54,6 +231,19 @@ fn nskey(namespace: &str, name: &str) -> String {
 impl Store {
     pub fn new() -> Store {
         Store::default()
+    }
+
+    /// Subscribe to push notifications for `kinds` (`None` = every
+    /// kind). The subscription is born signaled; see
+    /// [`Subscription::wait`].
+    pub fn subscribe(&self, kinds: Option<&[&str]>) -> Subscription {
+        let sub = Subscription::new(kinds);
+        self.inner
+            .lock()
+            .unwrap()
+            .subscribers
+            .push(Arc::downgrade(&sub.shared));
+        sub
     }
 
     /// Insert or replace; returns the new revision.
@@ -80,18 +270,15 @@ impl Store {
             .or_default()
             .insert(nskey(namespace, name), arc.clone())
             .is_some();
-        let event = StoreEvent {
+        let event_type = if existed { EventType::Modified } else { EventType::Added };
+        inner.publish(StoreEvent {
             revision: rev,
-            event_type: if existed { EventType::Modified } else { EventType::Added },
+            event_type,
             kind: kind.to_string(),
             namespace: namespace.to_string(),
             name: name.to_string(),
             object: arc,
-        };
-        inner.log.push_back(event);
-        if inner.log.len() > EVENT_LOG_CAP {
-            inner.log.pop_front();
-        }
+        });
         rev
     }
 
@@ -133,18 +320,14 @@ impl Store {
         let removed = inner.objects.get_mut(kind)?.remove(&nskey(namespace, name))?;
         inner.revision += 1;
         let rev = inner.revision;
-        let event = StoreEvent {
+        inner.publish(StoreEvent {
             revision: rev,
             event_type: EventType::Deleted,
             kind: kind.to_string(),
             namespace: namespace.to_string(),
             name: name.to_string(),
             object: removed.clone(),
-        };
-        inner.log.push_back(event);
-        if inner.log.len() > EVENT_LOG_CAP {
-            inner.log.pop_front();
-        }
+        });
         Some(removed)
     }
 
@@ -179,25 +362,67 @@ impl Store {
         self.inner.lock().unwrap().revision
     }
 
-    /// Events with revision > `since`. The bool is false when the log has
-    /// been truncated past `since` (watcher must re-list).
-    pub fn events_since(&self, since: u64) -> (Vec<StoreEvent>, bool) {
+    /// Highest revision ever appended to `kind`'s log (0 if the kind
+    /// has never been written) — the head a per-kind resume token
+    /// catches up to.
+    pub fn kind_watermark(&self, kind: &str) -> u64 {
         let inner = self.inner.lock().unwrap();
-        let oldest_logged = inner.log.front().map(|e| e.revision).unwrap_or(inner.revision + 1);
-        let complete = since + 1 >= oldest_logged || inner.log.is_empty() && since >= inner.revision;
-        let events = inner
+        inner.logs.get(kind).map(|l| l.watermark).unwrap_or(0)
+    }
+
+    /// Whether an incremental read of `kind` from `since` would be
+    /// complete (no compaction gap) — the cheap probe watchers run
+    /// before cloning event batches a re-list would throw away.
+    pub fn kind_complete_since(&self, kind: &str, since: u64) -> bool {
+        let inner = self.inner.lock().unwrap();
+        match inner.logs.get(kind) {
+            Some(shard) => shard.complete_since(since),
+            None => true,
+        }
+    }
+
+    /// Events of one kind with revision > `since`. The bool is false
+    /// when that kind's log has been compacted past `since` (the
+    /// watcher must re-list that kind — and only that kind).
+    pub fn kind_events_since(&self, kind: &str, since: u64) -> (Vec<StoreEvent>, bool) {
+        let inner = self.inner.lock().unwrap();
+        let Some(shard) = inner.logs.get(kind) else {
+            return (Vec::new(), true);
+        };
+        if !shard.complete_since(since) {
+            return (Vec::new(), false);
+        }
+        let events = shard
             .log
             .iter()
             .filter(|e| e.revision > since)
             .cloned()
             .collect();
+        (events, true)
+    }
+
+    /// Merged view across every kind's log, in revision order — kept
+    /// for read-only tooling and benches; watchers use the per-kind
+    /// surface. The bool is false when *any* kind's log has been
+    /// compacted past `since`.
+    pub fn events_since(&self, since: u64) -> (Vec<StoreEvent>, bool) {
+        let inner = self.inner.lock().unwrap();
+        let mut complete = true;
+        let mut events: Vec<StoreEvent> = Vec::new();
+        for shard in inner.logs.values() {
+            if !shard.complete_since(since) {
+                complete = false;
+            }
+            events.extend(shard.log.iter().filter(|e| e.revision > since).cloned());
+        }
+        events.sort_by_key(|e| e.revision);
         (events, complete)
     }
 
     /// A consistent snapshot of every object together with the revision
-    /// it is valid at — what a watcher re-lists from after the event log
-    /// has been compacted past its resume point. Taken under one lock so
-    /// no event can fall between the revision and the object set.
+    /// it is valid at — what a watcher re-lists from after its logs have
+    /// been compacted past its resume point. Taken under one lock so no
+    /// event can fall between the revision and the object set.
     pub fn snapshot(&self) -> (u64, Vec<Arc<Value>>) {
         let inner = self.inner.lock().unwrap();
         let objects = inner
@@ -208,10 +433,31 @@ impl Store {
         (inner.revision, objects)
     }
 
+    /// A consistent snapshot restricted to the given kinds — the
+    /// re-list path for per-kind compaction, so one hot kind never
+    /// forces cold kinds to re-list.
+    pub fn snapshot_kinds(&self, kinds: &[String]) -> (u64, Vec<Arc<Value>>) {
+        let inner = self.inner.lock().unwrap();
+        let objects = kinds
+            .iter()
+            .filter_map(|k| inner.objects.get(k))
+            .flat_map(|m| m.values().cloned())
+            .collect();
+        (inner.revision, objects)
+    }
+
     /// Kinds present in the store.
     pub fn kinds(&self) -> Vec<String> {
         let inner = self.inner.lock().unwrap();
         inner.objects.keys().cloned().collect()
+    }
+
+    /// Kinds that have ever logged an event (superset of
+    /// [`Store::kinds`]: fully-deleted kinds keep their logs) — what a
+    /// wildcard watcher iterates.
+    pub fn log_kinds(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner.logs.keys().cloned().collect()
     }
 
     /// Total object count (across kinds).
@@ -281,6 +527,48 @@ mod tests {
     }
 
     #[test]
+    fn kind_events_are_sharded() {
+        let s = Store::new();
+        let r1 = s.put("Pod", "default", "a", obj("a"));
+        s.put("Job", "default", "j", obj("j"));
+        s.put("Pod", "default", "b", obj("b"));
+        // The Pod shard only holds Pod events.
+        let (pods, complete) = s.kind_events_since("Pod", 0);
+        assert!(complete);
+        assert_eq!(pods.len(), 2);
+        assert!(pods.iter().all(|e| e.kind == "Pod"));
+        // Resuming mid-shard works per kind.
+        let (pods, complete) = s.kind_events_since("Pod", r1);
+        assert!(complete);
+        assert_eq!(pods.len(), 1);
+        assert_eq!(pods[0].name, "b");
+        // A kind never written is trivially complete and empty.
+        let (none, complete) = s.kind_events_since("Service", 0);
+        assert!(complete);
+        assert!(none.is_empty());
+        // Watermarks are per kind.
+        assert!(s.kind_watermark("Pod") > s.kind_watermark("Job"));
+        assert_eq!(s.kind_watermark("Service"), 0);
+    }
+
+    #[test]
+    fn late_created_kind_is_complete_from_zero() {
+        // Revisions are global, so a kind's first event can land far
+        // above a resume token of 0 — that is NOT compaction and must
+        // not force a re-list.
+        let s = Store::new();
+        s.put("Job", "default", "j1", obj("j1"));
+        s.put("Job", "default", "j2", obj("j2"));
+        let (pods, complete) = s.kind_events_since("Pod", 0);
+        assert!(complete);
+        assert!(pods.is_empty());
+        s.put("Pod", "default", "late", obj("late"));
+        let (pods, complete) = s.kind_events_since("Pod", 0);
+        assert!(complete, "first Pod event at revision 3 is not a compaction gap");
+        assert_eq!(pods.len(), 1);
+    }
+
+    #[test]
     fn compare_and_put_enforces_expectation() {
         let s = Store::new();
         // Must-not-exist insert.
@@ -315,21 +603,32 @@ mod tests {
         let (rev, objects) = s.snapshot();
         assert_eq!(rev, r);
         assert_eq!(objects.len(), 2);
+        // The kind-scoped snapshot only carries the asked-for kinds.
+        let (rev, pods) = s.snapshot_kinds(&["Pod".to_string()]);
+        assert_eq!(rev, r);
+        assert_eq!(pods.len(), 1);
     }
 
     #[test]
-    fn compaction_reported_incomplete() {
+    fn compaction_is_per_kind() {
         let s = Store::new();
         let first = s.put("Pod", "default", "seed", obj("seed"));
-        for i in 0..(EVENT_LOG_CAP + 10) {
-            s.put("Pod", "default", &format!("p{i}"), obj("x"));
+        for i in 0..(KIND_LOG_CAP + 10) {
+            s.put("Event", "default", &format!("e{i}"), obj("x"));
         }
-        // The log no longer reaches back to `first`.
+        // The Event shard no longer reaches back to revision `first`...
+        let (_, complete) = s.kind_events_since("Event", first);
+        assert!(!complete, "hot kind must report compaction");
+        // ...but the Pod shard is untouched by the Event churn.
+        let (pods, complete) = s.kind_events_since("Pod", 0);
+        assert!(complete, "cold kind must stay incrementally readable");
+        assert_eq!(pods.len(), 1);
+        // The merged legacy view reports the compaction.
         let (_, complete) = s.events_since(first);
-        assert!(!complete, "log must report compaction");
-        // But a recent revision is still served incrementally.
+        assert!(!complete);
+        // A recent revision is still served incrementally on the hot kind.
         let recent = s.revision() - 5;
-        let (events, complete) = s.events_since(recent);
+        let (events, complete) = s.kind_events_since("Event", recent);
         assert!(complete);
         assert_eq!(events.len(), 5);
     }
@@ -340,5 +639,63 @@ mod tests {
         s.put("Pod", "a", "x", obj("x"));
         s.put("Pod", "ab", "y", obj("y"));
         assert_eq!(s.list_namespaced("Pod", "a").len(), 1);
+    }
+
+    #[test]
+    fn subscription_wakes_on_watched_kind_only() {
+        let s = Store::new();
+        let pods = s.subscribe(Some(&["Pod"]));
+        let jobs = s.subscribe(Some(&["Job"]));
+        // Both are born signaled (initial state processing).
+        assert_eq!(pods.wait(Duration::ZERO), WakeReason::Notified);
+        assert_eq!(jobs.wait(Duration::ZERO), WakeReason::Notified);
+        s.put("Pod", "default", "a", obj("a"));
+        assert_eq!(pods.wait(Duration::ZERO), WakeReason::Notified);
+        assert_eq!(jobs.wait(Duration::ZERO), WakeReason::TimedOut);
+        assert_eq!(pods.notify_count(), 1);
+        assert_eq!(jobs.notify_count(), 0, "cold kind must never wake");
+        // Signals coalesce: many events, one pending wakeup.
+        s.put("Pod", "default", "b", obj("b"));
+        s.put("Pod", "default", "c", obj("c"));
+        assert_eq!(pods.wait(Duration::ZERO), WakeReason::Notified);
+        assert_eq!(pods.wait(Duration::ZERO), WakeReason::TimedOut);
+    }
+
+    #[test]
+    fn subscription_close_wakes_blocked_waiter() {
+        let s = Store::new();
+        let sub = s.subscribe(None);
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        let waiter = sub.clone();
+        let handle = std::thread::spawn(move || waiter.wait(Duration::from_secs(30)));
+        // Give the waiter time to block, then close from "shutdown".
+        std::thread::sleep(Duration::from_millis(20));
+        sub.close();
+        assert_eq!(handle.join().unwrap(), WakeReason::Closed);
+        assert!(sub.is_closed());
+        // Closed dominates pending signals; events are still in the log
+        // for the final drain.
+        s.put("Pod", "default", "late", obj("late"));
+        assert_eq!(sub.wait(Duration::from_secs(1)), WakeReason::Closed);
+        let (events, complete) = s.kind_events_since("Pod", 0);
+        assert!(complete);
+        assert_eq!(events.len(), 1);
+    }
+
+    #[test]
+    fn blocked_waiter_woken_by_event() {
+        let s = Store::new();
+        let sub = s.subscribe(Some(&["Pod"]));
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        let writer = s.clone();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            writer.put("Pod", "default", "a", obj("a"));
+        });
+        // Wakes on the event, far before the timeout.
+        let t0 = Instant::now();
+        assert_eq!(sub.wait(Duration::from_secs(30)), WakeReason::Notified);
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        handle.join().unwrap();
     }
 }

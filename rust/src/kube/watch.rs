@@ -1,107 +1,179 @@
-//! The watch layer: incremental event streams with resourceVersion
-//! resume, and automatic re-list when the event log has been compacted
-//! past the resume point — the list+watch contract Kubernetes gives
-//! every controller.
+//! The watch layer: incremental event streams with *per-kind*
+//! resourceVersion resume tokens, push-based wakeups, and automatic
+//! re-list of exactly the kinds whose logs were compacted past their
+//! resume point — the list+watch contract Kubernetes gives every
+//! controller, sharded so one hot kind never disturbs cold ones.
 //!
-//! A [`Watcher`] sits between the raw store event log
-//! ([`crate::kube::store::Store::events_since`]) and the
+//! A [`Watcher`] sits between the store's kind-sharded event bus
+//! ([`crate::kube::store::Store::kind_events_since`]) and the
 //! [`crate::kube::informer::SharedInformer`] cache: callers poll it and
-//! get either a batch of ordered events or a full-state
-//! [`WatchOutcome::Resync`] to rebuild from.
+//! get either a batch of ordered events or a kind-scoped
+//! [`WatchOutcome::Resync`] to rebuild those kinds from. Instead of
+//! polling on a tick, callers block on the watcher's
+//! [`Subscription`] (see [`Watcher::wait`] / [`Watcher::subscribe`])
+//! until an event for a watched kind actually lands.
 
 use super::api::ApiServer;
-use super::store::StoreEvent;
+use super::store::{StoreEvent, Subscription, WakeReason};
 use crate::yamlkit::Value;
+use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// What one poll produced.
 #[derive(Debug)]
 pub enum WatchOutcome {
     /// Events since the last poll, in revision order (possibly empty).
     Events(Vec<StoreEvent>),
-    /// The log was compacted past our resume point: here is the full
-    /// current state at `revision`; the caller must rebuild its view.
+    /// The logs of `kinds` were compacted past our resume tokens: here
+    /// is the full current state *of those kinds only* at `revision`;
+    /// the caller must rebuild its view of them. Other kinds keep their
+    /// tokens and deliver incrementally on the next poll.
     Resync {
         revision: u64,
+        kinds: Vec<String>,
         objects: Vec<Arc<Value>>,
     },
 }
 
-/// A resumable watch over the API server's event log, optionally
-/// restricted to a set of kinds.
+/// A resumable watch over the API server's kind-sharded event bus,
+/// optionally restricted to a set of kinds. Each watched kind advances
+/// its own resume token, so compaction and re-lists are per kind.
 pub struct Watcher {
     api: ApiServer,
     kinds: Option<Vec<String>>,
-    revision: u64,
+    /// Per-kind resume tokens; kinds not seen yet resume from `floor`.
+    tokens: HashMap<String, u64>,
+    floor: u64,
+    subscription: Subscription,
 }
 
 impl Watcher {
     /// Watch from revision 0: the first poll replays history (or
-    /// resyncs, if the log no longer reaches back that far).
+    /// resyncs the kinds whose logs no longer reach back that far).
     pub fn from_start(api: ApiServer) -> Watcher {
         Watcher::from_revision(api, 0)
     }
 
-    /// Resume from a known resourceVersion.
+    /// Resume from a known resourceVersion (every kind's token floor).
+    /// The floor must be a revision the caller has fully consumed *for
+    /// every watched kind* — a single kind's [`Watcher::token`] for a
+    /// kind-scoped watcher is the canonical case. Seeding a multi-kind
+    /// watcher with one kind's high-water mark skips the other kinds'
+    /// pending events.
     pub fn from_revision(api: ApiServer, revision: u64) -> Watcher {
+        let subscription = api.subscribe(None);
         Watcher {
             api,
             kinds: None,
-            revision,
+            tokens: HashMap::new(),
+            floor: revision,
+            subscription,
         }
     }
 
     /// Watch from the current head: only future events are delivered.
     pub fn from_now(api: ApiServer) -> Watcher {
         let revision = api.revision();
-        Watcher {
-            api,
-            kinds: None,
-            revision,
-        }
+        Watcher::from_revision(api, revision)
     }
 
-    /// Restrict delivery to the given kinds (resync object sets are
-    /// filtered too).
+    /// Restrict delivery to the given kinds: events, resyncs and push
+    /// wakeups all stay scoped to them.
     pub fn for_kinds(mut self, kinds: &[&str]) -> Watcher {
         self.kinds = Some(kinds.iter().map(|k| k.to_string()).collect());
+        self.subscription = self.api.subscribe(Some(kinds));
         self
     }
 
-    /// The resourceVersion the next poll resumes from.
+    /// The highest resourceVersion any kind has been consumed to — a
+    /// *cache-currency* watermark, not a cross-kind resume token: right
+    /// after a kind-scoped resync it can run ahead of kinds whose
+    /// events are still pending delivery. To resume a watch, persist
+    /// the per-kind [`Watcher::token`]s instead; resuming every kind
+    /// from one aggregate revision can skip events.
     pub fn revision(&self) -> u64 {
-        self.revision
+        self.tokens
+            .values()
+            .copied()
+            .max()
+            .unwrap_or(0)
+            .max(self.floor)
     }
 
-    fn wants(&self, kind: &str) -> bool {
+    /// The per-kind resume token the next poll reads `kind` from.
+    pub fn token(&self, kind: &str) -> u64 {
+        self.tokens.get(kind).copied().unwrap_or(self.floor)
+    }
+
+    /// Block until an event for a watched kind lands (or `timeout` /
+    /// close) — the push edge that replaces the poll tick.
+    pub fn wait(&self, timeout: Duration) -> WakeReason {
+        self.subscription.wait(timeout)
+    }
+
+    /// A clone of this watcher's own subscription (e.g. to close it
+    /// from a shutdown path while a run loop blocks in
+    /// [`Watcher::wait`]).
+    pub fn subscription(&self) -> Subscription {
+        self.subscription.clone()
+    }
+
+    /// A *fresh* subscription scoped to this watcher's kinds — what
+    /// each consumer thread sharing one informer blocks on (wakeup
+    /// signals are consumed per subscription, so threads must not share
+    /// one handle).
+    pub fn subscribe(&self) -> Subscription {
         match &self.kinds {
-            None => true,
-            Some(ks) => ks.iter().any(|k| k == kind),
+            None => self.api.subscribe(None),
+            Some(ks) => {
+                let refs: Vec<&str> = ks.iter().map(|k| k.as_str()).collect();
+                self.api.subscribe(Some(&refs))
+            }
         }
     }
 
-    /// One poll: either the events since the last poll, or a full
-    /// resync when the log has been truncated past our revision.
+    /// One poll: either the events since the last poll (merged across
+    /// watched kinds, in revision order), or a [`WatchOutcome::Resync`]
+    /// carrying the full state of exactly the kinds whose logs were
+    /// truncated past their tokens. After a resync, the remaining
+    /// kinds' events are delivered by the next poll.
     pub fn poll(&mut self) -> WatchOutcome {
-        let (events, complete) = self.api.events_since(self.revision);
-        if complete {
-            if let Some(last) = events.last() {
-                self.revision = last.revision;
-            }
-            let filtered = events
-                .into_iter()
-                .filter(|e| self.wants(&e.kind))
-                .collect();
-            return WatchOutcome::Events(filtered);
-        }
-        // Compacted: re-list the world at a consistent revision.
-        let (revision, objects) = self.api.snapshot();
-        self.revision = revision;
-        let objects = objects
-            .into_iter()
-            .filter(|o| self.wants(super::object::kind(o)))
+        let watch_kinds: Vec<String> = match &self.kinds {
+            Some(ks) => ks.clone(),
+            None => self.api.store().log_kinds(),
+        };
+        // Cheap completeness probe first: never clone event batches a
+        // compaction re-list would force us to throw away.
+        let compacted: Vec<String> = watch_kinds
+            .iter()
+            .filter(|kind| !self.api.kind_complete_since(kind.as_str(), self.token(kind.as_str())))
+            .cloned()
             .collect();
-        WatchOutcome::Resync { revision, objects }
+        if !compacted.is_empty() {
+            // Re-list only the compacted kinds at one consistent
+            // revision; untouched kinds keep their tokens.
+            let (revision, objects) = self.api.snapshot_kinds(&compacted);
+            for kind in &compacted {
+                self.tokens.insert(kind.clone(), revision);
+            }
+            return WatchOutcome::Resync { revision, kinds: compacted, objects };
+        }
+        let mut events: Vec<StoreEvent> = Vec::new();
+        for kind in &watch_kinds {
+            let (batch, complete) = self.api.kind_events_since(kind, self.token(kind));
+            if complete {
+                events.extend(batch);
+            }
+            // A kind compacted between the probe and this fetch is
+            // caught by the next poll's probe; its token is untouched,
+            // so skipping the batch here loses nothing.
+        }
+        events.sort_by_key(|e| e.revision);
+        for e in &events {
+            self.tokens.insert(e.kind.clone(), e.revision);
+        }
+        WatchOutcome::Events(events)
     }
 }
 
@@ -164,24 +236,57 @@ mod tests {
     }
 
     #[test]
-    fn compaction_forces_resync() {
+    fn tokens_advance_per_kind() {
+        let api = ApiServer::new();
+        let mut w = Watcher::from_start(api.clone()).for_kinds(&["Pod", "Job"]);
+        api.create(pod("a")).unwrap();
+        let job = api
+            .create(parse_one("kind: Job\nmetadata:\n  name: j\nspec: {}\n").unwrap())
+            .unwrap();
+        match w.poll() {
+            WatchOutcome::Events(evs) => assert_eq!(evs.len(), 2),
+            other => panic!("expected events, got {other:?}"),
+        }
+        let job_rv = job.i64_at("metadata.resourceVersion").unwrap() as u64;
+        assert_eq!(w.token("Job"), job_rv);
+        assert!(w.token("Pod") < job_rv, "tokens are per kind");
+        assert_eq!(w.revision(), job_rv);
+    }
+
+    #[test]
+    fn compaction_resyncs_only_the_hot_kind() {
         let api = ApiServer::new();
         api.create(pod("keeper")).unwrap();
         let mut w = Watcher::from_start(api.clone());
-        // Overflow the event log so revision 0 is unreachable.
-        for i in 0..9000 {
+        assert!(matches!(w.poll(), WatchOutcome::Events(_)));
+        // A Pod change plus enough Event churn to compact the Event
+        // shard past the watcher's token.
+        api.delete("Pod", "default", "keeper").unwrap();
+        for i in 0..6000 {
             api.record_event("default", "Pod/keeper", "Tick", &format!("{i}"));
         }
         match w.poll() {
-            WatchOutcome::Resync { revision, objects } => {
+            WatchOutcome::Resync { revision, kinds, objects } => {
                 assert_eq!(revision, api.revision());
-                assert!(objects
-                    .iter()
-                    .any(|o| o.str_at("metadata.name") == Some("keeper")));
+                assert_eq!(kinds, vec!["Event".to_string()]);
+                assert!(
+                    objects.iter().all(|o| super::super::object::kind(o) == "Event"),
+                    "resync must carry only the compacted kind"
+                );
             }
             other => panic!("expected resync, got {other:?}"),
         }
-        // After the resync the watcher is caught up and incremental again.
+        // The Pod deletion was *not* swallowed by the Event churn: it
+        // arrives incrementally on the next poll.
+        match w.poll() {
+            WatchOutcome::Events(evs) => {
+                assert_eq!(evs.len(), 1);
+                assert_eq!(evs[0].event_type, EventType::Deleted);
+                assert_eq!(evs[0].name, "keeper");
+            }
+            other => panic!("expected events, got {other:?}"),
+        }
+        // After the resync the watcher is caught up and incremental.
         api.create(pod("later")).unwrap();
         match w.poll() {
             WatchOutcome::Events(evs) => {
@@ -190,5 +295,20 @@ mod tests {
             }
             other => panic!("expected events, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn wait_wakes_on_watched_kind_only() {
+        let api = ApiServer::new();
+        let w = Watcher::from_now(api.clone()).for_kinds(&["Job"]);
+        assert_eq!(w.wait(Duration::ZERO), WakeReason::Notified, "born signaled");
+        api.create(pod("a")).unwrap();
+        assert_eq!(w.wait(Duration::ZERO), WakeReason::TimedOut);
+        api.create(parse_one("kind: Job\nmetadata:\n  name: j\nspec: {}\n").unwrap())
+            .unwrap();
+        assert_eq!(w.wait(Duration::ZERO), WakeReason::Notified);
+        // Closing wakes (and stays closed) — the shutdown edge.
+        w.subscription().close();
+        assert_eq!(w.wait(Duration::from_secs(1)), WakeReason::Closed);
     }
 }

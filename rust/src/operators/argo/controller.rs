@@ -34,9 +34,13 @@ pub fn install(cp: &crate::hpk::ControlPlane) {
                     Box::new(super::cron::CronWorkflowController::new(clock)),
                 ],
             );
+            // Push-woken by workflow/pod events; the short timeout is
+            // for the cron controller, whose schedules fire off the
+            // simulated clock rather than store events.
+            let sub = runner.subscribe();
             loop {
                 runner.run_once();
-                std::thread::sleep(std::time::Duration::from_millis(2));
+                let _ = sub.wait(std::time::Duration::from_millis(2));
             }
         })
         .expect("spawn argo controller");

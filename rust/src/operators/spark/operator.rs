@@ -24,9 +24,12 @@ pub fn install(cp: &crate::hpk::ControlPlane) {
         .name("spark-operator".to_string())
         .spawn(move || {
             let runner = Runner::new(&api, vec![Box::new(SparkOperator)]);
+            // Push-woken by SparkApplication/driver-pod events, with a
+            // low-cadence level-triggered backstop — no poll tick.
+            let sub = runner.subscribe();
             loop {
                 runner.run_once();
-                std::thread::sleep(std::time::Duration::from_millis(2));
+                let _ = sub.wait(std::time::Duration::from_millis(500));
             }
         })
         .expect("spawn spark operator");

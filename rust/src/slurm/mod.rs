@@ -178,7 +178,11 @@ mod tests {
         let b = ctld.submit(spec_b).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(20));
         let b_state = ctld.job_info(b).unwrap().state;
-        assert!(matches!(b_state, JobState::Pending(_)), "b={b_state:?} a={:?}", ctld.job_info(a).unwrap().state);
+        assert!(
+            matches!(b_state, JobState::Pending(_)),
+            "b={b_state:?} a={:?}",
+            ctld.job_info(a).unwrap().state
+        );
         assert_eq!(wait_done(&ctld, a), JobState::Completed);
         assert_eq!(wait_done(&ctld, b), JobState::Completed);
         let acct = ctld.sacct();
@@ -235,7 +239,11 @@ mod tests {
         assert_eq!(wait_done(&ctld, c), JobState::Completed);
         // B should still be pending (A runs ~20000 sim ms).
         let b_state = ctld.job_info(b).unwrap().state;
-        assert!(matches!(b_state, JobState::Pending(_)), "b={b_state:?} a={:?}", ctld.job_info(a).unwrap().state);
+        assert!(
+            matches!(b_state, JobState::Pending(_)),
+            "b={b_state:?} a={:?}",
+            ctld.job_info(a).unwrap().state
+        );
         assert_eq!(wait_done(&ctld, a), JobState::Completed);
         assert_eq!(wait_done(&ctld, b), JobState::Completed);
         ctld.shutdown();

@@ -59,7 +59,8 @@ pub fn deploy_with(nodes: usize, cpus: u32, slurm: SlurmConfig) -> Testbed {
     operators::spark::install(&cp);
     operators::training::install(&cp);
 
-    // Storage controller.
+    // Storage controller: push-woken by PVC events, with a low-cadence
+    // level-triggered backstop instead of a poll tick.
     let fs = cp.fs.clone();
     let api = cp.api.clone();
     std::thread::Builder::new()
@@ -69,9 +70,10 @@ pub fn deploy_with(nodes: usize, cpus: u32, slurm: SlurmConfig) -> Testbed {
                 &api,
                 vec![Box::new(operators::openebs::OpenEbsController { fs })],
             );
+            let sub = runner.subscribe();
             loop {
                 runner.run_once();
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                let _ = sub.wait(std::time::Duration::from_millis(500));
             }
         })
         .expect("spawn openebs");
@@ -145,8 +147,8 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
 
     // One controller manager bundles the built-in controllers, the
     // default scheduler, and the workload operators: one shared
-    // informer, one thread per reconciler (same concurrency as the
-    // HPK session), one shutdown handle.
+    // informer, one push-woken thread per reconciler (same concurrency
+    // as the HPK session), one shutdown handle.
     let fs2 = fs.clone();
     let mut reconcilers: Vec<Box<dyn crate::kube::controllers::Reconciler>> = vec![
         Box::new(DeploymentController),
@@ -165,7 +167,7 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
             .unwrap();
         reconcilers.push(Box::new(operators::training::TfJobOperator { registry }));
     }
-    let cm = ControllerManager::start(api.clone(), reconcilers, 2);
+    let cm = ControllerManager::start(api.clone(), reconcilers);
 
     VanillaBed { api, dns, runtime, fs, pjrt, kubelets, cm: Some(cm) }
 }

@@ -119,7 +119,11 @@ impl VirtFs {
                     .map(|(_, v)| v.len() as u64)
                     .sum();
                 if used + data.len() as u64 > quota {
-                    return Err(FsError::QuotaExceeded { path, used: used + data.len() as u64, quota });
+                    return Err(FsError::QuotaExceeded {
+                        path,
+                        used: used + data.len() as u64,
+                        quota,
+                    });
                 }
             }
         }

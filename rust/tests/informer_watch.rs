@@ -1,13 +1,16 @@
 //! Watch/informer semantics through the public client surface:
-//! resourceVersion resume, event-log compaction forcing re-lists,
-//! label-selector ListParams, and informer-driven reconciliation.
+//! per-kind resourceVersion resume, kind-scoped compaction re-lists,
+//! push-bus subscriptions (wake-on-single-kind delivery, wake-on-close
+//! shutdown), label-selector ListParams, and informer-driven
+//! reconciliation.
 
 use hpk::kube::controllers::{ControllerManager, ReplicaSetController, Runner};
 use hpk::kube::informer::{SharedInformer, WatchSpec};
 use hpk::kube::object;
-use hpk::kube::{ApiServer, ListParams, ResourceKey, WatchOutcome, Watcher};
+use hpk::kube::{ApiServer, ListParams, ResourceKey, WakeReason, WatchOutcome, Watcher};
 use hpk::yamlkit::parse_one;
 use hpk::Value;
+use std::time::Duration;
 
 fn pod(name: &str, app: &str) -> Value {
     parse_one(&format!(
@@ -36,7 +39,7 @@ fn watcher_resumes_from_resource_version() {
 }
 
 #[test]
-fn compaction_forces_relist_and_watcher_recovers() {
+fn compaction_relists_only_the_hot_kind_and_watcher_recovers() {
     let api = ApiServer::new();
     api.create(pod("survivor", "web")).unwrap();
     api.create(pod("casualty", "web")).unwrap();
@@ -45,30 +48,39 @@ fn compaction_forces_relist_and_watcher_recovers() {
     assert!(matches!(w.poll(), WatchOutcome::Events(_)));
     let stale_rv = w.revision();
 
-    // While the watcher sleeps: a deletion, then enough churn to
-    // compact the log past the watcher's resume point.
+    // While the watcher sleeps: a Pod deletion, then enough *Event*
+    // churn to compact the Event shard past the watcher's token.
     api.delete("Pod", "default", "casualty").unwrap();
     for i in 0..9000 {
         api.record_event("default", "Pod/survivor", "Churn", &format!("{i}"));
     }
+    // The merged legacy view reports the compaction...
     let (_, complete) = api.events_since(stale_rv);
     assert!(!complete, "the log must report compaction to stale watchers");
+    // ...but the Pod shard is untouched by it: the deletion is still
+    // incrementally readable.
+    let (pod_events, complete) = api.kind_events_since("Pod", stale_rv);
+    assert!(complete, "cold-kind shard must survive hot-kind churn");
+    assert_eq!(pod_events.len(), 1);
 
-    // The watcher re-lists instead of silently missing the deletion.
+    // The watcher re-lists the Event kind — and only the Event kind.
     match w.poll() {
-        WatchOutcome::Resync { revision, objects } => {
+        WatchOutcome::Resync { revision, kinds, objects } => {
             assert_eq!(revision, api.revision());
-            let pods: Vec<&str> = objects
-                .iter()
-                .filter(|o| object::kind(o) == "Pod")
-                .map(|o| object::name(o))
-                .collect();
-            assert!(pods.contains(&"survivor"));
-            assert!(!pods.contains(&"casualty"));
+            assert_eq!(kinds, vec!["Event".to_string()]);
+            assert!(objects.iter().all(|o| object::kind(o) == "Event"));
         }
         other => panic!("expected resync after compaction, got {other:?}"),
     }
-    // And it is incremental again afterwards.
+    // The Pod deletion was not swallowed: it arrives incrementally.
+    match w.poll() {
+        WatchOutcome::Events(events) => {
+            assert_eq!(events.len(), 1);
+            assert_eq!(events[0].name, "casualty");
+        }
+        other => panic!("expected the pod deletion, got {other:?}"),
+    }
+    // And the watcher is incremental again afterwards.
     api.create(pod("later", "web")).unwrap();
     match w.poll() {
         WatchOutcome::Events(events) => {
@@ -100,11 +112,109 @@ fn informer_cache_survives_compaction() {
     assert!(informer
         .get(&ResourceKey::new("Pod", "default", "goner"))
         .is_none());
-    // The deletion surfaced on the queue even though its event was
-    // compacted away.
+    // The deletion surfaced on the queue: the Event-shard compaction
+    // forced a re-list of Events only, while the Pod shard kept
+    // delivering incrementally.
     assert!(queue
         .drain()
         .contains(&ResourceKey::new("Pod", "default", "goner")));
+}
+
+#[test]
+fn cold_kind_subscriber_never_wakes_during_hot_churn() {
+    let api = ApiServer::new();
+    // Two single-purpose informers, as the kubelets use: one hot kind
+    // (Pod), one cold (ConfigMap).
+    let hot = SharedInformer::for_kinds(api.clone(), &["Pod"]);
+    let cold = SharedInformer::for_kinds(api.clone(), &["ConfigMap"]);
+    let hot_sub = hot.subscribe();
+    let cold_sub = cold.subscribe();
+    // Both subscriptions are born signaled; consume that edge.
+    assert_eq!(hot_sub.wait(Duration::ZERO), WakeReason::Notified);
+    assert_eq!(cold_sub.wait(Duration::ZERO), WakeReason::Notified);
+
+    // Single-kind churn: only the Pod subscriber ever wakes.
+    for i in 0..50 {
+        api.create(pod(&format!("p{i}"), "web")).unwrap();
+        if hot_sub.wait(Duration::ZERO) == WakeReason::Notified {
+            hot.sync();
+        }
+    }
+    assert_eq!(hot.list("Pod").len(), 50);
+    assert!(hot_sub.notify_count() > 0);
+    assert_eq!(
+        cold_sub.notify_count(),
+        0,
+        "cold-kind informer must perform zero wakeups during Pod churn"
+    );
+    assert_eq!(cold_sub.wait(Duration::ZERO), WakeReason::TimedOut);
+
+    // A ConfigMap write wakes only the cold subscriber.
+    let before = hot_sub.notify_count();
+    api.create(
+        parse_one("kind: ConfigMap\nmetadata:\n  name: cm\ndata:\n  a: 1\n").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cold_sub.wait(Duration::ZERO), WakeReason::Notified);
+    cold.sync();
+    assert_eq!(cold.list("ConfigMap").len(), 1);
+    assert_eq!(hot_sub.notify_count(), before);
+}
+
+#[test]
+fn per_kind_compaction_relists_only_that_kind_through_informer() {
+    let api = ApiServer::new();
+    let informer = SharedInformer::for_kinds(api.clone(), &["Pod", "ConfigMap"]);
+    api.create(pod("stable", "web")).unwrap();
+    informer.sync();
+    assert_eq!(informer.stats().resyncs, 0);
+    // Overflow the ConfigMap shard while the informer sleeps.
+    for i in 0..5000 {
+        api.apply_manifest(&format!(
+            "kind: ConfigMap\nmetadata:\n  name: only\ndata:\n  v: {i}\n"
+        ))
+        .unwrap();
+    }
+    api.create(pod("fresh", "web")).unwrap();
+    informer.sync();
+    // Exactly one re-list happened (the ConfigMap kind); Pods stayed
+    // incremental and current.
+    assert_eq!(informer.stats().resyncs, 1);
+    assert_eq!(informer.list("Pod").len(), 2);
+    assert_eq!(informer.list("ConfigMap").len(), 1);
+    assert_eq!(informer.revision(), api.revision());
+}
+
+#[test]
+fn shutdown_wake_on_close_loses_no_events() {
+    let api = ApiServer::new();
+    let informer = SharedInformer::for_kinds(api.clone(), &["Pod"]);
+    let queue = informer.register(vec![WatchSpec::of("Pod")]);
+    let sub = informer.subscribe();
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified); // born signaled
+
+    // A blocked waiter is woken by close, not by a timeout.
+    let waiter = sub.clone();
+    let handle = std::thread::spawn(move || waiter.wait(Duration::from_secs(30)));
+    std::thread::sleep(Duration::from_millis(30));
+    // An event lands, then shutdown closes the subscription.
+    api.create(pod("last-write", "web")).unwrap();
+    sub.close();
+    // The waiter returns promptly (Notified if the event won the race,
+    // Closed otherwise — never a 30 s hang), and once closed every
+    // subsequent wait reports Closed.
+    let reason = handle.join().unwrap();
+    assert_ne!(reason, WakeReason::TimedOut);
+    assert_eq!(sub.wait(Duration::from_secs(5)), WakeReason::Closed);
+
+    // The final drain on Closed still delivers the racing event.
+    informer.sync();
+    assert!(informer
+        .get(&ResourceKey::new("Pod", "default", "last-write"))
+        .is_some());
+    assert!(queue
+        .drain()
+        .contains(&ResourceKey::new("Pod", "default", "last-write")));
 }
 
 #[test]
