@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Print a markdown per-metric delta table between two bench JSON files.
+
+Usage: bench_delta.py <previous.json> <current.json>
+
+Warn-only: regressions get a warning marker in the table, but the exit
+code is always 0 — the perf trajectory is made visible per-PR without
+hard-failing on noisy runners. Metric direction is inferred from the
+name suffix (`_ms`/`_us`/`_bytes*`/`*wakeups`/`*writes` are
+lower-is-better, `_per_s` is higher-is-better; everything else is
+reported without judgement).
+"""
+
+import json
+import sys
+
+# Relative change beyond which a regression is flagged (warn-only).
+WARN_THRESHOLD = 0.25
+
+LOWER_IS_BETTER = ("_ms", "_us", "_bytes", "_bytes_written", "_wakeups", "_writes")
+HIGHER_IS_BETTER = ("_per_s",)
+
+# Bench configuration / baseline metrics, not costs the code pays:
+# growing these (e.g. a bigger E5.3d service) is not a regression.
+NEUTRAL = {
+    "e53c_idle_window_ms",
+    "e53d_endpoints",
+    "e53d_shards",
+    "e53d_whole_object_bytes",
+}
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def direction(name):
+    if name in NEUTRAL:
+        return None
+    if name.endswith(HIGHER_IS_BETTER):
+        return "higher"
+    if name.endswith(LOWER_IS_BETTER):
+        return "lower"
+    return None
+
+
+def main():
+    prev_path, cur_path = sys.argv[1], sys.argv[2]
+    prev, cur = load(prev_path), load(cur_path)
+    print("### Bench delta vs previous main run\n")
+    if cur is None:
+        print(f"_current bench JSON missing or unreadable ({cur_path})_")
+        return
+    if prev is None:
+        print(f"_no previous artifact ({prev_path}) — first run, or download failed_")
+        return
+    print("| metric | previous | current | delta | |")
+    print("|---|---:|---:|---:|---|")
+    warned = False
+    for name in sorted(cur):
+        cur_v = cur[name]
+        prev_v = prev.get(name)
+        if not isinstance(cur_v, (int, float)) or name == "smoke":
+            continue
+        if not isinstance(prev_v, (int, float)):
+            print(f"| {name} | — | {cur_v:.3g} | new | |")
+            continue
+        if prev_v == 0:
+            rel = 0.0 if cur_v == 0 else float("inf")
+        else:
+            rel = (cur_v - prev_v) / abs(prev_v)
+        flag = ""
+        d = direction(name)
+        if d == "lower" and rel > WARN_THRESHOLD:
+            flag, warned = "⚠️ regression", True
+        elif d == "higher" and rel < -WARN_THRESHOLD:
+            flag, warned = "⚠️ regression", True
+        print(f"| {name} | {prev_v:.3g} | {cur_v:.3g} | {rel:+.1%} | {flag} |")
+    print()
+    if warned:
+        print(
+            f"_⚠️ at least one metric moved more than {WARN_THRESHOLD:.0%} in the "
+            "wrong direction (warn-only, smoke-mode numbers are noisy)_"
+        )
+    else:
+        print("_no metric regressed beyond the warn threshold_")
+
+
+if __name__ == "__main__":
+    main()
+    sys.exit(0)

@@ -9,7 +9,10 @@
 //! resource sharing" argument of SS2. E5.3c quantifies the push-bus
 //! claim: kind-sharded subscriptions mean single-kind churn never wakes
 //! cold-kind informers, and an idle cluster costs zero wakeups (the old
-//! informer loop woke every 2 ms regardless).
+//! informer loop woke every 2 ms regardless). E5.3d quantifies the
+//! EndpointSlice claim: one pod churning in a 1k-endpoint service
+//! rewrites exactly one shard bounded by the slice cap, not one
+//! whole-service object.
 //!
 //! Run: `cargo bench --bench bench_hpk_overhead`
 //!
@@ -18,6 +21,7 @@
 //! artifact CI uploads so the perf trajectory accumulates).
 
 use hpk::hpk::translate;
+use hpk::kube::controllers::{EndpointsController, Runner};
 use hpk::kube::informer::{SharedInformer, WatchSpec};
 use hpk::kube::object;
 use hpk::kube::WakeReason;
@@ -31,6 +35,11 @@ fn pod_manifest(name: &str) -> String {
     format!(
         "kind: Pod\nmetadata:\n  name: {name}\nspec:\n  containers:\n  - name: main\n    image: pause:3.9\n    resources:\n      requests:\n        cpu: 1\n        memory: 256Mi\n"
     )
+}
+
+/// (name, resourceVersion) of one EndpointSlice shard (E5.3d).
+fn slice_rv(s: &Value) -> (String, i64) {
+    (object::name(s).to_string(), s.i64_at("metadata.resourceVersion").unwrap_or(0))
 }
 
 fn median(mut xs: Vec<f64>) -> f64 {
@@ -292,6 +301,83 @@ fn main() {
     results.push(("e53c_cold_wakeups", cold_wakeups as f64));
     results.push(("e53c_idle_wakeups", idle_wakeups as f64));
     results.push(("e53c_idle_window_ms", idle_ms as f64));
+
+    // ---- 3d. EndpointSlice write amplification ----
+    // The slicing claim: single-pod churn in a big service rewrites
+    // exactly one bounded shard, so per-write bytes are capped by
+    // MAX_ENDPOINTS_PER_SLICE — not by service size, the way one
+    // whole-service Endpoints object was.
+    let ep_n: usize = 1_000;
+    println!("# E5.3d: EndpointSlice write amplification (1 pod churn among {ep_n} endpoints)");
+    let api = hpk::kube::ApiServer::new();
+    api.create(
+        parse_one(
+            "kind: Service\nmetadata:\n  name: big\nspec:\n  clusterIP: None\n  selector:\n    app: ep\n  ports:\n  - port: 80\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    for i in 0..ep_n {
+        api.create(
+            parse_one(&format!(
+                "kind: Pod\nmetadata:\n  name: ep-{i:04}\n  labels:\n    app: ep\nspec: {{}}\nstatus:\n  phase: Running\n  podIP: 10.244.{}.{}\n",
+                i / 250,
+                (i % 250) + 1
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+    }
+    let runner = Runner::new(&api, vec![Box::new(EndpointsController)]);
+    runner.run_once(); // shards created
+    runner.run_once(); // slice-create events settle (no further writes)
+    let slices = api.list_refs("EndpointSlice");
+    let shards = slices.len();
+    let all_addrs = object::aggregate_slice_addresses(&slices);
+    assert_eq!(all_addrs.len(), ep_n, "every endpoint placed in a shard");
+    let before: std::collections::BTreeMap<String, i64> =
+        slices.iter().map(|s| slice_rv(s)).collect();
+    // The old whole-object cost: one Endpoints object carrying every
+    // address, rewritten on any churn.
+    let addr_values: Vec<Value> = all_addrs.iter().map(|a| Value::from(a.as_str())).collect();
+    let mut whole = Value::map();
+    whole.set("addresses", Value::Seq(addr_values));
+    let whole_bytes = hpk::yamlkit::to_json_string(&whole).len();
+
+    // Churn exactly one pod.
+    api.delete("Pod", "default", "ep-0500").unwrap();
+    runner.run_once();
+    let after = api.list_refs("EndpointSlice");
+    let mut slice_writes = 0usize;
+    let mut slice_bytes = 0usize;
+    for s in &after {
+        let (name, rv) = slice_rv(s);
+        if before.get(&name) != Some(&rv) {
+            slice_writes += 1;
+            slice_bytes += hpk::yamlkit::to_json_string(s).len();
+        }
+    }
+    // Shards deleted by a merge count as writes too (none expected here).
+    slice_writes += before
+        .keys()
+        .filter(|name| !after.iter().any(|s| object::name(s) == name.as_str()))
+        .count();
+    assert_eq!(
+        object::aggregate_slice_addresses(&after).len(),
+        ep_n - 1,
+        "churned endpoint drained"
+    );
+    assert_eq!(slice_writes, 1, "single-pod churn must rewrite exactly one shard");
+    println!(
+        "{ep_n} endpoints -> {shards} shards (cap {}); 1-pod churn: {slice_writes} shard write, {slice_bytes} B written vs {whole_bytes} B whole-object rewrite ({:.1}x less)\n",
+        object::MAX_ENDPOINTS_PER_SLICE,
+        whole_bytes as f64 / slice_bytes.max(1) as f64
+    );
+    results.push(("e53d_endpoints", ep_n as f64));
+    results.push(("e53d_shards", shards as f64));
+    results.push(("e53d_slice_writes", slice_writes as f64));
+    results.push(("e53d_slice_bytes_written", slice_bytes as f64));
+    results.push(("e53d_whole_object_bytes", whole_bytes as f64));
 
     // ---- 4. scheduler throughput (pass-through + kubelet + slurm) ----
     let burst = if smoke { 24 } else { 120 };

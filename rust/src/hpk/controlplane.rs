@@ -145,6 +145,13 @@ impl ControlPlane {
         self.api.apply_manifest(manifest)
     }
 
+    /// Ready addresses of a service, aggregated from its EndpointSlice
+    /// shards (CoreDNS's informer cache — no per-call API fetch, no
+    /// whole-service Endpoints object anywhere).
+    pub fn service_endpoints(&self, namespace: &str, service: &str) -> Vec<String> {
+        self.dns.service_endpoints(namespace, service)
+    }
+
     /// Wait until a pod reaches `phase` (real-ms timeout). Returns the
     /// final pod object on success.
     pub fn wait_for_phase(
@@ -274,6 +281,11 @@ mod tests {
         let ips = cp.dns.resolve("db");
         assert_eq!(ips.len(), 1);
         assert!(ips[0].to_string().starts_with("10.244."));
+        // The same answer through the slice-aggregation surface, backed
+        // by actual EndpointSlice shards (no whole Endpoints object).
+        assert_eq!(cp.service_endpoints("default", "db"), vec![ips[0].to_string()]);
+        assert!(!cp.api.list("EndpointSlice").is_empty());
+        assert!(cp.api.list("Endpoints").is_empty());
         cp.shutdown();
     }
 }

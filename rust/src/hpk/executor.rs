@@ -11,6 +11,7 @@
 
 use crate::apptainer::ApptainerRuntime;
 use crate::slurm::{JobContext, JobExecutor};
+use crate::util::shlex;
 use std::sync::Arc;
 
 /// One parsed `apptainer exec` line.

@@ -43,10 +43,12 @@ struct PodBinding {
 ///
 /// Watch-driven on the Kubernetes side: a private informer feeds Pod
 /// keys to the submit path, so translate+sbatch work scales with pod
-/// churn, and the sync loop blocks on a Pod-kind subscription while
-/// idle (zero wakeups with no jobs in flight). The Slurm side still
-/// walks active bindings (that set is the kubelet's own working set,
-/// not the cluster object count), polled only while non-empty.
+/// churn, and the sync loop blocks on a kind-scoped subscription while
+/// idle (zero wakeups with no jobs in flight). The same informer
+/// caches Service + EndpointSlice so translation can inject
+/// service-discovery env. The Slurm side still walks active bindings
+/// (that set is the kubelet's own working set, not the cluster object
+/// count), polled only while non-empty.
 #[derive(Clone)]
 pub struct HpkKubelet {
     api: ApiServer,
@@ -73,11 +75,17 @@ impl HpkKubelet {
             .with_nodes(|ns| ns.iter().map(|n| n.resources.memory_bytes).sum());
         crate::kube::scheduler::register_node(&api, VIRTUAL_NODE, total_cpus, total_mem);
 
-        // Pod-scoped: this informer never caches or indexes other
-        // kinds, and its subscription never wakes for them either.
-        let informer = Arc::new(SharedInformer::for_kinds(api.clone(), &["Pod"]));
+        // Pods drive the loop; Service + EndpointSlice are cached for
+        // service-discovery env injection at translation time. Only Pod
+        // events wake the loop — service/slice churn is absorbed lazily
+        // at the next pod event or backstop sync, so slice writes don't
+        // add kubelet wakeups.
+        let informer = Arc::new(SharedInformer::for_kinds(
+            api.clone(),
+            &["Pod", "Service", "EndpointSlice"],
+        ));
         let queue = informer.register(vec![WatchSpec::of("Pod")]);
-        let subscription = informer.subscribe();
+        let subscription = api.subscribe(Some(&["Pod"]));
         let kubelet = HpkKubelet {
             api,
             slurm,
@@ -188,9 +196,13 @@ impl HpkKubelet {
     fn submit_pod(&self, pod: &Value, full: String) {
         let ns = object::namespace(pod).to_string();
         let name = object::name(pod).to_string();
-        // Resolve ConfigMap/Secret references before translation so the
-        // generated script carries concrete values.
+        // Resolve ConfigMap/Secret references and inject the
+        // service-discovery env (aggregated from the cached
+        // EndpointSlice shards) before translation, so the generated
+        // script carries concrete values.
         let pod = &resolve_env_refs(&self.api, pod);
+        let services = crate::kube::kubelet::service_env(&self.informer, &ns);
+        let pod = &inject_service_env(pod, &services);
         match translate::pod_to_jobspec(pod) {
             Ok(spec) => {
                 // Persist the script in the user's home dir (HPK keeps all
@@ -334,6 +346,49 @@ pub fn resolve_env_refs(api: &ApiServer, pod: &Value) -> Value {
                 item.remove("valueFrom");
                 item.set("value", Value::from(v));
             }
+        }
+    }
+    pod
+}
+
+/// Append service-discovery env entries (`<SVC>_SERVICE_HOST`/`_PORT`,
+/// see [`crate::kube::kubelet::service_env`]) to every container that
+/// doesn't already set them — the HPK counterpart of the kubelet
+/// injecting service env at container start, done at translation time
+/// so the sbatch script is self-contained.
+pub fn inject_service_env(pod: &Value, services: &[(String, String)]) -> Value {
+    if services.is_empty() {
+        return pod.clone();
+    }
+    let mut pod = pod.clone();
+    let Some(Value::Seq(containers)) = pod.entry_map("spec").get_mut("containers") else {
+        return pod;
+    };
+    for c in containers.iter_mut() {
+        let existing: std::collections::BTreeSet<String> = c
+            .path("env")
+            .and_then(|e| e.as_seq())
+            .map(|items| {
+                items
+                    .iter()
+                    .filter_map(|i| i.str_at("name").map(|s| s.to_string()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        if !matches!(c.get("env"), Some(Value::Seq(_))) {
+            c.set("env", Value::Seq(Vec::new()));
+        }
+        let Some(Value::Seq(env)) = c.get_mut("env") else {
+            continue;
+        };
+        for (k, v) in services {
+            if existing.contains(k) {
+                continue;
+            }
+            let mut item = Value::map();
+            item.set("name", Value::from(k.as_str()));
+            item.set("value", Value::from(v.as_str()));
+            env.push(item);
         }
     }
     pod
@@ -518,6 +573,41 @@ mod tests {
         assert!(script.contains("--env MODE=turbo"), "{script}");
         w.kubelet.shutdown();
         w.slurm.shutdown();
+    }
+
+    #[test]
+    fn service_env_injected_into_script() {
+        use crate::kube::controllers::EndpointsController;
+        let w = world();
+        w.api
+            .create(
+                parse_one(
+                    "kind: Service\nmetadata:\n  name: db\nspec:\n  clusterIP: None\n  selector:\n    app: db\n  ports:\n  - port: 5432\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        w.api
+            .create(
+                parse_one(
+                    "kind: Pod\nmetadata:\n  name: db-backing\n  labels:\n    app: db\nspec: {}\nstatus:\n  phase: Running\n  podIP: 10.244.9.9\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        reconcile_once(&w.api, &EndpointsController);
+        assert!(!w.api.list("EndpointSlice").is_empty());
+
+        w.api.create(quick_pod("uses-db")).unwrap();
+        reconcile_once(&w.api, &PassThroughScheduler);
+        assert!(wait_phase(&w.api, "default", "uses-db", "Succeeded", 5000));
+        let script = w
+            .kubelet
+            .fs
+            .read_str("/home/user/.hpk/default/uses-db/job.sbatch")
+            .unwrap();
+        assert!(script.contains("--env DB_SERVICE_HOST=10.244.9.9"), "{script}");
+        assert!(script.contains("--env DB_SERVICE_PORT=5432"), "{script}");
     }
 
     #[test]

@@ -29,13 +29,9 @@ impl Reconciler for PassThroughScheduler {
 
     fn reconcile(&self, ctx: &Context) {
         let pods = ctx.api("Pod");
-        for key in ctx.drain() {
-            if key.kind != "Pod" {
-                continue;
-            }
-            let Some(pod) = ctx.cached(&key) else {
-                continue; // deleted before we got to it
-            };
+        // Cached drain: zero-copy snapshots on the hottest path, and
+        // pods deleted before we got to them are skipped.
+        for (key, pod) in ctx.drain_kind_cached("Pod") {
             if pod.str_at("spec.nodeName").is_some()
                 || object::pod_phase(&pod) != "Pending"
             {

@@ -23,10 +23,14 @@ pub fn pod_dir(namespace: &str, name: &str) -> String {
     format!("{HPK_DIR}/{namespace}/{name}")
 }
 
-/// Quote a token for the generated script.
+/// Quote a token for the generated script. Backslashes and backticks
+/// force quoting too, so a bare token never needs unescaping —
+/// [`crate::util::shlex::split`] round-trips every output exactly.
 fn sh_quote(s: &str) -> String {
     if s.is_empty()
-        || s.contains(|c: char| c.is_whitespace() || c == '"' || c == '\'' || c == '$')
+        || s.contains(|c: char| {
+            c.is_whitespace() || c == '"' || c == '\'' || c == '$' || c == '\\' || c == '`'
+        })
     {
         format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
     } else {
@@ -109,6 +113,20 @@ pub fn pod_to_script(pod: &Value) -> Result<String, String> {
 mod tests {
     use super::*;
     use crate::yamlkit::parse_one;
+
+    #[test]
+    fn sh_quote_roundtrips_through_shlex_split() {
+        assert_eq!(sh_quote("plain"), "plain");
+        assert_eq!(sh_quote(r"a\b"), r#""a\\b""#);
+        for token in ["plain", r"a\b", "with space", "a\"q", "pa$th", "tick`y"] {
+            let line = format!("cmd {}", sh_quote(token));
+            assert_eq!(
+                crate::util::shlex::split(&line).unwrap(),
+                vec!["cmd", token],
+                "{line}"
+            );
+        }
+    }
 
     fn pod_yaml() -> Value {
         parse_one(

@@ -26,14 +26,7 @@ impl Reconciler for DeploymentController {
     fn reconcile(&self, ctx: &Context) {
         let deployments = ctx.api("Deployment");
         let replicasets = ctx.api("ReplicaSet");
-        for key in ctx.drain() {
-            if key.kind != "Deployment" {
-                continue;
-            }
-            // Fresh read: the key may be stale (deleted -> GC's job).
-            let Ok(dep) = deployments.get(&key.namespace, &key.name) else {
-                continue;
-            };
+        for (key, dep) in ctx.drain_kind("Deployment") {
             let ns = &key.namespace;
             let dep_name = &key.name;
             let replicas = dep.i64_at("spec.replicas").unwrap_or(1).max(0);

@@ -1,22 +1,64 @@
-//! Endpoints controller: map Services to ready pod IPs.
+//! Endpoints controller: map Services to ready pod IPs, sharded across
+//! EndpointSlice objects.
 //!
 //! This is what makes *headless* services work in HPK: CoreDNS answers
-//! from these Endpoints, so "service discovery continues to function, as
+//! from these slices, so "service discovery continues to function, as
 //! CoreDNS maps the service name to the actual pod IPs instead of the
 //! virtual service address" (SS3).
 //!
-//! Event-driven: watches Services, and Pods through the selector
-//! mapping — a pod change requeues exactly the services whose selector
-//! matches its (old or new) labels, answered from the informer's
-//! by-label index.
+//! # The slice model
+//!
+//! A service's ready addresses are sharded across `EndpointSlice`
+//! objects of at most [`object::MAX_ENDPOINTS_PER_SLICE`] addresses
+//! each (named `{service}-{i}`, labelled
+//! [`object::SERVICE_NAME_LABEL`], owned by the Service). Placement is
+//! *stable*: an address stays in the shard it already occupies, new
+//! addresses fill the fullest shard with room, and a fresh shard is
+//! opened only when every shard is full. One pod's churn therefore
+//! rewrites exactly the one shard containing it — per-service write
+//! cost is O(slice cap), not O(service size), which is the bound that
+//! keeps write amplification flat at HPC scale (bench E5.3d).
+//!
+//! Shards merge lazily at the cap boundary: only when occupancy drops
+//! far enough that a whole shard is redundant is the smallest shard
+//! folded into the others' spare room and deleted. Slices of a deleted
+//! Service are collected by the GC through their owner reference.
+//!
+//! Event-driven: watches Services, Pods through the selector mapping (a
+//! pod change requeues exactly the services whose selector matches its
+//! old or new labels), and the slices themselves through their owner
+//! reference.
 
 use super::{Context, Reconciler};
 use crate::kube::client::ListParams;
 use crate::kube::informer::WatchSpec;
 use crate::kube::object;
 use crate::yamlkit::Value;
+use std::collections::BTreeSet;
 
 pub struct EndpointsController;
+
+/// One shard's in-pass state: membership after the desired-set filter,
+/// whether it exists in the store, and whether it must be written.
+struct SliceState {
+    name: String,
+    addrs: Vec<String>,
+    exists: bool,
+    dirty: bool,
+}
+
+/// Smallest unused `{service}-{i}` shard name (names go sparse after
+/// merges, so probe from zero).
+fn next_slice_name(svc_name: &str, states: &[SliceState]) -> String {
+    let mut i = 0usize;
+    loop {
+        let name = format!("{svc_name}-{i}");
+        if !states.iter().any(|s| s.name == name) {
+            return name;
+        }
+        i += 1;
+    }
+}
 
 impl Reconciler for EndpointsController {
     fn name(&self) -> &'static str {
@@ -27,71 +69,145 @@ impl Reconciler for EndpointsController {
         vec![
             WatchSpec::of("Service"),
             WatchSpec::selectors("Pod", "Service"),
-            WatchSpec::owners("Endpoints", "Service"),
+            WatchSpec::owners("EndpointSlice", "Service"),
         ]
     }
 
     fn reconcile(&self, ctx: &Context) {
-        let services = ctx.api("Service");
-        let endpoints = ctx.api("Endpoints");
-        for key in ctx.drain() {
-            if key.kind != "Service" {
-                continue;
-            }
-            let Ok(svc) = services.get(&key.namespace, &key.name) else {
-                continue;
-            };
-            let ns = &key.namespace;
-            let svc_name = &key.name;
+        for (key, svc) in ctx.drain_kind("Service") {
+            // Selectorless services have externally-managed endpoints;
+            // their slices (if any) are not ours to touch.
             let Some(selector) = svc.path("spec.selector") else {
                 continue;
             };
-            // Ready addresses: Running pods matching the selector that
-            // have an IP (label-indexed informer query). An empty
-            // selector matches nothing (Kubernetes semantics) — but the
-            // Endpoints must still be reconciled down to zero addresses.
-            let mut params = ListParams::in_namespace(ns)
+            // Desired ready addresses: Running pods matching the
+            // selector that have an IP (label-indexed informer query).
+            // An empty selector matches nothing (Kubernetes semantics)
+            // — existing shards still drain to zero below.
+            let mut params = ListParams::in_namespace(&key.namespace)
                 .with_field("status.phase", "Running");
             for (k, v) in object::selector_labels(selector) {
                 params = params.with_label(&k, &v);
             }
-            let mut addrs: Vec<String> = if params.labels.is_empty() {
-                Vec::new()
-            } else {
-                ctx.informer
-                    .select("Pod", &params)
-                    .iter()
-                    .filter_map(|p| p.str_at("status.podIP").map(|s| s.to_string()))
-                    .collect()
-            };
-            addrs.sort();
+            let mut desired: BTreeSet<String> = BTreeSet::new();
+            if !params.labels.is_empty() {
+                for p in ctx.informer.select("Pod", &params) {
+                    if let Some(ip) = p.str_at("status.podIP") {
+                        desired.insert(ip.to_string());
+                    }
+                }
+            }
+            reconcile_slices(ctx, &key.namespace, &key.name, &svc, desired);
+        }
+    }
+}
 
-            let current = endpoints.get(ns, svc_name).ok();
-            let cur_addrs: Vec<String> = current
-                .as_ref()
-                .and_then(|e| e.path("addresses"))
-                .and_then(|a| a.as_seq())
-                .map(|items| {
-                    items
-                        .iter()
-                        .filter_map(|v| v.as_str().map(|s| s.to_string()))
-                        .collect()
-                })
-                .unwrap_or_default();
-            if current.is_some() && cur_addrs == addrs {
-                continue;
+/// Converge the service's shards on `desired`, writing only shards
+/// whose membership actually changed.
+fn reconcile_slices(
+    ctx: &Context,
+    ns: &str,
+    svc_name: &str,
+    svc: &Value,
+    desired: BTreeSet<String>,
+) {
+    let slices_api = ctx.api("EndpointSlice");
+    // Current shards, freshly listed by the service-name label (the
+    // informer cache may trail this pass's own writes), sorted by name
+    // for deterministic placement.
+    let mut existing = slices_api.list(
+        &ListParams::in_namespace(ns).with_label(object::SERVICE_NAME_LABEL, svc_name),
+    );
+    existing.sort_by(|a, b| object::name(a).cmp(object::name(b)));
+
+    // Stable placement: every desired address stays in the shard it
+    // already occupies; gone addresses and duplicates drop out.
+    let mut placed: BTreeSet<String> = BTreeSet::new();
+    let mut states: Vec<SliceState> = Vec::new();
+    for s in &existing {
+        let old = object::slice_endpoints(s);
+        let kept: Vec<String> = old
+            .iter()
+            .filter(|a| desired.contains(*a) && placed.insert((*a).clone()))
+            .cloned()
+            .collect();
+        states.push(SliceState {
+            name: object::name(s).to_string(),
+            dirty: kept != old,
+            addrs: kept,
+            exists: true,
+        });
+    }
+
+    // New addresses fill the fullest shard with room (one dirty shard
+    // per placement); a fresh shard opens only when all are full.
+    for addr in desired {
+        if placed.contains(&addr) {
+            continue;
+        }
+        let target = states
+            .iter_mut()
+            .filter(|s| s.addrs.len() < object::MAX_ENDPOINTS_PER_SLICE)
+            .max_by_key(|s| s.addrs.len());
+        match target {
+            Some(s) => {
+                s.addrs.push(addr);
+                s.dirty = true;
             }
-            let mut ep = object::new_object("Endpoints", ns, svc_name);
-            ep.set(
-                "addresses",
-                Value::Seq(addrs.into_iter().map(Value::from).collect()),
-            );
-            object::add_owner_ref(&mut ep, "Service", svc_name, object::uid(&svc));
-            if current.is_some() {
-                let _ = endpoints.update(ep);
-            } else {
-                let _ = endpoints.create(ep);
+            None => {
+                let name = next_slice_name(svc_name, &states);
+                states.push(SliceState {
+                    name,
+                    addrs: vec![addr],
+                    exists: false,
+                    dirty: true,
+                });
             }
+        }
+    }
+
+    // Lazy merge at the cap boundary: while occupancy is low enough
+    // that a whole shard is redundant, fold the smallest shard into the
+    // others' spare room (the aggregate room is guaranteed by the loop
+    // condition, so every address finds a target).
+    loop {
+        let live = states.iter().filter(|s| !s.addrs.is_empty()).count();
+        let total: usize = states.iter().map(|s| s.addrs.len()).sum();
+        if live <= 1 || total > (live - 1) * object::MAX_ENDPOINTS_PER_SLICE {
+            break;
+        }
+        let idx = states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.addrs.is_empty())
+            .min_by_key(|(_, s)| s.addrs.len())
+            .map(|(i, _)| i)
+            .expect("live > 1 shards");
+        let moved = std::mem::take(&mut states[idx].addrs);
+        states[idx].dirty = true;
+        for addr in moved {
+            let target = states
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, s)| *i != idx && s.addrs.len() < object::MAX_ENDPOINTS_PER_SLICE)
+                .max_by_key(|(_, s)| s.addrs.len())
+                .map(|(_, s)| s)
+                .expect("aggregate room for merged shard");
+            target.addrs.push(addr);
+            target.dirty = true;
+        }
+    }
+
+    // Write-back: only dirty shards touch the store.
+    for s in states {
+        if s.addrs.is_empty() {
+            if s.exists {
+                let _ = slices_api.delete(ns, &s.name);
+            }
+        } else if !s.exists {
+            let _ = slices_api.create(object::new_endpoint_slice(svc, &s.name, &s.addrs));
+        } else if s.dirty {
+            let _ = slices_api.update(object::new_endpoint_slice(svc, &s.name, &s.addrs));
         }
     }
 }
@@ -102,6 +218,7 @@ mod tests {
     use super::*;
     use crate::kube::api::ApiServer;
     use crate::yamlkit::parse_one;
+    use std::collections::BTreeMap;
 
     fn svc() -> Value {
         parse_one(
@@ -117,8 +234,39 @@ mod tests {
         .unwrap()
     }
 
+    /// Unique, sorted-stable pod IP for index `i` (supports > cap pods).
+    fn ip(i: usize) -> String {
+        format!("10.244.{}.{:03}", i / 250, (i % 250) + 1)
+    }
+
+    fn aggregated(api: &ApiServer) -> Vec<String> {
+        object::aggregate_slice_addresses(&api.list_refs("EndpointSlice"))
+    }
+
+    /// Drive the controller until the aggregated address count settles.
+    fn reconcile_to_count(api: &ApiServer, c: &EndpointsController, want: usize) {
+        reconcile_until(
+            api,
+            &[c],
+            |a| object::aggregate_slice_addresses(&a.list_refs("EndpointSlice")).len() == want,
+            10,
+        );
+    }
+
+    fn slice_rvs(api: &ApiServer) -> BTreeMap<String, i64> {
+        api.list_refs("EndpointSlice")
+            .iter()
+            .map(|s| {
+                (
+                    object::name(s).to_string(),
+                    s.i64_at("metadata.resourceVersion").unwrap_or(0),
+                )
+            })
+            .collect()
+    }
+
     #[test]
-    fn endpoints_track_ready_pods() {
+    fn slices_track_ready_pods() {
         let api = ApiServer::new();
         api.create(svc()).unwrap();
         api.create(running_pod("db-0", "10.244.0.2", "db")).unwrap();
@@ -129,27 +277,19 @@ mod tests {
             &api,
             &[&c],
             |a| {
-                a.get("Endpoints", "default", "db")
-                    .map(|e| {
-                        e.path("addresses").and_then(|x| x.as_seq()).map(|s| s.len())
-                            == Some(2)
-                    })
-                    .unwrap_or(false)
+                object::aggregate_slice_addresses(&a.list_refs("EndpointSlice"))
+                    == vec!["10.244.0.2", "10.244.1.2"]
             },
             10,
         );
-        // Pod goes away -> endpoints shrink.
+        // Pod goes away -> its address drains from the shard.
         api.delete("Pod", "default", "db-1").unwrap();
         reconcile_until(
             &api,
             &[&c],
             |a| {
-                a.get("Endpoints", "default", "db")
-                    .map(|e| {
-                        e.path("addresses").and_then(|x| x.as_seq()).map(|s| s.len())
-                            == Some(1)
-                    })
-                    .unwrap_or(false)
+                object::aggregate_slice_addresses(&a.list_refs("EndpointSlice"))
+                    == vec!["10.244.0.2"]
             },
             10,
         );
@@ -168,8 +308,8 @@ mod tests {
         .unwrap();
         let c = EndpointsController;
         reconcile_once(&api, &c);
-        let ep = api.get("Endpoints", "default", "db").unwrap();
-        assert_eq!(ep.path("addresses").unwrap().as_seq().unwrap().len(), 0);
+        assert!(aggregated(&api).is_empty());
+        assert!(api.list("EndpointSlice").is_empty(), "no addresses, no shards");
     }
 
     #[test]
@@ -182,6 +322,104 @@ mod tests {
         .unwrap();
         let c = EndpointsController;
         reconcile_once(&api, &c);
-        assert!(api.get("Endpoints", "default", "ext").is_err());
+        assert!(api.list("EndpointSlice").is_empty());
+    }
+
+    #[test]
+    fn single_pod_churn_writes_exactly_one_slice() {
+        let api = ApiServer::new();
+        api.create(svc()).unwrap();
+        let n = 2 * object::MAX_ENDPOINTS_PER_SLICE + 50; // 3 shards
+        for i in 0..n {
+            api.create(running_pod(&format!("db-{i:03}"), &ip(i), "db")).unwrap();
+        }
+        let c = EndpointsController;
+        reconcile_to_count(&api, &c, n);
+        assert_eq!(api.list("EndpointSlice").len(), 3);
+        let before = slice_rvs(&api);
+
+        // One pod leaves; a second reconcile settles nothing further.
+        api.delete("Pod", "default", "db-120").unwrap();
+        reconcile_to_count(&api, &c, n - 1);
+        let after = slice_rvs(&api);
+        assert_eq!(before.len(), after.len(), "no shard added or merged");
+        let rewritten: Vec<&String> = after
+            .iter()
+            .filter(|(name, rv)| before.get(*name) != Some(*rv))
+            .map(|(name, _)| name)
+            .collect();
+        assert_eq!(rewritten.len(), 1, "exactly one shard rewritten: {rewritten:?}");
+
+        // And one pod joining dirties exactly one shard too.
+        let before = slice_rvs(&api);
+        api.create(running_pod("db-new", &ip(n), "db")).unwrap();
+        reconcile_to_count(&api, &c, n);
+        let after = slice_rvs(&api);
+        let rewritten = after
+            .iter()
+            .filter(|(name, rv)| before.get(*name) != Some(*rv))
+            .count();
+        assert_eq!(rewritten, 1, "one placement, one dirty shard");
+    }
+
+    #[test]
+    fn cap_boundary_split_and_merge() {
+        let api = ApiServer::new();
+        api.create(svc()).unwrap();
+        let cap = object::MAX_ENDPOINTS_PER_SLICE;
+        for i in 0..cap {
+            api.create(running_pod(&format!("db-{i:03}"), &ip(i), "db")).unwrap();
+        }
+        let c = EndpointsController;
+        reconcile_to_count(&api, &c, cap);
+        assert_eq!(api.list("EndpointSlice").len(), 1, "cap fits one shard");
+        let before = slice_rvs(&api);
+
+        // One pod past the cap splits: a second shard opens, the full
+        // first shard is not rewritten.
+        api.create(running_pod("db-overflow", &ip(cap), "db")).unwrap();
+        reconcile_until(&api, &[&c], |a| a.list("EndpointSlice").len() == 2, 10);
+        let after = slice_rvs(&api);
+        for (name, rv) in &before {
+            assert_eq!(after.get(name), Some(rv), "full shard {name} untouched by split");
+        }
+
+        // Dropping below the boundary merges back into one shard: the
+        // overflow shard's survivor is folded into the main shard's
+        // spare room and the empty shard is deleted.
+        api.delete("Pod", "default", "db-042").unwrap();
+        api.delete("Pod", "default", "db-043").unwrap();
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.list("EndpointSlice").len() == 1
+                    && object::aggregate_slice_addresses(&a.list_refs("EndpointSlice")).len()
+                        == cap - 1
+            },
+            10,
+        );
+    }
+
+    #[test]
+    fn duplicate_addresses_deduped_across_shards() {
+        // Two shards claiming the same address (e.g. after a crashed
+        // half-written pass) converge: the duplicate drains out.
+        let api = ApiServer::new();
+        let svc_obj = api.create(svc()).unwrap();
+        api.create(running_pod("db-0", "10.244.0.2", "db")).unwrap();
+        api.create(object::new_endpoint_slice(&svc_obj, "db-0", &["10.244.0.2".into()])).unwrap();
+        api.create(object::new_endpoint_slice(&svc_obj, "db-1", &["10.244.0.2".into()])).unwrap();
+        let c = EndpointsController;
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| {
+                a.list("EndpointSlice").len() == 1
+                    && object::aggregate_slice_addresses(&a.list_refs("EndpointSlice"))
+                        == vec!["10.244.0.2"]
+            },
+            10,
+        );
     }
 }

@@ -24,8 +24,10 @@ use std::sync::Arc;
 
 pub struct GcController;
 
-/// Kinds the GC scans (owner-managed objects).
-const MANAGED_KINDS: &[&str] = &["ReplicaSet", "Pod", "Endpoints"];
+/// Kinds the GC scans (owner-managed objects). EndpointSlice shards
+/// carry an owner reference to their Service, so a deleted service's
+/// slices are collected here like any other orphan.
+const MANAGED_KINDS: &[&str] = &["ReplicaSet", "Pod", "EndpointSlice"];
 
 /// Events kept per namespace; the oldest beyond this are swept.
 pub const EVENT_CAP_PER_NAMESPACE: usize = 256;
@@ -50,7 +52,7 @@ impl Reconciler for GcController {
         vec![
             WatchSpec::of("ReplicaSet"),
             WatchSpec::of("Pod"),
-            WatchSpec::of("Endpoints"),
+            WatchSpec::of("EndpointSlice"),
             WatchSpec::of("Event"),
             WatchSpec::deleted_children(),
         ]
@@ -217,6 +219,26 @@ mod tests {
             |a| a.list("Pod").is_empty() && a.list("ReplicaSet").is_empty(),
             20,
         );
+    }
+
+    #[test]
+    fn deleting_service_collects_orphaned_slices() {
+        let api = ApiServer::new();
+        let svc = api
+            .create(
+                parse_one(
+                    "kind: Service\nmetadata:\n  name: db\nspec:\n  clusterIP: None\n  selector:\n    app: db\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        api.create(object::new_endpoint_slice(&svc, "db-0", &["10.244.0.2".into()])).unwrap();
+        api.create(object::new_endpoint_slice(&svc, "db-1", &["10.244.0.3".into()])).unwrap();
+        let g = GcController;
+        reconcile_once(&api, &g);
+        assert_eq!(api.list("EndpointSlice").len(), 2, "live owner keeps shards");
+        api.delete("Service", "default", "db").unwrap();
+        reconcile_until(&api, &[&g], |a| a.list("EndpointSlice").is_empty(), 10);
     }
 
     #[test]

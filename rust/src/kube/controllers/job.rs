@@ -23,13 +23,7 @@ impl Reconciler for JobController {
     fn reconcile(&self, ctx: &Context) {
         let jobs = ctx.api("Job");
         let pod_api = ctx.api("Pod");
-        for key in ctx.drain() {
-            if key.kind != "Job" {
-                continue;
-            }
-            let Ok(job) = jobs.get(&key.namespace, &key.name) else {
-                continue;
-            };
+        for (key, job) in ctx.drain_kind("Job") {
             let job_name = &key.name;
             // Terminal jobs are left alone.
             if job.str_at("status.state") == Some("Complete")

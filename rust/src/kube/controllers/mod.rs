@@ -1,5 +1,6 @@
 //! The controller-manager role: reconciliation loops for the built-in
-//! abstractions (Deployment -> ReplicaSet -> Pod, Job, Endpoints, GC).
+//! abstractions (Deployment -> ReplicaSet -> Pod, Job, EndpointSlice
+//! sharding, GC).
 //!
 //! Each controller is a [`Reconciler`] that declares its event sources
 //! as [`WatchSpec`]s; the [`ControllerManager`] runs every reconciler
@@ -100,6 +101,33 @@ impl Context {
     /// Take the changed keys queued since the last pass.
     pub fn drain(&self) -> Vec<ResourceKey> {
         self.queue.drain()
+    }
+
+    /// Drain the queue and resolve the keys of `kind` to fresh objects
+    /// — the preamble every single-kind reconciler used to open-code.
+    /// Keys of other kinds are dropped (each mapping already funnels
+    /// events into the primary kind's keys, so they were only ever
+    /// skipped), and keys whose object is gone are skipped too:
+    /// deletions are the GC's business, not the reconciler's.
+    pub fn drain_kind(&self, kind: &str) -> Vec<(ResourceKey, Value)> {
+        let api = self.api(kind);
+        self.drain()
+            .into_iter()
+            .filter(|key| key.kind == kind)
+            .filter_map(|key| api.get(&key.namespace, &key.name).ok().map(|obj| (key, obj)))
+            .collect()
+    }
+
+    /// [`drain_kind`](Context::drain_kind) against the informer cache:
+    /// zero-copy `Arc` snapshots instead of fresh API reads, for hot
+    /// paths (the schedulers) where the cache — synced at the top of
+    /// this pass — is current enough. Same skip-on-deleted semantics.
+    pub fn drain_kind_cached(&self, kind: &str) -> Vec<(ResourceKey, Arc<Value>)> {
+        self.drain()
+            .into_iter()
+            .filter(|key| key.kind == kind)
+            .filter_map(|key| self.informer.get(&key).map(|obj| (key, obj)))
+            .collect()
     }
 
     /// Cached object (the informer's view as of the last sync).

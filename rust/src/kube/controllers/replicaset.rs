@@ -27,13 +27,7 @@ impl Reconciler for ReplicaSetController {
     fn reconcile(&self, ctx: &Context) {
         let replicasets = ctx.api("ReplicaSet");
         let pod_api = ctx.api("Pod");
-        for key in ctx.drain() {
-            if key.kind != "ReplicaSet" {
-                continue;
-            }
-            let Ok(rs) = replicasets.get(&key.namespace, &key.name) else {
-                continue;
-            };
+        for (key, rs) in ctx.drain_kind("ReplicaSet") {
             let desired = rs.i64_at("spec.replicas").unwrap_or(1).max(0);
             let rs_uid = object::uid(&rs);
             let ns = &key.namespace;

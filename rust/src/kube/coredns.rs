@@ -5,23 +5,39 @@
 //! - `svc` / `svc.ns` / `svc.ns.svc.cluster.local`
 //!
 //! Headless services (`clusterIP: None`) resolve to the ready pod IPs
-//! from Endpoints — the mechanism HPK relies on after disabling
-//! ClusterIP services. Services *with* a ClusterIP resolve to that
-//! virtual IP (only meaningful in the vanilla baseline, where a
-//! kube-proxy equivalent routes it).
+//! aggregated from the service's EndpointSlice shards — the mechanism
+//! HPK relies on after disabling ClusterIP services. Services *with* a
+//! ClusterIP resolve to that virtual IP (only meaningful in the vanilla
+//! baseline, where a kube-proxy equivalent routes it).
+//!
+//! The resolver is informer-backed: it keeps a Service+EndpointSlice
+//! scoped [`SharedInformer`] and answers every query from that cache
+//! (one incremental [`SharedInformer::sync`] per query, then by-label
+//! index lookups). Nothing is fetched per query from the API server,
+//! and no whole-service Endpoints object exists to copy — resolution
+//! cost scales with the shards a service actually has.
 
 use super::api::ApiServer;
+use super::client::ResourceKey;
+use super::informer::SharedInformer;
 use std::net::Ipv4Addr;
+use std::sync::Arc;
 
-/// Stateless resolver over the API server.
+/// Service-name resolver over the informer cache. Cheap to clone (the
+/// informer is shared).
 #[derive(Clone)]
 pub struct CoreDns {
-    api: ApiServer,
+    informer: Arc<SharedInformer>,
 }
 
 impl CoreDns {
     pub fn new(api: ApiServer) -> CoreDns {
-        CoreDns { api }
+        CoreDns {
+            informer: Arc::new(SharedInformer::for_kinds(
+                api,
+                &["Service", "EndpointSlice"],
+            )),
+        }
     }
 
     /// Split a query into (service, namespace).
@@ -41,29 +57,31 @@ impl CoreDns {
         }
     }
 
+    /// Ready addresses of a service, aggregated from its EndpointSlice
+    /// shards in the cache (sorted, deduped).
+    pub fn service_endpoints(&self, namespace: &str, service: &str) -> Vec<String> {
+        self.informer.sync();
+        self.informer.service_endpoints(namespace, service)
+    }
+
     /// Resolve a service query to IPs (possibly several for headless).
     pub fn resolve(&self, query: &str) -> Vec<Ipv4Addr> {
         let (svc_name, ns) = self.parse_query(query);
-        let Ok(svc) = self.api.get("Service", ns, svc_name) else {
+        self.informer.sync();
+        let Some(svc) = self
+            .informer
+            .get(&ResourceKey::new("Service", ns, svc_name))
+        else {
             return Vec::new();
         };
-        let cluster_ip = svc.str_at("spec.clusterIP");
-        match cluster_ip {
+        match svc.str_at("spec.clusterIP") {
             Some("None") | None => {
-                // Headless: endpoints' pod IPs.
-                let Ok(ep) = self.api.get("Endpoints", ns, svc_name) else {
-                    return Vec::new();
-                };
-                ep.path("addresses")
-                    .and_then(|a| a.as_seq())
-                    .map(|items| {
-                        items
-                            .iter()
-                            .filter_map(|v| v.as_str())
-                            .filter_map(|s| s.parse().ok())
-                            .collect()
-                    })
-                    .unwrap_or_default()
+                // Headless: the shards' pod IPs.
+                self.informer
+                    .service_endpoints(ns, svc_name)
+                    .iter()
+                    .filter_map(|s| s.parse().ok())
+                    .collect()
             }
             Some(ip) => ip.parse().map(|ip| vec![ip]).unwrap_or_default(),
         }
@@ -78,8 +96,9 @@ impl CoreDns {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kube::controllers::testutil::reconcile_once;
+    use crate::kube::controllers::testutil::{reconcile_once, reconcile_until};
     use crate::kube::controllers::EndpointsController;
+    use crate::kube::object;
     use crate::yamlkit::parse_one;
 
     fn setup_headless() -> ApiServer {
@@ -133,5 +152,46 @@ mod tests {
         let dns = CoreDns::new(ApiServer::new());
         assert!(dns.resolve("ghost").is_empty());
         assert!(dns.resolve_one("ghost.ns").is_none());
+    }
+
+    #[test]
+    fn resolution_aggregates_all_slices() {
+        // More ready pods than one shard holds: DNS answers must equal
+        // the full ready-pod IP set, exactly as the old whole-object
+        // Endpoints resolution did.
+        let api = ApiServer::new();
+        api.create(
+            parse_one(
+                "kind: Service\nmetadata:\n  name: big\nspec:\n  clusterIP: None\n  selector:\n    app: big\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let n = object::MAX_ENDPOINTS_PER_SLICE + 20;
+        let mut want: Vec<Ipv4Addr> = Vec::new();
+        for i in 0..n {
+            let ip = format!("10.244.{}.{}", i / 250, (i % 250) + 1);
+            want.push(ip.parse().unwrap());
+            api.create(
+                parse_one(&format!(
+                    "kind: Pod\nmetadata:\n  name: big-{i:03}\n  labels:\n    app: big\nspec: {{}}\nstatus:\n  phase: Running\n  podIP: {ip}\n"
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+        }
+        let c = EndpointsController;
+        reconcile_until(
+            &api,
+            &[&c],
+            |a| object::aggregate_slice_addresses(&a.list_refs("EndpointSlice")).len() == n,
+            10,
+        );
+        assert!(api.list("EndpointSlice").len() >= 2, "must actually shard");
+        let dns = CoreDns::new(api);
+        let mut got = dns.resolve("big");
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
     }
 }

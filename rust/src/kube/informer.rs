@@ -444,6 +444,18 @@ impl SharedInformer {
             .collect()
     }
 
+    /// Ready addresses of `namespace/service`, aggregated from its
+    /// cached EndpointSlice shards (by-label index lookup over
+    /// [`object::SERVICE_NAME_LABEL`], merged sorted/deduped) — the
+    /// consumer-side replacement for fetching one whole per-service
+    /// Endpoints object. The informer must watch the `EndpointSlice`
+    /// kind for this to see anything.
+    pub fn service_endpoints(&self, namespace: &str, service: &str) -> Vec<String> {
+        let params = ListParams::in_namespace(namespace)
+            .with_label(object::SERVICE_NAME_LABEL, service);
+        object::aggregate_slice_addresses(&self.select("EndpointSlice", &params))
+    }
+
     /// Cached objects referencing `owner_uid`, optionally kind-scoped —
     /// the by-owner index that replaces list-and-filter child scans.
     pub fn owned_by(&self, owner_uid: &str, kind: Option<&str>) -> Vec<Arc<Value>> {
@@ -596,6 +608,42 @@ mod tests {
         api.delete("Pod", "default", "db-0").unwrap();
         informer.sync();
         assert_eq!(queue.drain().len(), 1);
+    }
+
+    #[test]
+    fn service_endpoints_aggregates_cached_slices() {
+        let api = ApiServer::new();
+        let informer = SharedInformer::new(api.clone());
+        let svc = api
+            .create(
+                parse_one("kind: Service\nmetadata:\n  name: db\nspec:\n  clusterIP: None\n")
+                    .unwrap(),
+            )
+            .unwrap();
+        api.create(object::new_endpoint_slice(
+            &svc,
+            "db-0",
+            &["10.0.0.2".into(), "10.0.0.1".into()],
+        ))
+        .unwrap();
+        api.create(object::new_endpoint_slice(&svc, "db-1", &["10.0.0.3".into()])).unwrap();
+        // A foreign service's shard never leaks in.
+        let other = api
+            .create(
+                parse_one("kind: Service\nmetadata:\n  name: web\nspec:\n  clusterIP: None\n")
+                    .unwrap(),
+            )
+            .unwrap();
+        api.create(object::new_endpoint_slice(&other, "web-0", &["10.9.9.9".into()])).unwrap();
+        informer.sync();
+        assert_eq!(
+            informer.service_endpoints("default", "db"),
+            vec!["10.0.0.1", "10.0.0.2", "10.0.0.3"]
+        );
+        assert_eq!(informer.service_endpoints("default", "web"), vec!["10.9.9.9"]);
+        assert!(informer.service_endpoints("default", "ghost").is_empty());
+        // The by-owner index resolves the same shards for GC use.
+        assert_eq!(informer.owned_by(object::uid(&svc), Some("EndpointSlice")).len(), 2);
     }
 
     #[test]

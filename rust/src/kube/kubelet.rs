@@ -2,6 +2,7 @@
 //! (Cloud baseline) and HPK's Slurm-side executor.
 
 use super::api::ApiServer;
+use super::client::ListParams;
 use super::informer::{SharedInformer, WatchSpec, WorkQueue};
 use super::object;
 use super::store::{Subscription, WakeReason};
@@ -17,8 +18,15 @@ use std::sync::{Arc, Mutex};
 /// it immediately).
 const POD_RESYNC_MS: u64 = 500;
 
-/// Env for one container: pod spec env + downward-API-style fields.
-pub fn container_env(pod: &Value, container: &Value, net: &NetContext) -> Vec<(String, String)> {
+/// Env for one container: pod spec env + downward-API-style fields +
+/// the node's service-discovery variables (`services`, see
+/// [`service_env`]). Pod-spec keys win over injected service keys.
+pub fn container_env(
+    pod: &Value,
+    container: &Value,
+    net: &NetContext,
+    services: &[(String, String)],
+) -> Vec<(String, String)> {
     let mut env: Vec<(String, String)> = Vec::new();
     if let Some(items) = container.path("env").and_then(|e| e.as_seq()) {
         for item in items {
@@ -30,6 +38,11 @@ pub fn container_env(pod: &Value, container: &Value, net: &NetContext) -> Vec<(S
             }
         }
     }
+    for (k, v) in services {
+        if !env.iter().any(|(have, _)| have == k) {
+            env.push((k.clone(), v.clone()));
+        }
+    }
     env.push(("POD_NAME".to_string(), object::name(pod).to_string()));
     env.push((
         "POD_NAMESPACE".to_string(),
@@ -38,6 +51,45 @@ pub fn container_env(pod: &Value, container: &Value, net: &NetContext) -> Vec<(S
     env.push(("POD_IP".to_string(), net.ip.to_string()));
     env.push(("NODE_NAME".to_string(), net.node.clone()));
     env
+}
+
+/// Kubernetes-style service-discovery env: `<SVC>_SERVICE_HOST` /
+/// `<SVC>_SERVICE_PORT` for every same-namespace Service with a
+/// resolvable address. Headless services (all of HPK) expose their
+/// first ready endpoint, aggregated from the EndpointSlice shards in
+/// the informer cache; ClusterIP services expose the virtual IP. The
+/// informer must watch `Service` and `EndpointSlice`.
+pub fn service_env(informer: &SharedInformer, namespace: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for svc in informer.select("Service", &ListParams::in_namespace(namespace)) {
+        let name = object::name(&svc);
+        let host = match svc.str_at("spec.clusterIP") {
+            Some("None") | None => informer.service_endpoints(namespace, name).into_iter().next(),
+            Some(ip) => Some(ip.to_string()),
+        };
+        let Some(host) = host else {
+            continue; // no ready endpoints yet: no variable
+        };
+        let var: String = name
+            .chars()
+            .map(|c| match c {
+                'a'..='z' => c.to_ascii_uppercase(),
+                'A'..='Z' | '0'..='9' => c,
+                _ => '_',
+            })
+            .collect();
+        out.push((format!("{var}_SERVICE_HOST"), host));
+        if let Some(port) = svc
+            .path("spec.ports")
+            .and_then(|p| p.as_seq())
+            .and_then(|s| s.first())
+            .and_then(|p| p.get("port"))
+            .and_then(|v| v.coerce_string())
+        {
+            out.push((format!("{var}_SERVICE_PORT"), port));
+        }
+    }
+    out
 }
 
 /// Command + args of a container.
@@ -58,6 +110,7 @@ pub fn run_pod_containers(
     runtime: &Arc<ApptainerRuntime>,
     net: &NetContext,
     pod: &Value,
+    services: &[(String, String)],
     cancel: &CancelToken,
 ) -> Result<(), String> {
     let containers: Vec<Value> = pod
@@ -73,11 +126,12 @@ pub fn run_pod_containers(
         let rt = runtime.clone();
         let net = net.clone();
         let pod = pod.clone();
+        let services = services.to_vec();
         let cancel = cancel.clone();
         handles.push(std::thread::spawn(move || {
             let image = c.str_at("image").unwrap_or("").to_string();
             let args = container_args(&c);
-            let env = container_env(&pod, &c, &net);
+            let env = container_env(&pod, &c, &net, &services);
             // HPK default: fakeroot on, for Docker-image compatibility.
             rt.run_container(&net, &image, &args, &env, true, cancel)
         }));
@@ -101,9 +155,11 @@ pub fn run_pod_containers(
 ///
 /// Watch-driven: a private informer feeds it Pod keys; each sync pass
 /// touches only changed pods (start newly-bound ones, cancel deleted
-/// ones) instead of re-listing every pod in the cluster. The loop
-/// blocks on a Pod-kind subscription — no tick: an idle node costs
-/// zero wakeups, and shutdown wakes it via close.
+/// ones) instead of re-listing every pod in the cluster. The same
+/// informer caches Service + EndpointSlice for service-discovery env
+/// injection at pod start. The loop blocks on a kind-scoped
+/// subscription — no tick: an idle node costs zero wakeups, and
+/// shutdown wakes it via close.
 pub struct VanillaKubelet {
     api: ApiServer,
     node_name: String,
@@ -121,11 +177,17 @@ impl VanillaKubelet {
         node_name: &str,
         runtime: Arc<ApptainerRuntime>,
     ) -> Arc<VanillaKubelet> {
-        // Pod-scoped: this informer never caches or indexes other
-        // kinds, and its subscription never wakes for them either.
-        let informer = Arc::new(SharedInformer::for_kinds(api.clone(), &["Pod"]));
+        // Pods drive the loop; Service + EndpointSlice are cached for
+        // service-discovery env injection at pod start. Only Pod events
+        // wake the loop — service/slice churn is absorbed lazily at the
+        // next pod event or backstop sync, so cluster-wide slice writes
+        // don't fan wakeups across every node's kubelet.
+        let informer = Arc::new(SharedInformer::for_kinds(
+            api.clone(),
+            &["Pod", "Service", "EndpointSlice"],
+        ));
         let queue = informer.register(vec![WatchSpec::of("Pod")]);
-        let subscription = informer.subscribe();
+        let subscription = api.subscribe(Some(&["Pod"]));
         let kubelet = Arc::new(VanillaKubelet {
             api,
             node_name: node_name.to_string(),
@@ -204,6 +266,9 @@ impl VanillaKubelet {
         let api = self.api.clone();
         let runtime = self.runtime.clone();
         let node = self.node_name.clone();
+        // Service-discovery env, aggregated from the cached slices at
+        // start time (what real kubelets snapshot into the container).
+        let services = service_env(&self.informer, object::namespace(&pod));
         std::thread::Builder::new()
             .name(format!("pod-{full}"))
             .spawn(move || {
@@ -228,7 +293,7 @@ impl VanillaKubelet {
                 st.set("podIP", Value::from(net.ip.to_string()));
                 let _ = api.update_status("Pod", &ns, &name, st);
 
-                let result = run_pod_containers(&runtime, &net, &pod, &cancel);
+                let result = run_pod_containers(&runtime, &net, &pod, &services, &cancel);
                 runtime.destroy_sandbox(&net);
 
                 // The pod may have been deleted while running.
@@ -295,6 +360,51 @@ mod tests {
             Err("terminated".to_string())
         });
         (api, rt)
+    }
+
+    #[test]
+    fn service_env_from_slices_and_cluster_ip() {
+        use crate::kube::controllers::testutil::reconcile_once;
+        use crate::kube::controllers::EndpointsController;
+        let api = ApiServer::new();
+        api.create(
+            parse_one(
+                "kind: Service\nmetadata:\n  name: my-db\nspec:\n  clusterIP: None\n  selector:\n    app: db\n  ports:\n  - port: 5432\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        api.create(
+            parse_one(
+                "kind: Service\nmetadata:\n  name: web\nspec:\n  clusterIP: 10.96.0.7\n  ports:\n  - port: 80\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        api.create(
+            parse_one(
+                "kind: Pod\nmetadata:\n  name: db-0\n  labels:\n    app: db\nspec: {}\nstatus:\n  phase: Running\n  podIP: 10.244.0.5\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        reconcile_once(&api, &EndpointsController);
+        let informer = SharedInformer::for_kinds(api, &["Pod", "Service", "EndpointSlice"]);
+        informer.sync();
+        let env = service_env(&informer, "default");
+        let get = |k: &str| {
+            env.iter()
+                .find(|(name, _)| name == k)
+                .map(|(_, v)| v.as_str())
+        };
+        // Headless: first ready endpoint from the slices; name mangled
+        // to env-var form.
+        assert_eq!(get("MY_DB_SERVICE_HOST"), Some("10.244.0.5"));
+        assert_eq!(get("MY_DB_SERVICE_PORT"), Some("5432"));
+        // ClusterIP: the virtual IP.
+        assert_eq!(get("WEB_SERVICE_HOST"), Some("10.96.0.7"));
+        // Other namespaces see nothing.
+        assert!(service_env(&informer, "prod").is_empty());
     }
 
     #[test]

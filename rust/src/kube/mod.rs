@@ -16,12 +16,15 @@
 //!   the status subresource all commit through one
 //!   optimistic-concurrency path), and server-side list filtering.
 //! - [`controllers`] — the controller-manager role: Deployment,
-//!   ReplicaSet, Job, Endpoints and garbage collection, plus the
-//!   controller-runtime harness they share.
+//!   ReplicaSet, Job, EndpointSlice sharding and garbage collection,
+//!   plus the controller-runtime harness they share.
 //! - [`scheduler`] — the default kube-scheduler (used by the *vanilla*
 //!   baseline; HPK swaps in its pass-through scheduler).
 //! - [`coredns`] — name resolution for services (headless and
-//!   ClusterIP) backed by Endpoints.
+//!   ClusterIP), aggregated from EndpointSlice shards in an informer
+//!   cache (per-service endpoints are sharded at
+//!   [`object::MAX_ENDPOINTS_PER_SLICE`] so pod churn rewrites one
+//!   bounded shard, not one whole-service object).
 //! - [`kubelet`] — the kubelet interface + a vanilla node agent for the
 //!   Cloud-baseline comparison.
 //!

@@ -1,6 +1,9 @@
-//! Manifest helpers: the typed-ish view over raw [`Value`] objects.
+//! Manifest helpers: the typed-ish view over raw [`Value`] objects,
+//! including the EndpointSlice shard model (see
+//! [`MAX_ENDPOINTS_PER_SLICE`]).
 
 use crate::yamlkit::Value;
+use std::sync::Arc;
 
 /// `kind` of a manifest.
 pub fn kind(obj: &Value) -> &str {
@@ -169,6 +172,58 @@ pub fn pod_resource_totals(pod: &Value) -> (i64, i64) {
     (cpu_m, mem)
 }
 
+/// Cap on addresses per EndpointSlice shard. Service endpoints are
+/// sharded across slices so that pod churn rewrites one bounded shard
+/// instead of one whole-service object: per-write cost is O(cap), not
+/// O(service size).
+pub const MAX_ENDPOINTS_PER_SLICE: usize = 100;
+
+/// The label tying an EndpointSlice shard to its Service (mirrors
+/// upstream's `kubernetes.io/service-name`): consumers find a
+/// service's shards through the informer's by-label index.
+pub const SERVICE_NAME_LABEL: &str = "kubernetes.io/service-name";
+
+/// The addresses carried by one EndpointSlice shard (its `endpoints`
+/// sequence).
+pub fn slice_endpoints(slice: &Value) -> Vec<String> {
+    slice
+        .get("endpoints")
+        .and_then(|e| e.as_seq())
+        .map(|items| {
+            items
+                .iter()
+                .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Build one EndpointSlice shard for `svc`: owner reference for GC and
+/// the [`SERVICE_NAME_LABEL`] for index lookups, with `addrs` as the
+/// `endpoints` sequence.
+pub fn new_endpoint_slice(svc: &Value, slice_name: &str, addrs: &[String]) -> Value {
+    let mut s = new_object("EndpointSlice", namespace(svc), slice_name);
+    s.entry_map("metadata")
+        .entry_map("labels")
+        .set(SERVICE_NAME_LABEL, Value::from(name(svc)));
+    s.set(
+        "endpoints",
+        Value::Seq(addrs.iter().map(|a| Value::from(a.as_str())).collect()),
+    );
+    add_owner_ref(&mut s, "Service", name(svc), uid(svc));
+    s
+}
+
+/// Merge the shards of one service back into a flat, sorted, deduped
+/// address list — the consumer-side view (CoreDNS answers, kubelet env
+/// injection) over however many slices the controller currently keeps.
+pub fn aggregate_slice_addresses(slices: &[Arc<Value>]) -> Vec<String> {
+    let mut out: Vec<String> = slices.iter().flat_map(|s| slice_endpoints(s)).collect();
+    out.sort();
+    out.dedup();
+    out
+}
+
 /// Build a minimal object skeleton.
 pub fn new_object(kind_s: &str, namespace_s: &str, name_s: &str) -> Value {
     let mut v = Value::map();
@@ -231,6 +286,31 @@ mod tests {
         let (cpu, mem) = pod_resource_totals(&p);
         assert_eq!(cpu, 500 + 100);
         assert_eq!(mem, (1 << 30) + (128 << 20));
+    }
+
+    #[test]
+    fn endpoint_slice_roundtrip_and_aggregation() {
+        let svc = parse_one(
+            "kind: Service\nmetadata:\n  name: db\n  namespace: prod\n  uid: uid-7\nspec: {}\n",
+        )
+        .unwrap();
+        let a = new_endpoint_slice(&svc, "db-0", &["10.0.0.2".into(), "10.0.0.1".into()]);
+        let b = new_endpoint_slice(&svc, "db-1", &["10.0.0.3".into(), "10.0.0.1".into()]);
+        assert_eq!(kind(&a), "EndpointSlice");
+        assert_eq!(namespace(&a), "prod");
+        assert_eq!(
+            a.str_at(&format!("metadata.labels.{SERVICE_NAME_LABEL}")),
+            None,
+            "dotted label keys are not path-walkable"
+        );
+        assert!(labels(&a).iter().any(|(k, v)| k == SERVICE_NAME_LABEL && v == "db"));
+        assert_eq!(
+            owner_refs(&a),
+            vec![("Service".to_string(), "db".to_string(), "uid-7".to_string())]
+        );
+        assert_eq!(slice_endpoints(&a).len(), 2);
+        let merged = aggregate_slice_addresses(&[std::sync::Arc::new(a), std::sync::Arc::new(b)]);
+        assert_eq!(merged, vec!["10.0.0.1", "10.0.0.2", "10.0.0.3"]);
     }
 
     #[test]

@@ -82,13 +82,7 @@ impl Reconciler for WorkflowController {
     fn reconcile(&self, ctx: &Context) {
         let workflows = ctx.api("Workflow");
         let pod_api = ctx.api("Pod");
-        for wf_key in ctx.drain() {
-            if wf_key.kind != "Workflow" {
-                continue;
-            }
-            let Ok(wf) = workflows.get(&wf_key.namespace, &wf_key.name) else {
-                continue;
-            };
+        for (wf_key, wf) in ctx.drain_kind("Workflow") {
             let phase = wf.str_at("status.phase").unwrap_or("");
             if phase == "Succeeded" || phase == "Failed" || phase == "Error" {
                 continue;

@@ -38,13 +38,7 @@ impl Reconciler for OpenEbsController {
     fn reconcile(&self, ctx: &Context) {
         let pvcs = ctx.api("PersistentVolumeClaim");
         let pvs = ctx.api("PersistentVolume");
-        for key in ctx.drain() {
-            if key.kind != "PersistentVolumeClaim" {
-                continue;
-            }
-            let Ok(pvc) = pvcs.get(&key.namespace, &key.name) else {
-                continue;
-            };
+        for (key, pvc) in ctx.drain_kind("PersistentVolumeClaim") {
             if pvc.str_at("status.phase") == Some("Bound") {
                 continue;
             }

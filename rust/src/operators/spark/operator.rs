@@ -57,13 +57,7 @@ impl Reconciler for SparkOperator {
     fn reconcile(&self, ctx: &Context) {
         let apps = ctx.api("SparkApplication");
         let pod_api = ctx.api("Pod");
-        for key in ctx.drain() {
-            if key.kind != "SparkApplication" {
-                continue;
-            }
-            let Ok(app) = apps.get(&key.namespace, &key.name) else {
-                continue;
-            };
+        for (key, app) in ctx.drain_kind("SparkApplication") {
             let ns = &key.namespace;
             let name = &key.name;
             let state = app.str_at("status.applicationState.state").unwrap_or("");

@@ -59,13 +59,7 @@ impl Reconciler for TfJobOperator {
     fn reconcile(&self, ctx: &Context) {
         let jobs = ctx.api("TFJob");
         let pod_api = ctx.api("Pod");
-        for key in ctx.drain() {
-            if key.kind != "TFJob" {
-                continue;
-            }
-            let Ok(job) = jobs.get(&key.namespace, &key.name) else {
-                continue;
-            };
+        for (key, job) in ctx.drain_kind("TFJob") {
             let ns = &key.namespace;
             let name = &key.name;
             let state = job.str_at("status.state").unwrap_or("");

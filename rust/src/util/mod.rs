@@ -1,7 +1,8 @@
 //! Small shared utilities: deterministic RNG, ID generation, quantity
-//! parsing, and wall-clock helpers.
+//! parsing, shell word splitting, and wall-clock helpers.
 
 pub mod rng;
+pub mod shlex;
 mod quantity;
 
 pub use quantity::{parse_cpu_millis, parse_memory_bytes, format_memory};

@@ -1,0 +1,121 @@
+//! Minimal POSIX-ish shell word splitting.
+//!
+//! The sbatch scripts hpk-kubelet emits quote tokens the way
+//! `crate::hpk::translate`'s `sh_quote` does (double quotes, backslash
+//! escapes for `\` and `"`); [`split`] inverts that, plus single quotes
+//! and bare backslash escapes for user-authored annotation flags. The
+//! crate deliberately has no dependencies, so this stands in for the
+//! `shlex` crate's `split`.
+
+/// Split a command line into words. `None` on unterminated quoting or
+/// a trailing backslash.
+pub fn split(line: &str) -> Option<Vec<String>> {
+    let mut words = Vec::new();
+    let mut cur = String::new();
+    let mut in_word = false;
+    let mut chars = line.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            c if c.is_whitespace() => {
+                if in_word {
+                    words.push(std::mem::take(&mut cur));
+                    in_word = false;
+                }
+            }
+            '"' => {
+                in_word = true;
+                loop {
+                    match chars.next()? {
+                        '"' => break,
+                        '\\' => {
+                            let e = chars.next()?;
+                            // Only `\"`, `\\`, `\$`, `` \` `` are escapes
+                            // inside double quotes; anything else keeps
+                            // its backslash (sh semantics).
+                            if !matches!(e, '"' | '\\' | '$' | '`') {
+                                cur.push('\\');
+                            }
+                            cur.push(e);
+                        }
+                        other => cur.push(other),
+                    }
+                }
+            }
+            '\'' => {
+                in_word = true;
+                loop {
+                    match chars.next()? {
+                        '\'' => break,
+                        other => cur.push(other),
+                    }
+                }
+            }
+            '\\' => {
+                in_word = true;
+                cur.push(chars.next()?);
+            }
+            other => {
+                in_word = true;
+                cur.push(other);
+            }
+        }
+    }
+    if in_word {
+        words.push(cur);
+    }
+    Some(words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_words() {
+        assert_eq!(
+            split("apptainer exec img arg1  arg2").unwrap(),
+            vec!["apptainer", "exec", "img", "arg1", "arg2"]
+        );
+        assert_eq!(split("").unwrap(), Vec::<String>::new());
+        assert_eq!(split("   ").unwrap(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn double_quotes_and_escapes() {
+        assert_eq!(split(r#"--env "K=a b""#).unwrap(), vec!["--env", "K=a b"]);
+        assert_eq!(split(r#""a\"b""#).unwrap(), vec![r#"a"b"#]);
+        assert_eq!(split(r#""a\\b""#).unwrap(), vec![r"a\b"]);
+        assert_eq!(split(r#""a\xb""#).unwrap(), vec![r"a\xb"]);
+        // Quotes join with adjacent word characters.
+        assert_eq!(split(r#"pre"fix x"post"#).unwrap(), vec!["prefix xpost"]);
+        // An empty quoted token survives as a word.
+        assert_eq!(split(r#"a "" b"#).unwrap(), vec!["a", "", "b"]);
+    }
+
+    #[test]
+    fn single_quotes_are_literal() {
+        assert_eq!(split(r"'a \ b'").unwrap(), vec![r"a \ b"]);
+    }
+
+    #[test]
+    fn bare_backslash_escapes_next() {
+        assert_eq!(split(r"a\ b").unwrap(), vec!["a b"]);
+    }
+
+    #[test]
+    fn unterminated_is_none() {
+        assert!(split(r#""open"#).is_none());
+        assert!(split("'open").is_none());
+        assert!(split("trailing\\").is_none());
+    }
+
+    #[test]
+    fn roundtrips_translate_quoting() {
+        // What translate::sh_quote produces for awkward tokens.
+        let quoted = r#""with space" "a\"q" "pa$th" plain"#;
+        assert_eq!(
+            split(quoted).unwrap(),
+            vec!["with space", "a\"q", "pa$th", "plain"]
+        );
+    }
+}
