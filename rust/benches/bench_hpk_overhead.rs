@@ -379,6 +379,82 @@ fn main() {
     results.push(("e53d_slice_bytes_written", slice_bytes as f64));
     results.push(("e53d_whole_object_bytes", whole_bytes as f64));
 
+    // ---- 3e. kubelet wakeups: Slurm event bus vs the retired 2 ms poll ----
+    // The job-event-bus claim: the kubelet's merged subscription (Pod
+    // events + Slurm job transitions on one handle) wakes only when
+    // either side changes. While a long job runs under an otherwise
+    // idle control plane there are *zero* wakeups — the retired
+    // ACTIVE_POLL_MS loop woke every 2 ms whenever any binding was
+    // active, i.e. for the job's entire lifetime.
+    println!("# E5.3e: hpk-kubelet wakeups, Slurm event bus vs retired 2 ms active poll");
+    let tb = testbed::deploy(2, 8);
+    tb.cp
+        .kubectl_apply(
+            "kind: Pod\nmetadata:\n  name: holder\nspec:\n  containers:\n  - name: main\n    image: pause:3.9\n",
+        )
+        .unwrap();
+    assert!(tb.cp.wait_until(30_000, |api| {
+        api.get("Pod", "default", "holder")
+            .map(|p| {
+                object::pod_phase(&p) == "Running"
+                    && p.str_at("status.podIP").is_some()
+            })
+            .unwrap_or(false)
+    }));
+    // Let the post-publish edges settle (the kubelet's own status
+    // writes wake it once more), then measure a quiet window.
+    let mut w0 = tb.cp.kubelet.wakeup_count();
+    let mut settle_rounds = 0;
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        let w = tb.cp.kubelet.wakeup_count();
+        if w == w0 {
+            break;
+        }
+        w0 = w;
+        settle_rounds += 1;
+        assert!(settle_rounds < 50, "kubelet never went quiet");
+    }
+    let idle_ms: u64 = if smoke { 150 } else { 400 };
+    std::thread::sleep(Duration::from_millis(idle_ms));
+    let idle_wakeups = tb.cp.kubelet.wakeup_count() - w0;
+    assert_eq!(
+        idle_wakeups, 0,
+        "active binding + idle cluster must cost zero kubelet wakeups"
+    );
+    let poll_baseline = idle_ms / 2; // the retired 2 ms cadence
+    println!(
+        "idle {idle_ms} ms with an active binding: {idle_wakeups} wakeups (retired 2 ms poll: {poll_baseline})"
+    );
+    // Wakeups per completed job: the full submit -> Running ->
+    // Succeeded pipeline, every edge push-delivered.
+    let jobs = if smoke { 6 } else { 20 };
+    let w0 = tb.cp.kubelet.wakeup_count();
+    for i in 0..jobs {
+        let name = format!("e53e-{i}");
+        tb.cp
+            .kubectl_apply(&format!(
+                "kind: Pod\nmetadata:\n  name: {name}\nspec:\n  containers:\n  - name: main\n    image: busybox:latest\n    command: [\"true\"]\n"
+            ))
+            .unwrap();
+        assert!(tb.cp.wait_until(30_000, |api| {
+            api.get("Pod", "default", &name)
+                .map(|p| object::pod_phase(&p) == "Succeeded")
+                .unwrap_or(false)
+        }));
+    }
+    let per_job = (tb.cp.kubelet.wakeup_count() - w0) as f64 / jobs as f64;
+    println!(
+        "{jobs} quick pods end to end: {per_job:.1} wakeups/job (the poll was unbounded: 500/s while any binding was active)\n"
+    );
+    results.push(("e53e_idle_wakeups", idle_wakeups as f64));
+    results.push(("e53e_idle_window_ms", idle_ms as f64));
+    results.push(("e53e_poll_baseline_wakeups", poll_baseline as f64));
+    results.push(("e53e_wakeups_per_job", per_job));
+    tb.cp.api.delete("Pod", "default", "holder").unwrap();
+    tb.cp.wait_until(10_000, |_| tb.cp.slurm.squeue().is_empty());
+    tb.shutdown();
+
     // ---- 4. scheduler throughput (pass-through + kubelet + slurm) ----
     let burst = if smoke { 24 } else { 120 };
     println!("# E5.4: pod throughput, {burst} short pods on 4x8 cpus");

@@ -153,7 +153,9 @@ impl ControlPlane {
     }
 
     /// Wait until a pod reaches `phase` (real-ms timeout). Returns the
-    /// final pod object on success.
+    /// final pod object on success. Push-driven: parks on a Pod
+    /// subscription, so the check re-runs only when a pod actually
+    /// changes.
     pub fn wait_for_phase(
         &self,
         namespace: &str,
@@ -161,36 +163,32 @@ impl ControlPlane {
         phase: &str,
         timeout_ms: u64,
     ) -> Option<Value> {
-        let t0 = std::time::Instant::now();
-        loop {
-            if let Ok(p) = self.api.get("Pod", namespace, name) {
-                if crate::kube::object::pod_phase(&p) == phase {
-                    return Some(p);
+        let sub = self.api.subscribe(Some(&["Pod"]));
+        let mut found = None;
+        crate::util::sub::wait_for(&sub, timeout_ms, timeout_ms, || {
+            match self.api.get("Pod", namespace, name) {
+                Ok(p) if crate::kube::object::pod_phase(&p) == phase => {
+                    found = Some(p);
+                    true
                 }
+                _ => false,
             }
-            if t0.elapsed().as_millis() as u64 > timeout_ms {
-                return None;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        });
+        found
     }
 
-    /// Block until `cond(api)` holds.
+    /// Block until `cond(api)` holds. Rides both event buses (every
+    /// store kind plus Slurm job transitions wake the re-check), with a
+    /// coarse backstop for conditions over non-bus state (DNS caches,
+    /// fabric bindings).
     pub fn wait_until(
         &self,
         timeout_ms: u64,
         mut cond: impl FnMut(&ApiServer) -> bool,
     ) -> bool {
-        let t0 = std::time::Instant::now();
-        loop {
-            if cond(&self.api) {
-                return true;
-            }
-            if t0.elapsed().as_millis() as u64 > timeout_ms {
-                return false;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        let sub = self.api.subscribe(None);
+        self.slurm.attach(&sub);
+        crate::util::sub::wait_for(&sub, timeout_ms, 50, || cond(&self.api))
     }
 
     /// Orderly teardown of all loops.

@@ -99,12 +99,16 @@ impl JobExecutor for ApptainerExecutor {
             .ok_or("empty allocation")?;
         let net = self.runtime.create_sandbox(&first_node)?;
 
-        // IP handshake: hpk-kubelet polls this file to publish podIP.
+        // IP handshake: hpk-kubelet publishes podIP from this file. The
+        // write is no state transition, so wake bus subscribers
+        // explicitly — the kubelet re-reads on the next event instead
+        // of polling the filesystem.
         if let Some(dir) = &pod_dir {
             self.runtime
                 .fs
                 .write_str(&format!("{dir}/ip"), &net.ip.to_string())
                 .map_err(|e| e.to_string())?;
+            ctx.progress.notify();
         }
 
         let ntasks = ctx.spec.ntasks.max(1);

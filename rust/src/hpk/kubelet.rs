@@ -6,6 +6,13 @@
 //! status in sync with the Slurm job state: "enqueued jobs are marked as
 //! 'pending' pods in Kubernetes, 'running' when started, or 'failed' if
 //! they produce errors" (SS3). Deleting a pod cancels its job.
+//!
+//! The sync loop blocks on *one* subscription registered with both
+//! event buses — Pod events from the kube store and job transitions
+//! from the Slurm bus wake the same condvar (a merged two-source
+//! wait). There is no active-bindings poll: a kubelet with a
+//! long-running job parked under it costs zero wakeups until either
+//! side actually changes.
 
 use super::translate;
 use crate::kube::api::ApiServer;
@@ -16,21 +23,16 @@ use crate::slurm::{JobId, JobState, Slurmctld};
 use crate::virtfs::VirtFs;
 use crate::yamlkit::Value;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// The name of the single virtual node.
 pub const VIRTUAL_NODE: &str = "hpk-kubelet";
 
-/// How long the sync loop parks on its Pod subscription while no Slurm
-/// jobs are in flight (pod events wake it immediately; this is only the
-/// missed-edge backstop).
-const IDLE_RESYNC_MS: u64 = 500;
-
-/// Poll cadence while bindings are active: Slurm job state changes
-/// outside the Kubernetes store, so the kubelet must look at squeue —
-/// but only while it actually has jobs to mirror.
-const ACTIVE_POLL_MS: u64 = 2;
+/// How long the sync loop parks on its merged subscription between
+/// events. Both buses wake it immediately; this is only the
+/// level-triggered missed-edge backstop.
+const RESYNC_BACKSTOP_MS: u64 = 500;
 
 struct PodBinding {
     job_id: JobId,
@@ -41,14 +43,13 @@ struct PodBinding {
 
 /// The kubelet; cheap to clone (shared state inside).
 ///
-/// Watch-driven on the Kubernetes side: a private informer feeds Pod
-/// keys to the submit path, so translate+sbatch work scales with pod
-/// churn, and the sync loop blocks on a kind-scoped subscription while
-/// idle (zero wakeups with no jobs in flight). The same informer
-/// caches Service + EndpointSlice so translation can inject
-/// service-discovery env. The Slurm side still walks active bindings
-/// (that set is the kubelet's own working set, not the cluster object
-/// count), polled only while non-empty.
+/// Watch-driven on both sides: a private informer feeds Pod keys to
+/// the submit path, so translate+sbatch work scales with pod churn,
+/// and the sync loop blocks on one subscription woken by Pod events
+/// *and* Slurm job events (the per-binding sweep walks the kubelet's
+/// own working set, not the cluster object count, and only runs when
+/// something actually changed). The same informer caches Service +
+/// EndpointSlice so translation can inject service-discovery env.
 #[derive(Clone)]
 pub struct HpkKubelet {
     api: ApiServer,
@@ -59,6 +60,8 @@ pub struct HpkKubelet {
     shutdown: Arc<AtomicBool>,
     /// Pods translated since boot (metrics).
     translated: Arc<Mutex<u64>>,
+    /// scancels issued for deleted pods (metrics + race regression).
+    scancels: Arc<AtomicU64>,
     informer: Arc<SharedInformer>,
     queue: WorkQueue,
     subscription: Subscription,
@@ -85,7 +88,11 @@ impl HpkKubelet {
             &["Pod", "Service", "EndpointSlice"],
         ));
         let queue = informer.register(vec![WatchSpec::of("Pod")]);
+        // One handle, two publishers: Pod events from the store and
+        // job transitions (incl. executor progress notifications, e.g.
+        // the IP handshake) from the Slurm bus wake the same condvar.
         let subscription = api.subscribe(Some(&["Pod"]));
+        slurm.attach(&subscription);
         let kubelet = HpkKubelet {
             api,
             slurm,
@@ -93,6 +100,7 @@ impl HpkKubelet {
             bindings: Arc::new(Mutex::new(HashMap::new())),
             shutdown: Arc::new(AtomicBool::new(false)),
             translated: Arc::new(Mutex::new(0)),
+            scancels: Arc::new(AtomicU64::new(0)),
             informer,
             queue,
             subscription,
@@ -103,19 +111,18 @@ impl HpkKubelet {
             .spawn(move || {
                 while !k.shutdown.load(Ordering::SeqCst) {
                     k.sync_once();
-                    // Push-driven on the Kubernetes side. While Slurm
-                    // jobs are in flight their state changes outside
-                    // the store, so fall back to a short poll until the
-                    // bindings drain; idle, block until a pod event (or
-                    // the shutdown close) arrives.
-                    let timeout = if k.bindings.lock().unwrap().is_empty() {
-                        IDLE_RESYNC_MS
-                    } else {
-                        ACTIVE_POLL_MS
-                    };
-                    if k.subscription.wait(std::time::Duration::from_millis(timeout))
-                        == WakeReason::Closed
-                    {
+                    // Push-driven end to end: block until either bus
+                    // has news (or the shutdown close lands). The
+                    // timeout is only the missed-edge backstop — an
+                    // idle kubelet performs zero wakeups whether or
+                    // not bindings are in flight.
+                    let timeout = std::time::Duration::from_millis(RESYNC_BACKSTOP_MS);
+                    if k.subscription.wait(timeout) == WakeReason::Closed {
+                        // Either bus closed (kubelet or Slurm shutdown):
+                        // one final drain so work that raced the close —
+                        // e.g. a pod deletion still needing its scancel —
+                        // is processed before the loop exits.
+                        k.sync_once();
                         break;
                     }
                 }
@@ -133,6 +140,17 @@ impl HpkKubelet {
     /// Pods translated to Slurm scripts since boot.
     pub fn translated_count(&self) -> u64 {
         *self.translated.lock().unwrap()
+    }
+
+    /// scancels issued for deleted pods since boot.
+    pub fn scancel_count(&self) -> u64 {
+        self.scancels.load(Ordering::SeqCst)
+    }
+
+    /// Wakeups delivered to the sync loop's merged subscription — the
+    /// observability hook behind the E5.3e zero-idle-wakeup bench.
+    pub fn wakeup_count(&self) -> u64 {
+        self.subscription.notify_count()
     }
 
     /// One reconcile pass (public for deterministic tests/benches).
@@ -174,11 +192,19 @@ impl HpkKubelet {
             match (pod, job) {
                 (None, Some(info)) => {
                     // Pod deleted by the user -> cancel the Slurm job.
-                    if !info.state.is_terminal() {
-                        self.slurm.cancel(job_id);
+                    // Claim the binding *first*: exactly one pass wins
+                    // the removal, so the scancel below runs exactly
+                    // once even when concurrent sync passes race or the
+                    // job is mid-transition (Pending->Running) — the
+                    // controller resolves whatever state the job is in
+                    // by the time the cancel lands.
+                    if self.bindings.lock().unwrap().remove(&full).is_none() {
+                        continue; // another pass already claimed it
+                    }
+                    if !info.state.is_terminal() && self.slurm.cancel(job_id) {
+                        self.scancels.fetch_add(1, Ordering::SeqCst);
                     }
                     self.fs.remove_tree(&translate::pod_dir(ns, name));
-                    self.bindings.lock().unwrap().remove(&full);
                 }
                 (Some(_pod), Some(info)) => {
                     self.sync_pod_status(&full, ns, name, &info.state);
@@ -608,6 +634,103 @@ mod tests {
             .unwrap();
         assert!(script.contains("--env DB_SERVICE_HOST=10.244.9.9"), "{script}");
         assert!(script.contains("--env DB_SERVICE_PORT=5432"), "{script}");
+    }
+
+    #[test]
+    fn deleted_pod_scancels_exactly_once_under_racing_syncs() {
+        let w = world();
+        w.api
+            .create(
+                parse_one(
+                    "kind: Pod\nmetadata:\n  name: racy\nspec:\n  containers:\n  - name: main\n    image: server:1\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        reconcile_once(&w.api, &PassThroughScheduler);
+        assert!(wait_phase(&w.api, "default", "racy", "Running", 5000));
+        w.api.delete("Pod", "default", "racy").unwrap();
+        // Race several explicit sync passes against the push-woken
+        // background loop: the binding claim must let exactly one of
+        // them issue the scancel.
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let k = w.kubelet.clone();
+            handles.push(std::thread::spawn(move || k.sync_once()));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        while !w.slurm.squeue().is_empty() {
+            assert!(t0.elapsed().as_secs() < 10, "job not cancelled");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(w.kubelet.scancel_count(), 1);
+        w.kubelet.shutdown();
+        w.slurm.shutdown();
+    }
+
+    #[test]
+    fn pod_deleted_while_job_pending_is_cancelled_exactly_once() {
+        // A scheduler that effectively never passes: the submitted job
+        // stays Pending, so the deletion lands strictly mid-transition
+        // (between sbatch and the job ever starting).
+        let cluster = Cluster::new(ClusterSpec::uniform(1, 4, 16));
+        let fs = VirtFs::new();
+        let runtime = Arc::new(ApptainerRuntime::new(
+            fs.clone(),
+            cluster.clock.clone(),
+            true,
+        ));
+        runtime
+            .registry
+            .register(ImageSpec::new("quick:1", "quick").with_size(1 << 20));
+        runtime.table.register("quick", |_| Ok(0));
+        let slurm = Slurmctld::start(
+            cluster,
+            Arc::new(ApptainerExecutor::new(runtime)),
+            SlurmConfig { sched_interval_ms: 3_600_000, ..SlurmConfig::default() },
+        );
+        // Wait out the startup pass (over an empty queue): only then is
+        // the scheduler guaranteed asleep, so the job submitted below
+        // stays Pending instead of racing into execution.
+        let t0 = std::time::Instant::now();
+        while slurm.sched_passes() == 0 {
+            assert!(t0.elapsed().as_secs() < 5, "startup pass never ran");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let api = ApiServer::new();
+        let kubelet = HpkKubelet::start(api.clone(), slurm.clone(), fs);
+        api.create(quick_pod("doomed")).unwrap();
+        reconcile_once(&api, &PassThroughScheduler);
+        let t0 = std::time::Instant::now();
+        while slurm.squeue().is_empty() {
+            assert!(t0.elapsed().as_secs() < 5, "job never submitted");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let job_id = slurm.squeue()[0].job_id;
+        assert!(matches!(
+            slurm.job_info(job_id).unwrap().state,
+            JobState::Pending(_)
+        ));
+        api.delete("Pod", "default", "doomed").unwrap();
+        let t0 = std::time::Instant::now();
+        while slurm.job_info(job_id).unwrap().state != JobState::Cancelled {
+            assert!(t0.elapsed().as_secs() < 5, "pending job not cancelled");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // Extra racing passes must not cancel again.
+        for _ in 0..4 {
+            kubelet.sync_once();
+        }
+        assert_eq!(kubelet.scancel_count(), 1);
+        assert!(slurm
+            .sacct()
+            .iter()
+            .any(|r| r.job_id == job_id && r.state == JobState::Cancelled));
+        kubelet.shutdown();
+        slurm.shutdown();
     }
 
     #[test]

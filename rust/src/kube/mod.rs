@@ -68,6 +68,13 @@
 //! per manager and hands each reconciler a [`controllers::Context`]
 //! (client + informer + its own work queue) plus its own subscription
 //! to block on.
+//!
+//! The subscription machinery is the shared [`crate::util::sub`]
+//! primitive; [`crate::slurm::Slurmctld`]'s job-event bus publishes
+//! through the same implementation, and hpk-kubelet registers one
+//! handle with both buses (a store [`store::Store::subscribe`] handle
+//! passed to [`crate::slurm::Slurmctld::attach`]) — the merged wait
+//! that replaced its 2 ms Slurm poll.
 
 pub mod api;
 pub mod client;

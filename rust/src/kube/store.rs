@@ -12,12 +12,20 @@
 //! polling: the store wakes exactly the subscribers whose kinds an event
 //! touches, and [`Subscription::close`] wakes blocked waiters for
 //! shutdown (no tick, no cross-kind fanout).
+//!
+//! The subscription machinery itself ([`Subscription`], [`WakeReason`],
+//! [`crate::util::SubscriberHub`]) is the shared [`crate::util::sub`]
+//! primitive — the Slurm job-event bus ([`crate::slurm::Slurmctld`])
+//! publishes through the same implementation, which is what lets
+//! hpk-kubelet attach one handle to both buses (a merged two-source
+//! wait) instead of polling Slurm while bindings are active.
 
+use crate::util::SubscriberHub;
 use crate::yamlkit::Value;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+
+pub use crate::util::sub::{Subscription, WakeReason};
 
 /// Watch event types.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,122 +75,6 @@ impl KindLog {
     }
 }
 
-/// Why a blocked [`Subscription::wait`] returned.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum WakeReason {
-    /// An event for a subscribed kind landed since the last wait.
-    Notified,
-    /// The subscription was closed (shutdown): do a final drain, then
-    /// stop waiting.
-    Closed,
-    /// The timeout elapsed with no event (the level-triggered resync
-    /// hook).
-    TimedOut,
-}
-
-struct SubState {
-    signaled: bool,
-    closed: bool,
-}
-
-struct SubShared {
-    state: Mutex<SubState>,
-    cond: Condvar,
-    /// `None` = all kinds.
-    kinds: Option<std::collections::BTreeSet<String>>,
-    /// Wakeup signals delivered (coalesced edges, not raw events).
-    notifications: AtomicU64,
-}
-
-impl SubShared {
-    fn wants(&self, kind: &str) -> bool {
-        match &self.kinds {
-            None => true,
-            Some(ks) => ks.contains(kind),
-        }
-    }
-
-    fn notify(&self) {
-        let mut state = self.state.lock().unwrap();
-        if !state.signaled && !state.closed {
-            state.signaled = true;
-            self.notifications.fetch_add(1, Ordering::Relaxed);
-            self.cond.notify_all();
-        }
-    }
-}
-
-/// A push-notification handle for a set of kinds: the replacement for
-/// the 2 ms informer poll tick. Consumers loop `sync -> wait`; the store
-/// sets the (coalescing) signal when an event for a subscribed kind
-/// lands, so a waiter wakes only for work it actually has. Cheap to
-/// clone (shared state): one clone blocks in the run loop while another
-/// calls [`Subscription::close`] from the shutdown path.
-#[derive(Clone)]
-pub struct Subscription {
-    shared: Arc<SubShared>,
-}
-
-impl Subscription {
-    fn new(kinds: Option<&[&str]>) -> Subscription {
-        Subscription {
-            shared: Arc::new(SubShared {
-                // Born signaled: the first wait returns immediately, so
-                // subscribers always process state that predates the
-                // subscription before blocking.
-                state: Mutex::new(SubState { signaled: true, closed: false }),
-                cond: Condvar::new(),
-                kinds: kinds.map(|ks| ks.iter().map(|k| k.to_string()).collect()),
-                notifications: AtomicU64::new(0),
-            }),
-        }
-    }
-
-    /// Block until an event for a subscribed kind lands, the
-    /// subscription is closed, or `timeout` elapses. A pending signal is
-    /// consumed immediately (events are never lost to the gap between a
-    /// drain and the next wait). Close dominates: once closed, every
-    /// wait returns [`WakeReason::Closed`] — callers do one final drain
-    /// on that reason, so nothing that raced the close is dropped.
-    pub fn wait(&self, timeout: Duration) -> WakeReason {
-        let deadline = Instant::now() + timeout;
-        let mut state = self.shared.state.lock().unwrap();
-        loop {
-            if state.closed {
-                return WakeReason::Closed;
-            }
-            if state.signaled {
-                state.signaled = false;
-                return WakeReason::Notified;
-            }
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                return WakeReason::TimedOut;
-            }
-            state = self.shared.cond.wait_timeout(state, remaining).unwrap().0;
-        }
-    }
-
-    /// Permanently close the subscription and wake any blocked waiter —
-    /// the explicit shutdown edge that replaces "the loop notices a
-    /// stop flag within one tick".
-    pub fn close(&self) {
-        let mut state = self.shared.state.lock().unwrap();
-        state.closed = true;
-        self.shared.cond.notify_all();
-    }
-
-    pub fn is_closed(&self) -> bool {
-        self.shared.state.lock().unwrap().closed
-    }
-
-    /// Wakeup signals delivered so far — the observability hook behind
-    /// the E5.3c "cold kinds never wake" bench.
-    pub fn notify_count(&self) -> u64 {
-        self.shared.notifications.load(Ordering::Relaxed)
-    }
-}
-
 #[derive(Default)]
 struct Inner {
     /// kind -> namespace/name -> object.
@@ -190,13 +82,12 @@ struct Inner {
     revision: u64,
     /// kind -> that kind's event log shard.
     logs: BTreeMap<String, KindLog>,
-    subscribers: Vec<Weak<SubShared>>,
 }
 
 impl Inner {
     /// Append an event to its kind's shard and wake exactly the
     /// subscribers watching that kind.
-    fn publish(&mut self, event: StoreEvent) {
+    fn publish(&mut self, hub: &SubscriberHub, event: StoreEvent) {
         let kind = event.kind.clone();
         let shard = self.logs.entry(kind.clone()).or_default();
         shard.watermark = event.revision;
@@ -206,15 +97,7 @@ impl Inner {
                 shard.compacted_through = dropped.revision;
             }
         }
-        self.subscribers.retain(|weak| match weak.upgrade() {
-            Some(sub) => {
-                if sub.wants(&kind) {
-                    sub.notify();
-                }
-                true
-            }
-            None => false,
-        });
+        hub.notify(&kind);
     }
 }
 
@@ -222,6 +105,8 @@ impl Inner {
 #[derive(Clone, Default)]
 pub struct Store {
     inner: Arc<Mutex<Inner>>,
+    /// Kind-topic subscriber registry (shared bus primitive).
+    hub: SubscriberHub,
 }
 
 fn nskey(namespace: &str, name: &str) -> String {
@@ -237,23 +122,18 @@ impl Store {
     /// kind). The subscription is born signaled; see
     /// [`Subscription::wait`].
     pub fn subscribe(&self, kinds: Option<&[&str]>) -> Subscription {
-        let sub = Subscription::new(kinds);
-        self.inner
-            .lock()
-            .unwrap()
-            .subscribers
-            .push(Arc::downgrade(&sub.shared));
-        sub
+        self.hub.subscribe(kinds)
     }
 
     /// Insert or replace; returns the new revision.
     pub fn put(&self, kind: &str, namespace: &str, name: &str, obj: Value) -> u64 {
         let mut inner = self.inner.lock().unwrap();
-        Self::put_locked(&mut inner, kind, namespace, name, obj)
+        Self::put_locked(&mut inner, &self.hub, kind, namespace, name, obj)
     }
 
     fn put_locked(
         inner: &mut Inner,
+        hub: &SubscriberHub,
         kind: &str,
         namespace: &str,
         name: &str,
@@ -271,14 +151,15 @@ impl Store {
             .insert(nskey(namespace, name), arc.clone())
             .is_some();
         let event_type = if existed { EventType::Modified } else { EventType::Added };
-        inner.publish(StoreEvent {
+        let event = StoreEvent {
             revision: rev,
             event_type,
             kind: kind.to_string(),
             namespace: namespace.to_string(),
             name: name.to_string(),
             object: arc,
-        });
+        };
+        inner.publish(hub, event);
         rev
     }
 
@@ -305,7 +186,7 @@ impl Store {
         if current_rv != expected {
             return Err(current_rv);
         }
-        Ok(Self::put_locked(&mut inner, kind, namespace, name, obj))
+        Ok(Self::put_locked(&mut inner, &self.hub, kind, namespace, name, obj))
     }
 
     /// Fetch one object.
@@ -320,14 +201,15 @@ impl Store {
         let removed = inner.objects.get_mut(kind)?.remove(&nskey(namespace, name))?;
         inner.revision += 1;
         let rev = inner.revision;
-        inner.publish(StoreEvent {
+        let event = StoreEvent {
             revision: rev,
             event_type: EventType::Deleted,
             kind: kind.to_string(),
             namespace: namespace.to_string(),
             name: name.to_string(),
             object: removed.clone(),
-        });
+        };
+        inner.publish(&self.hub, event);
         Some(removed)
     }
 
@@ -471,6 +353,7 @@ impl Store {
 mod tests {
     use super::*;
     use crate::yamlkit::parse_one;
+    use std::time::{Duration, Instant};
 
     fn obj(name: &str) -> Value {
         parse_one(&format!("metadata:\n  name: {name}\n")).unwrap()

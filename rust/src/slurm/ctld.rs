@@ -1,13 +1,24 @@
 //! The Slurm controller daemon (`slurmctld`): queue, lifecycle,
-//! scheduling loop, accounting.
+//! scheduling loop, accounting, and the job-event bus.
+//!
+//! Every state change a job undergoes is published as a [`JobEvent`]
+//! on an append-only, capped log mirroring the kube store's design:
+//! consumers hold a `seq` resume token ([`Slurmctld::events_since`]),
+//! re-list via `squeue`/`sacct` when compaction outruns them, and park
+//! on condvar-backed [`Subscription`]s ([`Slurmctld::subscribe`])
+//! instead of polling `squeue`. This is what lets hpk-kubelet retire
+//! its 2 ms active-bindings poll: the HPC scheduler *surfaces* state
+//! transitions as events rather than being asked for them.
 
 use super::sched;
 use super::types::*;
 use crate::hpcsim::Cluster;
-use std::collections::HashMap;
+use crate::util::{SubscriberHub, Subscription, WakeReason};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 /// Controller tuning knobs.
 #[derive(Debug, Clone)]
@@ -41,6 +52,11 @@ struct JobRecord {
     time_limit_ms: u64,
 }
 
+/// Bounded job-event log length; consumers lagging further behind
+/// re-list (`squeue` for live jobs, `sacct` for terminal ones) and
+/// resume from the current watermark.
+pub const JOB_EVENT_LOG_CAP: usize = 4096;
+
 #[derive(Default)]
 struct Inner {
     jobs: HashMap<JobId, JobRecord>,
@@ -50,6 +66,12 @@ struct Inner {
     acct: Vec<AcctRecord>,
     /// Scheduler-pass counter (perf introspection).
     passes: u64,
+    /// The job-event bus: append-only transition log (capped).
+    events: VecDeque<JobEvent>,
+    /// Highest seq ever issued (survives compaction).
+    seq: u64,
+    /// Seq of the newest event dropped by compaction (0 = none yet).
+    compacted_through: u64,
 }
 
 /// Handle to the controller; cheap to clone.
@@ -60,6 +82,8 @@ pub struct Slurmctld {
     executor: Arc<dyn JobExecutor>,
     config: SlurmConfig,
     shutdown: Arc<AtomicBool>,
+    /// Job-event subscribers (topic = decimal job id).
+    hub: SubscriberHub,
 }
 
 impl Slurmctld {
@@ -78,6 +102,7 @@ impl Slurmctld {
             executor,
             config,
             shutdown: Arc::new(AtomicBool::new(false)),
+            hub: SubscriberHub::new(),
         };
         let loop_handle = ctld.clone();
         thread::Builder::new()
@@ -105,11 +130,12 @@ impl Slurmctld {
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
+        let pending = JobState::Pending("Priority".to_string());
         inner.jobs.insert(
             id,
             JobRecord {
                 spec,
-                state: JobState::Pending("Priority".to_string()),
+                state: pending.clone(),
                 submit_ms: self.cluster.clock.now_ms(),
                 start_ms: None,
                 end_ms: None,
@@ -119,6 +145,7 @@ impl Slurmctld {
             },
         );
         inner.queue.push(id);
+        self.publish_event(&mut inner, id, None, pending);
         Ok(id)
     }
 
@@ -137,12 +164,13 @@ impl Slurmctld {
         };
         match rec.state {
             JobState::Pending(_) => {
-                rec.state = JobState::Cancelled;
+                let from = std::mem::replace(&mut rec.state, JobState::Cancelled);
                 rec.end_ms = Some(now);
                 rec.cancel.cancel();
                 let acct = Self::acct_record(id, rec);
                 inner.acct.push(acct);
                 inner.queue.retain(|q| *q != id);
+                self.publish_event(&mut inner, id, Some(from), JobState::Cancelled);
                 true
             }
             JobState::Running => {
@@ -150,11 +178,12 @@ impl Slurmctld {
                 // reap it as Cancelled when the executor returns, or
                 // forcefully after the grace period.
                 rec.cancel.cancel();
-                rec.state = JobState::Cancelled;
+                let from = std::mem::replace(&mut rec.state, JobState::Cancelled);
                 rec.end_ms = Some(now);
                 let acct = Self::acct_record(id, rec);
                 let alloc = std::mem::take(&mut rec.allocation);
                 inner.acct.push(acct);
+                self.publish_event(&mut inner, id, Some(from), JobState::Cancelled);
                 drop(inner);
                 self.release_nodes(id, &alloc);
                 true
@@ -233,24 +262,118 @@ impl Slurmctld {
         self.inner.lock().unwrap().passes
     }
 
+    // ---- job-event bus --------------------------------------------------
+
+    /// Subscribe to the job-event bus (every job). Born signaled,
+    /// coalescing, woken on shutdown — see [`Subscription::wait`].
+    pub fn subscribe(&self) -> Subscription {
+        self.hub.subscribe(None)
+    }
+
+    /// Subscribe to one job's events only (used by
+    /// [`Slurmctld::wait_terminal`]; other jobs' churn never wakes it).
+    pub fn subscribe_job(&self, id: JobId) -> Subscription {
+        let topic = id.to_string();
+        self.hub.subscribe(Some(&[topic.as_str()]))
+    }
+
+    /// Register an existing subscription so job events wake it too —
+    /// the merged two-source wait hpk-kubelet blocks on (one handle,
+    /// woken by Pod events from the kube store *and* by this bus).
+    pub fn attach(&self, sub: &Subscription) {
+        self.hub.attach(sub, None);
+    }
+
+    /// Events with `seq > since`, oldest first. The bool is false when
+    /// the log has been compacted past `since`: the consumer must
+    /// re-list (`squeue` for live jobs, `sacct` for terminal ones) and
+    /// resume from [`Slurmctld::event_seq`].
+    pub fn events_since(&self, since: u64) -> (Vec<JobEvent>, bool) {
+        let inner = self.inner.lock().unwrap();
+        if since < inner.compacted_through {
+            return (Vec::new(), false);
+        }
+        let events = inner
+            .events
+            .iter()
+            .filter(|e| e.seq > since)
+            .cloned()
+            .collect();
+        (events, true)
+    }
+
+    /// Bus watermark: the highest event sequence number ever issued
+    /// (0 if nothing has happened) — the resume token a fresh consumer
+    /// starts from after listing current state.
+    pub fn event_seq(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Append a transition to the bus log and wake matching
+    /// subscribers. Called with the job lock held, mirroring the kube
+    /// store's publish-under-lock ordering (the event is always in the
+    /// log before any woken consumer can drain).
+    fn publish_event(
+        &self,
+        inner: &mut Inner,
+        job_id: JobId,
+        from: Option<JobState>,
+        to: JobState,
+    ) {
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner.events.push_back(JobEvent { job_id, from, to, seq });
+        if inner.events.len() > JOB_EVENT_LOG_CAP {
+            if let Some(dropped) = inner.events.pop_front() {
+                inner.compacted_through = dropped.seq;
+            }
+        }
+        self.hub.notify(&job_id.to_string());
+    }
+
+    /// Rewrite a pending job's reason, emitting an event only on actual
+    /// change — blocked jobs re-evaluated every pass must not flood the
+    /// bus (or wake anyone) when nothing moved.
+    fn update_pending_reason(&self, inner: &mut Inner, id: JobId, to: JobState) {
+        let Some(rec) = inner.jobs.get_mut(&id) else {
+            return;
+        };
+        if rec.state == to {
+            return;
+        }
+        let from = std::mem::replace(&mut rec.state, to.clone());
+        self.publish_event(inner, id, Some(from), to);
+    }
+
     /// Block until the job reaches a terminal state (or `timeout_real_ms`
     /// real milliseconds pass). Returns the final state if terminal.
+    /// Rides the job-event bus: no wakeup unless *this* job transitions
+    /// (or the controller shuts down).
     pub fn wait_terminal(&self, id: JobId, timeout_real_ms: u64) -> Option<JobState> {
-        let t0 = std::time::Instant::now();
+        let sub = self.subscribe_job(id);
+        let deadline = Instant::now() + Duration::from_millis(timeout_real_ms);
         loop {
             let state = self.job_info(id)?.state;
             if state.is_terminal() {
                 return Some(state);
             }
-            if t0.elapsed().as_millis() as u64 > timeout_real_ms {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 return None;
             }
-            thread::sleep(std::time::Duration::from_millis(1));
+            if sub.wait(remaining) == WakeReason::Closed {
+                // Shutdown: one final read, then give up.
+                let state = self.job_info(id)?.state;
+                return if state.is_terminal() { Some(state) } else { None };
+            }
         }
     }
 
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        // Wake-on-shutdown: every blocked bus waiter returns Closed
+        // immediately instead of riding out its timeout.
+        self.hub.close_all();
     }
 
     fn acct_record(id: JobId, rec: &JobRecord) -> AcctRecord {
@@ -334,10 +457,11 @@ impl Slurmctld {
             }
             for id in dep_cancel {
                 if let Some(rec) = inner.jobs.get_mut(&id) {
-                    rec.state = JobState::Cancelled;
+                    let from = std::mem::replace(&mut rec.state, JobState::Cancelled);
                     rec.end_ms = Some(now);
                     let acct = Self::acct_record(id, rec);
                     inner.acct.push(acct);
+                    self.publish_event(&mut inner, id, Some(from), JobState::Cancelled);
                 }
                 inner.queue.retain(|q| *q != id);
                 ready.remove(&id);
@@ -367,12 +491,14 @@ impl Slurmctld {
                 for id in victims {
                     if let Some(rec) = inner.jobs.get_mut(&id) {
                         rec.cancel.cancel();
-                        rec.state = JobState::Failed("NodeFail".to_string());
+                        let to = JobState::Failed("NodeFail".to_string());
+                        let from = std::mem::replace(&mut rec.state, to.clone());
                         rec.end_ms = Some(now);
                         let acct = Self::acct_record(id, rec);
                         let alloc = std::mem::take(&mut rec.allocation);
                         inner.acct.push(acct);
                         to_release.push((id, alloc));
+                        self.publish_event(&mut inner, id, Some(from), to);
                     }
                 }
             }
@@ -392,12 +518,13 @@ impl Slurmctld {
             for id in timed_out {
                 if let Some(rec) = inner.jobs.get_mut(&id) {
                     rec.cancel.cancel();
-                    rec.state = JobState::Timeout;
+                    let from = std::mem::replace(&mut rec.state, JobState::Timeout);
                     rec.end_ms = Some(now);
                     let acct = Self::acct_record(id, rec);
                     let alloc = std::mem::take(&mut rec.allocation);
                     inner.acct.push(acct);
                     to_release.push((id, alloc));
+                    self.publish_event(&mut inner, id, Some(from), JobState::Timeout);
                 }
             }
 
@@ -436,11 +563,8 @@ impl Slurmctld {
                     (rec.spec.clone(), never)
                 };
                 if never_fits {
-                    if let Some(rec) = inner.jobs.get_mut(&id) {
-                        rec.state = JobState::Pending(
-                            "Resources (can never be satisfied)".to_string(),
-                        );
-                    }
+                    let reason = "Resources (can never be satisfied)".to_string();
+                    self.update_pending_reason(&mut inner, id, JobState::Pending(reason));
                     continue;
                 }
                 if let Some(head_cpus) = blocked_head {
@@ -460,18 +584,18 @@ impl Slurmctld {
                 match placed {
                     Some(alloc) => {
                         let rec = inner.jobs.get_mut(&id).unwrap();
-                        rec.state = JobState::Running;
+                        let from = std::mem::replace(&mut rec.state, JobState::Running);
                         rec.start_ms = Some(now);
                         rec.allocation = alloc.clone();
                         to_start.push((id, spec, alloc, rec.cancel.clone()));
                         inner.queue.retain(|q| *q != id);
+                        self.publish_event(&mut inner, id, Some(from), JobState::Running);
                     }
                     None => {
                         if blocked_head.is_none() {
                             // This becomes the protected head job.
                             blocked_head = Some(spec.total_cpus());
-                            let free =
-                                self.cluster.cpu_summary().1;
+                            let free = self.cluster.cpu_summary().1;
                             let running: Vec<(u64, u32)> = inner
                                 .jobs
                                 .values()
@@ -489,11 +613,11 @@ impl Slurmctld {
                                 &running,
                                 spec.total_cpus(),
                             );
-                            if let Some(rec) = inner.jobs.get_mut(&id) {
-                                rec.state = JobState::Pending(
-                                    "Resources".to_string(),
-                                );
-                            }
+                            self.update_pending_reason(
+                                &mut inner,
+                                id,
+                                JobState::Pending("Resources".to_string()),
+                            );
                         }
                     }
                 }
@@ -502,9 +626,18 @@ impl Slurmctld {
 
         // Phase 2: spawn executor threads outside the lock.
         for (id, spec, alloc, cancel) in to_start {
+            if cancel.is_cancelled() {
+                // scancel (or a timeout/node-fail sweep) raced the
+                // placement commit: the record is already terminal and
+                // accounted, so don't launch the executor at all — just
+                // make sure the reservation is gone (idempotent).
+                self.release_nodes(id, &alloc);
+                continue;
+            }
             let this = self.clone();
             let executor = self.executor.clone();
             let clock = self.cluster.clock.clone();
+            let progress = ProgressNotifier::new(self.hub.clone(), id);
             thread::Builder::new()
                 .name(format!("slurm-job-{id}"))
                 .spawn(move || {
@@ -514,6 +647,7 @@ impl Slurmctld {
                         allocation: alloc,
                         cancel,
                         clock,
+                        progress,
                     };
                     let result = executor.execute(&ctx);
                     this.finish(id, result);
@@ -540,18 +674,17 @@ impl Slurmctld {
             });
             return;
         }
-        rec.state = match result {
+        let to = match result {
             Ok(()) => JobState::Completed,
-            Err(e) if rec.cancel.is_cancelled() => {
-                let _ = e;
-                JobState::Cancelled
-            }
+            Err(_) if rec.cancel.is_cancelled() => JobState::Cancelled,
             Err(e) => JobState::Failed(e),
         };
+        let from = std::mem::replace(&mut rec.state, to.clone());
         rec.end_ms = Some(now);
         let acct = Self::acct_record(id, rec);
         let alloc = std::mem::take(&mut rec.allocation);
         inner.acct.push(acct);
+        self.publish_event(&mut inner, id, Some(from), to);
         drop(inner);
         self.release_nodes(id, &alloc);
     }

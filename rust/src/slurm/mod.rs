@@ -15,6 +15,21 @@
 //!   TIMEOUT) with time-limit enforcement and `scancel`.
 //! - accounting records (`sacct`) and queue/node introspection
 //!   (`squeue`, `sinfo`) — what the HPC center's policies observe.
+//! - the **job-event bus**: every state change is published as a
+//!   [`JobEvent`] on an append-only, capped log
+//!   ([`JOB_EVENT_LOG_CAP`]), with condvar-backed, coalescing,
+//!   born-signaled [`crate::util::Subscription`]s
+//!   ([`Slurmctld::subscribe`], per-job
+//!   [`Slurmctld::subscribe_job`], merged-wait
+//!   [`Slurmctld::attach`]) woken on shutdown, and a
+//!   [`Slurmctld::events_since`] resume API that reports compaction so
+//!   consumers re-list via `squeue`/`sacct`. This is the push surface
+//!   hpk-kubelet mirrors pod status from — no consumer polls `squeue`
+//!   on a tick, matching the paper's claim that HPK's control loops
+//!   stay cheap enough to coexist with the center's own job manager.
+//!   [`ProgressNotifier`] lets executors wake subscribers for
+//!   out-of-band milestones (the pod-IP handshake) without logging a
+//!   fake transition.
 //!
 //! Execution is pluggable through [`JobExecutor`]: HPK supplies an
 //! executor that interprets the generated script's Apptainer commands;
@@ -25,10 +40,10 @@ mod sched;
 pub mod script;
 mod types;
 
-pub use ctld::{Slurmctld, SlurmConfig};
+pub use ctld::{Slurmctld, SlurmConfig, JOB_EVENT_LOG_CAP};
 pub use types::{
-    Allocation, CancelToken, DepKind, JobContext, JobExecutor, JobId,
-    JobInfo, JobSpec, JobState, TaskSlot,
+    Allocation, CancelToken, DepKind, JobContext, JobEvent, JobExecutor,
+    JobId, JobInfo, JobSpec, JobState, ProgressNotifier, TaskSlot,
 };
 
 #[cfg(test)]
@@ -70,14 +85,10 @@ mod tests {
     }
 
     fn wait_done(ctld: &Slurmctld, id: JobId) -> JobState {
-        for _ in 0..20_000 {
-            let info = ctld.job_info(id).unwrap();
-            if info.state.is_terminal() {
-                return info.state;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(1));
-        }
-        panic!("job {id} did not finish");
+        // Rides the job-event bus (no poll): also exercises
+        // wait_terminal's subscription path in every lifecycle test.
+        ctld.wait_terminal(id, 20_000)
+            .unwrap_or_else(|| panic!("job {id} did not finish"))
     }
 
     #[test]

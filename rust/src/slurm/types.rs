@@ -1,6 +1,8 @@
-//! Slurm job types: specs, states, allocations, executor interface.
+//! Slurm job types: specs, states, allocations, executor interface,
+//! and the job-event bus record ([`JobEvent`]).
 
 use crate::hpcsim::Clock;
+use crate::util::SubscriberHub;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -34,6 +36,50 @@ impl JobState {
             JobState::Cancelled => "CA",
             JobState::Timeout => "TO",
         }
+    }
+}
+
+/// One transition on the controller's job-event bus (see
+/// [`crate::slurm::Slurmctld::subscribe`] /
+/// [`crate::slurm::Slurmctld::events_since`]): the job moved `from` ->
+/// `to` at bus sequence number `seq`. `seq` is a single monotonically
+/// increasing counter over *all* jobs, so consumers hold one resume
+/// token for the whole bus (mirroring the kube store's per-kind
+/// resourceVersion watermark, with jobs as the only kind).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobEvent {
+    pub job_id: JobId,
+    /// `None` on the submission event (the job's first appearance).
+    pub from: Option<JobState>,
+    pub to: JobState,
+    pub seq: u64,
+}
+
+/// Wakes job-bus subscribers *without* logging a transition. Executors
+/// call [`ProgressNotifier::notify`] when out-of-band job state changes
+/// — e.g. hpk's pod-IP handshake file landing in the home directory —
+/// so consumers re-read immediately instead of polling; the event log
+/// itself stays a pure transition log.
+#[derive(Clone)]
+pub struct ProgressNotifier {
+    hub: SubscriberHub,
+    job_id: JobId,
+}
+
+impl ProgressNotifier {
+    pub(crate) fn new(hub: SubscriberHub, job_id: JobId) -> ProgressNotifier {
+        ProgressNotifier { hub, job_id }
+    }
+
+    /// A notifier wired to nothing — for executors driven outside a
+    /// [`crate::slurm::Slurmctld`] (unit tests, standalone tools).
+    pub fn disconnected() -> ProgressNotifier {
+        ProgressNotifier { hub: SubscriberHub::new(), job_id: 0 }
+    }
+
+    /// Wake subscribers watching this job (and wildcard subscribers).
+    pub fn notify(&self) {
+        self.hub.notify(&self.job_id.to_string());
     }
 }
 
@@ -186,6 +232,10 @@ pub struct JobContext {
     pub allocation: Allocation,
     pub cancel: CancelToken,
     pub clock: Clock,
+    /// Out-of-band wakeup back into the job-event bus (IP handshake
+    /// and similar executor-side milestones that are not state
+    /// transitions).
+    pub progress: ProgressNotifier,
 }
 
 /// Pluggable execution backend (HPK plugs the Apptainer interpreter in).

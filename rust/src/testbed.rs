@@ -174,21 +174,15 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
 
 impl VanillaBed {
     /// Block until `cond(api)` holds (same contract as ControlPlane).
+    /// Push-driven off the store bus, with a coarse backstop for
+    /// conditions over non-bus state.
     pub fn wait_until(
         &self,
         timeout_ms: u64,
         mut cond: impl FnMut(&crate::kube::ApiServer) -> bool,
     ) -> bool {
-        let t0 = std::time::Instant::now();
-        loop {
-            if cond(&self.api) {
-                return true;
-            }
-            if t0.elapsed().as_millis() as u64 > timeout_ms {
-                return false;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        let sub = self.api.subscribe(None);
+        crate::util::sub::wait_for(&sub, timeout_ms, 50, || cond(&self.api))
     }
 
     pub fn install_minio(&self, service_name: &str) -> Result<(), String> {

@@ -1,12 +1,15 @@
 //! Small shared utilities: deterministic RNG, ID generation, quantity
-//! parsing, shell word splitting, and wall-clock helpers.
+//! parsing, shell word splitting, wall-clock helpers, and the
+//! condvar-backed subscription primitive both event buses park on.
 
 pub mod rng;
 pub mod shlex;
+pub mod sub;
 mod quantity;
 
 pub use quantity::{parse_cpu_millis, parse_memory_bytes, format_memory};
 pub use rng::Rng;
+pub use sub::{SubscriberHub, Subscription, WakeReason};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -1,0 +1,347 @@
+//! Condvar-backed, coalescing wakeup subscriptions — the shared
+//! push-notification primitive behind *both* event buses (the kube
+//! store's kind-sharded log and the Slurm job-event bus).
+//!
+//! A [`Subscription`] is a single edge-coalescing signal: publishers
+//! set it, one waiter consumes it. A [`SubscriberHub`] is the
+//! publisher-side registry that fans a topic notification out to every
+//! matching subscription. Topic filtering lives on the *registration*
+//! (not the handle), so one subscription can be attached to several
+//! hubs with a different filter on each — that is the merged
+//! multi-source wait: one condvar, many publishers. hpk-kubelet blocks
+//! on exactly one handle registered with the store (topic `Pod`) and
+//! with Slurm (every job), replacing its active-bindings poll.
+//!
+//! Guarantees, shared by every bus built on this:
+//! - **born signaled** — the first wait returns immediately, so
+//!   consumers always process state that predates the subscription
+//!   before blocking;
+//! - **coalescing** — many events between two waits cost one wakeup;
+//! - **wake-on-close** — [`Subscription::close`] (or the publisher's
+//!   [`SubscriberHub::close_all`] shutdown edge) wakes a blocked
+//!   waiter immediately and dominates pending signals, so loops do one
+//!   final drain and exit without a tick.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+/// Why a blocked [`Subscription::wait`] returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WakeReason {
+    /// An event for a subscribed topic landed since the last wait.
+    Notified,
+    /// The subscription was closed (shutdown): do a final drain, then
+    /// stop waiting.
+    Closed,
+    /// The timeout elapsed with no event (the level-triggered resync
+    /// hook).
+    TimedOut,
+}
+
+struct SubState {
+    signaled: bool,
+    closed: bool,
+}
+
+struct SubShared {
+    state: Mutex<SubState>,
+    cond: Condvar,
+    /// Wakeup signals delivered (coalesced edges, not raw events).
+    notifications: AtomicU64,
+}
+
+impl SubShared {
+    fn notify(&self) {
+        let mut state = self.state.lock().unwrap();
+        if !state.signaled && !state.closed {
+            state.signaled = true;
+            self.notifications.fetch_add(1, Ordering::Relaxed);
+            self.cond.notify_all();
+        }
+    }
+
+    fn close(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.closed = true;
+        self.cond.notify_all();
+    }
+}
+
+/// A push-notification handle: the replacement for a poll tick.
+/// Consumers loop `drain -> wait`; publishers set the (coalescing)
+/// signal when an event for a registered topic lands, so a waiter
+/// wakes only for work it actually has. Cheap to clone (shared
+/// state): one clone blocks in the run loop while another calls
+/// [`Subscription::close`] from the shutdown path.
+#[derive(Clone)]
+pub struct Subscription {
+    shared: Arc<SubShared>,
+}
+
+impl Default for Subscription {
+    fn default() -> Subscription {
+        Subscription::new()
+    }
+}
+
+impl Subscription {
+    /// A free-standing subscription (born signaled). Attach it to one
+    /// or more hubs with [`SubscriberHub::attach`] to receive events.
+    pub fn new() -> Subscription {
+        Subscription {
+            shared: Arc::new(SubShared {
+                // Born signaled: the first wait returns immediately, so
+                // subscribers always process state that predates the
+                // subscription before blocking.
+                state: Mutex::new(SubState { signaled: true, closed: false }),
+                cond: Condvar::new(),
+                notifications: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Block until an event for a registered topic lands, the
+    /// subscription is closed, or `timeout` elapses. A pending signal
+    /// is consumed immediately (events are never lost to the gap
+    /// between a drain and the next wait). Close dominates: once
+    /// closed, every wait returns [`WakeReason::Closed`] — callers do
+    /// one final drain on that reason, so nothing that raced the close
+    /// is dropped.
+    pub fn wait(&self, timeout: Duration) -> WakeReason {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.shared.state.lock().unwrap();
+        loop {
+            if state.closed {
+                return WakeReason::Closed;
+            }
+            if state.signaled {
+                state.signaled = false;
+                return WakeReason::Notified;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return WakeReason::TimedOut;
+            }
+            state = self.shared.cond.wait_timeout(state, remaining).unwrap().0;
+        }
+    }
+
+    /// Permanently close the subscription and wake any blocked waiter —
+    /// the explicit shutdown edge that replaces "the loop notices a
+    /// stop flag within one tick".
+    pub fn close(&self) {
+        self.shared.close();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+
+    /// Wakeup signals delivered so far — the observability hook behind
+    /// the E5.3c/E5.3e zero-idle-wakeup benches.
+    pub fn notify_count(&self) -> u64 {
+        self.shared.notifications.load(Ordering::Relaxed)
+    }
+}
+
+struct Entry {
+    sub: Weak<SubShared>,
+    /// `None` = every topic this hub publishes.
+    topics: Option<BTreeSet<String>>,
+}
+
+impl Entry {
+    fn wants(&self, topic: &str) -> bool {
+        match &self.topics {
+            None => true,
+            Some(ts) => ts.contains(topic),
+        }
+    }
+}
+
+#[derive(Default)]
+struct HubInner {
+    entries: Vec<Entry>,
+    /// Latched by [`SubscriberHub::close_all`]: the publisher is gone,
+    /// so late registrations are closed on arrival instead of blocking
+    /// on a bus that will never publish again.
+    closed: bool,
+}
+
+/// The publisher side: a weak registry of subscriptions with per-
+/// registration topic filters. Cheap to clone — all clones share one
+/// subscriber set, so a bus can embed it and hand clones to helper
+/// types (e.g. [`crate::slurm::ProgressNotifier`]).
+#[derive(Clone, Default)]
+pub struct SubscriberHub {
+    inner: Arc<Mutex<HubInner>>,
+}
+
+impl SubscriberHub {
+    pub fn new() -> SubscriberHub {
+        SubscriberHub::default()
+    }
+
+    /// Create a subscription registered for `topics` (`None` = every
+    /// topic). Born signaled; see [`Subscription::wait`].
+    pub fn subscribe(&self, topics: Option<&[&str]>) -> Subscription {
+        let sub = Subscription::new();
+        self.attach(&sub, topics);
+        sub
+    }
+
+    /// Register an *existing* subscription with this hub too — the
+    /// merged multi-source wait: the handle's condvar now fires for
+    /// either publisher, with an independent topic filter per hub.
+    /// Attaching to a hub that already shut down closes the handle.
+    pub fn attach(&self, sub: &Subscription, topics: Option<&[&str]>) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            sub.close();
+            return;
+        }
+        inner.entries.push(Entry {
+            sub: Arc::downgrade(&sub.shared),
+            topics: topics.map(|ts| ts.iter().map(|t| t.to_string()).collect()),
+        });
+    }
+
+    /// Wake every live subscription whose filter matches `topic`,
+    /// dropping registrations whose handles are gone.
+    pub fn notify(&self, topic: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.retain(|e| match e.sub.upgrade() {
+            Some(sub) => {
+                if e.wants(topic) {
+                    sub.notify();
+                }
+                true
+            }
+            None => false,
+        });
+    }
+
+    /// Close every registered subscription and latch the hub closed
+    /// (the publisher's shutdown edge): blocked waiters return
+    /// [`WakeReason::Closed`] now, and late subscribers are closed on
+    /// arrival.
+    pub fn close_all(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        for e in inner.entries.drain(..) {
+            if let Some(sub) = e.sub.upgrade() {
+                sub.close();
+            }
+        }
+    }
+
+    /// Live registrations (for introspection/tests).
+    pub fn subscriber_count(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .filter(|e| e.sub.strong_count() > 0)
+            .count()
+    }
+}
+
+/// Drive `cond` until it holds or `timeout_ms` real milliseconds pass,
+/// parking on `sub` between checks. `backstop_ms` caps each park so
+/// conditions over non-bus state (filesystem handshakes, fabric
+/// bindings) still make progress; pass `timeout_ms` to wait on bus
+/// events alone. A closed subscription degrades to sleeping the
+/// backstop, so the deadline stays honest without spinning. This is
+/// the "kubectl wait" loop the control plane and both testbeds share.
+pub fn wait_for(
+    sub: &Subscription,
+    timeout_ms: u64,
+    backstop_ms: u64,
+    mut cond: impl FnMut() -> bool,
+) -> bool {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    loop {
+        if cond() {
+            return true;
+        }
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return false;
+        }
+        let step = remaining.min(Duration::from_millis(backstop_ms));
+        if sub.wait(step) == WakeReason::Closed {
+            std::thread::sleep(step);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn born_signaled_then_coalesces() {
+        let hub = SubscriberHub::new();
+        let sub = hub.subscribe(Some(&["a"]));
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+        hub.notify("a");
+        hub.notify("a");
+        hub.notify("a");
+        // Many events, one pending wakeup.
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+        assert_eq!(sub.notify_count(), 1);
+    }
+
+    #[test]
+    fn topic_filter_is_per_registration() {
+        let hub_a = SubscriberHub::new();
+        let hub_b = SubscriberHub::new();
+        let sub = hub_a.subscribe(Some(&["x"]));
+        hub_b.attach(&sub, None);
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        // hub_a only wakes it for "x"...
+        hub_a.notify("y");
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+        hub_a.notify("x");
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        // ...while hub_b wakes it for anything (the merged wait).
+        hub_b.notify("whatever");
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+    }
+
+    #[test]
+    fn close_all_wakes_blocked_waiters() {
+        let hub = SubscriberHub::new();
+        let sub = hub.subscribe(None);
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        let waiter = sub.clone();
+        let handle =
+            std::thread::spawn(move || waiter.wait(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(20));
+        hub.close_all();
+        assert_eq!(handle.join().unwrap(), WakeReason::Closed);
+        assert!(sub.is_closed());
+        // Closed dominates later signals.
+        hub.notify("late");
+        assert_eq!(sub.wait(Duration::from_secs(1)), WakeReason::Closed);
+        // Late subscribers to a closed hub are closed on arrival, so
+        // nobody can block on a publisher that already shut down.
+        let late = hub.subscribe(None);
+        assert_eq!(late.wait(Duration::from_secs(1)), WakeReason::Closed);
+    }
+
+    #[test]
+    fn dead_handles_are_garbage_collected() {
+        let hub = SubscriberHub::new();
+        let sub = hub.subscribe(None);
+        assert_eq!(hub.subscriber_count(), 1);
+        drop(sub);
+        hub.notify("tick");
+        assert_eq!(hub.subscriber_count(), 0);
+    }
+}

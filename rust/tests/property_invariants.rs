@@ -12,7 +12,7 @@
 //!    splits.
 
 use hpk::hpcsim::{Cluster, ClusterSpec};
-use hpk::slurm::{DepKind, JobContext, JobExecutor, JobSpec, Slurmctld, SlurmConfig};
+use hpk::slurm::{DepKind, JobContext, JobExecutor, JobSpec, JobState, Slurmctld, SlurmConfig};
 use hpk::util::Rng;
 use hpk::yamlkit::{parse_one, to_yaml_string, Value};
 use std::sync::Arc;
@@ -253,6 +253,116 @@ fn ep_arbitrary_splits_compose() {
         }
         assert_eq!(acc_full, acc_sum);
         assert_eq!(q_full, q_sum);
+    }
+}
+
+// ---- pod phase vs Slurm terminal state under random interleaving ------
+
+/// Random interleavings of submit (pod create), cancel (pod delete) and
+/// complete (quick pods running to success) must never leave a pod
+/// whose phase disagrees with its Slurm job's terminal state once both
+/// event buses drain. This is the end-to-end guarantee the push-driven
+/// kubelet sync (no active-bindings poll) has to uphold.
+#[test]
+fn pod_phase_agrees_with_slurm_after_buses_drain() {
+    for trial in 0..2u64 {
+        let tb = hpk::testbed::deploy(4, 8);
+        let mut rng = Rng::new(20_260_731 + trial);
+        let mut quick: Vec<String> = Vec::new(); // busybox true -> Succeeded
+        let mut servers: Vec<String> = Vec::new(); // pause -> Running
+        let mut deleted = std::collections::BTreeSet::new();
+        for i in 0..24 {
+            let name = format!("mix-{trial}-{i}");
+            let image_lines = if rng.below(2) == 0 {
+                quick.push(name.clone());
+                "    image: busybox:latest\n    command: [\"true\"]\n"
+            } else {
+                servers.push(name.clone());
+                "    image: pause:3.9\n"
+            };
+            tb.cp
+                .kubectl_apply(&format!(
+                    "kind: Pod\nmetadata:\n  name: {name}\nspec:\n  containers:\n  - name: main\n{image_lines}"
+                ))
+                .unwrap();
+            // Interleave deletions of random earlier pods — some land
+            // while their jobs are pending, some mid-run, some after
+            // completion.
+            if rng.below(3) == 0 {
+                let all: Vec<String> = quick.iter().chain(servers.iter()).cloned().collect();
+                if let Some(v) = rng.choose(&all) {
+                    if deleted.insert(v.clone()) {
+                        let _ = tb.cp.api.delete("Pod", "default", v);
+                    }
+                }
+            }
+            if rng.below(2) == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(rng.below(8)));
+            }
+        }
+        // Drain both buses: surviving quick pods finish, surviving
+        // servers settle (Running normally; Failed if a very slow
+        // runner pushes a pause job over its simulated time limit —
+        // still a settled, bus-consistent state), and no cancelled or
+        // pending work lingers in the Slurm queue.
+        let drained = tb.cp.wait_until(120_000, |api| {
+            let quick_done = quick.iter().filter(|n| !deleted.contains(*n)).all(|n| {
+                api.get("Pod", "default", n)
+                    .map(|p| hpk::kube::object::pod_phase(&p) == "Succeeded")
+                    .unwrap_or(false)
+            });
+            let servers_settled = servers.iter().filter(|n| !deleted.contains(*n)).all(|n| {
+                api.get("Pod", "default", n)
+                    .map(|p| {
+                        let phase = hpk::kube::object::pod_phase(&p);
+                        phase == "Running" || phase == "Failed"
+                    })
+                    .unwrap_or(false)
+            });
+            let queue_settled = tb
+                .cp
+                .slurm
+                .squeue()
+                .iter()
+                .all(|j| j.state == JobState::Running);
+            quick_done && servers_settled && queue_settled
+        });
+        assert!(drained, "buses did not drain (trial {trial})");
+        // The invariant: wherever both the pod and its accounting row
+        // still exist, phase and terminal job state agree. A job can go
+        // terminal right after the drain check, so phrase it
+        // eventually-consistently: disagreement must flush within the
+        // mirror window, never persist.
+        let disagreement = |api: &hpk::kube::ApiServer| -> Option<String> {
+            for rec in tb.cp.slurm.sacct() {
+                let Some((ns, name)) = rec.comment.split_once('/') else {
+                    continue;
+                };
+                let Ok(pod) = api.get("Pod", ns, name) else {
+                    continue; // deleted by the test: nothing to disagree
+                };
+                let phase = hpk::kube::object::pod_phase(&pod).to_string();
+                let expect = match rec.state {
+                    JobState::Completed => "Succeeded",
+                    _ => "Failed",
+                };
+                if phase != expect {
+                    return Some(format!(
+                        "pod {name} phase {phase} disagrees with job {} ({:?})",
+                        rec.job_id, rec.state
+                    ));
+                }
+            }
+            None
+        };
+        let consistent = tb.cp.wait_until(30_000, |api| disagreement(api).is_none());
+        if !consistent {
+            panic!(
+                "trial {trial}: {}",
+                disagreement(&tb.cp.api).unwrap_or_else(|| "flaky re-read".into())
+            );
+        }
+        tb.shutdown();
     }
 }
 

@@ -1,0 +1,255 @@
+//! Deterministic event-order tests for the Slurm job-event bus.
+//!
+//! The bus contract the HPK kubelet's push-driven sync rests on:
+//!  - every terminal `sacct` record has a gap-free event chain
+//!    Pending -> (Running ->) terminal, ending in exactly one terminal
+//!    event that matches accounting;
+//!  - compaction never loses information: `events_since` reports the
+//!    gap and a `squeue` re-list plus the current watermark resumes
+//!    cleanly;
+//!  - subscriptions coalesce (a burst of N transitions = one wakeup),
+//!    are born signaled, filter per job, and wake on shutdown;
+//!  - one subscription can be attached to both the kube store and the
+//!    Slurm bus (the kubelet's merged two-source wait).
+//!
+//! Determinism: tests that count events or wakeups freeze the
+//! scheduler (an effectively-infinite `sched_interval_ms`, entered
+//! only after its one startup pass over the then-empty queue), so
+//! `submit`/`cancel` are the only event sources.
+
+use hpk::hpcsim::{Cluster, ClusterSpec};
+use hpk::slurm::{
+    JobContext, JobEvent, JobExecutor, JobSpec, JobState, Slurmctld,
+    SlurmConfig, JOB_EVENT_LOG_CAP,
+};
+use hpk::util::WakeReason;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// script "ok" -> Completed, "fail" -> Failed, "hold" -> runs until
+/// cancelled.
+struct ScriptExec;
+
+impl JobExecutor for ScriptExec {
+    fn execute(&self, ctx: &JobContext) -> Result<(), String> {
+        match ctx.spec.script.as_str() {
+            "fail" => Err("boom".to_string()),
+            "hold" => {
+                while !ctx.cancel.is_cancelled() {
+                    ctx.clock.tick();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err("cancelled".to_string())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+fn live(nodes: usize, cpus: u32) -> Slurmctld {
+    let cluster = Cluster::new(ClusterSpec::uniform(nodes, cpus, 32));
+    Slurmctld::start(cluster, Arc::new(ScriptExec), SlurmConfig::default())
+}
+
+/// A controller whose scheduler never runs again after its startup
+/// pass: submits and cancels are the only bus publishers.
+fn frozen() -> Slurmctld {
+    let cluster = Cluster::new(ClusterSpec::uniform(1, 4, 16));
+    let ctld = Slurmctld::start(
+        cluster,
+        Arc::new(ScriptExec),
+        SlurmConfig { sched_interval_ms: 3_600_000, ..SlurmConfig::default() },
+    );
+    // Wait out the startup pass (over an empty queue) so no scheduler
+    // activity can interleave with the test's own submissions.
+    let t0 = Instant::now();
+    while ctld.sched_passes() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "first pass never ran");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    ctld
+}
+
+fn wait_running(ctld: &Slurmctld, id: u64) {
+    let sub = ctld.subscribe_job(id);
+    let t0 = Instant::now();
+    while ctld.job_info(id).unwrap().state != JobState::Running {
+        assert!(t0.elapsed() < Duration::from_secs(10), "job {id} never ran");
+        sub.wait(Duration::from_millis(100));
+    }
+}
+
+#[test]
+fn terminal_records_have_ordered_event_sequences() {
+    let ctld = live(1, 2);
+    // a completes, b fails, c runs until cancelled, d is cancelled
+    // while still pending behind c.
+    let a = ctld.submit(JobSpec::new("a").with_script("ok")).unwrap();
+    let b = ctld.submit(JobSpec::new("b").with_script("fail")).unwrap();
+    assert_eq!(ctld.wait_terminal(a, 20_000), Some(JobState::Completed));
+    assert!(matches!(
+        ctld.wait_terminal(b, 20_000),
+        Some(JobState::Failed(_))
+    ));
+    let c = ctld
+        .submit(JobSpec::new("c").with_tasks(1, 2, 1).with_script("hold"))
+        .unwrap();
+    wait_running(&ctld, c);
+    let d = ctld
+        .submit(JobSpec::new("d").with_tasks(1, 2, 1).with_script("ok"))
+        .unwrap();
+    assert!(ctld.cancel(d)); // still pending: c holds every cpu
+    assert!(ctld.cancel(c));
+    assert_eq!(ctld.wait_terminal(c, 20_000), Some(JobState::Cancelled));
+    assert_eq!(ctld.wait_terminal(d, 20_000), Some(JobState::Cancelled));
+
+    let (events, complete) = ctld.events_since(0);
+    assert!(complete);
+    // Bus-wide: seq strictly increasing, log in seq order.
+    assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+
+    let acct = ctld.sacct();
+    assert_eq!(acct.len(), 4);
+    for rec in &acct {
+        let evs: Vec<&JobEvent> = events.iter().filter(|e| e.job_id == rec.job_id).collect();
+        // Born as Pending.
+        let first = evs.first().expect("job has events");
+        assert_eq!(first.from, None);
+        assert!(matches!(first.to, JobState::Pending(_)));
+        // Gap-free chain: each event starts where the previous ended.
+        for w in evs.windows(2) {
+            assert_eq!(
+                w[1].from.as_ref(),
+                Some(&w[0].to),
+                "job {} chain broken",
+                rec.job_id
+            );
+        }
+        // Exactly one terminal event, last, matching accounting.
+        assert_eq!(evs.iter().filter(|e| e.to.is_terminal()).count(), 1);
+        let last = evs.last().unwrap();
+        assert!(last.to.is_terminal());
+        assert_eq!(last.to, rec.state, "job {}", rec.job_id);
+        // Jobs that actually ran passed through Running on the bus.
+        let ran = rec.job_id != d;
+        assert_eq!(
+            evs.iter().any(|e| e.to == JobState::Running),
+            ran,
+            "job {} Running event",
+            rec.job_id
+        );
+    }
+    ctld.shutdown();
+}
+
+#[test]
+fn compaction_reports_gap_and_relist_resumes() {
+    let ctld = frozen();
+    let n = JOB_EVENT_LOG_CAP + 50;
+    let mut ids = Vec::with_capacity(n);
+    for i in 0..n {
+        ids.push(ctld.submit(JobSpec::new(&format!("j{i}"))).unwrap());
+    }
+    // The oldest submit events were compacted away: a from-zero read
+    // must report the gap instead of silently dropping jobs.
+    let (events, complete) = ctld.events_since(0);
+    assert!(!complete, "compacted log must report incompleteness");
+    assert!(events.is_empty());
+    // Recovery: re-list live state (squeue), then resume from the
+    // watermark — nothing submitted so far is lost.
+    let listed = ctld.squeue();
+    assert_eq!(listed.len(), n, "re-list covers every live job");
+    let mark = ctld.event_seq();
+    let (tail, complete) = ctld.events_since(mark);
+    assert!(complete);
+    assert!(tail.is_empty());
+    // Everything after the resume point arrives incrementally.
+    let late = ctld.submit(JobSpec::new("late")).unwrap();
+    let (tail, complete) = ctld.events_since(mark);
+    assert!(complete);
+    assert!(tail.iter().any(|e| e.job_id == late && e.from.is_none()));
+    // A mid-log token still reads incrementally (no spurious re-list).
+    let recent = ctld.event_seq() - 5;
+    let (tail, complete) = ctld.events_since(recent);
+    assert!(complete);
+    assert_eq!(tail.len(), 5);
+    ctld.shutdown();
+}
+
+#[test]
+fn burst_of_transitions_wakes_subscriber_exactly_once() {
+    let ctld = frozen();
+    let sub = ctld.subscribe();
+    // Born signaled: consume the initial edge.
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+    let n0 = sub.notify_count();
+    for i in 0..100 {
+        ctld.submit(JobSpec::new(&format!("burst-{i}"))).unwrap();
+    }
+    // 100 transitions, one pending wakeup.
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+    assert_eq!(sub.notify_count() - n0, 1, "burst must coalesce");
+    ctld.shutdown();
+}
+
+#[test]
+fn per_job_subscription_ignores_other_jobs() {
+    let ctld = frozen();
+    let a = ctld.submit(JobSpec::new("a")).unwrap();
+    let sub_a = ctld.subscribe_job(a);
+    assert_eq!(sub_a.wait(Duration::ZERO), WakeReason::Notified);
+    let n0 = sub_a.notify_count();
+    let b = ctld.submit(JobSpec::new("b")).unwrap();
+    ctld.cancel(b);
+    assert_eq!(sub_a.wait(Duration::ZERO), WakeReason::TimedOut);
+    assert_eq!(sub_a.notify_count(), n0, "other jobs must not wake it");
+    ctld.cancel(a);
+    assert_eq!(sub_a.wait(Duration::ZERO), WakeReason::Notified);
+    ctld.shutdown();
+}
+
+#[test]
+fn shutdown_wakes_blocked_waiters() {
+    let ctld = frozen();
+    let pending = ctld.submit(JobSpec::new("stuck")).unwrap();
+    let sub = ctld.subscribe();
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+    let waiter = sub.clone();
+    let raw = std::thread::spawn(move || waiter.wait(Duration::from_secs(30)));
+    let ctld2 = ctld.clone();
+    let terminal = std::thread::spawn(move || ctld2.wait_terminal(pending, 30_000));
+    std::thread::sleep(Duration::from_millis(50));
+    let t0 = Instant::now();
+    ctld.shutdown();
+    assert_eq!(raw.join().unwrap(), WakeReason::Closed);
+    // wait_terminal gives up promptly on shutdown (job never terminal).
+    assert_eq!(terminal.join().unwrap(), None);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown must wake blocked waiters immediately"
+    );
+}
+
+#[test]
+fn one_subscription_rides_both_buses() {
+    // The kubelet's merged wait: a store subscription (Pod kind)
+    // attached to the Slurm hub wakes for either publisher.
+    let store = hpk::kube::Store::new();
+    let ctld = frozen();
+    let sub = store.subscribe(Some(&["Pod"]));
+    ctld.attach(&sub);
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+    // Slurm side wakes it...
+    ctld.submit(JobSpec::new("j")).unwrap();
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+    // ...the store side wakes it (subscribed kind only)...
+    let pod = hpk::yamlkit::parse_one("metadata:\n  name: p\n").unwrap();
+    store.put("Pod", "default", "p", pod.clone());
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+    // ...and the store-side kind filter still applies.
+    store.put("ConfigMap", "default", "cm", pod);
+    assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+    ctld.shutdown();
+}
