@@ -6,9 +6,9 @@ Usage: bench_delta.py <previous.json> <current.json>
 Warn-only: regressions get a warning marker in the table, but the exit
 code is always 0 — the perf trajectory is made visible per-PR without
 hard-failing on noisy runners. Metric direction is inferred from the
-name suffix (`_ms`/`_us`/`_bytes*`/`*wakeups`/`*writes` are
-lower-is-better, `_per_s` is higher-is-better; everything else is
-reported without judgement).
+name suffix (`_ms`/`_us`/`_bytes*`/`*wakeups`/`*writes`/`_dropped`/
+`_no_backend` are lower-is-better, `_per_s` is higher-is-better;
+everything else is reported without judgement).
 """
 
 import json
@@ -17,7 +17,16 @@ import sys
 # Relative change beyond which a regression is flagged (warn-only).
 WARN_THRESHOLD = 0.25
 
-LOWER_IS_BETTER = ("_ms", "_us", "_bytes", "_bytes_written", "_wakeups", "_writes")
+LOWER_IS_BETTER = (
+    "_ms",
+    "_us",
+    "_bytes",
+    "_bytes_written",
+    "_wakeups",
+    "_writes",
+    "_dropped",
+    "_no_backend",
+)
 HIGHER_IS_BETTER = ("_per_s",)
 
 # Bench configuration / baseline metrics, not costs the code pays:

@@ -1,0 +1,230 @@
+//! Serving under load: the closed request loop, end to end.
+//!
+//!     cargo run --release --example serving_load
+//!
+//! A model-serving Deployment sits behind a headless Service with a
+//! HorizontalPodAutoscaler targeting 25 req/s per pod. A simulated
+//! client fleet drives a step curve through CoreDNS and the
+//! EndpointSlice-backed service dataplane; request metrics feed the
+//! autoscaler, which scales the Deployment out to its max under the
+//! step and back in once the load (and the stabilization window)
+//! passes. Every pod is a Slurm job throughout.
+//!
+//! With PJRT artifacts built (`make artifacts`) the backends are real
+//! `tf-serving` containers loading weights from shared storage;
+//! without them a pause container stands in — the control loop under
+//! test (traffic -> metrics -> HPA -> Deployment -> Slurm) is the
+//! same either way.
+
+use hpk::kube::object;
+use hpk::testbed;
+use hpk::traffic::{Curve, LoadGen};
+
+/// Per-pod request-rate target the HPA scales against.
+const TARGET_RPS: f64 = 25.0;
+const MAX_REPLICAS: i64 = 5;
+
+fn running(api: &hpk::kube::ApiServer) -> usize {
+    api.list("Pod")
+        .iter()
+        .filter(|p| object::pod_phase(p) == "Running")
+        .count()
+}
+
+fn replicas(api: &hpk::kube::ApiServer) -> i64 {
+    api.get("Deployment", "default", "model")
+        .ok()
+        .and_then(|d| d.i64_at("spec.replicas"))
+        .unwrap_or(0)
+}
+
+fn main() {
+    println!("== HPK serving under load ==");
+    println!("deploying HPK on a 3-node x 8-cpu simulated Slurm cluster\n");
+    let tb = testbed::deploy(3, 8);
+    let clock = tb.cp.cluster.clock.clone();
+
+    // Backend image: real tf-serving when artifacts are built.
+    let container = if tb.pjrt.is_some() {
+        let params = hpk::workloads::trainer::init_params_rust("mlp-small", 42);
+        let bytes = hpk::operators::training::trainer_encode(&params);
+        tb.cp
+            .fs
+            .write("/home/user/models/demo/weights.bin", bytes)
+            .expect("write weights");
+        println!("backends: tf-serving:latest (PJRT artifacts found)");
+        "        image: tf-serving:latest
+        env:
+        - name: MODEL_VARIANT
+          value: mlp-small
+        - name: MODEL_PATH
+          value: /home/user/models/demo/weights.bin
+"
+    } else {
+        println!("backends: pause:3.9 stand-in (no PJRT artifacts)");
+        "        image: pause:3.9
+"
+    };
+
+    println!(
+        "--> kubectl apply deployment(model) + service(model) + hpa(target {TARGET_RPS} req/s, max {MAX_REPLICAS})"
+    );
+    tb.cp
+        .kubectl_apply(&format!(
+            r#"kind: Deployment
+metadata:
+  name: model
+spec:
+  replicas: 1
+  selector:
+    matchLabels:
+      app: model
+  template:
+    metadata:
+      labels:
+        app: model
+    spec:
+      containers:
+      - name: serving
+{container}        resources:
+          requests:
+            cpu: 1
+---
+kind: Service
+metadata:
+  name: model
+spec:
+  selector:
+    app: model
+  ports:
+  - port: 8501
+---
+kind: HorizontalPodAutoscaler
+apiVersion: autoscaling/v2
+metadata:
+  name: model
+spec:
+  scaleTargetRef:
+    kind: Deployment
+    name: model
+  minReplicas: 1
+  maxReplicas: {MAX_REPLICAS}
+  targetRequestsPerSecond: {TARGET_RPS}
+  stabilizationWindowMs: 30000
+"#
+        ))
+        .expect("apply");
+
+    assert!(tb.cp.wait_until(60_000, |api| {
+        running(api) == 1 && !tb.cp.service_endpoints("default", "model").is_empty()
+    }));
+    println!("1 backend Running; endpoints published\n");
+
+    let mut lg = LoadGen::new(
+        &tb.cp.api,
+        tb.cp.dns.clone(),
+        tb.cp.proxy.clone(),
+        tb.cp.metrics.clone(),
+        clock.clone(),
+        "model",
+    )
+    .with_seed(11);
+
+    // Phase A: steady low load, well under target -> no scaling, and a
+    // hard zero-drop guarantee (nothing churns, so nothing is stale).
+    println!("--> phase A: 8 req/s for 20 simulated s (below target)");
+    let run_a = lg.run_for(&Curve::Constant { rps: 8.0 }, 20_000);
+    println!(
+        "    served={} dropped={} no_backend={}",
+        run_a.served, run_a.dropped, run_a.no_backend
+    );
+    assert!(run_a.served > 0, "no requests served: {run_a:?}");
+    assert_eq!(run_a.dropped, 0, "dropped requests at steady state: {run_a:?}");
+    assert_eq!(run_a.no_backend, 0);
+    assert_eq!(replicas(&tb.cp.api), 1, "hpa scaled a below-target service");
+
+    // Phase B: the step. 120 req/s against one pod blows through the
+    // target; the autoscaler reacts off the metrics push.
+    println!("\n--> phase B: step to 120 req/s");
+    let t0 = clock.now_ms();
+    let handle = std::thread::spawn(move || {
+        let run = lg.run_for(&Curve::Constant { rps: 120.0 }, 60_000);
+        (lg, run)
+    });
+    assert!(
+        tb.cp.wait_until(60_000, |api| running(api) >= 2),
+        "hpa never scaled out"
+    );
+    let reaction_ms = clock.now_ms() - t0;
+    println!("    scale-out reaction: {reaction_ms} simulated ms to a second Running pod");
+    let (mut lg, run_b) = handle.join().unwrap();
+    assert_eq!(run_b.no_backend, 0);
+
+    // Keep the high rate flowing until the autoscaler converges at its
+    // max (each round is more traffic, which is more metrics pushes).
+    let mut rounds = 0;
+    while running(&tb.cp.api) < MAX_REPLICAS as usize && rounds < 40 {
+        lg.run_for(&Curve::Constant { rps: 120.0 }, 5_000);
+        rounds += 1;
+    }
+    assert_eq!(
+        running(&tb.cp.api),
+        MAX_REPLICAS as usize,
+        "hpa did not converge at maxReplicas"
+    );
+    assert_eq!(replicas(&tb.cp.api), MAX_REPLICAS, "spec.replicas exceeded max");
+    println!("    converged at {MAX_REPLICAS} replicas (maxReplicas respected)");
+    println!("    squeue now holds {} serving jobs", tb.cp.slurm.squeue().len());
+
+    // Steady state at scale: the full 120 req/s spread across the
+    // fleet, zero drops, per-pod rate back under target.
+    let steady = lg.run_for(&Curve::Constant { rps: 120.0 }, 20_000);
+    println!(
+        "    steady at scale: served={} dropped={} no_backend={}",
+        steady.served, steady.dropped, steady.no_backend
+    );
+    assert_eq!(steady.dropped, 0, "dropped requests at steady state: {steady:?}");
+    assert_eq!(steady.no_backend, 0);
+    let ips: Vec<String> = tb
+        .cp
+        .api
+        .list("Pod")
+        .iter()
+        .filter(|p| object::pod_phase(p) == "Running")
+        .filter_map(|p| p.str_at("status.podIP").map(str::to_string))
+        .collect();
+    let avg = ips.iter().map(|ip| tb.cp.metrics.rps(ip)).sum::<f64>() / ips.len() as f64;
+    println!("    per-pod rate: {avg:.1} req/s (target {TARGET_RPS})");
+    assert!(avg < TARGET_RPS * 1.3, "per-pod rate did not re-converge: {avg}");
+
+    // Phase C: load falls away; after the stabilization window the
+    // autoscaler walks the fleet back to one replica. The drops here
+    // are the stale-endpoint window of the pods being torn down.
+    println!("\n--> phase C: load drops to 5 req/s; waiting for scale-in");
+    let run_c = lg.run_for(&Curve::Constant { rps: 5.0 }, 30_000);
+    assert_eq!(run_c.no_backend, 0);
+    assert!(
+        tb.cp.wait_until(120_000, |api| replicas(api) == 1 && running(api) == 1),
+        "hpa never scaled back in"
+    );
+    println!(
+        "    scaled back to 1 replica ({} requests hit the teardown window)",
+        run_c.dropped
+    );
+
+    let totals = lg.stats();
+    println!(
+        "\ntotals: served={} dropped={} no_backend={}",
+        totals.served, totals.dropped, totals.no_backend
+    );
+    assert_eq!(totals.no_backend, 0, "service was never without endpoints");
+    let hpa = tb.cp.api.get("HorizontalPodAutoscaler", "default", "model").unwrap();
+    println!(
+        "hpa status: currentReplicas={} desiredReplicas={}",
+        hpa.i64_at("status.currentReplicas").unwrap_or(-1),
+        hpa.i64_at("status.desiredReplicas").unwrap_or(-1),
+    );
+
+    tb.shutdown();
+    println!("== serving_load complete ==");
+}

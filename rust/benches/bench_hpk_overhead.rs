@@ -27,6 +27,7 @@ use hpk::kube::object;
 use hpk::kube::WakeReason;
 use hpk::slurm::{JobSpec, SlurmConfig};
 use hpk::testbed;
+use hpk::traffic::{Curve, LoadGen, PodMetrics, ServiceProxy};
 use hpk::yamlkit::parse_one;
 use hpk::yamlkit::Value;
 use std::time::{Duration, Instant};
@@ -562,6 +563,110 @@ fn main() {
             "# expectation: backfill=true completes narrow jobs ~immediately; false waits for the wide queue"
         );
     }
+
+    // ---- 6. E6-traffic: dataplane throughput, HPA reaction, drain drops ----
+    // The request loop of the traffic subsystem: picker throughput is a
+    // pure-dataplane microbench; reaction and drain run the full stack
+    // (loadgen -> proxy -> metrics -> HPA -> Deployment -> Slurm).
+    println!("# E6.1: sustained picks through the service dataplane");
+    let api = hpk::kube::ApiServer::new();
+    let svc = api
+        .create(
+            parse_one("kind: Service\nmetadata:\n  name: web\nspec:\n  clusterIP: None\n")
+                .unwrap(),
+        )
+        .unwrap();
+    let addrs: Vec<String> = (1..=10).map(|i| format!("10.244.0.{i}")).collect();
+    api.create(object::new_endpoint_slice(&svc, "web-0", &addrs)).unwrap();
+    let proxy = ServiceProxy::new(api.clone());
+    let metrics = PodMetrics::new(hpk::hpcsim::Clock::new(100));
+    let picks = if smoke { 20_000 } else { 200_000 };
+    let t0 = Instant::now();
+    for _ in 0..picks {
+        let addr = proxy.pick("default", "web").expect("backend");
+        metrics.record(&addr);
+    }
+    let req_per_s = picks as f64 / t0.elapsed().as_secs_f64();
+    println!("pick+record: {req_per_s:.0} req/s over {} backends\n", addrs.len());
+    results.push(("e6t_req_per_s", req_per_s));
+
+    // E6.2: scale-out reaction — virtual ms from the load step to a
+    // second pod Running (HPA 1 -> N through Deployment/RS/Slurm).
+    println!("# E6.2: HPA scale-out reaction under a load step");
+    let tb = testbed::deploy(2, 8);
+    tb.cp
+        .kubectl_apply(
+            "kind: Service\nmetadata:\n  name: web\nspec:\n  clusterIP: None\n  selector:\n    app: web\n---\nkind: Deployment\nmetadata:\n  name: web\nspec:\n  replicas: 1\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: main\n        image: pause:3.9\n---\nkind: HorizontalPodAutoscaler\nmetadata:\n  name: web\nspec:\n  minReplicas: 1\n  maxReplicas: 4\n  targetRequestsPerSecond: 20\n  stabilizationWindowMs: 200000\n  scaleTargetRef:\n    kind: Deployment\n    name: web\n",
+        )
+        .unwrap();
+    assert!(tb.cp.wait_until(30_000, |api| {
+        api.list("Pod").iter().any(|p| object::pod_phase(p) == "Running")
+    }));
+    let clock = tb.cp.cluster.clock.clone();
+    let mut lg = LoadGen::new(
+        &tb.cp.api,
+        tb.cp.dns.clone(),
+        tb.cp.proxy.clone(),
+        tb.cp.metrics.clone(),
+        clock.clone(),
+        "web",
+    )
+    .with_seed(7);
+    let step_sim_ms: u64 = if smoke { 30_000 } else { 60_000 };
+    let t0_sim = clock.now_ms();
+    let loadgen = std::thread::spawn(move || {
+        let run = lg.run_for(&Curve::Constant { rps: 120.0 }, step_sim_ms);
+        (lg, run)
+    });
+    assert!(
+        tb.cp.wait_until(30_000, |api| {
+            api.list("Pod")
+                .iter()
+                .filter(|p| object::pod_phase(p) == "Running")
+                .count()
+                >= 2
+        }),
+        "HPA never scaled out under load"
+    );
+    let reaction_ms = (clock.now_ms() - t0_sim) as f64;
+    let (mut lg, step_run) = loadgen.join().unwrap();
+    println!(
+        "load step -> second pod Running: {reaction_ms:.0} sim ms (step run: {} served / {} dropped / {} no-backend)\n",
+        step_run.served, step_run.dropped, step_run.no_backend
+    );
+    results.push(("e6t_reaction_ms", reaction_ms));
+
+    // E6.3: dropped requests across a node drain — the stale-endpoint
+    // window between pods dying with their node and EndpointSlice churn
+    // converging on the survivors.
+    println!("# E6.3: dropped requests during a node drain");
+    let victim = tb.cp.slurm.squeue()[0].nodes[0].clone();
+    let drain_sim_ms: u64 = if smoke { 30_000 } else { 60_000 };
+    let drained = std::thread::spawn(move || {
+        let run = lg.run_for(&Curve::Constant { rps: 80.0 }, drain_sim_ms);
+        (lg, run)
+    });
+    assert!(tb.cp.cluster.fail_node(&victim));
+    // Replacement pods land on the surviving node; wait for the service
+    // to converge on Running backends only.
+    assert!(tb.cp.wait_until(30_000, |api| {
+        let running: Vec<String> = api
+            .list("Pod")
+            .iter()
+            .filter(|p| object::pod_phase(p) == "Running")
+            .filter_map(|p| p.str_at("status.podIP").map(|s| s.to_string()))
+            .collect();
+        let eps = tb.cp.service_endpoints("default", "web");
+        !eps.is_empty() && eps.iter().all(|e| running.contains(e))
+    }));
+    let (_, drain_run) = drained.join().unwrap();
+    println!(
+        "drain of {victim}: {} dropped, {} no-backend, {} served\n",
+        drain_run.dropped, drain_run.no_backend, drain_run.served
+    );
+    results.push(("e6t_dropped", drain_run.dropped as f64));
+    results.push(("e6t_no_backend", drain_run.no_backend as f64));
+    tb.shutdown();
 
     write_json(&results);
 }

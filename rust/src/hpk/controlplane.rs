@@ -18,10 +18,11 @@ use crate::hpcsim::{Cluster, ClusterSpec};
 use crate::kube::api::ApiServer;
 use crate::kube::controllers::{
     ControllerManager, DeploymentController, EndpointsController, GcController,
-    JobController, ReplicaSetController,
+    HpaController, JobController, ReplicaSetController,
 };
 use crate::kube::coredns::CoreDns;
 use crate::slurm::{Slurmctld, SlurmConfig};
+use crate::traffic::{PodMetrics, ServiceProxy};
 use crate::util::Rng;
 use crate::virtfs::VirtFs;
 use crate::yamlkit::Value;
@@ -56,6 +57,12 @@ pub struct ControlPlane {
     pub fs: VirtFs,
     pub cluster: Cluster,
     pub kubeconfig: Value,
+    /// The deployment's shared request-metrics source: serving
+    /// containers and load generators record into it, the HPA scales
+    /// from it. Also published in the runtime's service hub.
+    pub metrics: Arc<PodMetrics>,
+    /// Client-side service dataplane over the EndpointSlice cache.
+    pub proxy: ServiceProxy,
     controller_manager: Option<ControllerManager>,
 }
 
@@ -91,9 +98,16 @@ impl ControlPlane {
             config.slurm.clone(),
         );
 
-        // ... then the controller manager (+ HPK's scheduler): one
-        // push-woken thread per reconciler, no poll tick — the control
-        // plane costs nothing while the cluster is quiet.
+        // Request metrics predate the controller manager: the HPA
+        // reconciler parks on this hub, and serving containers find it
+        // through the runtime's service hub.
+        let metrics = Arc::new(PodMetrics::new(cluster.clock.clone()));
+        runtime.hub.insert(metrics.clone());
+
+        // ... then the controller manager (+ HPK's scheduler + the
+        // autoscaler): one push-woken thread per reconciler, no poll
+        // tick — the control plane costs nothing while the cluster is
+        // quiet.
         let controller_manager = ControllerManager::start(
             api.clone(),
             vec![
@@ -103,11 +117,14 @@ impl ControlPlane {
                 Box::new(EndpointsController),
                 Box::new(GcController),
                 Box::new(PassThroughScheduler),
+                Box::new(HpaController::new(metrics.clone(), cluster.clock.clone())),
             ],
         );
 
-        // ... then CoreDNS and finally the kubelet announcing its node.
+        // ... then CoreDNS, the service dataplane, and finally the
+        // kubelet announcing its node.
         let dns = CoreDns::new(api.clone());
+        let proxy = ServiceProxy::new(api.clone());
         let kubelet = HpkKubelet::start(api.clone(), slurm.clone(), fs.clone());
 
         // Produce the kubeconfig in the home directory.
@@ -136,6 +153,8 @@ impl ControlPlane {
             fs,
             cluster,
             kubeconfig,
+            metrics,
+            proxy,
             controller_manager: Some(controller_manager),
         }
     }

@@ -1,0 +1,307 @@
+//! HorizontalPodAutoscaler controller: scale Deployments off per-pod
+//! request rates.
+//!
+//! The control loop is upstream's target-utilization rule over the
+//! [`PodMetrics`] req/s view: `desired = ceil(current * avg / target)`,
+//! with a ±10% tolerance band so measurement noise does not thrash
+//! replicas, min/max bounds (minimum is floored at 1 — scale-to-zero
+//! is refused), and a scale-*down* stabilization window measured in
+//! simulated ms so flap protection compresses with the cluster's time
+//! scale.
+//!
+//! Wakeups come from two push sources: the informer bus (HPA /
+//! Deployment / Pod churn), and the metrics hub — [`Reconciler::
+//! attach_wakes`] parks the controller thread's subscription on
+//! [`PodMetrics`], so request traffic itself wakes the evaluator.
+//! Evaluations are rate-limited to once per simulated second, and
+//! status is only written when a value actually changed, so an idle
+//! service costs no API writes.
+
+use super::{Context, Reconciler};
+use crate::hpcsim::Clock;
+use crate::kube::client::ListParams;
+use crate::kube::informer::WatchSpec;
+use crate::kube::object::{self, HPA_KIND};
+use crate::kube::store::Subscription;
+use crate::traffic::PodMetrics;
+use crate::yamlkit::Value;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Minimum simulated ms between evaluation sweeps (traffic can wake the
+/// thread far more often than replica counts should move).
+const EVAL_INTERVAL_MS: u64 = 1_000;
+
+/// No scaling while `|avg/target - 1|` is inside this band.
+const TOLERANCE: f64 = 0.1;
+
+/// Default `spec.stabilizationWindowMs` (simulated): no scale-down
+/// within this long of the last scale in either direction.
+const DEFAULT_STABILIZATION_MS: i64 = 30_000;
+
+const DEFAULT_MAX_REPLICAS: i64 = 10;
+
+/// The autoscaler reconciler. Needs the shared [`PodMetrics`] source
+/// and the cluster [`Clock`], so it is not part of
+/// [`super::ControllerManager::standard`] — deployments wire it in
+/// explicitly.
+pub struct HpaController {
+    metrics: Arc<PodMetrics>,
+    clock: Clock,
+    last_eval_ms: AtomicU64,
+}
+
+impl HpaController {
+    pub fn new(metrics: Arc<PodMetrics>, clock: Clock) -> HpaController {
+        HpaController {
+            metrics,
+            clock,
+            last_eval_ms: AtomicU64::new(0),
+        }
+    }
+
+    fn evaluate(&self, ctx: &Context, hpa: &Value, now: u64) {
+        let ns = object::namespace(hpa);
+        let name = object::name(hpa);
+        if hpa.str_at("spec.scaleTargetRef.kind").unwrap_or("Deployment") != "Deployment" {
+            return;
+        }
+        let Some(target_name) = hpa.str_at("spec.scaleTargetRef.name") else {
+            return;
+        };
+        let target_rps = match hpa
+            .path("spec.targetRequestsPerSecond")
+            .and_then(|v| v.as_f64())
+        {
+            Some(t) if t > 0.0 => t,
+            _ => return,
+        };
+        let deployments = ctx.api("Deployment");
+        // Fresh read: the scale write below must not clobber a newer
+        // spec through a stale cache snapshot.
+        let Ok(dep) = deployments.get(ns, target_name) else {
+            return;
+        };
+        let current = dep.i64_at("spec.replicas").unwrap_or(1).max(0);
+
+        // The target's Running pods, by selector, from the cache.
+        let mut params = ListParams::in_namespace(ns);
+        if let Some(sel) = dep.path("spec.selector") {
+            for (k, v) in object::selector_labels(sel) {
+                params = params.with_label(&k, &v);
+            }
+        }
+        let ips: Vec<String> = ctx
+            .informer
+            .select("Pod", &params)
+            .iter()
+            .filter(|p| object::pod_phase(p) == "Running")
+            .filter_map(|p| p.str_at("status.podIP").map(|s| s.to_string()))
+            .collect();
+        if ips.is_empty() {
+            // No serving pods yet: nothing to measure, nothing to scale
+            // from (and never a reason to scale to zero).
+            return;
+        }
+        let avg = ips.iter().map(|ip| self.metrics.rps(ip)).sum::<f64>() / ips.len() as f64;
+
+        let min = hpa.i64_at("spec.minReplicas").unwrap_or(1).max(1);
+        let max = hpa
+            .i64_at("spec.maxReplicas")
+            .unwrap_or(DEFAULT_MAX_REPLICAS)
+            .max(min);
+        let ratio = avg / target_rps;
+        let mut desired = if (ratio - 1.0).abs() <= TOLERANCE {
+            current
+        } else {
+            (current.max(1) as f64 * ratio).ceil() as i64
+        };
+        desired = desired.clamp(min, max);
+
+        let window = hpa
+            .i64_at("spec.stabilizationWindowMs")
+            .unwrap_or(DEFAULT_STABILIZATION_MS)
+            .max(0) as u64;
+        let last_scale = hpa.i64_at("status.lastScaleTimeMs").unwrap_or(0).max(0) as u64;
+        if desired < current && now.saturating_sub(last_scale) < window {
+            // Flap protection: scale-up stays immediate, scale-down
+            // waits out the stabilization window.
+            desired = current;
+        }
+
+        let mut scaled = false;
+        if desired != current {
+            let mut dep2 = dep.clone();
+            dep2.entry_map("spec").set("replicas", Value::Int(desired));
+            // A conflict means someone else just moved the Deployment;
+            // the next evaluation re-reads and retries.
+            if deployments.update(dep2).is_ok() {
+                scaled = true;
+                ctx.client.server().record_event(
+                    ns,
+                    &format!("{HPA_KIND}/{name}"),
+                    "Scaled",
+                    &format!(
+                        "{current} -> {desired} replicas (avg {avg:.1} req/s, target {target_rps:.1})"
+                    ),
+                );
+            }
+        }
+
+        let rounded = avg.round() as i64;
+        let changed = scaled
+            || hpa.i64_at("status.currentReplicas") != Some(current)
+            || hpa.i64_at("status.desiredReplicas") != Some(desired)
+            || hpa.i64_at("status.currentRequestsPerSecond") != Some(rounded);
+        if changed {
+            let mut status = Value::map();
+            status.set("currentReplicas", Value::Int(current));
+            status.set("desiredReplicas", Value::Int(desired));
+            status.set("currentRequestsPerSecond", Value::Int(rounded));
+            let stamp = if scaled { now as i64 } else { last_scale as i64 };
+            status.set("lastScaleTimeMs", Value::Int(stamp));
+            let _ = ctx.api(HPA_KIND).update_status(ns, name, status);
+        }
+    }
+}
+
+impl Reconciler for HpaController {
+    fn name(&self) -> &'static str {
+        "horizontalpodautoscaler"
+    }
+
+    fn watches(&self) -> Vec<WatchSpec> {
+        vec![
+            WatchSpec::of(HPA_KIND),
+            WatchSpec::of("Deployment"),
+            WatchSpec::of("Pod"),
+        ]
+    }
+
+    fn attach_wakes(&self, sub: &Subscription) {
+        // Ride the traffic: every metrics record pokes the controller
+        // thread's subscription (coalesced), no metrics poll anywhere.
+        self.metrics.attach(sub);
+    }
+
+    fn reconcile(&self, ctx: &Context) {
+        let drained = ctx.drain();
+        let now = self.clock.now_ms();
+        let due =
+            now.saturating_sub(self.last_eval_ms.load(Ordering::Relaxed)) >= EVAL_INTERVAL_MS;
+        if drained.is_empty() && !due {
+            return;
+        }
+        self.last_eval_ms.store(now, Ordering::Relaxed);
+        for hpa in ctx.informer.list(HPA_KIND) {
+            self.evaluate(ctx, &hpa, now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::reconcile_until;
+    use super::*;
+    use crate::kube::api::ApiServer;
+    use crate::yamlkit::parse_one;
+
+    fn deployment(replicas: i64) -> Value {
+        parse_one(&format!(
+            "kind: Deployment\nmetadata:\n  name: web\nspec:\n  replicas: {replicas}\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: main\n        image: pause:3.9\n"
+        ))
+        .unwrap()
+    }
+
+    /// Mark every `web` pod Running with a unique IP; returns the IPs.
+    fn run_pods(api: &ApiServer) -> Vec<String> {
+        let mut ips = Vec::new();
+        for (i, pod) in api.list("Pod").iter().enumerate() {
+            let ip = format!("10.1.0.{}", i + 1);
+            if pod.str_at("status.podIP") == Some(ip.as_str()) {
+                ips.push(ip);
+                continue;
+            }
+            let mut status = pod.path("status").cloned().unwrap_or(Value::map());
+            status.set("phase", Value::from("Running"));
+            status.set("podIP", Value::from(ip.as_str()));
+            api.update_status("Pod", object::namespace(pod), object::name(pod), status)
+                .unwrap();
+            ips.push(ip);
+        }
+        ips
+    }
+
+    #[test]
+    fn scales_up_on_load_and_respects_max() {
+        let api = ApiServer::new();
+        let clock = Clock::new(1000);
+        let metrics = Arc::new(PodMetrics::new(clock.clone()));
+        api.create(deployment(1)).unwrap();
+        api.create(object::new_hpa("default", "web", "web", 1, 3, 10)).unwrap();
+        let hpa = HpaController::new(metrics.clone(), clock.clone());
+        let dc = super::super::DeploymentController;
+        let rc = super::super::ReplicaSetController;
+        reconcile_until(&api, &[&dc, &rc], |a| a.list("Pod").len() == 1, 20);
+        // Overwhelm the single pod far past the target rate.
+        reconcile_until(
+            &api,
+            &[&dc, &rc, &hpa],
+            |a| {
+                for ip in run_pods(a) {
+                    for _ in 0..40 {
+                        metrics.record(&ip);
+                    }
+                }
+                clock.sleep_sim(1_100);
+                a.get("Deployment", "default", "web")
+                    .unwrap()
+                    .i64_at("spec.replicas")
+                    == Some(3)
+            },
+            40,
+        );
+        // maxReplicas caps it there no matter how hot the pods run.
+        for _ in 0..5 {
+            for ip in run_pods(&api) {
+                for _ in 0..100 {
+                    metrics.record(&ip);
+                }
+            }
+            clock.sleep_sim(1_100);
+            crate::kube::controllers::testutil::reconcile_once(&api, &hpa);
+        }
+        let dep = api.get("Deployment", "default", "web").unwrap();
+        assert_eq!(dep.i64_at("spec.replicas"), Some(3));
+    }
+
+    #[test]
+    fn refuses_scale_to_zero_and_waits_out_stabilization() {
+        let api = ApiServer::new();
+        let clock = Clock::new(1000);
+        let metrics = Arc::new(PodMetrics::new(clock.clone()));
+        api.create(deployment(2)).unwrap();
+        // minReplicas 0 must still floor at 1.
+        let mut h = object::new_hpa("default", "web", "web", 0, 5, 10);
+        // Wide window: at time scale 1000 the pre-test setup alone
+        // burns thousands of simulated ms, and the window is measured
+        // from lastScaleTimeMs=0 for a never-scaled HPA.
+        h.entry_map("spec").set("stabilizationWindowMs", Value::Int(300_000));
+        api.create(h).unwrap();
+        let hpa = HpaController::new(metrics.clone(), clock.clone());
+        let dc = super::super::DeploymentController;
+        let rc = super::super::ReplicaSetController;
+        reconcile_until(&api, &[&dc, &rc], |a| a.list("Pod").len() == 2, 20);
+        run_pods(&api);
+        // Zero traffic + fresh window: stabilization holds replicas.
+        clock.sleep_sim(1_100);
+        crate::kube::controllers::testutil::reconcile_once(&api, &hpa);
+        let dep = api.get("Deployment", "default", "web").unwrap();
+        assert_eq!(dep.i64_at("spec.replicas"), Some(2), "no flap inside window");
+        // Past the window the scale-down lands, but never below 1.
+        clock.sleep_sim(310_000);
+        crate::kube::controllers::testutil::reconcile_once(&api, &hpa);
+        let dep = api.get("Deployment", "default", "web").unwrap();
+        assert_eq!(dep.i64_at("spec.replicas"), Some(1), "floors at 1, not 0");
+    }
+}

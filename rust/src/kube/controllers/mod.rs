@@ -19,12 +19,14 @@
 mod deployment;
 mod endpoints;
 mod gc;
+mod hpa;
 mod job;
 mod replicaset;
 
 pub use deployment::DeploymentController;
 pub use endpoints::EndpointsController;
 pub use gc::GcController;
+pub use hpa::HpaController;
 pub use job::JobController;
 pub use replicaset::ReplicaSetController;
 
@@ -142,6 +144,11 @@ pub trait Reconciler: Send + Sync + 'static {
     fn name(&self) -> &'static str;
     /// The event sources feeding this reconciler's work queue.
     fn watches(&self) -> Vec<WatchSpec>;
+    /// Register the thread's wakeup handle with any *extra* push
+    /// sources beyond the store bus (the [`HpaController`] parks it on
+    /// the metrics hub so request traffic wakes evaluation). Default:
+    /// store events only.
+    fn attach_wakes(&self, _sub: &Subscription) {}
     fn reconcile(&self, ctx: &Context);
 }
 
@@ -238,6 +245,9 @@ impl ControllerManager {
             };
             let queue = informer.register(specs);
             let ctx = Context::new(&api, informer.clone(), queue);
+            // Extra push sources (e.g. the metrics hub) wake the same
+            // handle the store bus does — one merged wait per thread.
+            r.attach_wakes(&sub);
             subscriptions.push(sub.clone());
             // Exactly one thread owns the periodic level-triggered
             // resync (it reseeds every queue, not just its own).

@@ -69,6 +69,22 @@
 //! (client + informer + its own work queue) plus its own subscription
 //! to block on.
 //!
+//! # Horizontal pod autoscaling
+//!
+//! [`controllers::HpaController`] reconciles
+//! [`object::HPA_KIND`] objects: it reads each target Deployment's
+//! Running pods from the informer cache, averages their windowed
+//! req/s from the shared [`crate::traffic::PodMetrics`] source, and
+//! applies the upstream target-utilization rule
+//! `desired = ceil(current * avg / target)` with a ±10% tolerance
+//! band, min/max bounds (floored at one replica — scale-to-zero is
+//! refused), and a scale-down stabilization window in *simulated* ms.
+//! It is push-woken twice over: store events queue its keys like any
+//! reconciler, and [`controllers::Reconciler::attach_wakes`] parks the
+//! same thread handle on the metrics hub, so request traffic itself
+//! (not a poll tick) triggers evaluation — rate-limited to once per
+//! simulated second, writing status only when a value changed.
+//!
 //! The subscription machinery is the shared [`crate::util::sub`]
 //! primitive; [`crate::slurm::Slurmctld`]'s job-event bus publishes
 //! through the same implementation, and hpk-kubelet registers one

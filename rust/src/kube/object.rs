@@ -224,6 +224,34 @@ pub fn aggregate_slice_addresses(slices: &[Arc<Value>]) -> Vec<String> {
     out
 }
 
+/// Kind name of the autoscaler objects
+/// [`crate::kube::controllers::HpaController`] reconciles.
+pub const HPA_KIND: &str = "HorizontalPodAutoscaler";
+
+/// Build a HorizontalPodAutoscaler scaling `deployment` between
+/// `min_replicas` and `max_replicas` toward `target_rps` requests/s per
+/// pod. Callers needing a non-default stabilization window set
+/// `spec.stabilizationWindowMs` on the returned object.
+pub fn new_hpa(
+    namespace_s: &str,
+    name_s: &str,
+    deployment: &str,
+    min_replicas: i64,
+    max_replicas: i64,
+    target_rps: i64,
+) -> Value {
+    let mut v = new_object(HPA_KIND, namespace_s, name_s);
+    v.set("apiVersion", Value::from("autoscaling/v2"));
+    let spec = v.entry_map("spec");
+    spec.set("minReplicas", Value::Int(min_replicas));
+    spec.set("maxReplicas", Value::Int(max_replicas));
+    spec.set("targetRequestsPerSecond", Value::Int(target_rps));
+    let target = spec.entry_map("scaleTargetRef");
+    target.set("kind", Value::from("Deployment"));
+    target.set("name", Value::from(deployment));
+    v
+}
+
 /// Build a minimal object skeleton.
 pub fn new_object(kind_s: &str, namespace_s: &str, name_s: &str) -> Value {
     let mut v = Value::map();
@@ -311,6 +339,18 @@ mod tests {
         assert_eq!(slice_endpoints(&a).len(), 2);
         let merged = aggregate_slice_addresses(&[std::sync::Arc::new(a), std::sync::Arc::new(b)]);
         assert_eq!(merged, vec!["10.0.0.1", "10.0.0.2", "10.0.0.3"]);
+    }
+
+    #[test]
+    fn hpa_builder_shape() {
+        let h = new_hpa("prod", "web-hpa", "web", 1, 6, 25);
+        assert_eq!(kind(&h), HPA_KIND);
+        assert_eq!(namespace(&h), "prod");
+        assert_eq!(h.str_at("spec.scaleTargetRef.kind"), Some("Deployment"));
+        assert_eq!(h.str_at("spec.scaleTargetRef.name"), Some("web"));
+        assert_eq!(h.i64_at("spec.minReplicas"), Some(1));
+        assert_eq!(h.i64_at("spec.maxReplicas"), Some(6));
+        assert_eq!(h.i64_at("spec.targetRequestsPerSecond"), Some(25));
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //!   against; reconcile work scales with events, not object count.
 //! - [`hpk`] — **the paper's contribution**: hpk-kubelet, pass-through
 //!   scheduler, service admission controller, control-plane bootstrap.
+//! - [`traffic`] — the request loop over those services: kube-proxy
+//!   dataplane, virtual-time load generator, per-pod request metrics
+//!   (which feed the [`kube::controllers::HpaController`]).
 //! - [`runtime`] — PJRT loading/execution of the AOT compute artifacts.
 //! - [`workloads`] — container-image → entrypoint dispatch.
 //! - [`operators`] — Argo Workflows, Spark, Training, MinIO, OpenEBS.
@@ -31,6 +34,7 @@ pub mod slurm;
 pub mod apptainer;
 pub mod kube;
 pub mod hpk;
+pub mod traffic;
 pub mod runtime;
 pub mod workloads;
 pub mod operators;

@@ -7,6 +7,7 @@
 
 use crate::apptainer::{ApptainerRuntime, ImageSpec};
 use crate::runtime::{PjrtRuntime, Tensor};
+use crate::traffic::PodMetrics;
 use std::sync::{Arc, Mutex};
 
 pub const SERVING_PORT: u16 = 8501;
@@ -18,6 +19,11 @@ pub struct InferenceServer {
     params: Vec<Tensor>,
     requests: Mutex<u64>,
     batch: usize,
+    /// Server-side request metering: (shared source, this pod's IP).
+    /// The client-side [`crate::traffic::LoadGen`] meters picks it never
+    /// delivers, so exactly one side records per request — in-process
+    /// callers (e.g. the workflow stages) go through this hook.
+    meter: Option<(Arc<PodMetrics>, String)>,
 }
 
 impl InferenceServer {
@@ -35,7 +41,15 @@ impl InferenceServer {
             params,
             requests: Mutex::new(0),
             batch,
+            meter: None,
         })
+    }
+
+    /// Record every classify call into `metrics` under `key` (the pod
+    /// IP) — how a served pod shows up in the HPA's req/s view.
+    pub fn with_meter(mut self, metrics: Arc<PodMetrics>, key: &str) -> InferenceServer {
+        self.meter = Some((metrics, key.to_string()));
+        self
     }
 
     /// Classify a batch of flattened images (any count; padded to the
@@ -74,6 +88,9 @@ impl InferenceServer {
             start += count;
         }
         *self.requests.lock().unwrap() += 1;
+        if let Some((metrics, key)) = &self.meter {
+            metrics.record(key);
+        }
         Ok(labels)
     }
 
@@ -94,7 +111,14 @@ pub fn register_serving_image(rt: &ApptainerRuntime) {
         let path = ctx.env_or("MODEL_PATH", "");
         let bytes = ctx.fs.read(&path).map_err(|e| e.to_string())?;
         let params = super::trainer_decode(&bytes)?;
-        let server = Arc::new(InferenceServer::new(pjrt, &variant, params)?);
+        let mut server = InferenceServer::new(pjrt, &variant, params)?;
+        // Meter under the pod IP when the deployment shares a metrics
+        // source (the HPA's view); loadgen-driven traffic is metered
+        // client-side instead, so the two paths never double-count.
+        if let Some(metrics) = ctx.hub.get::<PodMetrics>() {
+            server = server.with_meter(metrics, &ctx.ip.to_string());
+        }
+        let server = Arc::new(server);
         if !ctx.fabric.bind(ctx.ip, SERVING_PORT, server) {
             return Err("serving port already bound".to_string());
         }

@@ -90,6 +90,12 @@ pub struct VanillaBed {
     pub runtime: Arc<crate::apptainer::ApptainerRuntime>,
     pub fs: crate::virtfs::VirtFs,
     pub pjrt: Option<Arc<PjrtRuntime>>,
+    /// Shared request-metrics source (parity with
+    /// [`ControlPlane::metrics`]).
+    pub metrics: Arc<crate::traffic::PodMetrics>,
+    /// Client-side service dataplane (parity with
+    /// [`ControlPlane::proxy`]).
+    pub proxy: crate::traffic::ServiceProxy,
     kubelets: Vec<Arc<crate::kube::kubelet::VanillaKubelet>>,
     cm: Option<crate::kube::controllers::ControllerManager>,
 }
@@ -135,6 +141,9 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
     operators::training::register_serving_image(&runtime);
     runtime.hub.insert(Arc::new(api.clone()));
     runtime.hub.insert(Arc::new(dns.clone()));
+    let metrics = Arc::new(crate::traffic::PodMetrics::new(cluster.clock.clone()));
+    runtime.hub.insert(metrics.clone());
+    let proxy = crate::traffic::ServiceProxy::new(api.clone());
     let pjrt = PjrtRuntime::open(&crate::runtime::artifacts_dir())
         .ok()
         .map(Arc::new);
@@ -159,6 +168,7 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
         Box::new(crate::kube::scheduler::DefaultScheduler),
         Box::new(operators::argo::WorkflowController { fs: Some(fs2) }),
         Box::new(operators::spark::SparkOperator),
+        Box::new(HpaController::new(metrics.clone(), cluster.clock.clone())),
     ];
     if pjrt.is_some() {
         let registry = runtime
@@ -169,7 +179,7 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
     }
     let cm = ControllerManager::start(api.clone(), reconcilers);
 
-    VanillaBed { api, dns, runtime, fs, pjrt, kubelets, cm: Some(cm) }
+    VanillaBed { api, dns, runtime, fs, pjrt, metrics, proxy, kubelets, cm: Some(cm) }
 }
 
 impl VanillaBed {

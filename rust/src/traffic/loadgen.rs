@@ -1,0 +1,266 @@
+//! The simulated client fleet: request curves over virtual time.
+//!
+//! A [`LoadGen`] targets one Service. Per pacing step it resolves the
+//! service through [`CoreDns`] (the discovery step every real client
+//! performs), then fires the step's request quota through the
+//! [`ServiceProxy`] picker. Each request lands in exactly one outcome
+//! bucket:
+//!
+//! - **served** — the picked backend's pod is Running; the request is
+//!   counted into [`PodMetrics`] under the pod IP (what the HPA reads).
+//! - **dropped** — the picked backend's pod is gone or not Running:
+//!   the stale-endpoint window between a pod dying (node drain, scale
+//!   down) and EndpointSlice churn converging.
+//! - **no-backend** — the service currently has no endpoints at all.
+//!
+//! Pacing runs entirely on [`Clock`] virtual time (`sleep_sim`), and
+//! fractional request budgets carry across steps, so a 0.5 req/s curve
+//! still fires once per two virtual seconds. With a fixed seed the
+//! weighted-pick trace is deterministic.
+
+use super::metrics::PodMetrics;
+use super::proxy::ServiceProxy;
+use crate::hpcsim::Clock;
+use crate::kube::api::ApiServer;
+use crate::kube::informer::SharedInformer;
+use crate::kube::store::{Subscription, WakeReason};
+use crate::kube::{object, CoreDns};
+use crate::util::Rng;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A request-rate curve over virtual time (ms since the run started).
+#[derive(Debug, Clone)]
+pub enum Curve {
+    /// Flat rate.
+    Constant { rps: f64 },
+    /// Flat `before_rps`, jumping to `after_rps` at `step_at_ms` — the
+    /// scale-out reaction scenario.
+    Step {
+        before_rps: f64,
+        after_rps: f64,
+        step_at_ms: u64,
+    },
+    /// Sinusoidal day/night swing between `base_rps` and `peak_rps`
+    /// with the given period — the SS4.3 inference-endpoint scenario.
+    Diurnal {
+        base_rps: f64,
+        peak_rps: f64,
+        period_ms: u64,
+    },
+}
+
+impl Curve {
+    /// Target rate (req per simulated second) at `t_ms` into the run.
+    pub fn rate_at(&self, t_ms: u64) -> f64 {
+        match self {
+            Curve::Constant { rps } => *rps,
+            Curve::Step { before_rps, after_rps, step_at_ms } => {
+                if t_ms < *step_at_ms {
+                    *before_rps
+                } else {
+                    *after_rps
+                }
+            }
+            Curve::Diurnal { base_rps, peak_rps, period_ms } => {
+                let phase = (t_ms % period_ms.max(1)) as f64
+                    / (*period_ms).max(1) as f64;
+                let swing = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+                base_rps + (peak_rps - base_rps) * swing
+            }
+        }
+    }
+}
+
+/// Cumulative per-outcome request counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadStats {
+    pub served: u64,
+    pub dropped: u64,
+    pub no_backend: u64,
+}
+
+impl LoadStats {
+    pub fn total(&self) -> u64 {
+        self.served + self.dropped + self.no_backend
+    }
+}
+
+/// Pacing step, in simulated ms (requests are batched per step).
+const STEP_SIM_MS: u64 = 50;
+
+/// A client fleet firing at one service.
+pub struct LoadGen {
+    dns: CoreDns,
+    proxy: ServiceProxy,
+    metrics: Arc<PodMetrics>,
+    clock: Clock,
+    namespace: String,
+    service: String,
+    query: String,
+    /// Pod-liveness view: a Pod-scoped informer, push-refreshed.
+    pods: SharedInformer,
+    pods_sub: Subscription,
+    live: HashSet<String>,
+    rng: Rng,
+    weighted: bool,
+    stats: LoadStats,
+}
+
+impl LoadGen {
+    /// Target `service` as a DNS-style query (`svc` or `svc.ns`;
+    /// namespace defaults to `default`).
+    pub fn new(
+        api: &ApiServer,
+        dns: CoreDns,
+        proxy: ServiceProxy,
+        metrics: Arc<PodMetrics>,
+        clock: Clock,
+        service: &str,
+    ) -> LoadGen {
+        let mut parts = service.splitn(2, '.');
+        let svc = parts.next().unwrap_or("").to_string();
+        let namespace = parts.next().unwrap_or("default").to_string();
+        let pods = SharedInformer::for_kinds(api.clone(), &["Pod"]);
+        let pods_sub = pods.subscribe();
+        LoadGen {
+            dns,
+            proxy,
+            metrics,
+            clock,
+            query: format!("{svc}.{namespace}"),
+            namespace,
+            service: svc,
+            pods,
+            pods_sub,
+            live: HashSet::new(),
+            rng: Rng::new(0),
+            weighted: false,
+            stats: LoadStats::default(),
+        }
+    }
+
+    /// Seed the weighted-pick stream (deterministic traces).
+    pub fn with_seed(mut self, seed: u64) -> LoadGen {
+        self.rng = Rng::new(seed);
+        self
+    }
+
+    /// Use the weighted picker instead of round-robin.
+    pub fn with_weighted(mut self) -> LoadGen {
+        self.weighted = true;
+        self
+    }
+
+    /// Cumulative outcome counts.
+    pub fn stats(&self) -> LoadStats {
+        self.stats
+    }
+
+    /// Refresh the Running-pod-IP set when pod events landed (born
+    /// signaled, so the first request sees pre-existing pods).
+    fn refresh_live(&mut self) {
+        if self.pods_sub.wait(Duration::ZERO) != WakeReason::Notified {
+            return;
+        }
+        self.pods.sync();
+        self.live = self
+            .pods
+            .list("Pod")
+            .iter()
+            .filter(|p| object::pod_phase(p) == "Running")
+            .filter_map(|p| p.str_at("status.podIP").map(|ip| ip.to_string()))
+            .collect();
+    }
+
+    fn fire_one(&mut self) {
+        let picked = if self.weighted {
+            self.proxy
+                .pick_weighted(&self.namespace, &self.service, &mut self.rng)
+        } else {
+            self.proxy.pick(&self.namespace, &self.service)
+        };
+        let Some(addr) = picked else {
+            self.stats.no_backend += 1;
+            return;
+        };
+        if self.live.contains(&addr) {
+            self.stats.served += 1;
+            self.metrics.record(&addr);
+        } else {
+            self.stats.dropped += 1;
+        }
+    }
+
+    /// Drive `curve` for `sim_ms` simulated ms; returns the outcome
+    /// counts of *this run* (cumulative totals stay in
+    /// [`LoadGen::stats`]). All pacing is `Clock::sleep_sim` — no
+    /// wall-clock sleeps.
+    pub fn run_for(&mut self, curve: &Curve, sim_ms: u64) -> LoadStats {
+        let before = self.stats;
+        let start = self.clock.now_ms();
+        let mut carry = 0.0f64;
+        loop {
+            let t = self.clock.now_ms().saturating_sub(start);
+            if t >= sim_ms {
+                break;
+            }
+            // DNS discovery once per step, like a client with a short
+            // resolver cache.
+            let _ = self.dns.resolve(&self.query);
+            self.refresh_live();
+            carry += curve.rate_at(t) * STEP_SIM_MS as f64 / 1000.0;
+            let quota = carry.floor() as u64;
+            carry -= quota as f64;
+            for _ in 0..quota {
+                self.fire_one();
+            }
+            self.clock.sleep_sim(STEP_SIM_MS);
+        }
+        LoadStats {
+            served: self.stats.served - before.served,
+            dropped: self.stats.dropped - before.dropped,
+            no_backend: self.stats.no_backend - before.no_backend,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_shapes() {
+        let c = Curve::Constant { rps: 7.0 };
+        assert_eq!(c.rate_at(0), 7.0);
+        assert_eq!(c.rate_at(1_000_000), 7.0);
+        let s = Curve::Step { before_rps: 2.0, after_rps: 20.0, step_at_ms: 5_000 };
+        assert_eq!(s.rate_at(4_999), 2.0);
+        assert_eq!(s.rate_at(5_000), 20.0);
+        let d = Curve::Diurnal { base_rps: 10.0, peak_rps: 110.0, period_ms: 1_000 };
+        assert!((d.rate_at(0) - 10.0).abs() < 1e-9, "trough at phase 0");
+        assert!((d.rate_at(500) - 110.0).abs() < 1e-9, "peak at half period");
+        let mid = d.rate_at(250);
+        assert!(mid > 10.0 && mid < 110.0);
+    }
+
+    #[test]
+    fn fractional_rates_carry_across_steps() {
+        // 0.5 req/s over 10 simulated seconds ≈ 5 requests — only
+        // possible if sub-step budgets accumulate.
+        let api = ApiServer::new();
+        let clock = Clock::new(2000);
+        let dns = CoreDns::new(api.clone());
+        let proxy = ServiceProxy::new(api.clone());
+        let metrics = Arc::new(PodMetrics::new(clock.clone()));
+        let mut lg = LoadGen::new(&api, dns, proxy, metrics, clock, "ghost");
+        let run = lg.run_for(&Curve::Constant { rps: 0.5 }, 10_000);
+        assert!(
+            (3..=8).contains(&run.no_backend),
+            "expected ~5 requests, got {run:?}"
+        );
+        assert_eq!(run.served, 0);
+        assert_eq!(run.dropped, 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Per-pod request metrics: counters plus a windowed req/s view over
+//! virtual time — the metrics-server role the HPA scales from.
+//!
+//! Keys are pod IPs (the address the dataplane picked), so the load
+//! generator, the serving containers and the HPA all agree on identity
+//! without a lookup: the proxy hands out `status.podIP` strings, and
+//! the HPA maps its target's pods to the same strings.
+//!
+//! Recording is cheap (one mutex'd bucket bump) and *push-publishes*:
+//! every record notifies a coalescing [`SubscriberHub`], which is what
+//! wakes the HPA reconciler under traffic — between wakeups the
+//! controller sleeps, so an idle service costs it nothing.
+
+use crate::hpcsim::Clock;
+use crate::util::{SubscriberHub, Subscription};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Default trailing window for [`PodMetrics::rps`], in *simulated* ms.
+pub const DEFAULT_WINDOW_MS: u64 = 10_000;
+
+/// The hub topic every record notifies.
+pub const METRICS_TOPIC: &str = "PodMetrics";
+
+struct Series {
+    total: u64,
+    /// (bucket index, count), oldest first; pruned past the window.
+    buckets: VecDeque<(u64, u64)>,
+}
+
+/// Windowed per-pod request counters over [`Clock`] virtual time.
+pub struct PodMetrics {
+    clock: Clock,
+    window_ms: u64,
+    bucket_ms: u64,
+    series: Mutex<HashMap<String, Series>>,
+    hub: SubscriberHub,
+}
+
+impl PodMetrics {
+    pub fn new(clock: Clock) -> PodMetrics {
+        PodMetrics::with_window(clock, DEFAULT_WINDOW_MS)
+    }
+
+    /// Custom trailing window (simulated ms).
+    pub fn with_window(clock: Clock, window_ms: u64) -> PodMetrics {
+        let window_ms = window_ms.max(8);
+        PodMetrics {
+            clock,
+            window_ms,
+            bucket_ms: (window_ms / 8).max(1),
+            series: Mutex::new(HashMap::new()),
+            hub: SubscriberHub::new(),
+        }
+    }
+
+    pub fn window_ms(&self) -> u64 {
+        self.window_ms
+    }
+
+    /// Count one request against `key` (a pod IP) and wake subscribers.
+    pub fn record(&self, key: &str) {
+        let now = self.clock.now_ms();
+        let idx = now / self.bucket_ms;
+        {
+            let mut series = self.series.lock().unwrap();
+            let s = series.entry(key.to_string()).or_insert_with(|| Series {
+                total: 0,
+                buckets: VecDeque::new(),
+            });
+            s.total += 1;
+            match s.buckets.back_mut() {
+                Some((i, n)) if *i == idx => *n += 1,
+                _ => s.buckets.push_back((idx, 1)),
+            }
+            Self::prune(s, now, self.window_ms, self.bucket_ms);
+        }
+        self.hub.notify(METRICS_TOPIC);
+    }
+
+    fn prune(s: &mut Series, now: u64, window_ms: u64, bucket_ms: u64) {
+        let horizon = now.saturating_sub(window_ms);
+        while let Some((i, _)) = s.buckets.front() {
+            // Drop buckets that ended before the window started.
+            if i * bucket_ms + bucket_ms <= horizon {
+                s.buckets.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Lifetime request total for `key`.
+    pub fn total(&self, key: &str) -> u64 {
+        self.series
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|s| s.total)
+            .unwrap_or(0)
+    }
+
+    /// Requests per *simulated* second over the trailing window. The
+    /// denominator shrinks to the observed span while the window is
+    /// still filling, so a fresh pod's rate is not underestimated.
+    pub fn rps(&self, key: &str) -> f64 {
+        let now = self.clock.now_ms();
+        let mut series = self.series.lock().unwrap();
+        let Some(s) = series.get_mut(key) else {
+            return 0.0;
+        };
+        Self::prune(s, now, self.window_ms, self.bucket_ms);
+        let count: u64 = s.buckets.iter().map(|(_, n)| n).sum();
+        if count == 0 {
+            return 0.0;
+        }
+        let oldest_start = s.buckets.front().map(|(i, _)| i * self.bucket_ms).unwrap_or(now);
+        let span = now
+            .saturating_sub(oldest_start.max(now.saturating_sub(self.window_ms)))
+            .clamp(self.bucket_ms, self.window_ms);
+        count as f64 * 1000.0 / span as f64
+    }
+
+    /// Register an existing subscription to be woken on every record
+    /// (coalescing) — how the HPA reconciler rides request traffic.
+    pub fn attach(&self, sub: &Subscription) {
+        self.hub.attach(sub, Some(&[METRICS_TOPIC]));
+    }
+
+    /// A fresh subscription woken on every record.
+    pub fn subscribe(&self) -> Subscription {
+        self.hub.subscribe(Some(&[METRICS_TOPIC]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::WakeReason;
+    use std::time::Duration;
+
+    #[test]
+    fn totals_and_rps_window() {
+        // High scale: virtual time races ahead of the test's real time.
+        let clock = Clock::new(1000);
+        let m = PodMetrics::with_window(clock.clone(), 8_000);
+        assert_eq!(m.total("10.0.0.1"), 0);
+        assert_eq!(m.rps("10.0.0.1"), 0.0);
+        for _ in 0..50 {
+            m.record("10.0.0.1");
+        }
+        assert_eq!(m.total("10.0.0.1"), 50);
+        assert!(m.rps("10.0.0.1") > 0.0);
+        // Let the window slide past the burst: the rate decays to zero
+        // but the lifetime total stays.
+        clock.sleep_sim(10_000);
+        assert_eq!(m.rps("10.0.0.1"), 0.0);
+        assert_eq!(m.total("10.0.0.1"), 50);
+    }
+
+    #[test]
+    fn keys_are_independent() {
+        let m = PodMetrics::new(Clock::new(1000));
+        m.record("a");
+        m.record("a");
+        m.record("b");
+        assert_eq!(m.total("a"), 2);
+        assert_eq!(m.total("b"), 1);
+        assert_eq!(m.total("c"), 0);
+    }
+
+    #[test]
+    fn record_wakes_subscribers_coalesced() {
+        let m = PodMetrics::new(Clock::new(1000));
+        let sub = m.subscribe();
+        // Consume the born-signaled edge.
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+        for _ in 0..10 {
+            m.record("x");
+        }
+        // Many records, one pending wakeup.
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::Notified);
+        assert_eq!(sub.wait(Duration::ZERO), WakeReason::TimedOut);
+    }
+}

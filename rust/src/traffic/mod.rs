@@ -1,0 +1,69 @@
+//! The traffic subsystem: requests finally flow through the services.
+//!
+//! Everything below this module exists so that a *user-facing* workload
+//! — the paper's SS4.3 inference endpoint is the canonical scenario —
+//! can be driven end to end: a client fleet resolves a Service, picks a
+//! ready backend, the request lands on a pod, the pod's rate feeds an
+//! autoscaler, and the autoscaler changes how many pods the next
+//! request can land on. The pieces:
+//!
+//! - [`proxy::ServiceProxy`] — the kube-proxy role. Aggregates a
+//!   service's EndpointSlice shards from a scoped
+//!   [`crate::kube::SharedInformer`] cache into a per-service backend
+//!   set with round-robin and weighted pickers. Refresh is push-driven:
+//!   the proxy parks a coalescing [`crate::util::Subscription`] on the
+//!   informer's bus and re-aggregates only when slice churn actually
+//!   landed — a pick against a quiet service costs an atomic check,
+//!   not a re-list.
+//! - [`loadgen::LoadGen`] — the simulated client fleet. Resolves the
+//!   target Service through [`crate::kube::CoreDns`], drives a
+//!   [`loadgen::Curve`] (constant, step, diurnal) off
+//!   [`crate::hpcsim::Clock`] *virtual* time with a seedable
+//!   [`crate::util::Rng`], and records one of three outcomes per
+//!   request: **served** (backend pod alive), **dropped** (picked a
+//!   backend whose pod is gone — the node-drain window before slice
+//!   churn converges), or **no-backend** (the service has no endpoints
+//!   at all).
+//! - [`metrics::PodMetrics`] — the metrics-server role. Per-pod request
+//!   counters plus a windowed requests-per-second view over virtual
+//!   time, shared as an `Arc` where controllers can read it. Recording
+//!   notifies a [`crate::util::SubscriberHub`], which is how the HPA
+//!   reconciler gets woken by traffic instead of polling a tick.
+//! - [`crate::kube::controllers::HpaController`] — closes the loop:
+//!   scales the target Deployment off the per-pod req/s average (see
+//!   the HPA section in [`crate::kube`]'s docs).
+//!
+//! # Request flow
+//!
+//! ```text
+//! LoadGen --(1) resolve svc--> CoreDns (informer cache)
+//!    |                            ^
+//!    |                            | EndpointSlice churn (push)
+//!    +--(2) pick backend--> ServiceProxy <--- EndpointsController
+//!    |                                             ^
+//!    +--(3) outcome: served? -----> PodMetrics     | pod events
+//!                 record(pod_ip)      |            |
+//!                                     v            |
+//!                             HpaController --> Deployment.spec.replicas
+//!                                  (scale out/in, min/max, stabilization)
+//! ```
+//!
+//! A scale-out therefore propagates without any component polling:
+//! traffic wakes the HPA through the metrics hub, the replica bump
+//! flows Deployment → ReplicaSet → Pod through the push-woken
+//! controllers, the new pod's Running status rewrites one EndpointSlice
+//! shard, and that event wakes the proxy to fold the new backend into
+//! its round-robin set.
+//!
+//! All pacing in this module runs on [`crate::hpcsim::Clock`] virtual
+//! time (`sleep_sim`, `now_ms`) — no wall-clock sleeps — so load
+//! curves and stabilization windows compress with the cluster's time
+//! scale and traces stay deterministic under a fixed seed.
+
+pub mod loadgen;
+pub mod metrics;
+pub mod proxy;
+
+pub use loadgen::{Curve, LoadGen, LoadStats};
+pub use metrics::PodMetrics;
+pub use proxy::ServiceProxy;

@@ -1,0 +1,243 @@
+//! The kube-proxy role: per-service backend sets over EndpointSlice
+//! shards, with round-robin and weighted pickers.
+//!
+//! HPK disables ClusterIP services, so "kube-proxy" here is a client-
+//! side dataplane: consumers ask the proxy for a backend address and
+//! connect directly to the pod IP. The proxy keeps a Service +
+//! EndpointSlice scoped [`SharedInformer`] and folds a service's
+//! shards into one ordered backend list (the same aggregation CoreDNS
+//! answers from), preserving the round-robin cursor position across
+//! rebuilds so slice churn does not reset the rotation.
+//!
+//! Refresh is push-driven: a coalescing [`Subscription`] on the
+//! informer's bus is checked (non-blocking) at every access, and the
+//! backend sets are re-aggregated only when Service/EndpointSlice
+//! events actually landed. A pick against a quiet cluster costs one
+//! atomic flag check on top of the map lookup.
+
+use crate::kube::api::ApiServer;
+use crate::kube::informer::SharedInformer;
+use crate::kube::store::{Subscription, WakeReason};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+struct ServiceState {
+    /// Aggregated shard addresses, sorted/deduped (pod IPs).
+    addrs: Vec<String>,
+    /// Round-robin position, carried across rebuilds modulo the new
+    /// backend count.
+    cursor: usize,
+    /// Per-address weight overrides (default 1); addresses keep their
+    /// weight across slice churn, and weight 0 removes an address from
+    /// the weighted rotation without touching round-robin.
+    weights: HashMap<String, u32>,
+}
+
+struct ProxyInner {
+    informer: SharedInformer,
+    sub: Subscription,
+    state: Mutex<HashMap<(String, String), ServiceState>>,
+}
+
+/// Client-side service dataplane. Cheap to clone (shared state): one
+/// clone per client fleet, all seeing the same rotation.
+#[derive(Clone)]
+pub struct ServiceProxy {
+    inner: Arc<ProxyInner>,
+}
+
+impl ServiceProxy {
+    pub fn new(api: ApiServer) -> ServiceProxy {
+        let informer = SharedInformer::for_kinds(api, &["Service", "EndpointSlice"]);
+        let sub = informer.subscribe();
+        ServiceProxy {
+            inner: Arc::new(ProxyInner {
+                informer,
+                sub,
+                state: Mutex::new(HashMap::new()),
+            }),
+        }
+    }
+
+    /// Fold pending Service/EndpointSlice events into the backend sets.
+    /// No-op (one non-blocking wait) when nothing changed; the born-
+    /// signaled subscription makes the first access aggregate existing
+    /// state.
+    fn refresh(&self) {
+        if self.inner.sub.wait(Duration::ZERO) != WakeReason::Notified {
+            return;
+        }
+        self.inner.informer.sync();
+        let mut state = self.inner.state.lock().unwrap();
+        for ((ns, svc), s) in state.iter_mut() {
+            s.addrs = self.inner.informer.service_endpoints(ns, svc);
+            s.cursor = match s.addrs.len() {
+                0 => 0,
+                n => s.cursor % n,
+            };
+        }
+    }
+
+    fn with_state<R>(
+        &self,
+        namespace: &str,
+        service: &str,
+        f: impl FnOnce(&mut ServiceState) -> R,
+    ) -> R {
+        self.refresh();
+        let mut state = self.inner.state.lock().unwrap();
+        let s = state
+            .entry((namespace.to_string(), service.to_string()))
+            .or_insert_with(|| ServiceState {
+                addrs: self.inner.informer.service_endpoints(namespace, service),
+                cursor: 0,
+                weights: HashMap::new(),
+            });
+        f(s)
+    }
+
+    /// The service's current backend addresses (sorted, deduped).
+    pub fn backends(&self, namespace: &str, service: &str) -> Vec<String> {
+        self.with_state(namespace, service, |s| s.addrs.clone())
+    }
+
+    /// Round-robin pick. `None` when the service has no ready backends.
+    pub fn pick(&self, namespace: &str, service: &str) -> Option<String> {
+        self.with_state(namespace, service, |s| {
+            if s.addrs.is_empty() {
+                return None;
+            }
+            let addr = s.addrs[s.cursor % s.addrs.len()].clone();
+            s.cursor = (s.cursor + 1) % s.addrs.len();
+            Some(addr)
+        })
+    }
+
+    /// Weight-proportional random pick (default weight 1 per backend;
+    /// weight 0 excludes). `None` when no backend has positive weight.
+    pub fn pick_weighted(
+        &self,
+        namespace: &str,
+        service: &str,
+        rng: &mut Rng,
+    ) -> Option<String> {
+        self.with_state(namespace, service, |s| {
+            let total: u64 = s
+                .addrs
+                .iter()
+                .map(|a| s.weights.get(a).copied().unwrap_or(1) as u64)
+                .sum();
+            if total == 0 {
+                return None;
+            }
+            let mut roll = rng.below(total);
+            for a in &s.addrs {
+                let w = s.weights.get(a).copied().unwrap_or(1) as u64;
+                if roll < w {
+                    return Some(a.clone());
+                }
+                roll -= w;
+            }
+            None
+        })
+    }
+
+    /// Override one backend's weight (canary-style traffic shaping).
+    pub fn set_weight(&self, namespace: &str, service: &str, addr: &str, weight: u32) {
+        self.with_state(namespace, service, |s| {
+            s.weights.insert(addr.to_string(), weight);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kube::object;
+    use crate::yamlkit::parse_one;
+
+    fn api_with_service(addrs: &[&str]) -> ApiServer {
+        let api = ApiServer::new();
+        let svc = api
+            .create(
+                parse_one(
+                    "kind: Service\nmetadata:\n  name: web\nspec:\n  clusterIP: None\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        let owned: Vec<String> = addrs.iter().map(|a| a.to_string()).collect();
+        api.create(object::new_endpoint_slice(&svc, "web-0", &owned)).unwrap();
+        api
+    }
+
+    #[test]
+    fn round_robin_rotates_evenly() {
+        let api = api_with_service(&["10.0.0.1", "10.0.0.2", "10.0.0.3"]);
+        let proxy = ServiceProxy::new(api);
+        let mut hits: HashMap<String, usize> = HashMap::new();
+        for _ in 0..9 {
+            *hits.entry(proxy.pick("default", "web").unwrap()).or_default() += 1;
+        }
+        assert_eq!(hits.len(), 3);
+        assert!(hits.values().all(|&n| n == 3), "uneven rotation: {hits:?}");
+    }
+
+    #[test]
+    fn empty_service_returns_none() {
+        let api = ApiServer::new();
+        api.create(
+            parse_one("kind: Service\nmetadata:\n  name: idle\nspec:\n  clusterIP: None\n")
+                .unwrap(),
+        )
+        .unwrap();
+        let proxy = ServiceProxy::new(api);
+        assert!(proxy.pick("default", "idle").is_none());
+        assert!(proxy.backends("default", "idle").is_empty());
+        let mut rng = Rng::new(1);
+        assert!(proxy.pick_weighted("default", "idle", &mut rng).is_none());
+    }
+
+    #[test]
+    fn push_refresh_folds_in_slice_churn() {
+        let api = api_with_service(&["10.0.0.1"]);
+        let proxy = ServiceProxy::new(api.clone());
+        assert_eq!(proxy.backends("default", "web"), vec!["10.0.0.1"]);
+        // A new shard lands; the next access sees the new backend
+        // without any explicit invalidation call.
+        let svc = api.get("Service", "default", "web").unwrap();
+        api.create(object::new_endpoint_slice(&svc, "web-1", &["10.0.0.2".into()]))
+            .unwrap();
+        assert_eq!(proxy.backends("default", "web"), vec!["10.0.0.1", "10.0.0.2"]);
+        // Shard removal drains the backend the same way.
+        api.delete("EndpointSlice", "default", "web-1").unwrap();
+        assert_eq!(proxy.backends("default", "web"), vec!["10.0.0.1"]);
+    }
+
+    #[test]
+    fn weighted_pick_honors_weights() {
+        let api = api_with_service(&["10.0.0.1", "10.0.0.2"]);
+        let proxy = ServiceProxy::new(api);
+        proxy.set_weight("default", "web", "10.0.0.1", 3);
+        let mut rng = Rng::new(42);
+        let mut hits: HashMap<String, usize> = HashMap::new();
+        for _ in 0..4000 {
+            let a = proxy.pick_weighted("default", "web", &mut rng).unwrap();
+            *hits.entry(a).or_default() += 1;
+        }
+        let a = hits["10.0.0.1"] as f64;
+        let b = hits["10.0.0.2"] as f64;
+        let ratio = a / b;
+        assert!((2.2..4.2).contains(&ratio), "expected ~3:1, got {ratio:.2}");
+        // Weight 0 excludes a backend entirely.
+        proxy.set_weight("default", "web", "10.0.0.1", 0);
+        for _ in 0..100 {
+            assert_eq!(
+                proxy.pick_weighted("default", "web", &mut rng).as_deref(),
+                Some("10.0.0.2")
+            );
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Integration: the traffic subsystem against the real controller
+//! stack — round-robin balance across EndpointSlice shard churn, the
+//! load generator's no-backend accounting, and the HPA's closed loop
+//! (scale-out, max bound, stabilization, scale-down floor) through a
+//! full HPK control plane.
+
+use hpk::hpcsim::Clock;
+use hpk::kube::controllers::{EndpointsController, Runner};
+use hpk::kube::{object, ApiServer, CoreDns};
+use hpk::traffic::{Curve, LoadGen, PodMetrics, ServiceProxy};
+use hpk::yamlkit::parse_one;
+use hpk::Value;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn svc(name: &str, app: &str) -> Value {
+    parse_one(&format!(
+        "kind: Service\nmetadata:\n  name: {name}\nspec:\n  clusterIP: None\n  selector:\n    app: {app}\n  ports:\n  - port: 80\n"
+    ))
+    .unwrap()
+}
+
+fn running_pod(name: &str, ip: &str, app: &str) -> Value {
+    parse_one(&format!(
+        "kind: Pod\nmetadata:\n  name: {name}\n  labels:\n    app: {app}\nspec: {{}}\nstatus:\n  phase: Running\n  podIP: {ip}\n"
+    ))
+    .unwrap()
+}
+
+/// Unique, sorted-stable pod IP for index `i`.
+fn ip(i: usize) -> String {
+    format!("10.244.{}.{:03}", i / 250, (i % 250) + 1)
+}
+
+/// Drive `runner` until `cond` holds (bounded passes, no sleeps — the
+/// store already holds every event).
+fn settle(runner: &Runner, mut cond: impl FnMut() -> bool) -> bool {
+    for _ in 0..50 {
+        runner.run_once();
+        if cond() {
+            return true;
+        }
+    }
+    false
+}
+
+#[test]
+fn round_robin_balances_across_slice_split_and_merge() {
+    let api = ApiServer::new();
+    api.create(svc("web", "web")).unwrap();
+    // Past the per-slice cap: the controller must shard, and the
+    // picker must still rotate across every shard.
+    let n = object::MAX_ENDPOINTS_PER_SLICE + 20;
+    for i in 0..n {
+        api.create(running_pod(&format!("web-{i:03}"), &ip(i), "web")).unwrap();
+    }
+    let runner = Runner::new(&api, vec![Box::new(EndpointsController)]);
+    assert!(settle(&runner, || {
+        object::aggregate_slice_addresses(&api.list_refs("EndpointSlice")).len() == n
+    }));
+    assert_eq!(api.list("EndpointSlice").len(), 2, "split across two shards");
+
+    let proxy = ServiceProxy::new(api.clone());
+    let mut counts: HashMap<String, u32> = HashMap::new();
+    for _ in 0..3 * n {
+        *counts.entry(proxy.pick("default", "web").unwrap()).or_default() += 1;
+    }
+    assert_eq!(counts.len(), n, "every backend in rotation");
+    assert!(counts.values().all(|&c| c == 3), "strict round-robin across shards: {counts:?}");
+
+    // Merge churn: 40 pods leave, the survivors fold back into one
+    // shard, and the rotation rebalances without panicking or skew.
+    for i in 0..40 {
+        api.delete("Pod", "default", &format!("web-{i:03}")).unwrap();
+    }
+    let survivors = n - 40;
+    assert!(settle(&runner, || {
+        api.list("EndpointSlice").len() == 1
+            && object::aggregate_slice_addresses(&api.list_refs("EndpointSlice")).len()
+                == survivors
+    }));
+    let mut counts: HashMap<String, u32> = HashMap::new();
+    for _ in 0..2 * survivors {
+        *counts.entry(proxy.pick("default", "web").unwrap()).or_default() += 1;
+    }
+    assert_eq!(counts.len(), survivors, "deleted backends left the rotation");
+    assert!(counts.values().all(|&c| c == 2), "balance survives the merge");
+    for i in 0..40 {
+        assert!(!counts.contains_key(&ip(i)), "picked a deleted backend {}", ip(i));
+    }
+}
+
+#[test]
+fn loadgen_counts_no_backend_without_panicking() {
+    // A Service with a selector nothing matches: every request is a
+    // counted no-backend outcome, never a panic, never a served count.
+    let api = ApiServer::new();
+    api.create(svc("ghost", "ghost")).unwrap();
+    let clock = Clock::new(2000);
+    let metrics = Arc::new(PodMetrics::new(clock.clone()));
+    let mut lg = LoadGen::new(
+        &api,
+        CoreDns::new(api.clone()),
+        ServiceProxy::new(api.clone()),
+        metrics,
+        clock,
+        "ghost",
+    )
+    .with_seed(3);
+    let run = lg.run_for(&Curve::Constant { rps: 40.0 }, 3_000);
+    assert!(run.no_backend > 0, "requests against an endpoint-less service: {run:?}");
+    assert_eq!(run.served, 0);
+    assert_eq!(run.dropped, 0);
+}
+
+fn running_ips(api: &ApiServer) -> Vec<String> {
+    api.list("Pod")
+        .iter()
+        .filter(|p| object::pod_phase(p) == "Running")
+        .filter_map(|p| p.str_at("status.podIP").map(|s| s.to_string()))
+        .collect()
+}
+
+fn replicas(api: &ApiServer) -> i64 {
+    api.get("Deployment", "default", "web")
+        .ok()
+        .and_then(|d| d.i64_at("spec.replicas"))
+        .unwrap_or(0)
+}
+
+#[test]
+fn hpa_scales_out_and_back_through_the_control_plane() {
+    use hpk::apptainer::ImageSpec;
+    use hpk::hpcsim::ClusterSpec;
+    use hpk::hpk::{ControlPlane, HpkConfig};
+
+    let cp = ControlPlane::deploy(HpkConfig {
+        cluster: ClusterSpec::uniform(2, 8, 32),
+        ..HpkConfig::default()
+    });
+    cp.runtime
+        .registry
+        .register(ImageSpec::new("server:1", "server").with_size(1 << 20));
+    cp.runtime.table.register("server", |ctx| {
+        while !ctx.cancel.is_cancelled() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        Err("terminated".to_string())
+    });
+
+    // Deployment + Service + HPA: target 10 req/s per pod, hard max 2,
+    // stabilization window 200 simulated s (2 real s at scale 100).
+    cp.kubectl_apply(
+        "kind: Deployment\nmetadata:\n  name: web\nspec:\n  replicas: 1\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: web\n    spec:\n      containers:\n      - name: main\n        image: server:1\n---\nkind: Service\nmetadata:\n  name: web\nspec:\n  selector:\n    app: web\n---\nkind: HorizontalPodAutoscaler\nmetadata:\n  name: web\nspec:\n  scaleTargetRef:\n    kind: Deployment\n    name: web\n  minReplicas: 1\n  maxReplicas: 2\n  targetRequestsPerSecond: 10\n  stabilizationWindowMs: 200000\n",
+    )
+    .unwrap();
+    assert!(cp.wait_until(20_000, |api| !running_ips(api).is_empty()));
+
+    // Overwhelm the single pod: the records themselves wake the HPA
+    // thread (attach_wakes), so scale-out needs no store churn at all.
+    let mut scaled = false;
+    for _ in 0..200 {
+        for ip in running_ips(&cp.api) {
+            for _ in 0..30 {
+                cp.metrics.record(&ip);
+            }
+        }
+        cp.cluster.clock.sleep_sim(1_100);
+        if replicas(&cp.api) == 2 {
+            scaled = true;
+            break;
+        }
+    }
+    // Demand was ~3x target, but maxReplicas pins the fleet at 2.
+    assert!(scaled, "hpa never scaled out");
+    assert!(cp.wait_until(20_000, |api| running_ips(api).len() == 2));
+    assert_eq!(replicas(&cp.api), 2, "capped at maxReplicas");
+
+    // Traffic stops. Inside the stabilization window the desired count
+    // falls to 1 but the replica count must not move yet.
+    cp.cluster.clock.sleep_sim(50_000);
+    assert_eq!(replicas(&cp.api), 2, "no flap inside the stabilization window");
+
+    // Past the window the scale-down lands — and with zero traffic it
+    // still floors at minReplicas=1, never zero.
+    assert!(
+        cp.wait_until(30_000, |api| replicas(api) == 1 && running_ips(api).len() == 1),
+        "scale-down never landed"
+    );
+    cp.cluster.clock.sleep_sim(50_000);
+    assert_eq!(replicas(&cp.api), 1, "scale-to-zero refused");
+    cp.shutdown();
+}
