@@ -31,11 +31,16 @@ HIGHER_IS_BETTER = ("_per_s",)
 
 # Bench configuration / baseline metrics, not costs the code pays:
 # growing these (e.g. a bigger E5.3d service) is not a regression.
+# e6s_place_linear_per_s is the frozen first-fit reference the indexed
+# path is compared against — its drift is runner noise, not a signal.
 NEUTRAL = {
     "e53c_idle_window_ms",
     "e53d_endpoints",
     "e53d_shards",
     "e53d_whole_object_bytes",
+    "e6s_nodes",
+    "e6s_pods",
+    "e6s_place_linear_per_s",
 }
 
 

@@ -20,16 +20,22 @@
 //! `BENCH_JSON=path.json` writes the headline numbers as JSON (the
 //! artifact CI uploads so the perf trajectory accumulates).
 
+use hpk::hpcsim::{Cluster, ClusterSpec, Node};
 use hpk::hpk::translate;
 use hpk::kube::controllers::{EndpointsController, Runner};
 use hpk::kube::informer::{SharedInformer, WatchSpec};
 use hpk::kube::object;
+use hpk::kube::Store;
 use hpk::kube::WakeReason;
-use hpk::slurm::{JobSpec, SlurmConfig};
+use hpk::slurm::{
+    sched, CapacityIndex, CapacityView, JobContext, JobExecutor, JobSpec, Slurmctld, SlurmConfig,
+};
 use hpk::testbed;
 use hpk::traffic::{Curve, LoadGen, PodMetrics, ServiceProxy};
 use hpk::yamlkit::parse_one;
 use hpk::yamlkit::Value;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn pod_manifest(name: &str) -> String {
@@ -41,6 +47,16 @@ fn pod_manifest(name: &str) -> String {
 /// (name, resourceVersion) of one EndpointSlice shard (E5.3d).
 fn slice_rv(s: &Value) -> (String, i64) {
     (object::name(s).to_string(), s.i64_at("metadata.resourceVersion").unwrap_or(0))
+}
+
+/// Executor for the E6-scale controller path: the job "runs" for zero
+/// time, so the measured latency is pure queue + placement + dispatch.
+struct NoopExec;
+
+impl JobExecutor for NoopExec {
+    fn execute(&self, _ctx: &JobContext) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 fn median(mut xs: Vec<f64>) -> f64 {
@@ -147,8 +163,9 @@ fn main() {
     let list = api.list("Pod");
     assert_eq!(list.len(), n);
     let list_s = t0.elapsed().as_secs_f64();
-    // Deep-copy list vs shared-snapshot list (the controller hot path;
-    // reconcilers were switched to list_refs in the perf pass).
+    // Deep-copy list vs shared-snapshot view (the controller hot path;
+    // reconcilers read `view(kind).list()` — Arc clones off a frozen
+    // copy-on-write snapshot).
     let t0 = Instant::now();
     for _ in 0..20 {
         std::hint::black_box(api.list("Pod"));
@@ -156,7 +173,7 @@ fn main() {
     let deep = t0.elapsed().as_secs_f64() / 20.0;
     let t0 = Instant::now();
     for _ in 0..20 {
-        std::hint::black_box(api.list_refs("Pod"));
+        std::hint::black_box(api.view("Pod").list());
     }
     let arc = t0.elapsed().as_secs_f64() / 20.0;
     println!(
@@ -199,7 +216,7 @@ fn main() {
         }
         // Poll-and-clone reconciler: re-list, scan everything.
         let t0 = Instant::now();
-        let pods = api.list_refs("Pod");
+        let pods = api.view("Pod").list();
         poll_scanned += pods.len();
         std::hint::black_box(
             pods.iter()
@@ -332,7 +349,7 @@ fn main() {
     let runner = Runner::new(&api, vec![Box::new(EndpointsController)]);
     runner.run_once(); // shards created
     runner.run_once(); // slice-create events settle (no further writes)
-    let slices = api.list_refs("EndpointSlice");
+    let slices = api.view("EndpointSlice").list();
     let shards = slices.len();
     let all_addrs = object::aggregate_slice_addresses(&slices);
     assert_eq!(all_addrs.len(), ep_n, "every endpoint placed in a shard");
@@ -348,7 +365,7 @@ fn main() {
     // Churn exactly one pod.
     api.delete("Pod", "default", "ep-0500").unwrap();
     runner.run_once();
-    let after = api.list_refs("EndpointSlice");
+    let after = api.view("EndpointSlice").list();
     let mut slice_writes = 0usize;
     let mut slice_bytes = 0usize;
     for s in &after {
@@ -667,6 +684,116 @@ fn main() {
     results.push(("e6t_dropped", drain_run.dropped as f64));
     results.push(("e6t_no_backend", drain_run.no_backend as f64));
     tb.shutdown();
+
+    // ---- 7. E6-scale: the 1k-node / 50k-pod wall ----
+    // Exercises exactly what the sharded store and the scheduler's
+    // capacity index were built for: snapshot reads under write churn,
+    // indexed vs linear placement, and submit -> Running latency
+    // through the real controller.
+    let nodes_n: usize = if smoke { 100 } else { 1_000 };
+    let pods_n: usize = if smoke { 2_000 } else { 50_000 };
+    println!("# E6-scale: {nodes_n} nodes / {pods_n} pods");
+    results.push(("e6s_nodes", nodes_n as f64));
+    results.push(("e6s_pods", pods_n as f64));
+
+    // E6s.A: snapshot read rate while a writer churns pods_n pod
+    // objects. Reads come off the copy-on-write published view, never
+    // the shard mutex, so the rate should be bounded by Arc traffic
+    // rather than writer lock hold times.
+    let store = Store::new();
+    let template = parse_one(&pod_manifest("tmpl")).unwrap();
+    let writing = Arc::new(AtomicBool::new(true));
+    let read_ops = Arc::new(AtomicU64::new(0));
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let s = store.clone();
+            let writing = writing.clone();
+            let read_ops = read_ops.clone();
+            std::thread::spawn(move || {
+                while writing.load(Ordering::Relaxed) {
+                    let snap = s.view("Pod");
+                    std::hint::black_box(snap.revision());
+                    read_ops.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    for i in 0..pods_n {
+        store.put("Pod", "bench", &format!("p{i}"), template.clone());
+    }
+    let write_secs = t0.elapsed().as_secs_f64();
+    writing.store(false, Ordering::Relaxed);
+    for r in readers {
+        r.join().unwrap();
+    }
+    let store_ops_per_s = read_ops.load(Ordering::Relaxed) as f64 / write_secs;
+    println!(
+        "store: {store_ops_per_s:.0} views/s across 4 readers while writing {:.0} pods/s",
+        pods_n as f64 / write_secs
+    );
+    results.push(("e6s_store_ops_per_s", store_ops_per_s));
+
+    // E6s.B: placement rate, capacity index vs the old first-fit node
+    // scan, on 1-cpu single-task jobs (the pod shape HPK submits).
+    // Nodes are rebuilt fresh each fill wave so both sides repeatedly
+    // pay the expensive nearly-full regime; the linear baseline is
+    // sampled on one wave (its per-placement cost is identical wave to
+    // wave, and a full 50k run of it would dominate the bench).
+    let spec = JobSpec::new("p").with_tasks(1, 1, 1 << 20);
+    let fresh_nodes = || -> Vec<Node> {
+        (0..nodes_n).map(|i| Node::new(&format!("bn{i}"), 8, 32 << 30)).collect()
+    };
+    let wave = (nodes_n * 8) as u64;
+
+    let t0 = Instant::now();
+    let mut placed = 0u64;
+    while placed < pods_n as u64 {
+        let mut nodes = fresh_nodes();
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+        for _ in 0..wave.min(pods_n as u64 - placed) {
+            placed += 1;
+            assert!(sched::place(&mut view, placed, &spec).is_some());
+        }
+    }
+    let place_per_s = pods_n as f64 / t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let mut nodes = fresh_nodes();
+    for job in 1..=wave {
+        assert!(sched::place_linear_reference(&mut nodes, job, &spec).is_some());
+    }
+    let place_linear_per_s = wave as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "place: indexed {place_per_s:.0}/s vs linear {place_linear_per_s:.0}/s ({:.1}x)",
+        place_per_s / place_linear_per_s
+    );
+    assert!(place_per_s > place_linear_per_s, "indexed placement must beat the linear scan");
+    results.push(("e6s_place_per_s", place_per_s));
+    results.push(("e6s_place_linear_per_s", place_linear_per_s));
+
+    // E6s.C: submit -> Running p99 through the real controller. Each
+    // job is one 4-cpu task on 8-cpu nodes, so at most two executor
+    // threads per node are alive at once, and the no-op executor makes
+    // the wait pure queue + placement + dispatch time.
+    let cluster = Cluster::new(ClusterSpec::uniform(nodes_n, 8, 32));
+    let ctld = Slurmctld::start(cluster, Arc::new(NoopExec), SlurmConfig::default());
+    let t0 = Instant::now();
+    for i in 0..pods_n {
+        ctld.submit(JobSpec::new(&format!("e6s-{i}")).with_tasks(1, 4, 1 << 20)).unwrap();
+    }
+    while ctld.sacct().len() < pods_n {
+        assert!(t0.elapsed() < Duration::from_secs(600), "E6-scale jobs never drained");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let acct = ctld.sacct();
+    let mut waits: Vec<u64> = acct.iter().map(|r| r.start_ms - r.submit_ms).collect();
+    waits.sort_unstable();
+    let p99 = waits[(waits.len() * 99 / 100).min(waits.len() - 1)] as f64;
+    println!("submit -> Running: p99 {p99:.0} sim ms over {pods_n} jobs\n");
+    results.push(("e6s_p99_submit_to_running_ms", p99));
+    ctld.shutdown();
 
     write_json(&results);
 }

@@ -10,6 +10,7 @@ mod node;
 pub use clock::Clock;
 pub use node::{Node, NodeState, Resources};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Static description of one node type.
@@ -48,10 +49,18 @@ impl ClusterSpec {
 }
 
 /// The simulated cluster: shared node table + clock.
+///
+/// The node table carries an *epoch*: a counter bumped by every
+/// mutation made through [`Cluster::with_nodes`] (failure injection,
+/// test surgery, anything outside the scheduler). The scheduler's
+/// [`crate::slurm::CapacityIndex`] keys its cached free-capacity
+/// buckets on it — a matching epoch means the table only changed
+/// through the index itself, so the buckets are still exact.
 #[derive(Clone)]
 pub struct Cluster {
     pub clock: Clock,
     nodes: Arc<Mutex<Vec<Node>>>,
+    epoch: Arc<AtomicU64>,
     pub spec: ClusterSpec,
 }
 
@@ -65,23 +74,47 @@ impl Cluster {
         Cluster {
             clock: Clock::new(spec.time_scale),
             nodes: Arc::new(Mutex::new(nodes)),
+            epoch: Arc::new(AtomicU64::new(1)),
             spec,
         }
     }
 
-    /// Run `f` with the node table locked.
+    /// Run `f` with the node table locked for mutation. Bumps the
+    /// epoch (while still holding the lock), invalidating any capacity
+    /// index built against the previous table.
     pub fn with_nodes<R>(&self, f: impl FnOnce(&mut Vec<Node>) -> R) -> R {
+        let mut nodes = self.nodes.lock().unwrap();
+        let r = f(&mut nodes);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        r
+    }
+
+    /// Run `f` with the node table locked, read-only: no epoch bump.
+    pub fn with_nodes_ref<R>(&self, f: impl FnOnce(&[Node]) -> R) -> R {
+        let nodes = self.nodes.lock().unwrap();
+        f(&nodes)
+    }
+
+    /// Mutate the node table *without* bumping the epoch — reserved
+    /// for the scheduler, whose capacity index mirrors every change it
+    /// makes (see [`crate::slurm::CapacityView`]).
+    pub(crate) fn with_nodes_untracked<R>(&self, f: impl FnOnce(&mut Vec<Node>) -> R) -> R {
         let mut nodes = self.nodes.lock().unwrap();
         f(&mut nodes)
     }
 
+    /// The current node-table epoch (see the type docs).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
     pub fn node_names(&self) -> Vec<String> {
-        self.with_nodes(|ns| ns.iter().map(|n| n.name.clone()).collect())
+        self.with_nodes_ref(|ns| ns.iter().map(|n| n.name.clone()).collect())
     }
 
     /// Total and free CPU across up nodes.
     pub fn cpu_summary(&self) -> (u32, u32) {
-        self.with_nodes(|ns| {
+        self.with_nodes_ref(|ns| {
             let mut total = 0;
             let mut free = 0;
             for n in ns.iter() {

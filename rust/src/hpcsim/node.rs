@@ -48,9 +48,13 @@ impl Node {
     }
 
     pub fn can_fit(&self, cpus: u32, memory: u64) -> bool {
+        self.is_schedulable() && self.free_cpus() >= cpus && self.free_memory() >= memory
+    }
+
+    /// Whether the scheduler may reserve on this node at all (`Up`;
+    /// `Drain`/`Down` nodes keep allocations but accept no new ones).
+    pub fn is_schedulable(&self) -> bool {
         self.state == NodeState::Up
-            && self.free_cpus() >= cpus
-            && self.free_memory() >= memory
     }
 
     /// Reserve resources for a job. Returns false (no change) if they
@@ -65,9 +69,11 @@ impl Node {
         true
     }
 
-    /// Release a job's resources (idempotent).
-    pub fn release(&mut self, job: u64) {
-        self.allocations.remove(&job);
+    /// Release a job's resources (idempotent). Returns what was freed
+    /// — `(cpus, memory)` — so a capacity index can be maintained
+    /// incrementally; `None` means the job held nothing here.
+    pub fn release(&mut self, job: u64) -> Option<(u32, u64)> {
+        self.allocations.remove(&job)
     }
 
     pub fn job_ids(&self) -> Vec<u64> {

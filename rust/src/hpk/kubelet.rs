@@ -75,7 +75,7 @@ impl HpkKubelet {
         let (total_cpus, _) = slurm.cluster().cpu_summary();
         let total_mem: u64 = slurm
             .cluster()
-            .with_nodes(|ns| ns.iter().map(|n| n.resources.memory_bytes).sum());
+            .with_nodes_ref(|ns| ns.iter().map(|n| n.resources.memory_bytes).sum());
         crate::kube::scheduler::register_node(&api, VIRTUAL_NODE, total_cpus, total_mem);
 
         // Pods drive the loop; Service + EndpointSlice are cached for

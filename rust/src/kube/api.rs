@@ -7,7 +7,7 @@
 
 use super::client::ListParams;
 use super::object;
-use super::store::{Store, StoreEvent, Subscription};
+use super::store::{KindSnapshot, Store, StoreEvent, Subscription};
 use crate::util::unique_suffix;
 use crate::yamlkit::{merge_patch, Value};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -169,48 +169,28 @@ impl ApiServer {
             .ok_or_else(|| ApiError::NotFound(format!("{kind} {namespace}/{name}")))
     }
 
-    /// LIST (all namespaces).
+    /// LIST as deep copies (all namespaces) — the mutate-and-update
+    /// convenience shape tests and tooling lean on. Hot paths use
+    /// [`ApiServer::view`] / [`ApiServer::query`] instead.
     pub fn list(&self, kind: &str) -> Vec<Value> {
-        self.store.list(kind).iter().map(|a| (**a).clone()).collect()
+        self.store.view(kind).iter().map(|a| (**a).clone()).collect()
     }
 
-    /// LIST without copying: shared snapshots. Reconcilers no longer
-    /// call this directly — they consume [`crate::kube::informer`]
-    /// caches; it remains for read-only tooling, tests and benches.
-    pub fn list_refs(&self, kind: &str) -> Vec<std::sync::Arc<Value>> {
-        self.store.list(kind)
-    }
-
-    /// LIST namespaced.
-    pub fn list_namespaced(&self, kind: &str, namespace: &str) -> Vec<Value> {
-        self.store
-            .list_namespaced(kind, namespace)
-            .iter()
-            .map(|a| (**a).clone())
-            .collect()
+    /// The snapshot-first read surface: one kind's objects at one
+    /// revision, as an immutable [`KindSnapshot`] (an `Arc` clone —
+    /// never blocks on or blocks writers; see the store's "Locking &
+    /// snapshot model" docs). Iterate, `get`, `namespaced` or `query`
+    /// it without further server round-trips.
+    pub fn view(&self, kind: &str) -> KindSnapshot {
+        self.store.view(kind)
     }
 
     /// LIST with server-side selector evaluation
     /// ([`ListParams`] label/field selectors + namespace scoping):
-    /// only matching objects leave the server, as shared snapshots.
-    pub fn select(&self, kind: &str, params: &ListParams) -> Vec<Arc<Value>> {
-        let unfiltered = match &params.namespace {
-            Some(ns) => self.store.list_namespaced(kind, ns),
-            None => self.store.list(kind),
-        };
-        if params.labels.is_empty() && params.fields.is_empty() {
-            return unfiltered;
-        }
-        unfiltered
-            .into_iter()
-            .filter(|o| params.matches(o))
-            .collect()
-    }
-
-    /// Consistent full-state snapshot (see [`Store::snapshot`]) — the
-    /// re-list path watchers fall back to after log compaction.
-    pub fn snapshot(&self) -> (u64, Vec<Arc<Value>>) {
-        self.store.snapshot()
+    /// only matching objects leave the server, as shared snapshots
+    /// taken from the kind's published view.
+    pub fn query(&self, kind: &str, params: &ListParams) -> Vec<Arc<Value>> {
+        self.store.query(kind, params)
     }
 
     /// The shared read-modify-write commit path behind `update`, `patch`
@@ -346,13 +326,6 @@ impl ApiServer {
     /// nothing.
     pub fn kind_complete_since(&self, kind: &str, since: u64) -> bool {
         self.store.kind_complete_since(kind, since)
-    }
-
-    /// Consistent snapshot of the given kinds (see
-    /// [`Store::snapshot_kinds`]) — the per-kind compaction re-list
-    /// path.
-    pub fn snapshot_kinds(&self, kinds: &[String]) -> (u64, Vec<Arc<Value>>) {
-        self.store.snapshot_kinds(kinds)
     }
 
     /// Subscribe to push notifications for `kinds` (`None` = every
@@ -602,7 +575,7 @@ mod tests {
     }
 
     #[test]
-    fn select_filters_server_side() {
+    fn query_filters_server_side() {
         use crate::kube::client::ListParams;
         let api = ApiServer::new();
         api.create(
@@ -615,14 +588,28 @@ mod tests {
                 .unwrap(),
         )
         .unwrap();
-        assert_eq!(api.select("Pod", &ListParams::all()).len(), 2);
+        assert_eq!(api.query("Pod", &ListParams::all()).len(), 2);
         assert_eq!(
-            api.select("Pod", &ListParams::all().with_label("app", "web")).len(),
+            api.query("Pod", &ListParams::all().with_label("app", "web")).len(),
             1
         );
         assert_eq!(
-            api.select("Pod", &ListParams::all().with_field("spec.nodeName", "")).len(),
+            api.query("Pod", &ListParams::all().with_field("spec.nodeName", "")).len(),
             1
         );
+    }
+
+    #[test]
+    fn view_serves_reads_at_a_frozen_revision() {
+        let api = ApiServer::new();
+        api.create(pod_yaml("p1")).unwrap();
+        let snap = api.view("Pod");
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap.revision(), api.revision());
+        api.create(pod_yaml("p2")).unwrap();
+        // The taken view is immutable; a fresh one sees the new pod.
+        assert_eq!(snap.len(), 1);
+        assert_eq!(api.view("Pod").len(), 2);
+        assert!(snap.get("default", "p1").is_some());
     }
 }

@@ -11,6 +11,7 @@
 
 use super::api::{ApiError, ApiServer};
 use super::object;
+use super::store::KindSnapshot;
 use super::watch::Watcher;
 use crate::yamlkit::Value;
 use std::sync::Arc;
@@ -235,9 +236,16 @@ impl Api {
     }
 
     /// LIST with server-side selector evaluation; returns shared
-    /// snapshots (no deep copies).
+    /// snapshots (no deep copies) taken from the kind's published view.
     pub fn list(&self, params: &ListParams) -> Vec<Arc<Value>> {
-        self.server.select(&self.kind, params)
+        self.server.query(&self.kind, params)
+    }
+
+    /// The kind's current [`KindSnapshot`]: an immutable, revisioned
+    /// view that can be iterated and filtered without further server
+    /// calls (see [`ApiServer::view`]).
+    pub fn view(&self) -> KindSnapshot {
+        self.server.view(&self.kind)
     }
 
     /// CREATE; stamps the handle's kind if the manifest omits it.
@@ -382,7 +390,7 @@ mod tests {
         match w.poll() {
             WatchOutcome::Events(evs) => {
                 assert_eq!(evs.len(), 1);
-                assert_eq!(evs[0].kind, "Pod");
+                assert_eq!(&*evs[0].kind, "Pod");
             }
             other => panic!("expected events, got {other:?}"),
         }

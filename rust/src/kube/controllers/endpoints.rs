@@ -240,7 +240,7 @@ mod tests {
     }
 
     fn aggregated(api: &ApiServer) -> Vec<String> {
-        object::aggregate_slice_addresses(&api.list_refs("EndpointSlice"))
+        object::aggregate_slice_addresses(&api.view("EndpointSlice").list())
     }
 
     /// Drive the controller until the aggregated address count settles.
@@ -248,13 +248,13 @@ mod tests {
         reconcile_until(
             api,
             &[c],
-            |a| object::aggregate_slice_addresses(&a.list_refs("EndpointSlice")).len() == want,
+            |a| object::aggregate_slice_addresses(&a.view("EndpointSlice").list()).len() == want,
             10,
         );
     }
 
     fn slice_rvs(api: &ApiServer) -> BTreeMap<String, i64> {
-        api.list_refs("EndpointSlice")
+        api.view("EndpointSlice").list()
             .iter()
             .map(|s| {
                 (
@@ -277,7 +277,7 @@ mod tests {
             &api,
             &[&c],
             |a| {
-                object::aggregate_slice_addresses(&a.list_refs("EndpointSlice"))
+                object::aggregate_slice_addresses(&a.view("EndpointSlice").list())
                     == vec!["10.244.0.2", "10.244.1.2"]
             },
             10,
@@ -288,7 +288,7 @@ mod tests {
             &api,
             &[&c],
             |a| {
-                object::aggregate_slice_addresses(&a.list_refs("EndpointSlice"))
+                object::aggregate_slice_addresses(&a.view("EndpointSlice").list())
                     == vec!["10.244.0.2"]
             },
             10,
@@ -394,7 +394,7 @@ mod tests {
             &[&c],
             |a| {
                 a.list("EndpointSlice").len() == 1
-                    && object::aggregate_slice_addresses(&a.list_refs("EndpointSlice")).len()
+                    && object::aggregate_slice_addresses(&a.view("EndpointSlice").list()).len()
                         == cap - 1
             },
             10,
@@ -416,7 +416,7 @@ mod tests {
             &[&c],
             |a| {
                 a.list("EndpointSlice").len() == 1
-                    && object::aggregate_slice_addresses(&a.list_refs("EndpointSlice"))
+                    && object::aggregate_slice_addresses(&a.view("EndpointSlice").list())
                         == vec!["10.244.0.2"]
             },
             10,

@@ -279,7 +279,7 @@ mod tests {
         let g = GcController;
         reconcile_once(&api, &g);
         assert_eq!(api.list("Event").len(), EVENT_CAP_PER_NAMESPACE + 1);
-        assert_eq!(api.list_namespaced("Event", "prod").len(), 1);
+        assert_eq!(api.query("Event", &ListParams::in_namespace("prod")).len(), 1);
     }
 
     #[test]

@@ -184,7 +184,7 @@ mod tests {
         reconcile_until(
             &api,
             &[&c],
-            |a| object::aggregate_slice_addresses(&a.list_refs("EndpointSlice")).len() == n,
+            |a| object::aggregate_slice_addresses(&a.view("EndpointSlice").list()).len() == n,
             10,
         );
         assert!(api.list("EndpointSlice").len() >= 2, "must actually shard");

@@ -8,7 +8,9 @@
 //! - [`store`] — the etcd role: versioned objects + a kind-sharded,
 //!   push-notified event bus (one log and resourceVersion watermark per
 //!   kind, each compacted independently) with compare-and-put and
-//!   consistent snapshots.
+//!   lock-free revisioned reads off copy-on-write per-kind snapshots
+//!   ([`store::KindSnapshot`] — the locking rules are documented under
+//!   *Locking & snapshot model* in the [`store`] module docs).
 //! - [`object`] — helpers over manifest [`crate::Value`]s (names, labels,
 //!   owner refs, selectors).
 //! - [`api`] — the API-server role: CRUD verbs, defaulting, the
@@ -107,5 +109,5 @@ pub use api::{AdmissionCheck, AdmissionOp, ApiError, ApiServer};
 pub use client::{Api, Client, GroupVersionKind, ListParams, ResourceKey};
 pub use coredns::CoreDns;
 pub use informer::{SharedInformer, WatchSpec, WorkQueue};
-pub use store::{EventType, Store, StoreEvent, Subscription, WakeReason};
+pub use store::{EventType, KindSnapshot, Store, StoreEvent, Subscription, WakeReason};
 pub use watch::{WatchOutcome, Watcher};

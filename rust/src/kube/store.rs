@@ -1,17 +1,48 @@
-//! The etcd role: versioned object storage with a kind-sharded,
-//! push-notified event bus.
+//! The etcd role: versioned object storage with per-kind shards,
+//! copy-on-write read snapshots, and a kind-sharded push-notified
+//! event bus.
 //!
 //! Objects are whole manifests ([`crate::Value`]) keyed by
-//! `(kind, namespace, name)`. Every mutation bumps a global revision and
-//! appends to the *per-kind* append-only log — each
-//! `GroupVersionKind`-shard carries its own resourceVersion watermark
-//! and compacts independently ([`KIND_LOG_CAP`]), so a watcher that only
+//! `(kind, namespace, name)`. Every mutation takes a revision from one
+//! atomic global counter and appends to the *per-kind* append-only log
+//! — each kind shard carries its own resourceVersion watermark and
+//! compacts independently ([`KIND_LOG_CAP`]), so a watcher that only
 //! follows Pods never re-lists because Events churned. Watchers resume
-//! with [`Store::kind_events_since`] (the list+watch contract Kubernetes
-//! gives controllers), and block on a [`Subscription`] instead of
-//! polling: the store wakes exactly the subscribers whose kinds an event
-//! touches, and [`Subscription::close`] wakes blocked waiters for
-//! shutdown (no tick, no cross-kind fanout).
+//! with [`Store::kind_events_since`] (the list+watch contract
+//! Kubernetes gives controllers), and block on a [`Subscription`]
+//! instead of polling: the store wakes exactly the subscribers whose
+//! kinds an event touches, and [`Subscription::close`] wakes blocked
+//! waiters for shutdown (no tick, no cross-kind fanout).
+//!
+//! # Locking & snapshot model
+//!
+//! There is no global store lock. State is sharded **per kind**, and
+//! each kind shard splits into a write side and a read side:
+//!
+//! - **Write side** — one `Mutex<ShardInner>` per kind holding the
+//!   authoritative object map (a persistent [`PMap`]) and that kind's
+//!   event log. Writers to *different* kinds never contend. Revisions
+//!   come from one global `AtomicU64` (`fetch_add` under the shard
+//!   lock), so they are totally ordered across kinds and strictly
+//!   increasing within each kind's log.
+//! - **Read side** — one `RwLock<PublishedView>` per kind holding the
+//!   latest published `(revision, PMap)` pair. As the last step of
+//!   every committed write (still under the shard mutex, so
+//!   publication order matches log order), the writer *swaps* this
+//!   slot with an O(1) clone of the persistent map. Readers
+//!   ([`Store::get`], [`Store::view`], [`Store::query`]) take only
+//!   the shard-registry read lock plus this `RwLock` read lock —
+//!   never the shard mutex — so a parked writer cannot block any
+//!   read, and an informer re-list costs one `Arc` clone.
+//!
+//! The CoW rules: the published [`PMap`] is immutable once swapped in
+//! (writers mutate their own handle, path-copying shared nodes), a
+//! [`KindSnapshot`] therefore never changes after it is taken, and its
+//! `revision` is the revision of the kind's latest committed write —
+//! exactly the resume token from which that kind's log continues.
+//! Event publication is allocation-free while the shard lock is held:
+//! the kind is a shared `Arc<str>` and the namespace/name strings are
+//! allocated before the lock is taken.
 //!
 //! The subscription machinery itself ([`Subscription`], [`WakeReason`],
 //! [`crate::util::SubscriberHub`]) is the shared [`crate::util::sub`]
@@ -20,10 +51,12 @@
 //! hpk-kubelet attach one handle to both buses (a merged two-source
 //! wait) instead of polling Slurm while bindings are active.
 
-use crate::util::SubscriberHub;
+use crate::kube::client::ListParams;
+use crate::util::{PMap, SubscriberHub};
 use crate::yamlkit::Value;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 pub use crate::util::sub::{Subscription, WakeReason};
 
@@ -35,12 +68,13 @@ pub enum EventType {
     Deleted,
 }
 
-/// One event in a kind's log.
+/// One event in a kind's log. `kind` is the shard's shared `Arc<str>`,
+/// so logging an event never copies the kind string.
 #[derive(Debug, Clone)]
 pub struct StoreEvent {
     pub revision: u64,
     pub event_type: EventType,
-    pub kind: String,
+    pub kind: Arc<str>,
     pub namespace: String,
     pub name: String,
     /// Object state after the event (before, for deletions).
@@ -73,40 +107,156 @@ impl KindLog {
     fn complete_since(&self, since: u64) -> bool {
         since >= self.compacted_through
     }
+
+    /// Append one event and compact. All heap allocation for the event
+    /// happened before the shard lock was taken; once the ring is at
+    /// capacity the push/pop pair reuses the deque's buffer.
+    fn append(&mut self, event: StoreEvent) {
+        self.watermark = event.revision;
+        self.log.push_back(event);
+        if self.log.len() > KIND_LOG_CAP {
+            if let Some(dropped) = self.log.pop_front() {
+                self.compacted_through = dropped.revision;
+            }
+        }
+    }
+}
+
+/// Write side of one kind: the authoritative object map and event log,
+/// mutated only under the shard mutex.
+struct ShardInner {
+    /// `namespace/name -> object`, persistent so the published view is
+    /// an O(1) clone of this map.
+    objects: PMap<Arc<Value>>,
+    log: KindLog,
+}
+
+/// Read side of one kind: the latest committed `(revision, objects)`
+/// pair, swapped whole by writers, only ever read-locked by readers.
+struct PublishedView {
+    revision: u64,
+    objects: PMap<Arc<Value>>,
+}
+
+/// One kind's slice of the store. See the module docs ("Locking &
+/// snapshot model") for the write-side / read-side split.
+struct KindShard {
+    kind: Arc<str>,
+    inner: Mutex<ShardInner>,
+    published: RwLock<PublishedView>,
+}
+
+impl KindShard {
+    fn new(kind: &str) -> KindShard {
+        KindShard {
+            kind: Arc::from(kind),
+            inner: Mutex::new(ShardInner { objects: PMap::new(), log: KindLog::default() }),
+            published: RwLock::new(PublishedView { revision: 0, objects: PMap::new() }),
+        }
+    }
 }
 
 #[derive(Default)]
-struct Inner {
-    /// kind -> namespace/name -> object.
-    objects: BTreeMap<String, BTreeMap<String, Arc<Value>>>,
-    revision: u64,
-    /// kind -> that kind's event log shard.
-    logs: BTreeMap<String, KindLog>,
-}
-
-impl Inner {
-    /// Append an event to its kind's shard and wake exactly the
-    /// subscribers watching that kind.
-    fn publish(&mut self, hub: &SubscriberHub, event: StoreEvent) {
-        let kind = event.kind.clone();
-        let shard = self.logs.entry(kind.clone()).or_default();
-        shard.watermark = event.revision;
-        shard.log.push_back(event);
-        if shard.log.len() > KIND_LOG_CAP {
-            if let Some(dropped) = shard.log.pop_front() {
-                shard.compacted_through = dropped.revision;
-            }
-        }
-        hub.notify(&kind);
-    }
+struct Shared {
+    /// kind -> shard. Only shard *creation* write-locks this map;
+    /// steady-state reads and writes take the read lock.
+    shards: RwLock<BTreeMap<String, Arc<KindShard>>>,
+    /// The one global revision counter; incremented under the owning
+    /// shard's mutex so each kind's log sees strictly increasing
+    /// revisions.
+    revision: AtomicU64,
 }
 
 /// Thread-safe versioned store; cheap to clone.
 #[derive(Clone, Default)]
 pub struct Store {
-    inner: Arc<Mutex<Inner>>,
+    shared: Arc<Shared>,
     /// Kind-topic subscriber registry (shared bus primitive).
     hub: SubscriberHub,
+}
+
+/// An immutable, consistent snapshot of one kind at one revision —
+/// the store's entire read surface for lists.
+///
+/// Taking one is an `Arc` clone of the kind's published map (no lock
+/// beyond a momentary read-lock, no copying); holding one never blocks
+/// writers, and later writes never appear in it. `revision` is the
+/// revision of the kind's latest committed write at the time the view
+/// was taken — the exact resume token from which
+/// [`Store::kind_events_since`] continues this kind's stream.
+#[derive(Clone)]
+pub struct KindSnapshot {
+    pub(crate) kind: Arc<str>,
+    pub(crate) revision: u64,
+    pub(crate) objects: PMap<Arc<Value>>,
+}
+
+impl KindSnapshot {
+    /// The kind this view captures.
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    /// Revision of the kind's latest committed write when the view was
+    /// taken (0 for a never-written kind).
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    /// Fetch one object from the snapshot.
+    pub fn get(&self, namespace: &str, name: &str) -> Option<Arc<Value>> {
+        self.objects.get(nskey(namespace, name).as_str()).cloned()
+    }
+
+    /// All objects, ordered by `namespace/name`, without copying.
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<Value>> {
+        self.objects.iter().map(|(_, v)| v)
+    }
+
+    /// All objects as shared refs (the old `list_refs` shape).
+    pub fn list(&self) -> Vec<Arc<Value>> {
+        self.iter().cloned().collect()
+    }
+
+    /// Objects in one namespace (prefix scan, no full-kind walk).
+    pub fn namespaced(&self, namespace: &str) -> Vec<Arc<Value>> {
+        let prefix = format!("{namespace}/");
+        self.objects
+            .range_from(&prefix)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .map(|(_, v)| v.clone())
+            .collect()
+    }
+
+    /// Objects matching every selector in `params`. Namespace-scoped
+    /// queries ride the ordered map's prefix scan.
+    pub fn query(&self, params: &ListParams) -> Vec<Arc<Value>> {
+        match &params.namespace {
+            Some(ns) => {
+                let prefix = format!("{ns}/");
+                self.objects
+                    .range_from(&prefix)
+                    .take_while(|(k, _)| k.starts_with(&prefix))
+                    .filter(|(_, v)| params.matches(v))
+                    .map(|(_, v)| v.clone())
+                    .collect()
+            }
+            None => self
+                .objects
+                .iter()
+                .filter(|(_, v)| params.matches(v))
+                .map(|(_, v)| v.clone())
+                .collect(),
+        }
+    }
 }
 
 fn nskey(namespace: &str, name: &str) -> String {
@@ -125,42 +275,73 @@ impl Store {
         self.hub.subscribe(kinds)
     }
 
-    /// Insert or replace; returns the new revision.
-    pub fn put(&self, kind: &str, namespace: &str, name: &str, obj: Value) -> u64 {
-        let mut inner = self.inner.lock().unwrap();
-        Self::put_locked(&mut inner, &self.hub, kind, namespace, name, obj)
+    /// Look up a kind's shard without creating it.
+    fn shard(&self, kind: &str) -> Option<Arc<KindShard>> {
+        self.shared.shards.read().unwrap().get(kind).cloned()
     }
 
-    fn put_locked(
-        inner: &mut Inner,
-        hub: &SubscriberHub,
-        kind: &str,
-        namespace: &str,
-        name: &str,
+    /// Look up or create a kind's shard. Creation is the only path
+    /// that write-locks the registry.
+    fn shard_or_create(&self, kind: &str) -> Arc<KindShard> {
+        if let Some(shard) = self.shard(kind) {
+            return shard;
+        }
+        let mut shards = self.shared.shards.write().unwrap();
+        shards
+            .entry(kind.to_string())
+            .or_insert_with(|| Arc::new(KindShard::new(kind)))
+            .clone()
+    }
+
+    /// Commit one write under the shard mutex: allocate the revision,
+    /// stamp it, update the map + log, swap the published view, wake
+    /// subscribers. `namespace`/`name`/`key` arrive pre-allocated so
+    /// nothing allocates per-event while the lock is held (the map
+    /// path-copy is O(log n) node clones).
+    fn commit_put(
+        &self,
+        shard: &KindShard,
+        inner: &mut ShardInner,
+        namespace: String,
+        name: String,
+        key: String,
         mut obj: Value,
     ) -> u64 {
-        inner.revision += 1;
-        let rev = inner.revision;
+        let rev = self.shared.revision.fetch_add(1, Ordering::SeqCst) + 1;
         obj.entry_map("metadata")
             .set("resourceVersion", Value::Int(rev as i64));
         let arc = Arc::new(obj);
-        let existed = inner
-            .objects
-            .entry(kind.to_string())
-            .or_default()
-            .insert(nskey(namespace, name), arc.clone())
-            .is_some();
+        let existed = inner.objects.insert(key, arc.clone()).is_some();
         let event_type = if existed { EventType::Modified } else { EventType::Added };
-        let event = StoreEvent {
+        inner.log.append(StoreEvent {
             revision: rev,
             event_type,
-            kind: kind.to_string(),
-            namespace: namespace.to_string(),
-            name: name.to_string(),
+            kind: Arc::clone(&shard.kind),
+            namespace,
+            name,
             object: arc,
-        };
-        inner.publish(hub, event);
+        });
+        self.publish_locked(shard, inner, rev);
         rev
+    }
+
+    /// Swap the read-side view to the just-committed state and wake the
+    /// kind's subscribers. Must run under the shard mutex so the
+    /// publication order equals the log order.
+    fn publish_locked(&self, shard: &KindShard, inner: &ShardInner, rev: u64) {
+        *shard.published.write().unwrap() =
+            PublishedView { revision: rev, objects: inner.objects.clone() };
+        self.hub.notify(&shard.kind);
+    }
+
+    /// Insert or replace; returns the new revision.
+    pub fn put(&self, kind: &str, namespace: &str, name: &str, obj: Value) -> u64 {
+        let shard = self.shard_or_create(kind);
+        let namespace = namespace.to_string();
+        let name = name.to_string();
+        let key = nskey(&namespace, &name);
+        let mut inner = shard.inner.lock().unwrap();
+        self.commit_put(&shard, &mut inner, namespace, name, key, obj)
     }
 
     /// Compare-and-put: atomically replace the object only if its current
@@ -177,88 +358,95 @@ impl Store {
         expected: Option<u64>,
         obj: Value,
     ) -> Result<u64, Option<u64>> {
-        let mut inner = self.inner.lock().unwrap();
+        let shard = self.shard_or_create(kind);
+        let namespace = namespace.to_string();
+        let name = name.to_string();
+        let key = nskey(&namespace, &name);
+        let mut inner = shard.inner.lock().unwrap();
         let current_rv: Option<u64> = inner
             .objects
-            .get(kind)
-            .and_then(|m| m.get(&nskey(namespace, name)))
+            .get(&key)
             .map(|o| o.i64_at("metadata.resourceVersion").unwrap_or(0) as u64);
         if current_rv != expected {
             return Err(current_rv);
         }
-        Ok(Self::put_locked(&mut inner, &self.hub, kind, namespace, name, obj))
+        Ok(self.commit_put(&shard, &mut inner, namespace, name, key, obj))
     }
 
-    /// Fetch one object.
+    /// Fetch one object from the kind's published view (no write-side
+    /// lock).
     pub fn get(&self, kind: &str, namespace: &str, name: &str) -> Option<Arc<Value>> {
-        let inner = self.inner.lock().unwrap();
-        inner.objects.get(kind)?.get(&nskey(namespace, name)).cloned()
+        let shard = self.shard(kind)?;
+        let published = shard.published.read().unwrap();
+        published.objects.get(nskey(namespace, name).as_str()).cloned()
     }
 
     /// Delete; returns the removed object and logs a Deleted event.
     pub fn delete(&self, kind: &str, namespace: &str, name: &str) -> Option<Arc<Value>> {
-        let mut inner = self.inner.lock().unwrap();
-        let removed = inner.objects.get_mut(kind)?.remove(&nskey(namespace, name))?;
-        inner.revision += 1;
-        let rev = inner.revision;
-        let event = StoreEvent {
+        let shard = self.shard(kind)?;
+        let namespace = namespace.to_string();
+        let name = name.to_string();
+        let key = nskey(&namespace, &name);
+        let mut inner = shard.inner.lock().unwrap();
+        let removed = inner.objects.remove(&key)?;
+        let rev = self.shared.revision.fetch_add(1, Ordering::SeqCst) + 1;
+        inner.log.append(StoreEvent {
             revision: rev,
             event_type: EventType::Deleted,
-            kind: kind.to_string(),
-            namespace: namespace.to_string(),
-            name: name.to_string(),
+            kind: Arc::clone(&shard.kind),
+            namespace,
+            name,
             object: removed.clone(),
-        };
-        inner.publish(&self.hub, event);
+        });
+        self.publish_locked(&shard, &inner, rev);
         Some(removed)
     }
 
-    /// All objects of a kind (all namespaces), sorted by namespace/name.
-    pub fn list(&self, kind: &str) -> Vec<Arc<Value>> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .objects
-            .get(kind)
-            .map(|m| m.values().cloned().collect())
-            .unwrap_or_default()
+    /// A consistent, immutable snapshot of one kind — the single list
+    /// entry point (an `Arc` clone; never blocks on or blocks
+    /// writers). Never-written kinds get an empty view at revision 0.
+    pub fn view(&self, kind: &str) -> KindSnapshot {
+        match self.shard(kind) {
+            Some(shard) => {
+                let published = shard.published.read().unwrap();
+                KindSnapshot {
+                    kind: Arc::clone(&shard.kind),
+                    revision: published.revision,
+                    objects: published.objects.clone(),
+                }
+            }
+            None => {
+                KindSnapshot { kind: Arc::from(kind), revision: 0, objects: PMap::new() }
+            }
+        }
     }
 
-    /// Objects of a kind in one namespace.
-    pub fn list_namespaced(&self, kind: &str, namespace: &str) -> Vec<Arc<Value>> {
-        let prefix = format!("{namespace}/");
-        let inner = self.inner.lock().unwrap();
-        inner
-            .objects
-            .get(kind)
-            .map(|m| {
-                m.range(prefix.clone()..)
-                    .take_while(|(k, _)| k.starts_with(&prefix))
-                    .map(|(_, v)| v.clone())
-                    .collect()
-            })
-            .unwrap_or_default()
+    /// Selector-filtered list over the kind's published view.
+    pub fn query(&self, kind: &str, params: &ListParams) -> Vec<Arc<Value>> {
+        self.view(kind).query(params)
     }
 
     /// Current global revision.
     pub fn revision(&self) -> u64 {
-        self.inner.lock().unwrap().revision
+        self.shared.revision.load(Ordering::SeqCst)
     }
 
     /// Highest revision ever appended to `kind`'s log (0 if the kind
     /// has never been written) — the head a per-kind resume token
     /// catches up to.
     pub fn kind_watermark(&self, kind: &str) -> u64 {
-        let inner = self.inner.lock().unwrap();
-        inner.logs.get(kind).map(|l| l.watermark).unwrap_or(0)
+        match self.shard(kind) {
+            Some(shard) => shard.inner.lock().unwrap().log.watermark,
+            None => 0,
+        }
     }
 
     /// Whether an incremental read of `kind` from `since` would be
     /// complete (no compaction gap) — the cheap probe watchers run
     /// before cloning event batches a re-list would throw away.
     pub fn kind_complete_since(&self, kind: &str, since: u64) -> bool {
-        let inner = self.inner.lock().unwrap();
-        match inner.logs.get(kind) {
-            Some(shard) => shard.complete_since(since),
+        match self.shard(kind) {
+            Some(shard) => shard.inner.lock().unwrap().log.complete_since(since),
             None => true,
         }
     }
@@ -267,14 +455,15 @@ impl Store {
     /// when that kind's log has been compacted past `since` (the
     /// watcher must re-list that kind — and only that kind).
     pub fn kind_events_since(&self, kind: &str, since: u64) -> (Vec<StoreEvent>, bool) {
-        let inner = self.inner.lock().unwrap();
-        let Some(shard) = inner.logs.get(kind) else {
+        let Some(shard) = self.shard(kind) else {
             return (Vec::new(), true);
         };
-        if !shard.complete_since(since) {
+        let inner = shard.inner.lock().unwrap();
+        if !inner.log.complete_since(since) {
             return (Vec::new(), false);
         }
-        let events = shard
+        let events = inner
+            .log
             .log
             .iter()
             .filter(|e| e.revision > since)
@@ -286,66 +475,59 @@ impl Store {
     /// Merged view across every kind's log, in revision order — kept
     /// for read-only tooling and benches; watchers use the per-kind
     /// surface. The bool is false when *any* kind's log has been
-    /// compacted past `since`.
+    /// compacted past `since`. Shards are visited one at a time, so
+    /// the merge is consistent per kind but not a point-in-time cut
+    /// across kinds.
     pub fn events_since(&self, since: u64) -> (Vec<StoreEvent>, bool) {
-        let inner = self.inner.lock().unwrap();
+        let shards: Vec<Arc<KindShard>> =
+            self.shared.shards.read().unwrap().values().cloned().collect();
         let mut complete = true;
         let mut events: Vec<StoreEvent> = Vec::new();
-        for shard in inner.logs.values() {
-            if !shard.complete_since(since) {
+        for shard in shards {
+            let inner = shard.inner.lock().unwrap();
+            if !inner.log.complete_since(since) {
                 complete = false;
             }
-            events.extend(shard.log.iter().filter(|e| e.revision > since).cloned());
+            events.extend(inner.log.log.iter().filter(|e| e.revision > since).cloned());
         }
         events.sort_by_key(|e| e.revision);
         (events, complete)
     }
 
-    /// A consistent snapshot of every object together with the revision
-    /// it is valid at — what a watcher re-lists from after its logs have
-    /// been compacted past its resume point. Taken under one lock so no
-    /// event can fall between the revision and the object set.
-    pub fn snapshot(&self) -> (u64, Vec<Arc<Value>>) {
-        let inner = self.inner.lock().unwrap();
-        let objects = inner
-            .objects
-            .values()
-            .flat_map(|m| m.values().cloned())
-            .collect();
-        (inner.revision, objects)
-    }
-
-    /// A consistent snapshot restricted to the given kinds — the
-    /// re-list path for per-kind compaction, so one hot kind never
-    /// forces cold kinds to re-list.
-    pub fn snapshot_kinds(&self, kinds: &[String]) -> (u64, Vec<Arc<Value>>) {
-        let inner = self.inner.lock().unwrap();
-        let objects = kinds
-            .iter()
-            .filter_map(|k| inner.objects.get(k))
-            .flat_map(|m| m.values().cloned())
-            .collect();
-        (inner.revision, objects)
-    }
-
-    /// Kinds present in the store.
+    /// Kinds currently holding at least one object.
     pub fn kinds(&self) -> Vec<String> {
-        let inner = self.inner.lock().unwrap();
-        inner.objects.keys().cloned().collect()
+        let shards: Vec<Arc<KindShard>> =
+            self.shared.shards.read().unwrap().values().cloned().collect();
+        shards
+            .into_iter()
+            .filter(|s| !s.published.read().unwrap().objects.is_empty())
+            .map(|s| s.kind.to_string())
+            .collect()
     }
 
-    /// Kinds that have ever logged an event (superset of
-    /// [`Store::kinds`]: fully-deleted kinds keep their logs) — what a
-    /// wildcard watcher iterates.
+    /// Every kind with a shard (superset of [`Store::kinds`]:
+    /// fully-deleted kinds keep their logs) — what a wildcard watcher
+    /// iterates.
     pub fn log_kinds(&self) -> Vec<String> {
-        let inner = self.inner.lock().unwrap();
-        inner.logs.keys().cloned().collect()
+        self.shared.shards.read().unwrap().keys().cloned().collect()
     }
 
-    /// Total object count (across kinds).
+    /// Total object count (across kinds), from the published views.
     pub fn object_count(&self) -> usize {
-        let inner = self.inner.lock().unwrap();
-        inner.objects.values().map(|m| m.len()).sum()
+        let shards: Vec<Arc<KindShard>> =
+            self.shared.shards.read().unwrap().values().cloned().collect();
+        shards.iter().map(|s| s.published.read().unwrap().objects.len()).sum()
+    }
+
+    /// Test hook: run `f` while holding `kind`'s write-side shard
+    /// mutex, parking every writer to that kind for the duration. The
+    /// concurrency suite uses this to prove the read path
+    /// (`get`/`view`/`query`) never touches a write-side lock.
+    #[doc(hidden)]
+    pub fn with_kind_locked<R>(&self, kind: &str, f: impl FnOnce() -> R) -> R {
+        let shard = self.shard_or_create(kind);
+        let _guard = shard.inner.lock().unwrap();
+        f()
     }
 }
 
@@ -360,17 +542,19 @@ mod tests {
     }
 
     #[test]
-    fn put_get_list_delete() {
+    fn put_get_view_delete() {
         let s = Store::new();
         s.put("Pod", "default", "a", obj("a"));
         s.put("Pod", "default", "b", obj("b"));
         s.put("Pod", "kube-system", "c", obj("c"));
         assert!(s.get("Pod", "default", "a").is_some());
-        assert_eq!(s.list("Pod").len(), 3);
-        assert_eq!(s.list_namespaced("Pod", "default").len(), 2);
+        assert_eq!(s.view("Pod").len(), 3);
+        assert_eq!(s.view("Pod").namespaced("default").len(), 2);
         assert!(s.delete("Pod", "default", "a").is_some());
         assert!(s.get("Pod", "default", "a").is_none());
         assert!(s.delete("Pod", "default", "a").is_none());
+        assert_eq!(s.view("Pod").len(), 2);
+        assert_eq!(s.object_count(), 2);
     }
 
     #[test]
@@ -419,7 +603,7 @@ mod tests {
         let (pods, complete) = s.kind_events_since("Pod", 0);
         assert!(complete);
         assert_eq!(pods.len(), 2);
-        assert!(pods.iter().all(|e| e.kind == "Pod"));
+        assert!(pods.iter().all(|e| &*e.kind == "Pod"));
         // Resuming mid-shard works per kind.
         let (pods, complete) = s.kind_events_since("Pod", r1);
         assert!(complete);
@@ -479,17 +663,54 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_is_consistent_with_revision() {
+    fn view_is_consistent_and_frozen() {
         let s = Store::new();
-        s.put("Pod", "default", "a", obj("a"));
-        let r = s.put("Job", "default", "b", obj("b"));
-        let (rev, objects) = s.snapshot();
-        assert_eq!(rev, r);
-        assert_eq!(objects.len(), 2);
-        // The kind-scoped snapshot only carries the asked-for kinds.
-        let (rev, pods) = s.snapshot_kinds(&["Pod".to_string()]);
-        assert_eq!(rev, r);
+        let rp = s.put("Pod", "default", "a", obj("a"));
+        let rj = s.put("Job", "default", "b", obj("b"));
+        let pods = s.view("Pod");
+        assert_eq!(pods.kind(), "Pod");
+        assert_eq!(pods.revision(), rp, "view revision = kind's last write");
         assert_eq!(pods.len(), 1);
+        let jobs = s.view("Job");
+        assert_eq!(jobs.revision(), rj);
+        assert_eq!(jobs.len(), 1);
+        // A view is frozen: later writes never appear in it.
+        let r3 = s.put("Pod", "default", "c", obj("c"));
+        assert_eq!(pods.len(), 1);
+        assert!(pods.get("default", "c").is_none());
+        let fresh = s.view("Pod");
+        assert_eq!(fresh.revision(), r3);
+        assert_eq!(fresh.len(), 2);
+        // Objects in a view are never newer than its revision.
+        for o in fresh.iter() {
+            assert!(o.i64_at("metadata.resourceVersion").unwrap_or(0) as u64 <= fresh.revision());
+        }
+        // Never-written kinds get an empty view at revision 0.
+        let none = s.view("Service");
+        assert_eq!((none.revision(), none.len()), (0, 0));
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn query_applies_all_selectors() {
+        let s = Store::new();
+        let labeled = |app: &str| {
+            parse_one(&format!("metadata:\n  name: x\n  labels:\n    app: {app}\n")).unwrap()
+        };
+        s.put("Pod", "prod", "a", labeled("web"));
+        s.put("Pod", "prod", "b", labeled("db"));
+        s.put("Pod", "dev", "c", labeled("web"));
+        assert_eq!(s.query("Pod", &ListParams::all()).len(), 3);
+        assert_eq!(s.query("Pod", &ListParams::in_namespace("prod")).len(), 2);
+        assert_eq!(
+            s.query("Pod", &ListParams::in_namespace("prod").with_label("app", "web")).len(),
+            1
+        );
+        assert_eq!(s.query("Pod", &ListParams::all().with_label("app", "web")).len(), 2);
+        // The same filters run on an already-taken snapshot.
+        let snap = s.view("Pod");
+        s.put("Pod", "prod", "d", labeled("web"));
+        assert_eq!(snap.query(&ListParams::all().with_label("app", "web")).len(), 2);
     }
 
     #[test]
@@ -521,7 +742,7 @@ mod tests {
         let s = Store::new();
         s.put("Pod", "a", "x", obj("x"));
         s.put("Pod", "ab", "y", obj("y"));
-        assert_eq!(s.list_namespaced("Pod", "a").len(), 1);
+        assert_eq!(s.view("Pod").namespaced("a").len(), 1);
     }
 
     #[test]

@@ -26,9 +26,10 @@ pub enum WatchOutcome {
     /// Events since the last poll, in revision order (possibly empty).
     Events(Vec<StoreEvent>),
     /// The logs of `kinds` were compacted past our resume tokens: here
-    /// is the full current state *of those kinds only* at `revision`;
-    /// the caller must rebuild its view of them. Other kinds keep their
-    /// tokens and deliver incrementally on the next poll.
+    /// is the full current state *of those kinds only* (`revision` is
+    /// the highest of their per-kind view revisions); the caller must
+    /// rebuild its view of them. Other kinds keep their tokens and
+    /// deliver incrementally on the next poll.
     Resync {
         revision: u64,
         kinds: Vec<String>,
@@ -43,7 +44,7 @@ pub struct Watcher {
     api: ApiServer,
     kinds: Option<Vec<String>>,
     /// Per-kind resume tokens; kinds not seen yet resume from `floor`.
-    tokens: HashMap<String, u64>,
+    tokens: HashMap<Arc<str>, u64>,
     floor: u64,
     subscription: Subscription,
 }
@@ -151,11 +152,19 @@ impl Watcher {
             .cloned()
             .collect();
         if !compacted.is_empty() {
-            // Re-list only the compacted kinds at one consistent
-            // revision; untouched kinds keep their tokens.
-            let (revision, objects) = self.api.snapshot_kinds(&compacted);
+            // Re-list only the compacted kinds, each from its own
+            // frozen per-kind view; untouched kinds keep their tokens.
+            // A kind's view revision is its last committed write, so it
+            // is an exact resume token for that kind: any later event
+            // is still in the log (delivered incrementally) or has
+            // compacted it again (caught by the next poll's probe).
+            let mut revision = 0;
+            let mut objects: Vec<Arc<Value>> = Vec::new();
             for kind in &compacted {
-                self.tokens.insert(kind.clone(), revision);
+                let snap = self.api.view(kind);
+                revision = revision.max(snap.revision());
+                self.tokens.insert(snap.kind.clone(), snap.revision());
+                objects.extend(snap.iter().cloned());
             }
             return WatchOutcome::Resync { revision, kinds: compacted, objects };
         }
@@ -229,7 +238,7 @@ mod tests {
         match w.poll() {
             WatchOutcome::Events(evs) => {
                 assert_eq!(evs.len(), 1);
-                assert_eq!(evs[0].kind, "Job");
+                assert_eq!(&*evs[0].kind, "Job");
             }
             other => panic!("expected events, got {other:?}"),
         }

@@ -1,0 +1,338 @@
+//! The scheduler's free-capacity index: per-free-CPU bucket lists over
+//! the schedulable nodes, maintained incrementally on every reserve and
+//! release so placement consults only nodes with headroom instead of
+//! scanning the whole table.
+//!
+//! [`CapacityIndex`] is owned by [`crate::slurm::Slurmctld`] and cached
+//! across scheduler passes; it is keyed on the cluster's node-table
+//! epoch ([`crate::hpcsim::Cluster::epoch`]) and rebuilt only when a
+//! mutation happened *outside* the scheduler (failure injection, test
+//! surgery). All scheduler-side mutations flow through a
+//! [`CapacityView`] — a short-lived binding of the index to the locked
+//! node slice — which updates the buckets in the same motion as the
+//! node allocations, keeping the two exactly in sync without a bump.
+//!
+//! This is the write-side analogue of the kube store's snapshot design
+//! (see *Locking & snapshot model* in [`crate::kube::store`]): instead
+//! of every `place` call re-deriving free capacity from all `N` nodes,
+//! the derived structure is kept current at the point of change.
+
+use super::types::JobSpec;
+use crate::hpcsim::{Node, NodeState};
+use std::collections::HashMap;
+
+/// Incrementally-maintained free-capacity buckets over one node table.
+///
+/// `buckets[f]` holds the indices of schedulable nodes with exactly
+/// `f` free CPUs; a reservation of `c` CPUs walks buckets `c..` from
+/// the tightest upward (best-fit, which keeps large holes intact for
+/// wide tasks). Nodes that are `Down`/`Drain` are untracked — they
+/// reject allocations anyway — but still count toward the
+/// capacity-profile histogram used by
+/// [`CapacityView::can_ever_fit`], which (matching the old
+/// simulate-against-empty-copies check) treats only `Down` nodes as
+/// permanently gone.
+pub struct CapacityIndex {
+    /// Node-table epoch the buckets were built against (0 = never).
+    epoch: u64,
+    /// Free CPUs per tracked node index; `None` = not schedulable.
+    tracked: Vec<Option<u32>>,
+    /// Position of node `i` inside its bucket (valid while tracked).
+    pos: Vec<usize>,
+    /// `buckets[f]` = node indices with `f` free CPUs.
+    buckets: Vec<Vec<usize>>,
+    /// Sum of free CPUs over tracked nodes (feeds backfill's shadow
+    /// estimate without a scan).
+    total_free: u64,
+    /// `(capacity_cpus, capacity_memory, count)` over non-`Down`
+    /// nodes: the whole-cluster satisfiability histogram.
+    profiles: Vec<(u32, u64, u32)>,
+    /// Node name -> index, for releasing by allocation node names.
+    by_name: HashMap<String, usize>,
+}
+
+impl CapacityIndex {
+    pub fn new() -> CapacityIndex {
+        CapacityIndex {
+            epoch: 0,
+            tracked: Vec::new(),
+            pos: Vec::new(),
+            buckets: Vec::new(),
+            total_free: 0,
+            by_name: HashMap::new(),
+            profiles: Vec::new(),
+        }
+    }
+
+    /// Rebuild from scratch if `epoch` moved since the last build;
+    /// otherwise the buckets are already exact and this is O(1).
+    pub fn refresh(&mut self, nodes: &[Node], epoch: u64) {
+        if self.epoch == epoch {
+            return;
+        }
+        self.epoch = epoch;
+        self.tracked.clear();
+        self.tracked.resize(nodes.len(), None);
+        self.pos.clear();
+        self.pos.resize(nodes.len(), 0);
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.total_free = 0;
+        self.by_name.clear();
+        let mut profile_counts: HashMap<(u32, u64), u32> = HashMap::new();
+        for (i, n) in nodes.iter().enumerate() {
+            self.by_name.insert(n.name.clone(), i);
+            if n.state != NodeState::Down {
+                *profile_counts
+                    .entry((n.resources.cpus, n.resources.memory_bytes))
+                    .or_insert(0) += 1;
+            }
+            if n.is_schedulable() {
+                self.track(i, n.free_cpus());
+            }
+        }
+        self.profiles.clear();
+        self.profiles.extend(profile_counts.into_iter().map(|((c, m), n)| (c, m, n)));
+    }
+
+    fn track(&mut self, i: usize, free: u32) {
+        let f = free as usize;
+        if self.buckets.len() <= f {
+            self.buckets.resize_with(f + 1, Vec::new);
+        }
+        self.tracked[i] = Some(free);
+        self.pos[i] = self.buckets[f].len();
+        self.buckets[f].push(i);
+        self.total_free += free as u64;
+    }
+
+    fn untrack(&mut self, i: usize) {
+        let Some(free) = self.tracked[i].take() else {
+            return;
+        };
+        let f = free as usize;
+        let p = self.pos[i];
+        self.buckets[f].swap_remove(p);
+        if let Some(&moved) = self.buckets[f].get(p) {
+            self.pos[moved] = p;
+        }
+        self.total_free -= free as u64;
+    }
+
+    fn move_to(&mut self, i: usize, new_free: u32) {
+        self.untrack(i);
+        self.track(i, new_free);
+    }
+}
+
+impl Default for CapacityIndex {
+    fn default() -> CapacityIndex {
+        CapacityIndex::new()
+    }
+}
+
+/// The scheduler's working handle: the capacity index bound to the
+/// locked node slice it describes. Every mutation goes through here so
+/// the buckets never drift from the allocations.
+///
+/// This is the *only* way scheduling code touches nodes — `place` no
+/// longer sees `&mut [Node]` (see [`crate::slurm::sched::place`]).
+pub struct CapacityView<'a> {
+    index: &'a mut CapacityIndex,
+    nodes: &'a mut [Node],
+}
+
+impl<'a> CapacityView<'a> {
+    /// Bind `index` to `nodes`, rebuilding it first if `epoch` says the
+    /// table changed behind the scheduler's back.
+    pub fn new(
+        index: &'a mut CapacityIndex,
+        nodes: &'a mut [Node],
+        epoch: u64,
+    ) -> CapacityView<'a> {
+        index.refresh(nodes, epoch);
+        CapacityView { index, nodes }
+    }
+
+    /// Reserve `cpus`+`memory` for one task of `job` on the node with
+    /// the *least* sufficient free CPU (best-fit). Returns the chosen
+    /// node's name; `None` leaves everything untouched.
+    pub fn reserve(&mut self, job: u64, cpus: u32, memory: u64) -> Option<String> {
+        // Buckets only hold schedulable nodes with exactly `f` free
+        // CPUs, so within one bucket only memory can still disqualify.
+        let mut found: Option<(usize, usize)> = None;
+        'buckets: for (f, bucket) in self.index.buckets.iter().enumerate().skip(cpus as usize) {
+            for &i in bucket {
+                if self.nodes[i].free_memory() >= memory {
+                    found = Some((f, i));
+                    break 'buckets;
+                }
+            }
+        }
+        let (f, i) = found?;
+        let ok = self.nodes[i].allocate(job, cpus, memory);
+        debug_assert!(ok, "bucketed node must fit its bucket");
+        if !ok {
+            return None;
+        }
+        self.index.move_to(i, (f as u32) - cpus);
+        Some(self.nodes[i].name.clone())
+    }
+
+    /// Release everything `job` holds on the named nodes (the normal
+    /// path: an [`crate::slurm::Allocation`] knows where it landed).
+    pub fn release(&mut self, job: u64, names: &[String]) {
+        for name in names {
+            let Some(&i) = self.index.by_name.get(name) else {
+                continue;
+            };
+            if let Some((freed_cpus, _)) = self.nodes[i].release(job) {
+                if let Some(free) = self.index.tracked[i] {
+                    self.index.move_to(i, free + freed_cpus);
+                }
+            }
+        }
+    }
+
+    /// Release everything `job` holds anywhere — the fallback for the
+    /// rare finish-race paths where the allocation record was already
+    /// taken by a timeout/cancel sweep. O(N), intentionally.
+    pub fn release_all(&mut self, job: u64) {
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            if let Some((freed_cpus, _)) = node.release(job) {
+                if let Some(free) = self.index.tracked[i] {
+                    self.index.move_to(i, free + freed_cpus);
+                }
+            }
+        }
+    }
+
+    /// Total free CPUs across schedulable nodes — O(1), no scan.
+    pub fn free_cpus(&self) -> u64 {
+        self.index.total_free
+    }
+
+    /// Whether `spec` could ever run on this cluster with every
+    /// non-`Down` node empty. With uniform per-task shapes the
+    /// placeable count per node profile is independent of order:
+    /// `min(cap_cpus / c, cap_mem / m)` tasks each.
+    pub fn can_ever_fit(&self, spec: &JobSpec) -> bool {
+        let c = spec.cpus_per_task.max(1) as u64;
+        let m = spec.mem_per_task;
+        let mut placeable: u64 = 0;
+        for &(cap_cpus, cap_mem, count) in &self.index.profiles {
+            let by_cpu = cap_cpus as u64 / c;
+            let by_mem = if m == 0 { u64::MAX } else { cap_mem / m };
+            placeable += by_cpu.min(by_mem) * count as u64;
+            if placeable >= spec.ntasks as u64 {
+                return true;
+            }
+        }
+        placeable >= spec.ntasks as u64
+    }
+
+    /// The node slice, read-only (introspection; mutations must go
+    /// through the view).
+    pub fn nodes(&self) -> &[Node] {
+        self.nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(caps: &[(u32, u64)]) -> Vec<Node> {
+        caps.iter()
+            .enumerate()
+            .map(|(i, &(c, m))| Node::new(&format!("n{i}"), c, m))
+            .collect()
+    }
+
+    fn check_sync(index: &CapacityIndex, nodes: &[Node]) {
+        let mut total = 0u64;
+        for (i, n) in nodes.iter().enumerate() {
+            match index.tracked[i] {
+                Some(free) => {
+                    assert!(n.is_schedulable());
+                    assert_eq!(free, n.free_cpus(), "node {i} bucket drifted");
+                    assert_eq!(index.buckets[free as usize][index.pos[i]], i);
+                    total += free as u64;
+                }
+                None => assert!(!n.is_schedulable()),
+            }
+        }
+        assert_eq!(index.total_free, total);
+    }
+
+    #[test]
+    fn reserve_is_best_fit_and_release_restores() {
+        let mut nodes = cluster(&[(8, 64 << 30), (4, 64 << 30), (2, 64 << 30)]);
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+        // 2 cpus fit all three nodes; best-fit picks the 2-cpu node.
+        assert_eq!(view.reserve(1, 2, 1 << 20).as_deref(), Some("n2"));
+        // Next 2 cpus: tightest remaining is the 4-cpu node.
+        assert_eq!(view.reserve(1, 2, 1 << 20).as_deref(), Some("n1"));
+        assert_eq!(view.free_cpus(), 10);
+        view.release(1, &["n1".to_string(), "n2".to_string()]);
+        assert_eq!(view.free_cpus(), 14);
+        check_sync(&index, &nodes);
+    }
+
+    #[test]
+    fn memory_is_checked_within_a_bucket() {
+        let mut nodes = cluster(&[(4, 1 << 20), (4, 64 << 30)]);
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+        // Both nodes sit in the 4-free bucket; only n1 has the memory.
+        assert_eq!(view.reserve(1, 4, 1 << 30).as_deref(), Some("n1"));
+        assert!(view.reserve(2, 4, 1 << 30).is_none(), "n0 lacks memory");
+        check_sync(&index, &nodes);
+    }
+
+    #[test]
+    fn refresh_is_epoch_gated() {
+        let mut nodes = cluster(&[(8, 64 << 30)]);
+        let mut index = CapacityIndex::new();
+        CapacityView::new(&mut index, &mut nodes, 1);
+        // Mutate behind the index's back without bumping the epoch:
+        // stale buckets survive (same epoch), rebuild on a new epoch.
+        nodes[0].allocate(9, 8, 0);
+        CapacityView::new(&mut index, &mut nodes, 1);
+        assert_eq!(index.total_free, 8, "same epoch: no rebuild");
+        let view = CapacityView::new(&mut index, &mut nodes, 2);
+        assert_eq!(view.free_cpus(), 0, "new epoch: rebuilt");
+    }
+
+    #[test]
+    fn down_nodes_are_untracked_but_drain_counts_for_ever_fit() {
+        let mut nodes = cluster(&[(8, 64 << 30), (8, 64 << 30)]);
+        nodes[0].state = NodeState::Down;
+        nodes[1].state = NodeState::Drain;
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+        assert_eq!(view.free_cpus(), 0);
+        assert!(view.reserve(1, 1, 0).is_none());
+        // Drain nodes may come back: an 8-cpu job is still satisfiable,
+        // a 16-cpu single task never is.
+        assert!(view.can_ever_fit(&JobSpec::new("j").with_tasks(1, 8, 1 << 20)));
+        assert!(!view.can_ever_fit(&JobSpec::new("j").with_tasks(1, 16, 1 << 20)));
+        // Two 8-cpu tasks need both nodes, but n0 is Down.
+        assert!(!view.can_ever_fit(&JobSpec::new("j").with_tasks(2, 8, 1 << 20)));
+    }
+
+    #[test]
+    fn release_all_finds_strays() {
+        let mut nodes = cluster(&[(4, 64 << 30), (4, 64 << 30)]);
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+        view.reserve(7, 3, 1 << 20);
+        view.reserve(7, 3, 1 << 20);
+        assert_eq!(view.free_cpus(), 2);
+        view.release_all(7);
+        assert_eq!(view.free_cpus(), 8);
+        check_sync(&index, &nodes);
+    }
+}

@@ -10,11 +10,12 @@
 //! its 2 ms active-bindings poll: the HPC scheduler *surfaces* state
 //! transitions as events rather than being asked for them.
 
+use super::capacity::{CapacityIndex, CapacityView};
 use super::sched;
 use super::types::*;
 use crate::hpcsim::Cluster;
 use crate::util::{SubscriberHub, Subscription, WakeReason};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -62,6 +63,9 @@ struct Inner {
     jobs: HashMap<JobId, JobRecord>,
     /// Pending job ids in submission order.
     queue: Vec<JobId>,
+    /// Running job ids — the timeout and node-failure sweeps iterate
+    /// this instead of every job ever submitted.
+    running: BTreeSet<JobId>,
     next_id: JobId,
     acct: Vec<AcctRecord>,
     /// Scheduler-pass counter (perf introspection).
@@ -78,6 +82,10 @@ struct Inner {
 #[derive(Clone)]
 pub struct Slurmctld {
     inner: Arc<Mutex<Inner>>,
+    /// The scheduler's free-capacity buckets, maintained incrementally
+    /// across passes (see [`CapacityIndex`]). Lock order: `inner`
+    /// before `capacity` before the cluster's node table.
+    capacity: Arc<Mutex<CapacityIndex>>,
     cluster: Cluster,
     executor: Arc<dyn JobExecutor>,
     config: SlurmConfig,
@@ -98,6 +106,7 @@ impl Slurmctld {
                 next_id: 1,
                 ..Inner::default()
             })),
+            capacity: Arc::new(Mutex::new(CapacityIndex::new())),
             cluster,
             executor,
             config,
@@ -183,6 +192,7 @@ impl Slurmctld {
                 let acct = Self::acct_record(id, rec);
                 let alloc = std::mem::take(&mut rec.allocation);
                 inner.acct.push(acct);
+                inner.running.remove(&id);
                 self.publish_event(&mut inner, id, Some(from), JobState::Cancelled);
                 drop(inner);
                 self.release_nodes(id, &alloc);
@@ -237,7 +247,7 @@ impl Slurmctld {
 
     /// `sinfo`: (node name, used cpus, total cpus, state) per node.
     pub fn sinfo(&self) -> Vec<(String, u32, u32, String)> {
-        self.cluster.with_nodes(|nodes| {
+        self.cluster.with_nodes_ref(|nodes| {
             nodes
                 .iter()
                 .map(|n| {
@@ -392,15 +402,28 @@ impl Slurmctld {
         }
     }
 
+    /// Run `f` over the capacity index bound to the locked node table
+    /// (rebuilding the index first iff the table changed outside the
+    /// scheduler — see [`crate::hpcsim::Cluster::epoch`]). All
+    /// scheduler-side node mutations go through the view this hands
+    /// out, which keeps the index exact without an epoch bump.
+    fn with_capacity<R>(&self, f: impl FnOnce(&mut CapacityView) -> R) -> R {
+        let mut index = self.capacity.lock().unwrap();
+        self.cluster.with_nodes_untracked(|nodes| {
+            // Read the epoch while holding the node lock: any bump
+            // happens under that lock, so this view can't miss one.
+            let epoch = self.cluster.epoch();
+            let mut view = CapacityView::new(&mut index, nodes, epoch);
+            f(&mut view)
+        })
+    }
+
     fn release_nodes(&self, id: JobId, alloc: &Allocation) {
-        if alloc.tasks.is_empty() {
+        let names = alloc.node_names();
+        if names.is_empty() {
             return;
         }
-        self.cluster.with_nodes(|nodes| {
-            for n in nodes.iter_mut() {
-                n.release(id);
-            }
-        });
+        self.with_capacity(|view| view.release(id, &names));
     }
 
     // ---- scheduling loop ------------------------------------------------
@@ -425,10 +448,15 @@ impl Slurmctld {
             let mut inner = self.inner.lock().unwrap();
             inner.passes += 1;
 
-            // Dependencies: resolve or cancel.
+            // Dependencies: resolve or cancel. Only queued jobs can be
+            // waiting on one, so scan the queue — not every job ever
+            // submitted.
             let mut dep_cancel = Vec::new();
             let mut ready: HashMap<JobId, bool> = HashMap::new();
-            for (&id, rec) in inner.jobs.iter() {
+            for &id in inner.queue.iter() {
+                let Some(rec) = inner.jobs.get(&id) else {
+                    continue;
+                };
                 if !matches!(rec.state, JobState::Pending(_)) {
                     continue;
                 }
@@ -467,8 +495,9 @@ impl Slurmctld {
                 ready.remove(&id);
             }
 
-            // Node failures: fail running jobs on down nodes.
-            let down: Vec<String> = self.cluster.with_nodes(|nodes| {
+            // Node failures: fail running jobs on down nodes. Both this
+            // sweep and the timeout sweep walk the running set only.
+            let down: Vec<String> = self.cluster.with_nodes_ref(|nodes| {
                 nodes
                     .iter()
                     .filter(|n| n.state == crate::hpcsim::NodeState::Down)
@@ -477,16 +506,17 @@ impl Slurmctld {
             });
             if !down.is_empty() {
                 let victims: Vec<JobId> = inner
-                    .jobs
+                    .running
                     .iter()
-                    .filter(|(_, r)| {
-                        r.state == JobState::Running
-                            && r.allocation
+                    .filter(|id| {
+                        inner.jobs.get(id).is_some_and(|r| {
+                            r.allocation
                                 .node_names()
                                 .iter()
                                 .any(|n| down.contains(n))
+                        })
                     })
-                    .map(|(id, _)| *id)
+                    .copied()
                     .collect();
                 for id in victims {
                     if let Some(rec) = inner.jobs.get_mut(&id) {
@@ -500,20 +530,22 @@ impl Slurmctld {
                         to_release.push((id, alloc));
                         self.publish_event(&mut inner, id, Some(from), to);
                     }
+                    inner.running.remove(&id);
                 }
             }
 
             // Timeouts.
             let timed_out: Vec<JobId> = inner
-                .jobs
+                .running
                 .iter()
-                .filter(|(_, r)| {
-                    r.state == JobState::Running
-                        && r.start_ms
+                .filter(|id| {
+                    inner.jobs.get(id).is_some_and(|r| {
+                        r.start_ms
                             .map(|s| now.saturating_sub(s) > r.time_limit_ms)
                             .unwrap_or(false)
+                    })
                 })
-                .map(|(id, _)| *id)
+                .copied()
                 .collect();
             for id in timed_out {
                 if let Some(rec) = inner.jobs.get_mut(&id) {
@@ -526,17 +558,12 @@ impl Slurmctld {
                     to_release.push((id, alloc));
                     self.publish_event(&mut inner, id, Some(from), JobState::Timeout);
                 }
+                inner.running.remove(&id);
             }
 
             // Release before placement so freed capacity is visible.
             for (id, alloc) in &to_release {
-                if !alloc.tasks.is_empty() {
-                    self.cluster.with_nodes(|nodes| {
-                        for n in nodes.iter_mut() {
-                            n.release(*id);
-                        }
-                    });
-                }
+                self.release_nodes(*id, alloc);
             }
             to_release.clear();
 
@@ -552,54 +579,60 @@ impl Slurmctld {
                 (-(p as i64), *id)
             });
 
-            let mut blocked_head: Option<u32> = None; // head job cpus
+            let mut blocked_head = false;
             let mut shadow: u64 = u64::MAX;
+            let mut placed_ids: Vec<JobId> = Vec::new();
             for id in order {
-                let (spec, never_fits) = {
-                    let rec = inner.jobs.get(&id).unwrap();
-                    let never = !self.cluster.with_nodes(|nodes| {
-                        sched::can_ever_fit(nodes, &rec.spec)
-                    });
-                    (rec.spec.clone(), never)
+                // Read the spec in place; it is only cloned once the
+                // job actually starts (for the executor thread).
+                let (never_fits, total_cpus, time_limit_ms) = {
+                    let Some(rec) = inner.jobs.get(&id) else {
+                        continue;
+                    };
+                    (
+                        !self.with_capacity(|view| view.can_ever_fit(&rec.spec)),
+                        rec.spec.total_cpus(),
+                        rec.spec.time_limit_ms,
+                    )
                 };
                 if never_fits {
                     let reason = "Resources (can never be satisfied)".to_string();
                     self.update_pending_reason(&mut inner, id, JobState::Pending(reason));
                     continue;
                 }
-                if let Some(head_cpus) = blocked_head {
+                if blocked_head {
                     // Backfill mode: only start if it won't delay the head.
                     if !self.config.backfill {
                         continue;
                     }
-                    let fits_window = now.saturating_add(spec.time_limit_ms) <= shadow;
-                    let _ = head_cpus;
-                    if !fits_window {
+                    if now.saturating_add(time_limit_ms) > shadow {
                         continue;
                     }
                 }
-                let placed = self
-                    .cluster
-                    .with_nodes(|nodes| sched::place(nodes, id, &spec));
+                let placed = {
+                    let rec = inner.jobs.get(&id).unwrap();
+                    self.with_capacity(|view| sched::place(view, id, &rec.spec))
+                };
                 match placed {
                     Some(alloc) => {
                         let rec = inner.jobs.get_mut(&id).unwrap();
                         let from = std::mem::replace(&mut rec.state, JobState::Running);
                         rec.start_ms = Some(now);
                         rec.allocation = alloc.clone();
-                        to_start.push((id, spec, alloc, rec.cancel.clone()));
-                        inner.queue.retain(|q| *q != id);
+                        to_start.push((id, rec.spec.clone(), alloc, rec.cancel.clone()));
+                        inner.running.insert(id);
+                        placed_ids.push(id);
                         self.publish_event(&mut inner, id, Some(from), JobState::Running);
                     }
                     None => {
-                        if blocked_head.is_none() {
+                        if !blocked_head {
                             // This becomes the protected head job.
-                            blocked_head = Some(spec.total_cpus());
-                            let free = self.cluster.cpu_summary().1;
+                            blocked_head = true;
+                            let free = self.with_capacity(|view| view.free_cpus()) as u32;
                             let running: Vec<(u64, u32)> = inner
-                                .jobs
-                                .values()
-                                .filter(|r| r.state == JobState::Running)
+                                .running
+                                .iter()
+                                .filter_map(|rid| inner.jobs.get(rid))
                                 .map(|r| {
                                     (
                                         r.start_ms.unwrap_or(now) + r.time_limit_ms,
@@ -607,12 +640,7 @@ impl Slurmctld {
                                     )
                                 })
                                 .collect();
-                            shadow = sched::shadow_time(
-                                now,
-                                free,
-                                &running,
-                                spec.total_cpus(),
-                            );
+                            shadow = sched::earliest_fit(now, free, &running, total_cpus);
                             self.update_pending_reason(
                                 &mut inner,
                                 id,
@@ -621,6 +649,10 @@ impl Slurmctld {
                         }
                     }
                 }
+            }
+            // One queue sweep for the whole pass, not one per placed job.
+            if !placed_ids.is_empty() {
+                inner.queue.retain(|q| !placed_ids.contains(q));
             }
         }
 
@@ -664,14 +696,11 @@ impl Slurmctld {
             return;
         };
         if rec.state.is_terminal() {
-            // Timeout/cancel/node-fail already recorded it; just make
-            // sure nodes are free (idempotent).
+            // Timeout/cancel/node-fail already recorded it (and took
+            // the allocation record); sweep by job id to make sure the
+            // nodes are free (idempotent).
             drop(inner);
-            self.cluster.with_nodes(|nodes| {
-                for n in nodes.iter_mut() {
-                    n.release(id);
-                }
-            });
+            self.with_capacity(|view| view.release_all(id));
             return;
         }
         let to = match result {
@@ -684,6 +713,7 @@ impl Slurmctld {
         let acct = Self::acct_record(id, rec);
         let alloc = std::mem::take(&mut rec.allocation);
         inner.acct.push(acct);
+        inner.running.remove(&id);
         self.publish_event(&mut inner, id, Some(from), to);
         drop(inner);
         self.release_nodes(id, &alloc);

@@ -10,7 +10,16 @@
 //!   (`--job-name`, `--ntasks`, `--cpus-per-task`, `--mem`, `--time`,
 //!   `--dependency`, `--comment`).
 //! - a FIFO + EASY-backfill scheduler over the [`crate::hpcsim`] nodes
-//!   ([`sched`]).
+//!   ([`sched`]), driven through an incrementally-maintained
+//!   free-capacity index ([`CapacityIndex`]/[`CapacityView`]): `place`
+//!   consults only per-free-CPU buckets with headroom instead of
+//!   scanning the node table, and backfill's shadow estimate reads the
+//!   index's running free total. The index mirrors every reserve and
+//!   release the scheduler makes and is rebuilt only when the node
+//!   table changes outside it (tracked by
+//!   [`crate::hpcsim::Cluster::epoch`]) — the write-side counterpart
+//!   of the kube store's copy-on-write read snapshots (see *Locking &
+//!   snapshot model* in [`crate::kube::store`]).
 //! - the job lifecycle (PENDING/RUNNING/COMPLETED/FAILED/CANCELLED/
 //!   TIMEOUT) with time-limit enforcement and `scancel`.
 //! - accounting records (`sacct`) and queue/node introspection
@@ -35,11 +44,13 @@
 //! executor that interprets the generated script's Apptainer commands;
 //! tests use closures.
 
+mod capacity;
 mod ctld;
-mod sched;
+pub mod sched;
 pub mod script;
 mod types;
 
+pub use capacity::{CapacityIndex, CapacityView};
 pub use ctld::{Slurmctld, SlurmConfig, JOB_EVENT_LOG_CAP};
 pub use types::{
     Allocation, CancelToken, DepKind, JobContext, JobEvent, JobExecutor,

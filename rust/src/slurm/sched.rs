@@ -1,12 +1,45 @@
-//! Placement + EASY backfill over the simulated nodes.
+//! Placement + EASY backfill, driven through the controller's
+//! free-capacity index ([`CapacityView`]) rather than raw node scans —
+//! see the *Locking & snapshot model* notes in [`crate::kube::store`]
+//! for the read-path philosophy this mirrors on the write side.
 
+use super::capacity::CapacityView;
 use super::types::{Allocation, JobId, JobSpec, TaskSlot};
-use crate::hpcsim::{Node, NodeState};
+use crate::hpcsim::Node;
 
-/// Try to place every task of `spec` (first-fit, spreading across
-/// nodes). On success resources are reserved on the nodes and the
-/// allocation is returned; on failure nothing is reserved.
-pub fn place(nodes: &mut [Node], job_id: JobId, spec: &JobSpec) -> Option<Allocation> {
+/// Try to place every task of `spec` through the capacity index: each
+/// task lands on the node with the least sufficient free CPU
+/// (best-fit), consulting only buckets with headroom. On success the
+/// resources are reserved and the allocation returned; on failure
+/// everything is rolled back and nothing is reserved.
+pub fn place(view: &mut CapacityView, job_id: JobId, spec: &JobSpec) -> Option<Allocation> {
+    let mut tasks = Vec::with_capacity(spec.ntasks as usize);
+    for task_id in 0..spec.ntasks {
+        match view.reserve(job_id, spec.cpus_per_task, spec.mem_per_task) {
+            Some(node) => tasks.push(TaskSlot {
+                node,
+                cpus: spec.cpus_per_task,
+                task_id,
+            }),
+            None => {
+                // Roll back everything reserved so far.
+                let partial = Allocation { tasks };
+                view.release(job_id, &partial.node_names());
+                return None;
+            }
+        }
+    }
+    Some(Allocation { tasks })
+}
+
+/// The pre-index placement: first-fit over a linear scan of all
+/// nodes. Kept as the equivalence baseline the randomized scheduler
+/// test and the E6-scale bench compare [`place`] against.
+pub fn place_linear_reference(
+    nodes: &mut [Node],
+    job_id: JobId,
+    spec: &JobSpec,
+) -> Option<Allocation> {
     let mut tasks = Vec::with_capacity(spec.ntasks as usize);
     let mut placed_nodes: Vec<usize> = Vec::new();
     for task_id in 0..spec.ntasks {
@@ -27,7 +60,6 @@ pub fn place(nodes: &mut [Node], job_id: JobId, spec: &JobSpec) -> Option<Alloca
                 });
             }
             None => {
-                // Roll back everything reserved so far.
                 for &i in &placed_nodes {
                     nodes[i].release(job_id);
                 }
@@ -38,24 +70,14 @@ pub fn place(nodes: &mut [Node], job_id: JobId, spec: &JobSpec) -> Option<Alloca
     Some(Allocation { tasks })
 }
 
-/// Whether the job could *ever* run on this cluster (all nodes up and
-/// empty). Used for the "never satisfiable" pending reason.
-pub fn can_ever_fit(nodes: &[Node], spec: &JobSpec) -> bool {
-    // Simulate placement against empty copies.
-    let mut copies: Vec<Node> = nodes
-        .iter()
-        .filter(|n| n.state != NodeState::Down)
-        .map(|n| Node::new(&n.name, n.resources.cpus, n.resources.memory_bytes))
-        .collect();
-    place(&mut copies, u64::MAX, spec).is_some()
-}
-
-/// EASY-backfill shadow time: the earliest simulated time at which the
+/// EASY-backfill earliest fit: the earliest simulated time at which the
 /// blocked head job is *estimated* to fit, assuming running jobs end at
-/// their time limits. Aggregate-CPU estimate (standard simplification).
+/// their time limits. Aggregate-CPU estimate (standard simplification);
+/// `total_free_cpus` comes straight off the capacity index
+/// ([`CapacityView::free_cpus`]).
 ///
 /// `running` is `(end_estimate_ms, cpus)` per running job.
-pub fn shadow_time(
+pub fn earliest_fit(
     now_ms: u64,
     total_free_cpus: u32,
     running: &[(u64, u32)],
@@ -79,6 +101,8 @@ pub fn shadow_time(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::slurm::CapacityIndex;
+    use crate::util::Rng;
 
     fn nodes2x4() -> Vec<Node> {
         vec![Node::new("n1", 4, 8 << 30), Node::new("n2", 4, 8 << 30)]
@@ -87,41 +111,95 @@ mod tests {
     #[test]
     fn place_spreads_tasks() {
         let mut nodes = nodes2x4();
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
         let spec = JobSpec::new("j").with_tasks(6, 1, 1 << 20);
-        let alloc = place(&mut nodes, 1, &spec).unwrap();
+        let alloc = place(&mut view, 1, &spec).unwrap();
         assert_eq!(alloc.tasks.len(), 6);
         assert_eq!(alloc.node_names().len(), 2);
-        assert_eq!(nodes[0].free_cpus() + nodes[1].free_cpus(), 2);
+        assert_eq!(view.free_cpus(), 2);
     }
 
     #[test]
     fn failed_place_rolls_back() {
         let mut nodes = nodes2x4();
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
         let spec = JobSpec::new("j").with_tasks(9, 1, 1 << 20);
-        assert!(place(&mut nodes, 1, &spec).is_none());
-        assert_eq!(nodes[0].free_cpus(), 4);
-        assert_eq!(nodes[1].free_cpus(), 4);
+        assert!(place(&mut view, 1, &spec).is_none());
+        assert_eq!(view.free_cpus(), 8, "rollback must free everything");
+        assert!(view.nodes().iter().all(|n| n.is_idle()));
     }
 
     #[test]
     fn can_ever_fit_checks_capacity_not_occupancy() {
         let mut nodes = nodes2x4();
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
         let spec = JobSpec::new("big").with_tasks(1, 4, 1 << 20);
         // Fill the cluster first.
         let filler = JobSpec::new("filler").with_tasks(8, 1, 1 << 20);
-        place(&mut nodes, 1, &filler).unwrap();
-        assert!(place(&mut nodes, 2, &spec).is_none());
-        assert!(can_ever_fit(&nodes, &spec));
+        place(&mut view, 1, &filler).unwrap();
+        assert!(place(&mut view, 2, &spec).is_none());
+        assert!(view.can_ever_fit(&spec));
         let too_big = JobSpec::new("xxl").with_tasks(1, 5, 1 << 20);
-        assert!(!can_ever_fit(&nodes, &too_big));
+        assert!(!view.can_ever_fit(&too_big));
     }
 
     #[test]
-    fn shadow_time_accumulates_until_fit() {
+    fn earliest_fit_accumulates_until_fit() {
         // 0 free now; jobs of 2 cpus end at t=100, t=200, t=300.
         let running = vec![(300, 2), (100, 2), (200, 2)];
-        assert_eq!(shadow_time(50, 0, &running, 4), 200);
-        assert_eq!(shadow_time(50, 4, &running, 4), 50);
-        assert_eq!(shadow_time(50, 0, &running, 7), u64::MAX);
+        assert_eq!(earliest_fit(50, 0, &running, 4), 200);
+        assert_eq!(earliest_fit(50, 4, &running, 4), 50);
+        assert_eq!(earliest_fit(50, 0, &running, 7), u64::MAX);
+    }
+
+    /// For 1-CPU tasks with non-binding memory, a job of `ntasks`
+    /// places iff total free CPUs >= ntasks — independent of *where*
+    /// each task lands. So indexed best-fit and the old linear
+    /// first-fit must accept/reject exactly the same jobs and leave
+    /// the same total free capacity on any cluster, through arbitrary
+    /// placement/release interleavings. (Wider tasks are excluded on
+    /// purpose: under fragmentation best-fit and first-fit genuinely
+    /// diverge — that packing improvement is best-fit's job.)
+    #[test]
+    fn indexed_and_linear_placement_are_capacity_equivalent() {
+        let mut rng = Rng::new(0xc0ffee);
+        for round in 0..40 {
+            let n = 2 + rng.below(10) as usize;
+            let mut indexed: Vec<Node> = (0..n)
+                .map(|i| {
+                    Node::new(
+                        &format!("n{i}"),
+                        1 + rng.below(16) as u32,
+                        (1 + rng.below(8)) << 30,
+                    )
+                })
+                .collect();
+            let mut linear = indexed.clone();
+            let mut index = CapacityIndex::new();
+            let mut view = CapacityView::new(&mut index, &mut indexed, 1);
+            for job in 1..=30u64 {
+                let spec = JobSpec::new("j").with_tasks(1 + rng.below(8) as u32, 1, 1 << 20);
+                let a = place(&mut view, job, &spec);
+                let b = place_linear_reference(&mut linear, job, &spec);
+                assert_eq!(
+                    a.is_some(),
+                    b.is_some(),
+                    "round {round} job {job}: indexed={a:?} linear={b:?}"
+                );
+                if rng.below(3) == 0 {
+                    // Release a random earlier job from both worlds.
+                    let victim = 1 + rng.below(job);
+                    view.release_all(victim);
+                    for node in linear.iter_mut() {
+                        node.release(victim);
+                    }
+                }
+                let linear_free: u64 = linear.iter().map(|nd| nd.free_cpus() as u64).sum();
+                assert_eq!(view.free_cpus(), linear_free, "round {round} job {job}");
+            }
+        }
     }
 }

@@ -1,12 +1,15 @@
 //! Small shared utilities: deterministic RNG, ID generation, quantity
-//! parsing, shell word splitting, wall-clock helpers, and the
-//! condvar-backed subscription primitive both event buses park on.
+//! parsing, shell word splitting, wall-clock helpers, the
+//! condvar-backed subscription primitive both event buses park on,
+//! and the persistent map backing the store's copy-on-write snapshots.
 
+pub mod pmap;
 pub mod rng;
 pub mod shlex;
 pub mod sub;
 mod quantity;
 
+pub use pmap::PMap;
 pub use quantity::{parse_cpu_millis, parse_memory_bytes, format_memory};
 pub use rng::Rng;
 pub use sub::{SubscriberHub, Subscription, WakeReason};

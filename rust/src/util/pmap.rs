@@ -1,0 +1,383 @@
+//! Persistent ordered map: the copy-on-write backbone of the sharded
+//! kube store.
+//!
+//! [`PMap`] is a treap (a BST that is simultaneously a heap on node
+//! priorities) whose nodes live behind [`Arc`]s. `clone()` is O(1) —
+//! it copies the root pointer — and every mutation path-copies only
+//! the O(log n) nodes between the root and the touched key
+//! ([`Arc::make_mut`] clones a node lazily, and only when some
+//! snapshot still shares it), leaving the rest of the tree shared
+//! with all outstanding clones. That combination is what lets the
+//! store publish a complete snapshot of a kind on *every* write
+//! without ever copying the map: writers pay O(log n) per put/delete,
+//! readers pay one `Arc` clone for an immutable view that never
+//! changes underneath them.
+//!
+//! Priorities are derived deterministically from the key hash, so a
+//! given key set always produces the same tree shape regardless of
+//! insertion order — handy for tests and reproducible benchmarks, and
+//! it keeps the expected depth logarithmic without carrying RNG state.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::sync::Arc;
+
+type Link<V> = Option<Arc<TreapNode<V>>>;
+
+/// One treap node. `Clone` is shallow (child `Arc`s are
+/// reference-counted), which is exactly the copy [`Arc::make_mut`]
+/// performs during path copying.
+#[derive(Clone)]
+struct TreapNode<V> {
+    key: String,
+    value: V,
+    priority: u64,
+    left: Link<V>,
+    right: Link<V>,
+}
+
+/// Deterministic priority: FNV-1a over the key bytes finished with a
+/// splitmix64 avalanche so near-identical keys don't correlate.
+fn priority_of(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A persistent ordered `String -> V` map with O(1) snapshots.
+///
+/// See the module docs for the structural-sharing model. Keys iterate
+/// in lexicographic order, which the store exploits for
+/// `namespace/`-prefix scans via [`PMap::range_from`].
+pub struct PMap<V> {
+    root: Link<V>,
+    len: usize,
+}
+
+impl<V> Clone for PMap<V> {
+    // Manual impl: snapshotting must not require `V: Clone`, and a
+    // derive would add that bound.
+    fn clone(&self) -> PMap<V> {
+        PMap { root: self.root.clone(), len: self.len }
+    }
+}
+
+impl<V> Default for PMap<V> {
+    fn default() -> PMap<V> {
+        PMap::new()
+    }
+}
+
+impl<V> PMap<V> {
+    pub fn new() -> PMap<V> {
+        PMap { root: None, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, key: &str) -> Option<&V> {
+        let mut node = self.root.as_deref();
+        while let Some(n) = node {
+            match key.cmp(n.key.as_str()) {
+                CmpOrdering::Less => node = n.left.as_deref(),
+                CmpOrdering::Greater => node = n.right.as_deref(),
+                CmpOrdering::Equal => return Some(&n.value),
+            }
+        }
+        None
+    }
+
+    pub fn contains_key(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// In-order iterator over all `(key, value)` pairs.
+    pub fn iter(&self) -> Iter<'_, V> {
+        Iter::from_root(self.root.as_deref())
+    }
+
+    /// In-order iterator over pairs with `key >= start`. Combined with
+    /// `take_while` this is the `namespace/`-prefix scan.
+    pub fn range_from(&self, start: &str) -> Iter<'_, V> {
+        Iter::from_bound(self.root.as_deref(), start)
+    }
+}
+
+impl<V: Clone> PMap<V> {
+    /// Insert or replace; returns the previous value for `key`, if
+    /// any. Path-copies O(log n) nodes; every outstanding clone keeps
+    /// seeing the pre-insert tree.
+    pub fn insert(&mut self, key: String, value: V) -> Option<V> {
+        let priority = priority_of(&key);
+        let old = insert_at(&mut self.root, key, value, priority);
+        if old.is_none() {
+            self.len += 1;
+        }
+        old
+    }
+
+    /// Remove `key`, returning its value if present.
+    pub fn remove(&mut self, key: &str) -> Option<V> {
+        let old = remove_at(&mut self.root, key);
+        if old.is_some() {
+            self.len -= 1;
+        }
+        old
+    }
+}
+
+/// Which child rose above its parent after a recursive insert.
+enum Fix {
+    None,
+    RotateLeft,
+    RotateRight,
+}
+
+fn insert_at<V: Clone>(slot: &mut Link<V>, key: String, value: V, priority: u64) -> Option<V> {
+    let (old, fix) = {
+        let Some(node) = slot.as_mut() else {
+            *slot = Some(Arc::new(TreapNode { key, value, priority, left: None, right: None }));
+            return None;
+        };
+        let n = Arc::make_mut(node);
+        match key.as_str().cmp(n.key.as_str()) {
+            CmpOrdering::Equal => (Some(std::mem::replace(&mut n.value, value)), Fix::None),
+            CmpOrdering::Less => {
+                let old = insert_at(&mut n.left, key, value, priority);
+                let heavy = n.left.as_ref().is_some_and(|l| l.priority > n.priority);
+                (old, if heavy { Fix::RotateRight } else { Fix::None })
+            }
+            CmpOrdering::Greater => {
+                let old = insert_at(&mut n.right, key, value, priority);
+                let heavy = n.right.as_ref().is_some_and(|r| r.priority > n.priority);
+                (old, if heavy { Fix::RotateLeft } else { Fix::None })
+            }
+        }
+    };
+    match fix {
+        Fix::RotateRight => rotate_right(slot),
+        Fix::RotateLeft => rotate_left(slot),
+        Fix::None => {}
+    }
+    old
+}
+
+fn remove_at<V: Clone>(slot: &mut Link<V>, key: &str) -> Option<V> {
+    let node = slot.as_mut()?;
+    match key.cmp(node.key.as_str()) {
+        CmpOrdering::Less => remove_at(&mut Arc::make_mut(node).left, key),
+        CmpOrdering::Greater => remove_at(&mut Arc::make_mut(node).right, key),
+        CmpOrdering::Equal => {
+            let mut taken = slot.take().expect("subtree root just matched");
+            let n = Arc::make_mut(&mut taken);
+            let left = n.left.take();
+            let right = n.right.take();
+            *slot = merge(left, right);
+            Some(match Arc::try_unwrap(taken) {
+                Ok(owned) => owned.value,
+                Err(shared) => shared.value.clone(),
+            })
+        }
+    }
+}
+
+/// Merge two treaps where every key in `a` is less than every key in
+/// `b` (the two subtrees of a removed node).
+fn merge<V: Clone>(a: Link<V>, b: Link<V>) -> Link<V> {
+    match (a, b) {
+        (None, b) => b,
+        (a, None) => a,
+        (Some(mut a), Some(b)) => {
+            if a.priority >= b.priority {
+                let am = Arc::make_mut(&mut a);
+                let right = am.right.take();
+                am.right = merge(right, Some(b));
+                Some(a)
+            } else {
+                let mut b = b;
+                let bm = Arc::make_mut(&mut b);
+                let left = bm.left.take();
+                bm.left = merge(Some(a), left);
+                Some(b)
+            }
+        }
+    }
+}
+
+/// Rotate the subtree at `slot` right: its left child becomes the new
+/// subtree root. Caller guarantees the left child exists.
+fn rotate_right<V: Clone>(slot: &mut Link<V>) {
+    let mut node = slot.take().expect("rotation on empty subtree");
+    let mut left = Arc::make_mut(&mut node)
+        .left
+        .take()
+        .expect("rotate_right without a left child");
+    Arc::make_mut(&mut node).left = Arc::make_mut(&mut left).right.take();
+    Arc::make_mut(&mut left).right = Some(node);
+    *slot = Some(left);
+}
+
+/// Mirror of [`rotate_right`].
+fn rotate_left<V: Clone>(slot: &mut Link<V>) {
+    let mut node = slot.take().expect("rotation on empty subtree");
+    let mut right = Arc::make_mut(&mut node)
+        .right
+        .take()
+        .expect("rotate_left without a right child");
+    Arc::make_mut(&mut node).right = Arc::make_mut(&mut right).left.take();
+    Arc::make_mut(&mut right).left = Some(node);
+    *slot = Some(right);
+}
+
+/// In-order iterator over `(&key, &value)` pairs.
+pub struct Iter<'a, V> {
+    stack: Vec<&'a TreapNode<V>>,
+}
+
+impl<'a, V> Iter<'a, V> {
+    fn from_root(root: Option<&'a TreapNode<V>>) -> Iter<'a, V> {
+        let mut it = Iter { stack: Vec::new() };
+        it.push_left(root);
+        it
+    }
+
+    /// Seed the stack with the path to the first key `>= start`.
+    fn from_bound(root: Option<&'a TreapNode<V>>, start: &str) -> Iter<'a, V> {
+        let mut it = Iter { stack: Vec::new() };
+        let mut node = root;
+        while let Some(n) = node {
+            if n.key.as_str() < start {
+                node = n.right.as_deref();
+            } else {
+                it.stack.push(n);
+                node = n.left.as_deref();
+            }
+        }
+        it
+    }
+
+    fn push_left(&mut self, mut node: Option<&'a TreapNode<V>>) {
+        while let Some(n) = node {
+            self.stack.push(n);
+            node = n.left.as_deref();
+        }
+    }
+}
+
+impl<'a, V> Iterator for Iter<'a, V> {
+    type Item = (&'a str, &'a V);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let n = self.stack.pop()?;
+        self.push_left(n.right.as_deref());
+        Some((n.key.as_str(), &n.value))
+    }
+}
+
+impl<'a, V> IntoIterator for &'a PMap<V> {
+    type Item = (&'a str, &'a V);
+    type IntoIter = Iter<'a, V>;
+
+    fn into_iter(self) -> Iter<'a, V> {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut m = PMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert("b".to_string(), 2), None);
+        assert_eq!(m.insert("a".to_string(), 1), None);
+        assert_eq!(m.insert("c".to_string(), 3), None);
+        assert_eq!(m.insert("b".to_string(), 20), Some(2));
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.get("a"), Some(&1));
+        assert_eq!(m.get("b"), Some(&20));
+        assert_eq!(m.get("missing"), None);
+        assert_eq!(m.remove("b"), Some(20));
+        assert_eq!(m.remove("b"), None);
+        assert_eq!(m.len(), 2);
+        let keys: Vec<&str> = m.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a", "c"]);
+    }
+
+    #[test]
+    fn snapshots_are_immutable() {
+        let mut m = PMap::new();
+        m.insert("a".to_string(), 1);
+        let snap = m.clone();
+        m.insert("b".to_string(), 2);
+        m.insert("a".to_string(), 9);
+        m.remove("a");
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap.get("a"), Some(&1));
+        assert!(snap.get("b").is_none());
+        assert_eq!(m.get("a"), None);
+        assert_eq!(m.get("b"), Some(&2));
+    }
+
+    #[test]
+    fn matches_btreemap_oracle_under_random_ops() {
+        let mut rng = Rng::new(0x9a3e);
+        let mut m = PMap::new();
+        let mut oracle: BTreeMap<String, u64> = BTreeMap::new();
+        let mut checkpoints: Vec<(PMap<u64>, BTreeMap<String, u64>)> = Vec::new();
+        for i in 0..4000u64 {
+            let key = format!("k{:03}", rng.below(500));
+            if rng.below(3) == 0 {
+                assert_eq!(m.remove(&key), oracle.remove(&key));
+            } else {
+                assert_eq!(m.insert(key.clone(), i), oracle.insert(key, i));
+            }
+            if i % 1000 == 0 {
+                checkpoints.push((m.clone(), oracle.clone()));
+            }
+        }
+        assert_eq!(m.len(), oracle.len());
+        let got: Vec<(&str, &u64)> = m.iter().collect();
+        let want: Vec<(&str, &u64)> = oracle.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        assert_eq!(got, want);
+        // Old snapshots still match the oracle state they were taken at.
+        for (snap, frozen) in &checkpoints {
+            assert_eq!(snap.len(), frozen.len());
+            let got: Vec<(&str, &u64)> = snap.iter().collect();
+            let want: Vec<(&str, &u64)> = frozen.iter().map(|(k, v)| (k.as_str(), v)).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn range_from_starts_at_bound() {
+        let mut m = PMap::new();
+        for key in ["a/1", "a/2", "b/1", "b/2", "c/1"] {
+            m.insert(key.to_string(), ());
+        }
+        let b: Vec<&str> = m
+            .range_from("b/")
+            .map(|(k, _)| k)
+            .take_while(|k| k.starts_with("b/"))
+            .collect();
+        assert_eq!(b, vec!["b/1", "b/2"]);
+        let tail: Vec<&str> = m.range_from("b/2").map(|(k, _)| k).collect();
+        assert_eq!(tail, vec!["b/2", "c/1"]);
+        assert_eq!(m.range_from("zzz").count(), 0);
+    }
+}

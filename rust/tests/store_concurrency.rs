@@ -1,0 +1,165 @@
+//! Concurrency properties of the sharded store (see "Locking &
+//! snapshot model" in `kube::store`):
+//!
+//!  - revisions come from one global counter: with N writers hammering
+//!    different kinds, every op gets a unique revision and the per-kind
+//!    logs partition `1..=revision` with no gaps and no duplicates;
+//!  - each kind's log is strictly increasing;
+//!  - snapshot readers see per-kind revisions move monotonically, and
+//!    never an object newer than the view that contains it;
+//!  - the read path acquires no write-side lock: with a kind's shard
+//!    mutex deliberately held (writers parked), `get`/`view`/`query`
+//!    still complete — for that kind and every other.
+
+use hpk::kube::store::Store;
+use hpk::kube::ListParams;
+use hpk::yamlkit::parse_one;
+use hpk::yamlkit::Value;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+fn obj(name: &str) -> Value {
+    parse_one(&format!("metadata:\n  name: {name}\n")).unwrap()
+}
+
+const KINDS: [&str; 4] = ["Pod", "Job", "Service", "ConfigMap"];
+/// Per-writer op count: 300 puts + 60 same-key deletes, well under the
+/// per-kind log cap so the gap-freeness check sees every event.
+const PUTS: usize = 300;
+
+#[test]
+fn concurrent_writers_and_snapshot_readers() {
+    let store = Store::new();
+    let done = Arc::new(AtomicBool::new(false));
+
+    // One writer per kind: puts over a rotating key set, every 5th op
+    // immediately deletes the key it just wrote (so every delete hits
+    // an existing object and therefore allocates a revision).
+    let writers: Vec<_> = KINDS
+        .iter()
+        .map(|&kind| {
+            let s = store.clone();
+            thread::spawn(move || {
+                let mut ops = 0u64;
+                for i in 0..PUTS {
+                    let name = format!("o{}", i % 50);
+                    s.put(kind, "ns", &name, obj(&name));
+                    ops += 1;
+                    if i % 5 == 4 {
+                        assert!(
+                            s.delete(kind, "ns", &name).is_some(),
+                            "own-key delete must find the object"
+                        );
+                        ops += 1;
+                    }
+                }
+                ops
+            })
+        })
+        .collect();
+
+    // Readers take views the whole time and check monotonicity + the
+    // "no object newer than its view" invariant.
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let s = store.clone();
+            let done = done.clone();
+            thread::spawn(move || {
+                let mut last = [0u64; KINDS.len()];
+                let mut views = 0u64;
+                while !done.load(Ordering::SeqCst) {
+                    for (k, &kind) in KINDS.iter().enumerate() {
+                        let snap = s.view(kind);
+                        assert!(snap.revision() >= last[k], "{kind}: revision went backwards");
+                        last[k] = snap.revision();
+                        for o in snap.iter() {
+                            let rv = o.i64_at("metadata.resourceVersion").unwrap_or(0) as u64;
+                            assert!(
+                                rv <= snap.revision(),
+                                "{kind}: object rv {rv} > view revision {}",
+                                snap.revision()
+                            );
+                        }
+                        views += 1;
+                    }
+                }
+                views
+            })
+        })
+        .collect();
+
+    let total_ops: u64 = writers.into_iter().map(|w| w.join().unwrap()).sum();
+    done.store(true, Ordering::SeqCst);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "readers must have made progress");
+    }
+
+    // Every op allocated exactly one revision.
+    assert_eq!(store.revision(), total_ops);
+
+    // Per-kind logs: strictly increasing, and together they partition
+    // 1..=revision (no gap, no duplicate, nothing out of range).
+    let mut all: Vec<u64> = Vec::new();
+    for kind in KINDS {
+        let (events, complete) = store.kind_events_since(kind, 0);
+        assert!(complete, "{kind}: log must not have compacted");
+        let revs: Vec<u64> = events.iter().map(|e| e.revision).collect();
+        assert!(
+            revs.windows(2).all(|w| w[0] < w[1]),
+            "{kind}: log revisions not strictly increasing"
+        );
+        all.extend(revs);
+    }
+    all.sort_unstable();
+    let expect: Vec<u64> = (1..=total_ops).collect();
+    assert_eq!(all, expect, "kind logs must partition the revision space");
+}
+
+#[test]
+fn reads_never_touch_the_write_side_lock() {
+    let store = Store::new();
+    store.put("Pod", "ns", "a", obj("a"));
+    store.put("Job", "ns", "j0", obj("j0"));
+
+    // Park the Job shard's write side on a helper thread.
+    let (locked_tx, locked_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let holder = {
+        let s = store.clone();
+        thread::spawn(move || {
+            s.with_kind_locked("Job", || {
+                locked_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+            })
+        })
+    };
+    locked_rx.recv().unwrap();
+
+    // A writer to the parked kind must block...
+    let writer = {
+        let s = store.clone();
+        thread::spawn(move || s.put("Job", "ns", "late", obj("late")))
+    };
+    thread::sleep(Duration::from_millis(50));
+
+    // ...while reads — on the parked kind and on others — sail through.
+    let t0 = Instant::now();
+    assert!(store.get("Pod", "ns", "a").is_some());
+    assert_eq!(store.view("Pod").len(), 1);
+    assert_eq!(store.query("Pod", &ListParams::in_namespace("ns")).len(), 1);
+    let jobs = store.view("Job");
+    assert_eq!(jobs.len(), 1);
+    assert!(jobs.get("ns", "late").is_none(), "parked write must not be visible");
+    assert!(store.get("Job", "ns", "late").is_none());
+    assert!(t0.elapsed() < Duration::from_secs(5), "reads blocked on a write-side lock");
+
+    // Unpark: the writer lands and becomes visible.
+    release_tx.send(()).unwrap();
+    holder.join().unwrap();
+    let rev = writer.join().unwrap();
+    assert!(rev > 0);
+    assert!(store.get("Job", "ns", "late").is_some());
+    assert_eq!(store.view("Job").revision(), rev);
+}

@@ -56,7 +56,7 @@ fn round_robin_balances_across_slice_split_and_merge() {
     }
     let runner = Runner::new(&api, vec![Box::new(EndpointsController)]);
     assert!(settle(&runner, || {
-        object::aggregate_slice_addresses(&api.list_refs("EndpointSlice")).len() == n
+        object::aggregate_slice_addresses(&api.view("EndpointSlice").list()).len() == n
     }));
     assert_eq!(api.list("EndpointSlice").len(), 2, "split across two shards");
 
@@ -76,7 +76,7 @@ fn round_robin_balances_across_slice_split_and_merge() {
     let survivors = n - 40;
     assert!(settle(&runner, || {
         api.list("EndpointSlice").len() == 1
-            && object::aggregate_slice_addresses(&api.list_refs("EndpointSlice")).len()
+            && object::aggregate_slice_addresses(&api.view("EndpointSlice").list()).len()
                 == survivors
     }));
     let mut counts: HashMap<String, u32> = HashMap::new();
