@@ -7,8 +7,8 @@ Warn-only: regressions get a warning marker in the table, but the exit
 code is always 0 — the perf trajectory is made visible per-PR without
 hard-failing on noisy runners. Metric direction is inferred from the
 name suffix (`_ms`/`_us`/`_bytes*`/`*wakeups`/`*writes`/`_dropped`/
-`_no_backend` are lower-is-better, `_per_s` is higher-is-better;
-everything else is reported without judgement).
+`_no_backend` are lower-is-better, `_per_s`/`_rate`/`_speedup` are
+higher-is-better; everything else is reported without judgement).
 """
 
 import json
@@ -27,7 +27,7 @@ LOWER_IS_BETTER = (
     "_dropped",
     "_no_backend",
 )
-HIGHER_IS_BETTER = ("_per_s",)
+HIGHER_IS_BETTER = ("_per_s", "_rate", "_speedup")
 
 # Bench configuration / baseline metrics, not costs the code pays:
 # growing these (e.g. a bigger E5.3d service) is not a regression.
@@ -41,6 +41,10 @@ NEUTRAL = {
     "e6s_nodes",
     "e6s_pods",
     "e6s_place_linear_per_s",
+    # E6v's scaled rate is pinned at time_scale by construction — the
+    # driven rate and the speedup ratio carry the signal.
+    "e6v_trace_sim_ms",
+    "e6v_scaled_replay_rate",
 }
 
 

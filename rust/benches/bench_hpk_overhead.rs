@@ -12,7 +12,9 @@
 //! informer loop woke every 2 ms regardless). E5.3d quantifies the
 //! EndpointSlice claim: one pod churning in a 1k-endpoint service
 //! rewrites exactly one shard bounded by the slice cap, not one
-//! whole-service object.
+//! whole-service object. E6v quantifies the time-model claim
+//! (docs/TIME.md): a driven clock replays an hour-scale churn trace
+//! orders of magnitude faster than the wall-clock-pinned scaled mode.
 //!
 //! Run: `cargo bench --bench bench_hpk_overhead`
 //!
@@ -562,12 +564,15 @@ fn main() {
                         .unwrap(),
                 );
             }
+            // Sim-ms deadlines (600 s of virtual time at the default
+            // 100x scale = 6 s real): generous for the ~41 s-sim worst
+            // case where the narrow jobs wait out both wide queues.
             let t0 = Instant::now();
             for id in &narrow {
-                slurm.wait_terminal(*id, 60_000).expect("narrow finished");
+                slurm.wait_terminal(*id, 600_000).expect("narrow finished");
             }
             let narrow_done = t0.elapsed().as_secs_f64() * 1000.0;
-            slurm.wait_terminal(b, 60_000).expect("b finished");
+            slurm.wait_terminal(b, 600_000).expect("b finished");
             println!(
                 "backfill={:<5}  4 narrow 1-cpu jobs done after {:>6.0} real ms (wide queue blocked: {})",
                 backfill,
@@ -794,6 +799,99 @@ fn main() {
     println!("submit -> Running: p99 {p99:.0} sim ms over {pods_n} jobs\n");
     results.push(("e6s_p99_submit_to_running_ms", p99));
     ctld.shutdown();
+
+    // ---- 8. E6v: virtual-time replay rate, driven vs scaled ----
+    // The time-model claim (docs/TIME.md): in driven mode the bench
+    // thread owns time, so a churn trace replays as fast as the control
+    // threads can process it — an hour of cluster life in well under a
+    // second — while scaled mode is pinned to the wall clock at
+    // `time_scale` sim-ms per real-ms no matter how idle the cluster
+    // is. Same trace shape both times: waves of seeded 1-cpu jobs
+    // arriving across the horizon, each parked on a virtual deadline.
+    let v_nodes: usize = if smoke { 100 } else { 1_000 };
+    let v_jobs: usize = if smoke { 200 } else { 2_000 };
+    let horizon_ms: u64 = if smoke { 600_000 } else { 3_600_000 };
+    println!(
+        "# E6v: replay rate, {v_jobs}-job churn trace on {v_nodes} nodes ({horizon_ms} sim ms)"
+    );
+
+    // Script is a number: park that many simulated ms on the clock.
+    struct SimSleepExec;
+    impl JobExecutor for SimSleepExec {
+        fn execute(&self, ctx: &JobContext) -> Result<(), String> {
+            let ms: u64 = ctx.spec.script.trim().parse().unwrap_or(0);
+            if ctx.cancel.wait_sim(&ctx.clock, ms) {
+                return Err("cancelled".to_string());
+            }
+            Ok(())
+        }
+    }
+
+    // Driven replay: advance in 1 s-sim steps, yielding briefly after
+    // each step so woken schedulers and executors can act.
+    let cluster = Cluster::new(ClusterSpec::uniform(v_nodes, 8, 32).driven());
+    let clock = cluster.clock.clone();
+    let ctld = Slurmctld::start(cluster, Arc::new(SimSleepExec), SlurmConfig::default());
+    let sub = ctld.subscribe();
+    let mut rng = hpk::util::Rng::new(42);
+    let waves: u64 = 10;
+    let wave_ms = horizon_ms / waves;
+    let t0 = Instant::now();
+    for _ in 0..waves {
+        for _ in 0..v_jobs / waves as usize {
+            // Durations stay under the wave window, so the trace churns
+            // continuously instead of piling into one final drain.
+            let dur = wave_ms / 10 + rng.below(wave_ms * 8 / 10);
+            ctld.submit(JobSpec::new("v").with_script(&dur.to_string())).unwrap();
+        }
+        let target = clock.now_ms() + wave_ms;
+        while clock.now_ms() < target {
+            clock.advance_ms(1_000);
+            let _ = sub.wait(Duration::from_micros(200));
+        }
+    }
+    while ctld.sacct().len() < v_jobs {
+        assert!(t0.elapsed() < Duration::from_secs(300), "driven trace never drained");
+        clock.advance_ms(10_000);
+        let _ = sub.wait(Duration::from_millis(1));
+    }
+    let driven_sim_ms = clock.now_ms() as f64;
+    let driven_real_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let driven_rate = driven_sim_ms / driven_real_ms;
+    ctld.shutdown();
+
+    // Scaled baseline: the clock is pinned to the wall clock, so a much
+    // shorter trace suffices to establish the rate — it cannot exceed
+    // `time_scale` (default 100) regardless of control-plane speed.
+    let cluster = Cluster::new(ClusterSpec::uniform(v_nodes, 8, 32));
+    let clock = cluster.clock.clone();
+    let ctld = Slurmctld::start(cluster, Arc::new(SimSleepExec), SlurmConfig::default());
+    let n_scaled: usize = 50;
+    let t0 = Instant::now();
+    let sim0 = clock.now_ms();
+    for _ in 0..n_scaled {
+        let dur = 500 + rng.below(1_500);
+        ctld.submit(JobSpec::new("s").with_script(&dur.to_string())).unwrap();
+    }
+    let sub = ctld.subscribe();
+    while ctld.sacct().len() < n_scaled {
+        assert!(t0.elapsed() < Duration::from_secs(60), "scaled trace never drained");
+        let _ = sub.wait(Duration::from_millis(5));
+    }
+    let scaled_rate = (clock.now_ms() - sim0) as f64 / (t0.elapsed().as_secs_f64() * 1000.0);
+    ctld.shutdown();
+    println!(
+        "driven: {driven_sim_ms:.0} sim ms in {driven_real_ms:.0} real ms ({driven_rate:.0} sim-ms/real-ms)"
+    );
+    println!("scaled: {scaled_rate:.0} sim-ms/real-ms (pinned at time_scale)");
+    println!(
+        "driven replays {:.0}x faster than the scaled wall-clock bound\n",
+        driven_rate / scaled_rate
+    );
+    results.push(("e6v_trace_sim_ms", driven_sim_ms));
+    results.push(("e6v_driven_replay_rate", driven_rate));
+    results.push(("e6v_scaled_replay_rate", scaled_rate));
+    results.push(("e6v_replay_speedup", driven_rate / scaled_rate));
 
     write_json(&results);
 }

@@ -1,49 +1,362 @@
-//! Hybrid virtual clock.
+//! Hybrid virtual clock — the single source of time for the control
+//! plane.
 //!
-//! Real compute (PJRT executions, query processing) takes the time it
-//! takes; *declared* durations (a job that "runs for 10 minutes") are
-//! compressed by `scale`. `now_ms` advances with real time multiplied by
-//! the scale, so queueing dynamics (time limits, backfill windows)
-//! behave like the paper's wall-clock while tests stay fast.
+//! # Time model
+//!
+//! Every duration in the system is one of two currencies:
+//!
+//! - **sim-ms** — milliseconds of *cluster life*: job time limits,
+//!   backfill windows, GC tombstone TTLs, cron minutes, HPA
+//!   stabilization, load-curve pacing, resync backstops. All of these
+//!   flow through [`Clock::now_ms`] / [`Clock::sleep_sim`] (or the
+//!   deadline-safe waits built on them, see below) and never touch the
+//!   wall clock directly.
+//! - **real-ms** — milliseconds of *host* time: perf measurement
+//!   ([`Clock::real_ms`]) and the test harness' own patience
+//!   ([`crate::util::sub::wait_for`] deadlines). Real compute (PJRT
+//!   executions, query processing) also takes the real time it takes.
+//!
+//! A `Clock` runs in one of two modes:
+//!
+//! - **Scaled** ([`Clock::new`]) — `now_ms` advances with real time
+//!   multiplied by `scale`, so queueing dynamics behave like the
+//!   paper's wall-clock while tests stay fast. `sleep_sim` sleeps the
+//!   corresponding real time, with a fractional-microsecond carry
+//!   accumulator so sub-scale sleeps average out exactly instead of
+//!   being stretched to a 1 µs floor each.
+//! - **Driven** ([`Clock::driven`], [`Clock::driven_auto`]) — time is
+//!   frozen until someone calls [`Clock::advance_ms`]. Waiters register
+//!   virtual deadlines with [`Clock::notify_at`] and are fired in
+//!   strict `(deadline, registration)` order as the advance sweeps past
+//!   them, so the same seeded scenario replays **byte-identically** at
+//!   maximum speed with zero wall-clock sleeps: an hour of cluster life
+//!   costs exactly the compute it contains. `driven_auto` additionally
+//!   makes `sleep_sim` advance the clock itself — the single-driver
+//!   replay mode where the driving thread's own pacing is the only
+//!   source of progress.
+//!
+//! # Deadline-safe APIs
+//!
+//! Code that must wait "until sim time T or an event" must not compute
+//! a real timeout from sim-ms itself (that deadlocks a driven clock).
+//! Use the clock-aware primitives instead, which park on
+//! [`Clock::notify_at`] in driven mode and on a scaled real timeout
+//! otherwise:
+//!
+//! - [`crate::util::Subscription::wait_sim`] — one park with a virtual
+//!   deadline;
+//! - [`crate::util::sub::wait_for_sim`] — the condition-poll loop over
+//!   it;
+//! - [`crate::slurm::CancelToken::wait_sim`] — cancellable virtual
+//!   sleeps inside executors and container entrypoints.
+//!
+//! See `docs/TIME.md` for a worked driven-mode replay example.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// Callback fired when a driven clock sweeps past a registered
+/// deadline. Must not block: it runs on the advancing thread.
+pub type TimerWaker = Arc<dyn Fn() + Send + Sync>;
+
+/// Handle for cancelling a registered [`Clock::notify_at`] timer.
+/// Dropping the id does *not* cancel (call [`Clock::cancel_notify`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimerId {
+    key: (u64, u64),
+}
+
+struct DrivenState {
+    now_ms: u64,
+    closed: bool,
+    next_id: u64,
+    /// Registered waiters, keyed `(deadline sim-ms, registration id)`
+    /// — BTreeMap order *is* the wake order.
+    timers: BTreeMap<(u64, u64), TimerWaker>,
+}
+
+enum ModeState {
+    Scaled {
+        /// Fractional sim-µs not yet slept (always `< scale`).
+        carry_us: Mutex<u64>,
+    },
+    Driven {
+        state: Mutex<DrivenState>,
+        cond: Condvar,
+        /// `sleep_sim` advances the clock itself (single-driver replay).
+        auto: bool,
+        /// Timers fired by an advance reaching their deadline (close-
+        /// time drains are not counted) — the zero-idle-wakeups hook.
+        fired: AtomicU64,
+    },
+}
+
+struct Inner {
+    scale: u64,
+    start: Instant,
+    mode: ModeState,
+}
+
+/// The cluster clock. Cheap to clone (shared state). See the module
+/// docs for the time model.
 #[derive(Clone)]
 pub struct Clock {
-    start: Arc<Instant>,
-    scale: u64,
+    inner: Arc<Inner>,
 }
 
 impl Clock {
+    /// A scaled clock: `now_ms` = real elapsed ms × `scale`.
     pub fn new(scale: u64) -> Clock {
-        Clock { start: Arc::new(Instant::now()), scale: scale.max(1) }
+        Clock {
+            inner: Arc::new(Inner {
+                scale: scale.max(1),
+                start: Instant::now(),
+                mode: ModeState::Scaled { carry_us: Mutex::new(0) },
+            }),
+        }
+    }
+
+    /// A driven clock starting at sim-ms 0: time moves only via
+    /// [`Clock::advance_ms`].
+    pub fn driven() -> Clock {
+        Clock::driven_with(false)
+    }
+
+    /// A driven clock whose `sleep_sim` advances the clock itself —
+    /// for single-driver replays where the driving loop's pacing is
+    /// the only source of progress.
+    pub fn driven_auto() -> Clock {
+        Clock::driven_with(true)
+    }
+
+    fn driven_with(auto: bool) -> Clock {
+        Clock {
+            inner: Arc::new(Inner {
+                scale: 1,
+                start: Instant::now(),
+                mode: ModeState::Driven {
+                    state: Mutex::new(DrivenState {
+                        now_ms: 0,
+                        closed: false,
+                        next_id: 0,
+                        timers: BTreeMap::new(),
+                    }),
+                    cond: Condvar::new(),
+                    auto,
+                    fired: AtomicU64::new(0),
+                },
+            }),
+        }
+    }
+
+    pub fn is_driven(&self) -> bool {
+        matches!(self.inner.mode, ModeState::Driven { .. })
     }
 
     /// Simulated milliseconds since cluster boot.
     pub fn now_ms(&self) -> u64 {
-        self.start.elapsed().as_millis() as u64 * self.scale
+        match &self.inner.mode {
+            ModeState::Scaled { .. } => {
+                self.inner.start.elapsed().as_millis() as u64 * self.inner.scale
+            }
+            ModeState::Driven { state, .. } => state.lock().unwrap().now_ms,
+        }
     }
 
     /// Real milliseconds since cluster boot (for perf measurement).
     pub fn real_ms(&self) -> u64 {
-        self.start.elapsed().as_millis() as u64
+        self.inner.start.elapsed().as_millis() as u64
+    }
+
+    /// Sim-to-real conversion for timeout computation: `Some(real
+    /// duration)` in scaled mode, `None` in driven mode (where no real
+    /// duration corresponds — park on [`Clock::notify_at`] instead).
+    pub fn sim_to_real(&self, sim_ms: u64) -> Option<Duration> {
+        match &self.inner.mode {
+            ModeState::Scaled { .. } => Some(Duration::from_micros(
+                sim_ms.saturating_mul(1000) / self.inner.scale,
+            )),
+            ModeState::Driven { .. } => None,
+        }
     }
 
     /// Sleep for `sim_ms` simulated milliseconds.
+    ///
+    /// Scaled: sleeps the scaled-down real time, carrying fractional
+    /// microseconds so repeated sub-scale sleeps average out exactly.
+    /// Driven: parks until the clock is advanced past the deadline
+    /// (or closed); with [`Clock::driven_auto`], advances the clock
+    /// itself instead of parking.
     pub fn sleep_sim(&self, sim_ms: u64) {
-        std::thread::sleep(Duration::from_micros(
-            (sim_ms * 1000 / self.scale).max(1),
-        ));
+        match &self.inner.mode {
+            ModeState::Scaled { carry_us } => {
+                let real_us = {
+                    let mut carry = carry_us.lock().unwrap();
+                    let total_us = sim_ms.saturating_mul(1000) + *carry;
+                    *carry = total_us % self.inner.scale;
+                    total_us / self.inner.scale
+                };
+                if real_us > 0 {
+                    std::thread::sleep(Duration::from_micros(real_us));
+                }
+            }
+            ModeState::Driven { state, cond, auto, .. } => {
+                if *auto {
+                    self.advance_ms(sim_ms);
+                    return;
+                }
+                let mut st = state.lock().unwrap();
+                let deadline = st.now_ms.saturating_add(sim_ms);
+                while st.now_ms < deadline && !st.closed {
+                    st = cond.wait(st).unwrap();
+                }
+            }
+        }
     }
 
-    /// The scheduler tick: a short real-time pause.
+    /// The scheduler tick: a short real-time pause (scaled) or a park
+    /// until time moves (driven; one sim-ms advance in auto mode).
     pub fn tick(&self) {
-        std::thread::sleep(Duration::from_millis(1));
+        match &self.inner.mode {
+            ModeState::Scaled { .. } => std::thread::sleep(Duration::from_millis(1)),
+            ModeState::Driven { state, cond, auto, .. } => {
+                if *auto {
+                    self.advance_ms(1);
+                    return;
+                }
+                let mut st = state.lock().unwrap();
+                let t0 = st.now_ms;
+                while st.now_ms == t0 && !st.closed {
+                    st = cond.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Advance a driven clock by `delta_ms`, firing every registered
+    /// timer whose deadline the sweep passes, in strict `(deadline,
+    /// registration)` order. Timers fire with the clock lock released
+    /// (a waker may re-enter the clock); with a single advancing thread
+    /// the order is still fully deterministic. No-op on a scaled clock.
+    pub fn advance_ms(&self, delta_ms: u64) {
+        let ModeState::Driven { state, cond, fired, .. } = &self.inner.mode else {
+            return;
+        };
+        let target = {
+            let st = state.lock().unwrap();
+            st.now_ms.saturating_add(delta_ms)
+        };
+        loop {
+            let waker = {
+                let mut st = state.lock().unwrap();
+                if st.closed {
+                    return;
+                }
+                match st.timers.first_key_value() {
+                    Some((&key, _)) if key.0 <= target => {
+                        let waker = st.timers.remove(&key).unwrap();
+                        st.now_ms = st.now_ms.max(key.0);
+                        fired.fetch_add(1, Ordering::Relaxed);
+                        cond.notify_all();
+                        Some(waker)
+                    }
+                    _ => {
+                        st.now_ms = target;
+                        cond.notify_all();
+                        None
+                    }
+                }
+            };
+            match waker {
+                Some(w) => w(),
+                None => return,
+            }
+        }
+    }
+
+    /// Register `waker` to fire when a driven clock reaches
+    /// `deadline_ms`. Returns `None` if no timer was registered —
+    /// either in scaled mode (nothing fires timers there and the waker
+    /// is *not* called: compute a real timeout via
+    /// [`Clock::sim_to_real`] instead), or because the deadline is
+    /// already due / the clock is closed, in which case the waker
+    /// fires immediately on this thread.
+    pub fn notify_at(&self, deadline_ms: u64, waker: TimerWaker) -> Option<TimerId> {
+        let ModeState::Driven { state, .. } = &self.inner.mode else {
+            return None;
+        };
+        {
+            let mut st = state.lock().unwrap();
+            if !st.closed && deadline_ms > st.now_ms {
+                let id = st.next_id;
+                st.next_id += 1;
+                let key = (deadline_ms, id);
+                st.timers.insert(key, waker);
+                return Some(TimerId { key });
+            }
+        }
+        waker();
+        None
+    }
+
+    /// Cancel a timer registered with [`Clock::notify_at`] (no-op if
+    /// it already fired).
+    pub fn cancel_notify(&self, id: TimerId) {
+        if let ModeState::Driven { state, .. } = &self.inner.mode {
+            state.lock().unwrap().timers.remove(&id.key);
+        }
+    }
+
+    /// Close a driven clock: fires and drains all registered timers,
+    /// wakes every parked sleeper, and makes further virtual waits
+    /// return immediately — the shutdown edge that keeps a frozen
+    /// clock from wedging its waiters. No-op on a scaled clock.
+    pub fn close(&self) {
+        let ModeState::Driven { state, cond, .. } = &self.inner.mode else {
+            return;
+        };
+        let drained: Vec<TimerWaker> = {
+            let mut st = state.lock().unwrap();
+            st.closed = true;
+            cond.notify_all();
+            std::mem::take(&mut st.timers).into_values().collect()
+        };
+        for w in drained {
+            w();
+        }
+    }
+
+    /// Whether a driven clock has been closed (always `false` for
+    /// scaled clocks).
+    pub fn is_closed(&self) -> bool {
+        match &self.inner.mode {
+            ModeState::Scaled { .. } => false,
+            ModeState::Driven { state, .. } => state.lock().unwrap().closed,
+        }
+    }
+
+    /// Timers fired by advances reaching their deadlines — the
+    /// regression hook proving an idle driven cluster performs zero
+    /// wakeups. Always 0 for scaled clocks.
+    pub fn timer_wakeups(&self) -> u64 {
+        match &self.inner.mode {
+            ModeState::Scaled { .. } => 0,
+            ModeState::Driven { fired, .. } => fired.load(Ordering::Relaxed),
+        }
     }
 
     pub fn scale(&self) -> u64 {
-        self.scale
+        self.inner.scale
+    }
+
+    #[cfg(test)]
+    fn carry_us(&self) -> u64 {
+        match &self.inner.mode {
+            ModeState::Scaled { carry_us } => *carry_us.lock().unwrap(),
+            ModeState::Driven { .. } => 0,
+        }
     }
 }
 
@@ -66,5 +379,129 @@ mod tests {
         let t0 = Instant::now();
         c.sleep_sim(1000); // 1 simulated second ~ 10 real ms
         assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn sleep_sim_carries_fractions() {
+        // scale 7: sleep_sim(1) = 1000/7 = 142 µs + 6 carried.
+        let c = Clock::new(7);
+        c.sleep_sim(1);
+        assert_eq!(c.carry_us(), 1000 % 7);
+        // Sub-scale sleeps accumulate instead of flooring to 1 µs.
+        let c = Clock::new(1_000_000);
+        for k in 1..=5u64 {
+            c.sleep_sim(1);
+            assert_eq!(c.carry_us(), (k * 1000) % 1_000_000);
+        }
+    }
+
+    #[test]
+    fn driven_clock_is_frozen_until_advanced() {
+        let c = Clock::driven();
+        assert!(c.is_driven());
+        assert_eq!(c.now_ms(), 0);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(c.now_ms(), 0, "driven time never moves on its own");
+        c.advance_ms(3_600_000);
+        assert_eq!(c.now_ms(), 3_600_000);
+        assert_eq!(c.timer_wakeups(), 0, "idle advance fires nothing");
+    }
+
+    #[test]
+    fn timers_fire_in_deadline_then_registration_order() {
+        let c = Clock::driven();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let push = |tag: &'static str| {
+            let log = log.clone();
+            Arc::new(move || log.lock().unwrap().push(tag)) as TimerWaker
+        };
+        // Registered out of deadline order; b and c share a deadline,
+        // so registration order breaks the tie.
+        assert!(c.notify_at(200, push("b")).is_some());
+        assert!(c.notify_at(200, push("c")).is_some());
+        assert!(c.notify_at(100, push("a")).is_some());
+        assert!(c.notify_at(900, push("z")).is_some());
+        c.advance_ms(500);
+        assert_eq!(*log.lock().unwrap(), vec!["a", "b", "c"]);
+        assert_eq!(c.timer_wakeups(), 3);
+        c.advance_ms(500);
+        assert_eq!(*log.lock().unwrap(), vec!["a", "b", "c", "z"]);
+    }
+
+    #[test]
+    fn due_timer_fires_immediately_and_cancel_prevents_fire() {
+        let c = Clock::driven();
+        c.advance_ms(50);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        let waker: TimerWaker = Arc::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        // Already due: fires on this thread, no registration.
+        assert!(c.notify_at(50, waker.clone()).is_none());
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        // Cancelled before due: never fires.
+        let id = c.notify_at(100, waker).unwrap();
+        c.cancel_notify(id);
+        c.advance_ms(100);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.timer_wakeups(), 0);
+    }
+
+    #[test]
+    fn close_drains_timers_and_unparks_sleepers() {
+        let c = Clock::driven();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        c.notify_at(
+            1_000,
+            Arc::new(move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            }),
+        );
+        let sleeper = c.clone();
+        let handle = std::thread::spawn(move || sleeper.sleep_sim(10_000));
+        c.close();
+        handle.join().unwrap();
+        assert!(c.is_closed());
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "close fires pending timers");
+        assert_eq!(c.timer_wakeups(), 0, "close-drain is not a deadline fire");
+        // Post-close virtual waits return immediately.
+        c.sleep_sim(1_000_000);
+        c.tick();
+    }
+
+    #[test]
+    fn auto_mode_advances_through_sleep_sim() {
+        let c = Clock::driven_auto();
+        let t0 = Instant::now();
+        c.sleep_sim(3_600_000); // an hour of cluster life...
+        assert_eq!(c.now_ms(), 3_600_000);
+        assert!(t0.elapsed() < Duration::from_secs(1), "...in real milliseconds");
+        c.tick();
+        assert_eq!(c.now_ms(), 3_600_001);
+    }
+
+    #[test]
+    fn scaled_clock_ignores_driven_surface() {
+        let c = Clock::new(100);
+        assert!(!c.is_driven());
+        c.advance_ms(1_000_000); // no-op
+        assert!(c.now_ms() < 1_000_000);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        // No timer service in scaled mode: nothing registered, nothing
+        // fired — callers fall back to sim_to_real timeouts.
+        assert!(c
+            .notify_at(
+                u64::MAX,
+                Arc::new(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                })
+            )
+            .is_none());
+        assert_eq!(hits.load(Ordering::Relaxed), 0);
+        assert_eq!(c.sim_to_real(1000), Some(Duration::from_micros(10_000)));
+        assert_eq!(Clock::driven().sim_to_real(1000), None);
     }
 }

@@ -3,11 +3,23 @@
 //! Stands in for the AWS ParallelCluster testbed of SS4. The Slurm
 //! simulator allocates against these nodes; the Apptainer runtime "runs"
 //! containers on them; Flannel hands out per-node pod subnets.
+//!
+//! # Time model
+//!
+//! [`Clock`] is the single source of time for the whole control plane
+//! — every timeout, TTL, backstop, cron schedule and load curve is
+//! measured in *simulated* ms on it. A clock is either **scaled**
+//! (sim time = real time × [`ClusterSpec::time_scale`]) or **driven**
+//! (`time_scale: 0` / [`Clock::driven`]: frozen until
+//! [`Clock::advance_ms`], waking registered waiters in strict deadline
+//! order — the deterministic-replay mode). The full contract, including
+//! which APIs are deadline-safe against a frozen clock, is documented
+//! in [`clock`]; `docs/TIME.md` has a worked replay example.
 
-mod clock;
+pub mod clock;
 mod node;
 
-pub use clock::Clock;
+pub use clock::{Clock, TimerId, TimerWaker};
 pub use node::{Node, NodeState, Resources};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,7 +39,10 @@ pub struct ClusterSpec {
     pub name: String,
     pub nodes: Vec<NodeSpec>,
     /// Virtual-time scale: how many simulated milliseconds elapse per
-    /// real millisecond of sleeping (compute work always runs for real).
+    /// real millisecond of sleeping (compute work always runs for
+    /// real). `0` selects a **driven** clock ([`Clock::driven`]): time
+    /// is frozen until the harness calls [`Clock::advance_ms`] — the
+    /// deterministic-replay mode (see [`clock`]'s *Time model*).
     pub time_scale: u64,
 }
 
@@ -45,6 +60,13 @@ impl ClusterSpec {
                 .collect(),
             time_scale: 100,
         }
+    }
+
+    /// Switch to a driven clock (`time_scale = 0`): the cluster's time
+    /// moves only when the harness advances it.
+    pub fn driven(mut self) -> ClusterSpec {
+        self.time_scale = 0;
+        self
     }
 }
 
@@ -71,8 +93,13 @@ impl Cluster {
             .iter()
             .map(|ns| Node::new(&ns.name, ns.cpus, ns.memory_bytes))
             .collect();
+        let clock = if spec.time_scale == 0 {
+            Clock::driven()
+        } else {
+            Clock::new(spec.time_scale)
+        };
         Cluster {
-            clock: Clock::new(spec.time_scale),
+            clock,
             nodes: Arc::new(Mutex::new(nodes)),
             epoch: Arc::new(AtomicU64::new(1)),
             spec,

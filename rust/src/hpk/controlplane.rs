@@ -87,8 +87,10 @@ impl ControlPlane {
         let ca_cert = format!("hpk-ca-{:016x}", rng.next_u64());
 
         // Order matters, mirroring the control-plane container: store +
-        // API server first, ...
-        let api = ApiServer::new();
+        // API server first, stamping timestamps from the cluster clock
+        // so every component (and the GC's TTL sweeps) shares one time
+        // source, ...
+        let api = ApiServer::with_clock(cluster.clock.clone());
         api.register_admission(service_admission());
 
         // ... then Slurm connectivity for the kubelet, ...
@@ -210,13 +212,16 @@ impl ControlPlane {
         crate::util::sub::wait_for(&sub, timeout_ms, 50, || cond(&self.api))
     }
 
-    /// Orderly teardown of all loops.
+    /// Orderly teardown of all loops. Closes the cluster clock last,
+    /// so any thread still parked on a virtual deadline (a driven
+    /// clock that will never advance again) unwedges immediately.
     pub fn shutdown(mut self) {
         self.kubelet.shutdown();
         if let Some(cm) = self.controller_manager.take() {
             cm.shutdown();
         }
         self.slurm.shutdown();
+        self.cluster.clock.close();
     }
 }
 
@@ -239,9 +244,7 @@ mod tests {
             .registry
             .register(ImageSpec::new("server:1", "server").with_size(1 << 20));
         cp.runtime.table.register("server", |ctx| {
-            while !ctx.cancel.is_cancelled() {
-                std::thread::sleep(std::time::Duration::from_millis(2));
-            }
+            ctx.cancel.wait();
             Err("terminated".to_string())
         });
         cp

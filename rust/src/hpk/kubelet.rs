@@ -29,10 +29,12 @@ use std::sync::{Arc, Mutex};
 /// The name of the single virtual node.
 pub const VIRTUAL_NODE: &str = "hpk-kubelet";
 
-/// How long the sync loop parks on its merged subscription between
-/// events. Both buses wake it immediately; this is only the
-/// level-triggered missed-edge backstop.
-const RESYNC_BACKSTOP_MS: u64 = 500;
+/// How long (simulated ms on the cluster clock) the sync loop parks on
+/// its merged subscription between events. Both buses wake it
+/// immediately; this is only the level-triggered missed-edge backstop,
+/// and on a driven clock it fires only when the harness advances
+/// virtual time past it.
+const RESYNC_BACKSTOP_MS: u64 = 50_000;
 
 struct PodBinding {
     job_id: JobId,
@@ -109,15 +111,15 @@ impl HpkKubelet {
         std::thread::Builder::new()
             .name("hpk-kubelet".to_string())
             .spawn(move || {
+                let clock = k.api.clock().clone();
                 while !k.shutdown.load(Ordering::SeqCst) {
                     k.sync_once();
                     // Push-driven end to end: block until either bus
                     // has news (or the shutdown close lands). The
-                    // timeout is only the missed-edge backstop — an
-                    // idle kubelet performs zero wakeups whether or
-                    // not bindings are in flight.
-                    let timeout = std::time::Duration::from_millis(RESYNC_BACKSTOP_MS);
-                    if k.subscription.wait(timeout) == WakeReason::Closed {
+                    // virtual-deadline timeout is only the missed-edge
+                    // backstop — an idle kubelet performs zero wakeups
+                    // whether or not bindings are in flight.
+                    if k.subscription.wait_sim(&clock, RESYNC_BACKSTOP_MS) == WakeReason::Closed {
                         // Either bus closed (kubelet or Slurm shutdown):
                         // one final drain so work that raced the close —
                         // e.g. a pod deletion still needing its scancel —
@@ -315,10 +317,11 @@ impl HpkKubelet {
         let mut status = Value::map();
         status.set("phase", Value::from(phase));
         if phase == "Succeeded" || phase == "Failed" {
-            // Stamp the tombstone time the GC's cap/TTL sweep keys on.
+            // Stamp the tombstone time the GC's cap/TTL sweep keys on
+            // (same clock the GC reads: the API server's).
             status.set(
                 "terminatedAt",
-                Value::Int(crate::util::monotonic_ms() as i64),
+                Value::Int(self.api.clock().now_ms() as i64),
             );
         }
         if let Some(r) = reason {
@@ -454,9 +457,7 @@ mod tests {
             .registry
             .register(ImageSpec::new("server:1", "server").with_size(1 << 20));
         runtime.table.register("server", |ctx| {
-            while !ctx.cancel.is_cancelled() {
-                std::thread::sleep(std::time::Duration::from_millis(2));
-            }
+            ctx.cancel.wait();
             Err("terminated".to_string())
         });
         let slurm = Slurmctld::start(
@@ -470,16 +471,12 @@ mod tests {
     }
 
     fn wait_phase(api: &ApiServer, ns: &str, name: &str, phase: &str, ms: u64) -> bool {
-        let t0 = std::time::Instant::now();
-        while (t0.elapsed().as_millis() as u64) < ms {
-            if let Ok(p) = api.get("Pod", ns, name) {
-                if object::pod_phase(&p) == phase {
-                    return true;
-                }
-            }
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
-        false
+        let sub = api.subscribe(Some(&["Pod"]));
+        crate::util::sub::wait_for(&sub, ms, 50, || {
+            api.get("Pod", ns, name)
+                .map(|p| object::pod_phase(&p) == phase)
+                .unwrap_or(false)
+        })
     }
 
     fn quick_pod(name: &str) -> Value {
@@ -532,23 +529,25 @@ mod tests {
             .unwrap();
         reconcile_once(&w.api, &PassThroughScheduler);
         assert!(wait_phase(&w.api, "default", "srv", "Running", 5000));
-        // IP handshake published.
-        let t0 = std::time::Instant::now();
-        loop {
-            let p = w.api.get("Pod", "default", "srv").unwrap();
-            if p.str_at("status.podIP").map(|s| s.starts_with("10.244.")) == Some(true) {
-                break;
-            }
-            assert!(t0.elapsed().as_secs() < 5, "no podIP published");
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
-        // Delete -> scancel -> sandbox freed.
+        // IP handshake published (pod-status writes wake the waiter).
+        let sub = w.api.subscribe(Some(&["Pod"]));
+        assert!(
+            crate::util::sub::wait_for(&sub, 5_000, 50, || {
+                let p = w.api.get("Pod", "default", "srv").unwrap();
+                p.str_at("status.podIP").map(|s| s.starts_with("10.244.")) == Some(true)
+            }),
+            "no podIP published"
+        );
+        // Delete -> scancel -> sandbox freed. The sandbox teardown is
+        // not a bus event, so this rides the backstop.
         w.api.delete("Pod", "default", "srv").unwrap();
-        let t0 = std::time::Instant::now();
-        while w.runtime.cni.live_count() > 0 && t0.elapsed().as_secs() < 15 {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
-        assert_eq!(w.runtime.cni.live_count(), 0);
+        let drain = w.slurm.subscribe();
+        assert!(
+            crate::util::sub::wait_for(&drain, 15_000, 50, || {
+                w.runtime.cni.live_count() == 0
+            }),
+            "sandbox not freed"
+        );
         w.kubelet.shutdown();
         w.slurm.shutdown();
     }
@@ -661,11 +660,11 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let t0 = std::time::Instant::now();
-        while !w.slurm.squeue().is_empty() {
-            assert!(t0.elapsed().as_secs() < 10, "job not cancelled");
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        let drain = w.slurm.subscribe();
+        assert!(
+            crate::util::sub::wait_for(&drain, 10_000, 50, || w.slurm.squeue().is_empty()),
+            "job not cancelled"
+        );
         assert_eq!(w.kubelet.scancel_count(), 1);
         w.kubelet.shutdown();
         w.slurm.shutdown();
@@ -694,32 +693,33 @@ mod tests {
         );
         // Wait out the startup pass (over an empty queue): only then is
         // the scheduler guaranteed asleep, so the job submitted below
-        // stays Pending instead of racing into execution.
-        let t0 = std::time::Instant::now();
-        while slurm.sched_passes() == 0 {
-            assert!(t0.elapsed().as_secs() < 5, "startup pass never ran");
-            std::thread::sleep(std::time::Duration::from_millis(1));
-        }
+        // stays Pending instead of racing into execution. No pass
+        // event exists, so this rides the backstop.
+        let events = slurm.subscribe();
+        assert!(
+            crate::util::sub::wait_for(&events, 5_000, 20, || slurm.sched_passes() > 0),
+            "startup pass never ran"
+        );
         let api = ApiServer::new();
         let kubelet = HpkKubelet::start(api.clone(), slurm.clone(), fs);
         api.create(quick_pod("doomed")).unwrap();
         reconcile_once(&api, &PassThroughScheduler);
-        let t0 = std::time::Instant::now();
-        while slurm.squeue().is_empty() {
-            assert!(t0.elapsed().as_secs() < 5, "job never submitted");
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        assert!(
+            crate::util::sub::wait_for(&events, 5_000, 50, || !slurm.squeue().is_empty()),
+            "job never submitted"
+        );
         let job_id = slurm.squeue()[0].job_id;
         assert!(matches!(
             slurm.job_info(job_id).unwrap().state,
             JobState::Pending(_)
         ));
         api.delete("Pod", "default", "doomed").unwrap();
-        let t0 = std::time::Instant::now();
-        while slurm.job_info(job_id).unwrap().state != JobState::Cancelled {
-            assert!(t0.elapsed().as_secs() < 5, "pending job not cancelled");
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        assert!(
+            crate::util::sub::wait_for(&events, 5_000, 50, || {
+                slurm.job_info(job_id).unwrap().state == JobState::Cancelled
+            }),
+            "pending job not cancelled"
+        );
         // Extra racing passes must not cancel again.
         for _ in 0..4 {
             kubelet.sync_once();

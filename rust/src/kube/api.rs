@@ -62,6 +62,11 @@ pub struct ApiServer {
     store: Store,
     admission: Arc<Mutex<Vec<AdmissionCheck>>>,
     uid_counter: Arc<AtomicU64>,
+    /// The cluster clock: every timestamp the server stamps
+    /// (creationTimestamp, event times) and every TTL a controller
+    /// computes against them is *simulated* ms on this clock (see the
+    /// *Time model* in [`crate::hpcsim::clock`]).
+    clock: crate::hpcsim::Clock,
 }
 
 impl Default for ApiServer {
@@ -71,12 +76,28 @@ impl Default for ApiServer {
 }
 
 impl ApiServer {
+    /// A standalone server on a private 1:1 clock (sim ms == real ms,
+    /// starting at 0) — what unit tests use. Deployments wire the
+    /// cluster clock in via [`ApiServer::with_clock`].
     pub fn new() -> ApiServer {
+        ApiServer::with_clock(crate::hpcsim::Clock::new(1))
+    }
+
+    /// A server stamping time from `clock` — the deployment path, so
+    /// API timestamps, controller TTLs and Slurm accounting all share
+    /// one time base.
+    pub fn with_clock(clock: crate::hpcsim::Clock) -> ApiServer {
         ApiServer {
             store: Store::new(),
             admission: Arc::new(Mutex::new(Vec::new())),
             uid_counter: Arc::new(AtomicU64::new(1)),
+            clock,
         }
+    }
+
+    /// The clock this server stamps time from.
+    pub fn clock(&self) -> &crate::hpcsim::Clock {
+        &self.clock
     }
 
     /// Register an admission controller (runs on create + update).
@@ -136,7 +157,7 @@ impl ApiServer {
         if meta.get("creationTimestamp").is_none() {
             meta.set(
                 "creationTimestamp",
-                Value::Int(crate::util::monotonic_ms() as i64),
+                Value::Int(self.clock.now_ms() as i64),
             );
         }
         Ok((kind, namespace, name))
@@ -346,7 +367,7 @@ impl ApiServer {
         e.set("involvedObject", Value::from(involved));
         e.set("reason", Value::from(reason));
         e.set("message", Value::from(message));
-        e.set("timestamp", Value::Int(crate::util::monotonic_ms() as i64));
+        e.set("timestamp", Value::Int(self.clock.now_ms() as i64));
         self.store.put("Event", namespace, &name, e);
     }
 

@@ -32,14 +32,15 @@ const MANAGED_KINDS: &[&str] = &["ReplicaSet", "Pod", "EndpointSlice"];
 /// Events kept per namespace; the oldest beyond this are swept.
 pub const EVENT_CAP_PER_NAMESPACE: usize = 256;
 
-/// Events older than this (monotonic ms) are swept regardless of count.
+/// Events older than this (simulated ms on the cluster clock) are
+/// swept regardless of count.
 pub const EVENT_TTL_MS: u64 = 300_000;
 
 /// Terminal (Succeeded/Failed) pods kept per namespace; the oldest
 /// tombstones beyond this are swept.
 pub const TERMINAL_POD_CAP_PER_NAMESPACE: usize = 512;
 
-/// Terminal pods older than this (monotonic ms since termination) are
+/// Terminal pods older than this (simulated ms since termination) are
 /// swept regardless of count.
 pub const TERMINAL_POD_TTL_MS: u64 = 300_000;
 
@@ -141,7 +142,7 @@ impl GcController {
     /// `EVENT_CAP_PER_NAMESPACE`, drop anything older than
     /// `EVENT_TTL_MS`.
     fn sweep_events(&self, ctx: &Context, namespace: &str) {
-        let now = crate::util::monotonic_ms() as i64;
+        let now = ctx.clock.now_ms() as i64;
         let mut events = ctx
             .informer
             .select("Event", &ListParams::in_namespace(namespace));
@@ -168,7 +169,7 @@ impl GcController {
     /// [`TERMINAL_POD_TTL_MS`] ago — so huge Job fan-outs don't leak
     /// finished pods in the store or the Pod event-log shard.
     fn sweep_terminal_pods(&self, ctx: &Context, namespace: &str) {
-        let now = crate::util::monotonic_ms() as i64;
+        let now = ctx.clock.now_ms() as i64;
         let mut terminal: Vec<Arc<Value>> = ctx
             .informer
             .select("Pod", &ListParams::in_namespace(namespace))
@@ -285,10 +286,10 @@ mod tests {
     #[test]
     fn terminal_pod_cap_swept_per_namespace() {
         let api = ApiServer::new();
-        // Stamp termination times relative to now so none is ever
-        // TTL-expired no matter how long the test process has run;
-        // done-0000 is the oldest tombstone.
-        let base = crate::util::monotonic_ms() as i64 - 1_000;
+        // Stamp termination times relative to the cluster clock so
+        // none is ever TTL-expired (negative stamps are fine: the
+        // clock starts near zero); done-0000 is the oldest tombstone.
+        let base = api.clock().now_ms() as i64 - 1_000;
         for i in 0..(TERMINAL_POD_CAP_PER_NAMESPACE + 25) {
             let ts = base + i as i64;
             api.create(
@@ -318,7 +319,7 @@ mod tests {
     #[test]
     fn expired_terminal_pods_swept_by_ttl() {
         let api = ApiServer::new();
-        let now = crate::util::monotonic_ms() as i64;
+        let now = api.clock().now_ms() as i64;
         let old = now - (TERMINAL_POD_TTL_MS as i64) - 10_000;
         api.create(
             parse_one(&format!(
@@ -351,7 +352,7 @@ mod tests {
                 .unwrap(),
             )
             .unwrap();
-        let now = crate::util::monotonic_ms() as i64;
+        let now = api.clock().now_ms() as i64;
         let old = now - (TERMINAL_POD_TTL_MS as i64) - 10_000;
         let mut pod = parse_one(&format!(
             "kind: Pod\nmetadata:\n  name: p\nspec: {{}}\nstatus:\n  phase: Succeeded\n  terminatedAt: {old}\n"
@@ -373,10 +374,9 @@ mod tests {
     #[test]
     fn expired_events_swept_by_ttl() {
         let api = ApiServer::new();
-        // An ancient event (timestamp 0 is > TTL behind monotonic now
-        // only if the process has been up long enough, so place it
-        // explicitly far in the past relative to now).
-        let now = crate::util::monotonic_ms() as i64;
+        // An ancient event, stamped explicitly far in the past
+        // relative to the cluster clock (negative is fine).
+        let now = api.clock().now_ms() as i64;
         let old_ts = now - (EVENT_TTL_MS as i64) - 10_000;
         api.create(
             parse_one(&format!(

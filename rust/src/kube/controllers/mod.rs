@@ -34,6 +34,7 @@ use super::api::ApiServer;
 use super::client::{Api, Client, ResourceKey};
 use super::informer::{Mapping, SharedInformer, WatchSpec, WorkQueue};
 use super::store::{Subscription, WakeReason};
+use crate::hpcsim::Clock;
 use crate::yamlkit::Value;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -68,14 +69,16 @@ fn informer_for(api: &ApiServer, spec_sets: &[Vec<WatchSpec>]) -> Arc<SharedInfo
     }
 }
 
-/// Wall-clock cadence of the level-triggered full requeue (safety net
-/// against a missed edge stalling an event-driven reconciler), and how
-/// long a [`ControllerManager`] thread parks on its subscription before
-/// doing a pass anyway — the only periodic work left in a quiescent
-/// cluster (matching the old 256-tick x 2 ms resync cadence, minus the
-/// 500 polls/s that used to precede it). [`Runner`]-based loops share
-/// the same cadence via [`Runner::run_once`].
-const RESYNC_INTERVAL_MS: u64 = 500;
+/// Simulated-ms cadence of the level-triggered full requeue (safety
+/// net against a missed edge stalling an event-driven reconciler), and
+/// how long a [`ControllerManager`] thread parks on its subscription
+/// before doing a pass anyway — the only periodic work left in a
+/// quiescent cluster. Measured on the cluster [`Clock`], so at the
+/// default 100x scale this is the same ~500 ms of real time as before,
+/// and in driven mode the backstop fires only when the harness
+/// advances virtual time past it. [`Runner`]-based loops share the
+/// same cadence via [`Runner::run_once`].
+const RESYNC_INTERVAL_MS: u64 = 50_000;
 
 /// What one reconciler sees: a typed client for writes and fresh
 /// reads, the shared informer cache for indexed lookups, and its own
@@ -84,6 +87,10 @@ pub struct Context {
     pub client: Client,
     pub informer: Arc<SharedInformer>,
     pub queue: WorkQueue,
+    /// The cluster clock (the API server's): reconcilers that reason
+    /// about time — GC tombstone TTLs, HPA stabilization — read it
+    /// here, never the wall clock.
+    pub clock: Clock,
 }
 
 impl Context {
@@ -92,6 +99,7 @@ impl Context {
             client: Client::new(api.clone()),
             informer,
             queue,
+            clock: api.clock().clone(),
         }
     }
 
@@ -158,8 +166,9 @@ pub trait Reconciler: Send + Sync + 'static {
 pub struct Runner {
     informer: Arc<SharedInformer>,
     entries: Vec<(Box<dyn Reconciler>, Context)>,
-    /// `monotonic_ms` of the last level-triggered requeue — wall-clock,
-    /// so the backstop cadence is independent of how often the owning
+    clock: Clock,
+    /// Clock reading (sim-ms) of the last level-triggered requeue, so
+    /// the backstop cadence is independent of how often the owning
     /// loop gets woken (registration already seeds the queues).
     last_resync_ms: AtomicU64,
 }
@@ -178,17 +187,19 @@ impl Runner {
                 (r, ctx)
             })
             .collect();
+        let clock = api.clock().clone();
         Runner {
             informer,
             entries,
-            last_resync_ms: AtomicU64::new(crate::util::monotonic_ms()),
+            last_resync_ms: AtomicU64::new(clock.now_ms()),
+            clock,
         }
     }
 
     /// One pass: pull watch events into the shared cache, then give
     /// every reconciler a chance to drain its queue.
     pub fn run_once(&self) {
-        let now = crate::util::monotonic_ms();
+        let now = self.clock.now_ms();
         if now.saturating_sub(self.last_resync_ms.load(Ordering::Relaxed))
             >= RESYNC_INTERVAL_MS
         {
@@ -223,9 +234,11 @@ impl ControllerManager {
     /// Start one thread per reconciler against one shared informer.
     /// Each thread parks on a [`Subscription`] scoped to *its own*
     /// watch-spec kinds — not the informer's union — and wakes only
-    /// when an event for a kind it watches lands (or the 500 ms
-    /// level-trigger backstop fires); hot-kind churn never wakes a
-    /// controller watching only cold kinds. No tick anywhere.
+    /// when an event for a kind it watches lands (or the
+    /// [`RESYNC_INTERVAL_MS`] level-trigger backstop fires on the
+    /// cluster clock); hot-kind churn never wakes a controller
+    /// watching only cold kinds. No tick anywhere, and on a driven
+    /// clock an idle manager performs zero wakeups.
     pub fn start(api: ApiServer, reconcilers: Vec<Box<dyn Reconciler>>) -> ControllerManager {
         let spec_sets: Vec<Vec<WatchSpec>> =
             reconcilers.iter().map(|r| r.watches()).collect();
@@ -256,12 +269,12 @@ impl ControllerManager {
                 std::thread::Builder::new()
                     .name(format!("controller-{}", r.name()))
                     .spawn(move || {
-                        let interval = std::time::Duration::from_millis(RESYNC_INTERVAL_MS);
-                        let mut last_resync = std::time::Instant::now();
+                        let clock = ctx.clock.clone();
+                        let mut last_resync = clock.now_ms();
                         loop {
                             informer.sync();
                             r.reconcile(&ctx);
-                            if sub.wait(interval) == WakeReason::Closed {
+                            if sub.wait_sim(&clock, RESYNC_INTERVAL_MS) == WakeReason::Closed {
                                 // Wake-on-close (the only exit): one
                                 // final drain so nothing that raced the
                                 // close is lost.
@@ -269,13 +282,16 @@ impl ControllerManager {
                                 r.reconcile(&ctx);
                                 break;
                             }
-                            // Level-triggered backstop on a wall-clock
+                            // Level-triggered backstop on a sim-clock
                             // cadence, whether the wait was a wakeup or
                             // a timeout — sustained event traffic must
                             // not starve the resync.
-                            if owns_resync && last_resync.elapsed() >= interval {
+                            if owns_resync
+                                && clock.now_ms().saturating_sub(last_resync)
+                                    >= RESYNC_INTERVAL_MS
+                            {
                                 informer.resync_queues();
-                                last_resync = std::time::Instant::now();
+                                last_resync = clock.now_ms();
                             }
                         }
                     })

@@ -13,10 +13,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// How long the sync loop parks on its Pod subscription before doing a
-/// level-triggered pass anyway (missed-edge backstop; pod events wake
-/// it immediately).
-const POD_RESYNC_MS: u64 = 500;
+/// How long (simulated ms on the API server's clock) the sync loop
+/// parks on its Pod subscription before doing a level-triggered pass
+/// anyway (missed-edge backstop; pod events wake it immediately).
+const POD_RESYNC_MS: u64 = 50_000;
 
 /// Env for one container: pod spec env + downward-API-style fields +
 /// the node's service-discovery variables (`services`, see
@@ -217,13 +217,13 @@ impl VanillaKubelet {
     }
 
     fn sync_loop(&self) {
+        let clock = self.api.clock().clone();
         while !self.shutdown.load(Ordering::SeqCst) {
             self.sync_once();
             // Block until a Pod event lands (or the level-triggered
-            // backstop / shutdown close fires) — no poll tick.
-            if self.subscription.wait(std::time::Duration::from_millis(POD_RESYNC_MS))
-                == WakeReason::Closed
-            {
+            // backstop's virtual deadline / shutdown close fires) — no
+            // poll tick.
+            if self.subscription.wait_sim(&clock, POD_RESYNC_MS) == WakeReason::Closed {
                 break;
             }
         }
@@ -282,7 +282,7 @@ impl VanillaKubelet {
                         st.set("reason", Value::from(e.as_str()));
                         st.set(
                             "terminatedAt",
-                            Value::Int(crate::util::monotonic_ms() as i64),
+                            Value::Int(api.clock().now_ms() as i64),
                         );
                         let _ = api.update_status("Pod", &ns, &name, st);
                         return;
@@ -315,10 +315,10 @@ impl VanillaKubelet {
                     }
                 }
                 // Stamp the tombstone time the GC's cap/TTL sweep keys
-                // on (see GcController's terminal-pod sweep).
+                // on (same clock the GC reads: the API server's).
                 st.set(
                     "terminatedAt",
-                    Value::Int(crate::util::monotonic_ms() as i64),
+                    Value::Int(api.clock().now_ms() as i64),
                 );
                 let _ = api.update_status("Pod", &ns, &name, st);
             })
@@ -335,16 +335,12 @@ mod tests {
     use crate::yamlkit::parse_one;
 
     fn wait_phase(api: &ApiServer, name: &str, phase: &str, ms: u64) -> bool {
-        let t0 = std::time::Instant::now();
-        while (t0.elapsed().as_millis() as u64) < ms {
-            if let Ok(p) = api.get("Pod", "default", name) {
-                if object::pod_phase(&p) == phase {
-                    return true;
-                }
-            }
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
-        false
+        let sub = api.subscribe(Some(&["Pod"]));
+        crate::util::sub::wait_for(&sub, ms, 50, || {
+            api.get("Pod", "default", name)
+                .map(|p| object::pod_phase(&p) == phase)
+                .unwrap_or(false)
+        })
     }
 
     fn setup() -> (ApiServer, Arc<ApptainerRuntime>) {
@@ -354,9 +350,7 @@ mod tests {
         rt.table.register("quick", |_| Ok(0));
         rt.registry.register(ImageSpec::new("server:1", "server").with_size(1 << 20));
         rt.table.register("server", |ctx| {
-            while !ctx.cancel.is_cancelled() {
-                std::thread::sleep(std::time::Duration::from_millis(2));
-            }
+            ctx.cancel.wait();
             Err("terminated".to_string())
         });
         (api, rt)
@@ -435,7 +429,9 @@ mod tests {
             .unwrap(),
         )
         .unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(50));
+        // Give the kubelet a window to (wrongly) pick the pod up: park
+        // on the Pod bus until the phase would change — it never does.
+        assert!(!wait_phase(&api, "p2", "Running", 50));
         let p = api.get("Pod", "default", "p2").unwrap();
         assert_eq!(object::pod_phase(&p), "Pending");
         kubelet.shutdown();
@@ -455,12 +451,13 @@ mod tests {
         assert!(wait_phase(&api, "srv", "Running", 3000));
         api.delete("Pod", "default", "srv").unwrap();
         // The container must unwind and free its sandbox (generous
-        // timeout: the suite runs many threads on few cores).
-        let t0 = std::time::Instant::now();
-        while rt.cni.live_count() > 0 && t0.elapsed().as_secs() < 15 {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
-        assert_eq!(rt.cni.live_count(), 0);
+        // timeout: the suite runs many threads on few cores). Sandbox
+        // teardown is not a bus event, so this rides the backstop.
+        let sub = api.subscribe(Some(&["Pod"]));
+        assert!(
+            crate::util::sub::wait_for(&sub, 15_000, 20, || rt.cni.live_count() == 0),
+            "sandbox not freed"
+        );
         kubelet.shutdown();
     }
 

@@ -93,6 +93,14 @@
 //! handle with both buses (a store [`store::Store::subscribe`] handle
 //! passed to [`crate::slurm::Slurmctld::attach`]) — the merged wait
 //! that replaced its 2 ms Slurm poll.
+//!
+//! Every duration in this module — resync backstops, GC TTLs, the HPA
+//! stabilization window — is *simulated* milliseconds on the cluster's
+//! [`crate::hpcsim::Clock`], waited out via
+//! [`crate::util::sub::Subscription::wait_sim`] rather than the wall
+//! clock, so the whole control plane compresses with the time scale and
+//! replays deterministically on a driven clock. See the *Time model*
+//! section in [`crate::hpcsim`] and `docs/TIME.md`.
 
 pub mod api;
 pub mod client;

@@ -26,6 +26,12 @@
 //! - [`runtime`] — PJRT loading/execution of the AOT compute artifacts.
 //! - [`workloads`] — container-image → entrypoint dispatch.
 //! - [`operators`] — Argo Workflows, Spark, Training, MinIO, OpenEBS.
+//!
+//! Time crate-wide is *simulated* milliseconds on [`hpcsim::Clock`] —
+//! scaled against the wall clock for interactive runs, or **driven**
+//! (advanced explicitly) for deterministic replay of hours of cluster
+//! life in milliseconds. See the *Time model* section in [`hpcsim`]
+//! and `docs/TIME.md`.
 
 pub mod yamlkit;
 pub mod virtfs;

@@ -202,7 +202,9 @@ mod tests {
     #[test]
     fn controller_spawns_workflows_once_per_minute() {
         let api = ApiServer::new();
-        let clock = Clock::new(100_000); // fast: 1 real ms = 100 sim s
+        // Driven clock: the test advances cron time explicitly, so the
+        // minute boundary is deterministic instead of raced via sleep.
+        let clock = Clock::driven();
         api.create(
             parse_one(
                 r#"
@@ -225,16 +227,16 @@ spec:
             .unwrap(),
         )
         .unwrap();
-        let c = CronWorkflowController::new(clock);
+        let c = CronWorkflowController::new(clock.clone());
         // Several reconciles within one simulated minute must fire once.
         let before = api.list("Workflow").len();
         reconcile_once(&api, &c);
         reconcile_once(&api, &c);
         let after_burst = api.list("Workflow").len();
         assert_eq!(after_burst - before, 1);
-        // Wait > 1 simulated minute (60_000 sim ms = ~1 real ms here,
-        // but reconcile needs a *different* minute value).
-        std::thread::sleep(std::time::Duration::from_millis(3));
+        // Advance exactly one simulated minute: the next reconcile sees
+        // a different minute value and fires again.
+        clock.advance_ms(60_000);
         reconcile_once(&api, &c);
         assert!(api.list("Workflow").len() > after_burst);
         // The stamped workflow carries the owner + spec.

@@ -89,9 +89,7 @@ pub fn register_minio_image(rt: &crate::apptainer::ApptainerRuntime) {
         if !ctx.fabric.bind(ctx.ip, MINIO_PORT, store) {
             return Err(format!("{}:{MINIO_PORT} already bound", ctx.ip));
         }
-        while !ctx.cancel.is_cancelled() {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        ctx.cancel.wait();
         ctx.fabric.unbind(ctx.ip, MINIO_PORT);
         Err("terminated".to_string())
     });

@@ -143,15 +143,15 @@ fn run_executor(ctx: &ContainerCtx) -> Result<i32, String> {
         .env_or("DRIVER_IP", "")
         .parse()
         .map_err(|_| "executor: bad DRIVER_IP".to_string())?;
-    // Connect (with retry while the driver binds).
+    // Connect (with retry while the driver binds). The retry pause is
+    // a cancellable virtual sleep: sim-paced, driven-clock safe.
     let endpoint = loop {
         if let Some(ep) = ctx.fabric.connect::<DriverEndpoint>(driver_ip, DRIVER_PORT) {
             break ep;
         }
-        if ctx.cancel.is_cancelled() {
+        if ctx.cancel.wait_sim(&ctx.clock, 100) {
             return Err("terminated".to_string());
         }
-        std::thread::sleep(std::time::Duration::from_millis(2));
     };
     let dns = ctx.hub.expect::<CoreDns>("CoreDns")?;
     let store = minio::connect(&dns, &ctx.fabric, &ctx.env_or("S3_SERVICE", "spark-k8s-data"))?;
@@ -186,7 +186,9 @@ fn run_executor(ctx: &ContainerCtx) -> Result<i32, String> {
                 if endpoint.finished() {
                     return Ok(0);
                 }
-                std::thread::sleep(std::time::Duration::from_millis(1));
+                if ctx.cancel.wait_sim(&ctx.clock, 50) {
+                    return Err("terminated".to_string());
+                }
             }
         }
     }
@@ -250,11 +252,10 @@ fn run_driver(ctx: &ContainerCtx) -> Result<i32, String> {
 
     // Wait for completion, then merge/publish results.
     while !endpoint.finished() {
-        if ctx.cancel.is_cancelled() {
+        if ctx.cancel.wait_sim(&ctx.clock, 100) {
             ctx.fabric.unbind(ctx.ip, DRIVER_PORT);
             return Err("terminated".to_string());
         }
-        std::thread::sleep(std::time::Duration::from_millis(2));
     }
     ctx.fabric.unbind(ctx.ip, DRIVER_PORT);
 

@@ -66,6 +66,28 @@ impl AllReduce {
         self.cv.notify_all();
     }
 
+    /// Ranks that have contributed to the current (incomplete) round.
+    pub fn arrived(&self) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .grads
+            .iter()
+            .filter(|g| g.is_some())
+            .count()
+    }
+
+    /// Park until at least `n` ranks have contributed to the current
+    /// round — the event-driven replacement for "sleep and hope the
+    /// worker thread got there".
+    #[cfg(test)]
+    fn wait_arrived(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.grads.iter().filter(|g| g.is_some()).count() < n {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
     /// Contribute gradients for the current round; blocks until all
     /// ranks arrive; returns the post-update parameters.
     pub fn step(
@@ -87,6 +109,10 @@ impl AllReduce {
             return Err(format!("rank {rank} double-submitted a round"));
         }
         st.grads[rank] = Some(grads);
+        // Announce the arrival: harmless to round-waiters (they
+        // re-check the generation counter), and it lets observers park
+        // on the barrier filling up instead of polling.
+        self.cv.notify_all();
         // Stash the loss sum in last_loss incrementally via the grads
         // vector length bookkeeping below; simplest: recompute when full.
         let my_round = st.round;
@@ -204,9 +230,9 @@ mod tests {
         let h = std::thread::spawn(move || {
             a.step(0, t(1.0), 0.0, 1.0, &CancelToken::new())
         });
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        // Rank 0's thread is blocked; now simulate its double submit via
-        // the error path by submitting as rank 0 again from here.
+        ar.wait_arrived(1);
+        // Rank 0's contribution is in; now simulate its double submit
+        // via the error path by submitting as rank 0 again from here.
         let err = ar.step(0, t(1.0), 0.0, 1.0, &CancelToken::new());
         assert!(err.is_err());
         // Complete the round so the thread unblocks.
@@ -221,7 +247,7 @@ mod tests {
         let c2 = cancel.clone();
         let a = ar.clone();
         let h = std::thread::spawn(move || a.step(0, t(1.0), 0.0, 1.0, &c2));
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        ar.wait_arrived(1);
         cancel.cancel();
         let r = h.join().unwrap();
         assert!(r.is_err());
@@ -234,7 +260,7 @@ mod tests {
         let h = std::thread::spawn(move || {
             a.step(0, t(1.0), 0.0, 1.0, &CancelToken::new())
         });
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        ar.wait_arrived(1);
         ar.fail("worker 1 died");
         assert!(h.join().unwrap().is_err());
     }

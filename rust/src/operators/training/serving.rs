@@ -122,9 +122,7 @@ pub fn register_serving_image(rt: &ApptainerRuntime) {
         if !ctx.fabric.bind(ctx.ip, SERVING_PORT, server) {
             return Err("serving port already bound".to_string());
         }
-        while !ctx.cancel.is_cancelled() {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        ctx.cancel.wait();
         ctx.fabric.unbind(ctx.ip, SERVING_PORT);
         Err("terminated".to_string())
     });

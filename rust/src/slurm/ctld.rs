@@ -19,7 +19,6 @@ use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::{Duration, Instant};
 
 /// Controller tuning knobs.
 #[derive(Debug, Clone)]
@@ -28,7 +27,11 @@ pub struct SlurmConfig {
     pub default_time_limit_ms: u64,
     /// EASY backfill on/off (ablation: DESIGN.md SS5).
     pub backfill: bool,
-    /// Real-time milliseconds between scheduler passes.
+    /// Simulated milliseconds between scheduler passes, measured on
+    /// the cluster [`crate::hpcsim::Clock`]. At the default 100x scale
+    /// the default of 100 sim-ms is one pass per real millisecond; on
+    /// a driven clock, passes happen exactly when the harness advances
+    /// time across a multiple of this interval.
     pub sched_interval_ms: u64,
 }
 
@@ -37,7 +40,7 @@ impl Default for SlurmConfig {
         SlurmConfig {
             default_time_limit_ms: 60 * 60 * 1000, // 1 simulated hour
             backfill: true,
-            sched_interval_ms: 1,
+            sched_interval_ms: 100,
         }
     }
 }
@@ -272,6 +275,17 @@ impl Slurmctld {
         self.inner.lock().unwrap().passes
     }
 
+    /// Run one scheduler pass synchronously on the caller's thread —
+    /// the deterministic-replay hook. A driven-mode harness that owns
+    /// the clock freezes the paced loop (large
+    /// [`SlurmConfig::sched_interval_ms`]) and interleaves explicit
+    /// passes with [`crate::hpcsim::Clock::advance_ms`], so job starts
+    /// are published from the driving thread in a reproducible order
+    /// (see `tests/virtual_time.rs` and `docs/TIME.md`).
+    pub fn kick_scheduler(&self) {
+        self.scheduler_pass();
+    }
+
     // ---- job-event bus --------------------------------------------------
 
     /// Subscribe to the job-event bus (every job). Born signaled,
@@ -355,23 +369,25 @@ impl Slurmctld {
         self.publish_event(inner, id, Some(from), to);
     }
 
-    /// Block until the job reaches a terminal state (or `timeout_real_ms`
-    /// real milliseconds pass). Returns the final state if terminal.
-    /// Rides the job-event bus: no wakeup unless *this* job transitions
-    /// (or the controller shuts down).
-    pub fn wait_terminal(&self, id: JobId, timeout_real_ms: u64) -> Option<JobState> {
+    /// Block until the job reaches a terminal state (or `timeout_sim_ms`
+    /// *simulated* milliseconds pass on the cluster clock). Returns the
+    /// final state if terminal. Rides the job-event bus: no wakeup
+    /// unless *this* job transitions, the virtual deadline arrives, or
+    /// the controller shuts down.
+    pub fn wait_terminal(&self, id: JobId, timeout_sim_ms: u64) -> Option<JobState> {
         let sub = self.subscribe_job(id);
-        let deadline = Instant::now() + Duration::from_millis(timeout_real_ms);
+        let clock = &self.cluster.clock;
+        let deadline = clock.now_ms().saturating_add(timeout_sim_ms);
         loop {
             let state = self.job_info(id)?.state;
             if state.is_terminal() {
                 return Some(state);
             }
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
+            let remaining = deadline.saturating_sub(clock.now_ms());
+            if remaining == 0 {
                 return None;
             }
-            if sub.wait(remaining) == WakeReason::Closed {
+            if sub.wait_sim(clock, remaining) == WakeReason::Closed {
                 // Shutdown: one final read, then give up.
                 let state = self.job_info(id)?.state;
                 return if state.is_terminal() { Some(state) } else { None };
@@ -429,11 +445,18 @@ impl Slurmctld {
     // ---- scheduling loop ------------------------------------------------
 
     fn scheduler_loop(&self) {
+        // Pace passes on the cluster clock, parking on a subscription
+        // registered for *no* topics: job churn never wakes it, but
+        // `close_all` on shutdown does. On a driven clock the thread
+        // performs zero wall-clock sleeps — it runs a pass exactly
+        // when the harness advances time across the interval.
+        let pacer = self.hub.subscribe(Some(&[]));
+        let clock = &self.cluster.clock;
         while !self.shutdown.load(Ordering::SeqCst) {
             self.scheduler_pass();
-            thread::sleep(std::time::Duration::from_millis(
-                self.config.sched_interval_ms,
-            ));
+            if pacer.wait_sim(clock, self.config.sched_interval_ms) == WakeReason::Closed {
+                break;
+            }
         }
     }
 

@@ -43,6 +43,12 @@
 //! Execution is pluggable through [`JobExecutor`]: HPK supplies an
 //! executor that interprets the generated script's Apptainer commands;
 //! tests use closures.
+//!
+//! All timing here — scheduler pacing ([`SlurmConfig::sched_interval_ms`]),
+//! job time limits, accounting timestamps, [`Slurmctld::wait_terminal`]
+//! deadlines — is simulated milliseconds on the cluster's
+//! [`crate::hpcsim::Clock`]; see the *Time model* section in
+//! [`crate::hpcsim`] for the scaled vs. driven modes.
 
 mod capacity;
 mod ctld;
@@ -75,13 +81,10 @@ mod tests {
                 return Err("script failed".to_string());
             }
             if ctx.spec.script.contains("sleep") {
-                // Simulated long job: sleep until cancelled or 2000 sim ms.
-                let t0 = ctx.clock.now_ms();
-                while ctx.clock.now_ms() - t0 < 20_000 {
-                    if ctx.cancel.is_cancelled() {
-                        return Err("cancelled".to_string());
-                    }
-                    ctx.clock.tick();
+                // Simulated long job: park 20_000 sim ms, exit early on
+                // cancel — no wall-clock spin.
+                if ctx.cancel.wait_sim(&ctx.clock, 20_000) {
+                    return Err("cancelled".to_string());
                 }
             }
             Ok(())
@@ -98,8 +101,19 @@ mod tests {
     fn wait_done(ctld: &Slurmctld, id: JobId) -> JobState {
         // Rides the job-event bus (no poll): also exercises
         // wait_terminal's subscription path in every lifecycle test.
-        ctld.wait_terminal(id, 20_000)
+        // 600_000 sim ms = 6 real s at the default 100x scale.
+        ctld.wait_terminal(id, 600_000)
             .unwrap_or_else(|| panic!("job {id} did not finish"))
+    }
+
+    /// Park on the event bus until `id` is observed Running.
+    fn wait_running(ctld: &Slurmctld, id: JobId) {
+        let sub = ctld.subscribe();
+        let running = || matches!(ctld.job_info(id).map(|i| i.state), Some(JobState::Running));
+        assert!(
+            crate::util::sub::wait_for(&sub, 10_000, 20, running),
+            "job {id} never started running"
+        );
     }
 
     #[test]
@@ -127,14 +141,18 @@ mod tests {
         let (ctld, _) = setup(1, 4);
         let spec = JobSpec::new("big").with_tasks(1, 16, 1 << 20);
         let id = ctld.submit(spec).unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(50));
-        let info = ctld.job_info(id).unwrap();
-        match info.state {
-            JobState::Pending(reason) => {
-                assert!(reason.contains("Resources") || reason.contains("never"), "{reason}")
+        // Wait for a scheduler pass to stamp the pending reason.
+        let sub = ctld.subscribe();
+        let stamped = || match ctld.job_info(id).map(|i| i.state) {
+            Some(JobState::Pending(reason)) => {
+                reason.contains("Resources") || reason.contains("never")
             }
-            other => panic!("expected pending, got {other:?}"),
-        }
+            _ => false,
+        };
+        assert!(
+            crate::util::sub::wait_for(&sub, 10_000, 20, stamped),
+            "pending reason never stamped"
+        );
         ctld.shutdown();
     }
 
@@ -170,7 +188,7 @@ mod tests {
         let b = ctld
             .submit(JobSpec::new("b").with_tasks(1, 2, 1).with_script("sleep"))
             .unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(30));
+        wait_running(&ctld, a); // b stays pending: a holds both cpus
         assert!(ctld.cancel(b)); // still pending
         assert!(ctld.cancel(a)); // running
         assert!(matches!(wait_done(&ctld, a), JobState::Cancelled | JobState::Failed(_)));
@@ -198,7 +216,7 @@ mod tests {
             .unwrap();
         let spec_b = JobSpec::new("b").with_dependency(DepKind::AfterOk, a);
         let b = ctld.submit(spec_b).unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        wait_running(&ctld, a); // dependency holds b while a runs
         let b_state = ctld.job_info(b).unwrap().state;
         assert!(
             matches!(b_state, JobState::Pending(_)),
@@ -238,7 +256,7 @@ mod tests {
                     .with_time_limit_ms(40_000),
             )
             .unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(30));
+        wait_running(&ctld, a);
         // B needs 4 cpus -> blocked head. C needs 1 cpu and is short:
         // with backfill it must start before B.
         let b = ctld
@@ -295,7 +313,7 @@ mod tests {
         let b = ctld
             .submit(JobSpec::new("b").with_tasks(1, 2, 1).with_script("sleep"))
             .unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(40));
+        wait_running(&ctld, a); // b cannot start: a holds both cpus
         let q = ctld.squeue();
         assert_eq!(q.len(), 2);
         assert!(q.iter().any(|j| j.job_id == a && j.state == JobState::Running));
@@ -316,7 +334,7 @@ mod tests {
         let id = ctld
             .submit(JobSpec::new("a").with_script("sleep"))
             .unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(30));
+        wait_running(&ctld, id);
         ctld.cluster().fail_node("node01");
         let st = wait_done(&ctld, id);
         assert!(

@@ -4,7 +4,7 @@
 use crate::hpcsim::Clock;
 use crate::util::SubscriberHub;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 pub type JobId = u64;
 
@@ -204,24 +204,112 @@ impl Allocation {
     }
 }
 
+struct CancelShared {
+    flag: AtomicBool,
+    /// Guards nothing by itself — the condvar's anchor for parked
+    /// [`CancelToken::wait`]/[`CancelToken::wait_sim`] callers.
+    lock: Mutex<()>,
+    cond: Condvar,
+}
+
 /// Cooperative cancellation flag shared between the controller and the
-/// job's executor thread.
-#[derive(Debug, Clone, Default)]
+/// job's executor thread. Beyond the flag, it is a parking spot:
+/// server-style entrypoints block on [`CancelToken::wait`] (zero
+/// wakeups until cancelled) and simulated long-running work sleeps
+/// cancellably on [`CancelToken::wait_sim`] — both replacing the old
+/// `is_cancelled` poll loops.
+#[derive(Clone)]
 pub struct CancelToken {
-    flag: Arc<AtomicBool>,
+    shared: Arc<CancelShared>,
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("cancelled", &self.is_cancelled())
+            .finish()
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> CancelToken {
+        CancelToken::new()
+    }
 }
 
 impl CancelToken {
     pub fn new() -> CancelToken {
-        CancelToken::default()
+        CancelToken {
+            shared: Arc::new(CancelShared {
+                flag: AtomicBool::new(false),
+                lock: Mutex::new(()),
+                cond: Condvar::new(),
+            }),
+        }
     }
 
     pub fn cancel(&self) {
-        self.flag.store(true, Ordering::SeqCst);
+        self.shared.flag.store(true, Ordering::SeqCst);
+        let _guard = self.shared.lock.lock().unwrap();
+        self.shared.cond.notify_all();
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.flag.load(Ordering::SeqCst)
+        self.shared.flag.load(Ordering::SeqCst)
+    }
+
+    /// Park until cancelled — the "serve until terminated" wait of the
+    /// server-style container entrypoints. No time involved: an idle
+    /// server costs zero wakeups under any clock mode.
+    pub fn wait(&self) {
+        let mut guard = self.shared.lock.lock().unwrap();
+        while !self.is_cancelled() {
+            guard = self.shared.cond.wait(guard).unwrap();
+        }
+    }
+
+    /// Sleep `sim_ms` simulated ms, waking early on cancellation.
+    /// Returns `true` if the token was cancelled before the virtual
+    /// deadline. Deadline-safe (see [`crate::hpcsim::clock`]): parks on
+    /// [`Clock::notify_at`] under a driven clock and on a scaled real
+    /// timeout otherwise; a closed clock reads as the deadline having
+    /// passed.
+    pub fn wait_sim(&self, clock: &Clock, sim_ms: u64) -> bool {
+        let deadline = clock.now_ms().saturating_add(sim_ms);
+        let shared = self.shared.clone();
+        let timer = clock.notify_at(
+            deadline,
+            Arc::new(move || {
+                let _guard = shared.lock.lock().unwrap();
+                shared.cond.notify_all();
+            }),
+        );
+        let mut guard = self.shared.lock.lock().unwrap();
+        let cancelled = loop {
+            if self.is_cancelled() {
+                break true;
+            }
+            let now = clock.now_ms();
+            if now >= deadline || clock.is_closed() {
+                break false;
+            }
+            match clock.sim_to_real(deadline - now) {
+                Some(d) => {
+                    guard = self
+                        .shared
+                        .cond
+                        .wait_timeout(guard, d.max(std::time::Duration::from_micros(50)))
+                        .unwrap()
+                        .0;
+                }
+                None => guard = self.shared.cond.wait(guard).unwrap(),
+            }
+        };
+        drop(guard);
+        if let Some(id) = timer {
+            clock.cancel_notify(id);
+        }
+        cancelled
     }
 }
 
@@ -308,6 +396,40 @@ mod tests {
         assert!(!t2.is_cancelled());
         t.cancel();
         assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_wakes_parked_waiter() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.wait());
+        t.cancel();
+        h.join().unwrap();
+        // Already-cancelled waits return immediately.
+        t.wait();
+    }
+
+    #[test]
+    fn wait_sim_scaled_times_out_and_short_circuits_when_cancelled() {
+        let clock = Clock::new(1000);
+        let t = CancelToken::new();
+        assert!(!t.wait_sim(&clock, 2_000), "2 sim s = 2 real ms, no cancel");
+        t.cancel();
+        assert!(t.wait_sim(&clock, u64::MAX));
+    }
+
+    #[test]
+    fn wait_sim_driven_wakes_on_cancel_and_clock_close() {
+        let clock = crate::hpcsim::Clock::driven();
+        let t = CancelToken::new();
+        let (t2, c2) = (t.clone(), clock.clone());
+        // Frozen clock, far deadline: only cancel can wake this.
+        let h = std::thread::spawn(move || t2.wait_sim(&c2, u64::MAX));
+        t.cancel();
+        assert!(h.join().unwrap());
+        // A closed clock reads as the deadline having passed.
+        clock.close();
+        assert!(!CancelToken::new().wait_sim(&clock, 5));
     }
 
     #[test]

@@ -71,9 +71,19 @@ pub fn deploy_with(nodes: usize, cpus: u32, slurm: SlurmConfig) -> Testbed {
                 vec![Box::new(operators::openebs::OpenEbsController { fs })],
             );
             let sub = runner.subscribe();
+            let clock = api.clock().clone();
             loop {
                 runner.run_once();
-                let _ = sub.wait(std::time::Duration::from_millis(500));
+                // 50_000 sim ms = the controllers' shared resync cadence.
+                if sub.wait_sim(&clock, 50_000) == crate::util::sub::WakeReason::Closed {
+                    runner.run_once();
+                    break;
+                }
+                // A closed clock reads as TimedOut forever; exit rather
+                // than spin once the control plane is gone.
+                if clock.is_closed() {
+                    break;
+                }
             }
         })
         .expect("spawn openebs");
@@ -111,7 +121,10 @@ pub fn deploy_vanilla(nodes: usize, cpus: u32) -> VanillaBed {
         cluster.clock.clone(),
         true,
     ));
-    let api = crate::kube::ApiServer::new();
+    // Share the simulated cluster clock so kubelet backstops, GC TTLs
+    // and HPA windows all live in the same time domain (see the *Time
+    // model* in `crate::hpcsim`).
+    let api = crate::kube::ApiServer::with_clock(cluster.clock.clone());
     // No HPK admission: ClusterIP services stay as requested (the
     // baseline has a kube-proxy equivalent conceptually). The
     // controller manager (and the operators it bundles below) starts

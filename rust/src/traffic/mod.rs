@@ -58,7 +58,10 @@
 //! All pacing in this module runs on [`crate::hpcsim::Clock`] virtual
 //! time (`sleep_sim`, `now_ms`) — no wall-clock sleeps — so load
 //! curves and stabilization windows compress with the cluster's time
-//! scale and traces stay deterministic under a fixed seed.
+//! scale and traces stay deterministic under a fixed seed. On a
+//! **driven** clock the same load curve replays at whatever rate the
+//! harness advances time — see the *Time model* section in
+//! [`crate::hpcsim`] and `docs/TIME.md`.
 
 pub mod loadgen;
 pub mod metrics;

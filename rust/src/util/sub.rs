@@ -22,6 +22,7 @@
 //!   waiter immediately and dominates pending signals, so loops do one
 //!   final drain and exit without a tick.
 
+use crate::hpcsim::{Clock, TimerId};
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
@@ -128,6 +129,64 @@ impl Subscription {
         }
     }
 
+    /// [`Subscription::wait`] with the timeout measured on the cluster
+    /// [`Clock`] in *simulated* ms — the deadline-safe park (see the
+    /// *Time model* in [`crate::hpcsim::clock`]).
+    ///
+    /// Scaled clock: parks on the condvar with the scaled-down real
+    /// timeout. Driven clock: registers a [`Clock::notify_at`] timer at
+    /// the virtual deadline and parks without any real timeout, so a
+    /// frozen clock costs zero wakeups and an advancing one wakes the
+    /// waiter exactly when virtual time arrives. A closed *clock*
+    /// reads as the deadline having passed ([`WakeReason::TimedOut`]),
+    /// so shutdown never wedges a waiter on frozen time.
+    pub fn wait_sim(&self, clock: &Clock, sim_ms: u64) -> WakeReason {
+        let deadline = clock.now_ms().saturating_add(sim_ms);
+        // Timer registered before the state lock is taken (and
+        // cancelled by the guard after it is released): the waker only
+        // pokes the condvar — a timer wake is a timeout, not an event,
+        // so it never sets `signaled`.
+        let shared = self.shared.clone();
+        let _guard = ClockTimerGuard {
+            clock,
+            id: clock.notify_at(
+                deadline,
+                Arc::new(move || {
+                    shared.cond.notify_all();
+                }),
+            ),
+        };
+        let mut state = self.shared.state.lock().unwrap();
+        loop {
+            if state.closed {
+                return WakeReason::Closed;
+            }
+            if state.signaled {
+                state.signaled = false;
+                return WakeReason::Notified;
+            }
+            let now = clock.now_ms();
+            if now >= deadline || clock.is_closed() {
+                return WakeReason::TimedOut;
+            }
+            match clock.sim_to_real(deadline - now) {
+                // Floor the real park: sub-scale remainders must not
+                // degenerate into a zero-timeout spin.
+                Some(d) => {
+                    state = self
+                        .shared
+                        .cond
+                        .wait_timeout(state, d.max(Duration::from_micros(50)))
+                        .unwrap()
+                        .0;
+                }
+                // Driven: no real duration corresponds — the clock
+                // timer (or an event/close) is what wakes us.
+                None => state = self.shared.cond.wait(state).unwrap(),
+            }
+        }
+    }
+
     /// Permanently close the subscription and wake any blocked waiter —
     /// the explicit shutdown edge that replaces "the loop notices a
     /// stop flag within one tick".
@@ -143,6 +202,22 @@ impl Subscription {
     /// the E5.3c/E5.3e zero-idle-wakeup benches.
     pub fn notify_count(&self) -> u64 {
         self.shared.notifications.load(Ordering::Relaxed)
+    }
+}
+
+/// Cancels a [`Clock::notify_at`] registration when a `wait_sim`
+/// returns for any reason, so repeated waits never leak timers into a
+/// driven clock's queue.
+struct ClockTimerGuard<'a> {
+    clock: &'a Clock,
+    id: Option<TimerId>,
+}
+
+impl Drop for ClockTimerGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(id) = self.id.take() {
+            self.clock.cancel_notify(id);
+        }
     }
 }
 
@@ -278,6 +353,37 @@ pub fn wait_for(
     }
 }
 
+/// [`wait_for`] with the deadline and backstop measured on the cluster
+/// [`Clock`] in *simulated* ms — the loop every clock-routed control
+/// thread shares. Parks via [`Subscription::wait_sim`], so under a
+/// driven clock the condition is re-checked exactly at event and
+/// virtual-deadline edges (zero wall-clock sleeps). A closed
+/// subscription degrades to `Clock::sleep_sim` between checks, and a
+/// closed *clock* resolves to a final condition check, so shutdown
+/// never wedges the caller.
+pub fn wait_for_sim(
+    sub: &Subscription,
+    clock: &Clock,
+    timeout_sim_ms: u64,
+    backstop_sim_ms: u64,
+    mut cond: impl FnMut() -> bool,
+) -> bool {
+    let deadline = clock.now_ms().saturating_add(timeout_sim_ms);
+    loop {
+        if cond() {
+            return true;
+        }
+        let now = clock.now_ms();
+        if now >= deadline || clock.is_closed() {
+            return false;
+        }
+        let step = (deadline - now).min(backstop_sim_ms.max(1));
+        if sub.wait_sim(clock, step) == WakeReason::Closed {
+            clock.sleep_sim(step);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +439,70 @@ mod tests {
         // nobody can block on a publisher that already shut down.
         let late = hub.subscribe(None);
         assert_eq!(late.wait(Duration::from_secs(1)), WakeReason::Closed);
+    }
+
+    #[test]
+    fn wait_sim_consumes_signal_then_times_out_on_frozen_clock() {
+        let clock = Clock::driven();
+        let sub = Subscription::new();
+        // Born signaled, even against a frozen clock.
+        assert_eq!(sub.wait_sim(&clock, 0), WakeReason::Notified);
+        // Zero budget on frozen time: an immediate, spin-free timeout.
+        assert_eq!(sub.wait_sim(&clock, 0), WakeReason::TimedOut);
+        // A closed clock reads as the deadline having passed.
+        clock.close();
+        assert_eq!(sub.wait_sim(&clock, 1_000_000), WakeReason::TimedOut);
+    }
+
+    #[test]
+    fn wait_sim_scaled_times_out_in_scaled_real_time() {
+        let clock = Clock::new(1000);
+        let sub = Subscription::new();
+        assert_eq!(sub.wait_sim(&clock, 0), WakeReason::Notified);
+        // 2000 sim ms = 2 real ms at scale 1000.
+        assert_eq!(sub.wait_sim(&clock, 2_000), WakeReason::TimedOut);
+    }
+
+    #[test]
+    fn wait_sim_event_wakes_parked_driven_waiter() {
+        let clock = Clock::driven();
+        let hub = SubscriberHub::new();
+        let sub = hub.subscribe(None);
+        assert_eq!(sub.wait_sim(&clock, 0), WakeReason::Notified);
+        let (s2, c2) = (sub.clone(), clock.clone());
+        // Far-future virtual deadline on a frozen clock: only the
+        // event can wake this waiter.
+        let h = std::thread::spawn(move || s2.wait_sim(&c2, 1_000_000));
+        hub.notify("x");
+        assert_eq!(h.join().unwrap(), WakeReason::Notified);
+    }
+
+    #[test]
+    fn wait_sim_advance_fires_virtual_deadline() {
+        let clock = Clock::driven();
+        let sub = Subscription::new();
+        assert_eq!(sub.wait_sim(&clock, 0), WakeReason::Notified);
+        let (s2, c2) = (sub.clone(), clock.clone());
+        let h = std::thread::spawn(move || s2.wait_sim(&c2, 500));
+        // Keep sweeping until the waiter's (race-dependent) deadline
+        // is passed; each sweep wakes it via its registered timer.
+        while !h.is_finished() {
+            clock.advance_ms(500);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(h.join().unwrap(), WakeReason::TimedOut);
+    }
+
+    #[test]
+    fn wait_for_sim_honours_virtual_deadline_under_auto_clock() {
+        let clock = Clock::driven_auto();
+        let sub = Subscription::new();
+        sub.close();
+        // Closed sub degrades to sleep_sim steps, which advance the
+        // auto clock — the deadline is honoured in virtual time.
+        assert!(!wait_for_sim(&sub, &clock, 1_000, 100, || false));
+        assert_eq!(clock.now_ms(), 1_000);
+        assert!(wait_for_sim(&sub, &clock, 1_000, 100, || true));
     }
 
     #[test]

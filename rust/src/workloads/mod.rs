@@ -26,12 +26,10 @@ pub fn register_base_images(rt: &ApptainerRuntime) {
                     .and_then(|s| s.parse::<f64>().ok())
                     .map(|secs| (secs * 1000.0) as u64)
                     .unwrap_or(1000);
-                let t0 = ctx.clock.now_ms();
-                while ctx.clock.now_ms() - t0 < sim_ms {
-                    if ctx.cancel.is_cancelled() {
-                        return Err("terminated".to_string());
-                    }
-                    ctx.clock.tick();
+                // One cancellable virtual sleep: no tick-poll, and on a
+                // driven clock the container parks on its deadline.
+                if ctx.cancel.wait_sim(&ctx.clock, sim_ms) {
+                    return Err("terminated".to_string());
                 }
                 Ok(0)
             }
@@ -43,9 +41,7 @@ pub fn register_base_images(rt: &ApptainerRuntime) {
     rt.registry
         .register(ImageSpec::new("pause:3.9", "pause").with_size(1 << 20));
     rt.table.register("pause", |ctx| {
-        while !ctx.cancel.is_cancelled() {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
+        ctx.cancel.wait();
         Err("terminated".to_string())
     });
 }

@@ -22,12 +22,8 @@ struct SleepExec;
 impl JobExecutor for SleepExec {
     fn execute(&self, ctx: &JobContext) -> Result<(), String> {
         let ms: u64 = ctx.spec.script.trim().parse().unwrap_or(0);
-        let t0 = ctx.clock.now_ms();
-        while ctx.clock.now_ms() - t0 < ms {
-            if ctx.cancel.is_cancelled() {
-                return Err("cancelled".to_string());
-            }
-            ctx.clock.tick();
+        if ctx.cancel.wait_sim(&ctx.clock, ms) {
+            return Err("cancelled".to_string());
         }
         Ok(())
     }

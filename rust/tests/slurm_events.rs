@@ -35,10 +35,7 @@ impl JobExecutor for ScriptExec {
         match ctx.spec.script.as_str() {
             "fail" => Err("boom".to_string()),
             "hold" => {
-                while !ctx.cancel.is_cancelled() {
-                    ctx.clock.tick();
-                    std::thread::sleep(Duration::from_millis(1));
-                }
+                ctx.cancel.wait();
                 Err("cancelled".to_string())
             }
             _ => Ok(()),
@@ -86,9 +83,9 @@ fn terminal_records_have_ordered_event_sequences() {
     // while still pending behind c.
     let a = ctld.submit(JobSpec::new("a").with_script("ok")).unwrap();
     let b = ctld.submit(JobSpec::new("b").with_script("fail")).unwrap();
-    assert_eq!(ctld.wait_terminal(a, 20_000), Some(JobState::Completed));
+    assert_eq!(ctld.wait_terminal(a, 600_000), Some(JobState::Completed));
     assert!(matches!(
-        ctld.wait_terminal(b, 20_000),
+        ctld.wait_terminal(b, 600_000),
         Some(JobState::Failed(_))
     ));
     let c = ctld
@@ -100,8 +97,8 @@ fn terminal_records_have_ordered_event_sequences() {
         .unwrap();
     assert!(ctld.cancel(d)); // still pending: c holds every cpu
     assert!(ctld.cancel(c));
-    assert_eq!(ctld.wait_terminal(c, 20_000), Some(JobState::Cancelled));
-    assert_eq!(ctld.wait_terminal(d, 20_000), Some(JobState::Cancelled));
+    assert_eq!(ctld.wait_terminal(c, 600_000), Some(JobState::Cancelled));
+    assert_eq!(ctld.wait_terminal(d, 600_000), Some(JobState::Cancelled));
 
     let (events, complete) = ctld.events_since(0);
     assert!(complete);
@@ -219,7 +216,9 @@ fn shutdown_wakes_blocked_waiters() {
     let waiter = sub.clone();
     let raw = std::thread::spawn(move || waiter.wait(Duration::from_secs(30)));
     let ctld2 = ctld.clone();
-    let terminal = std::thread::spawn(move || ctld2.wait_terminal(pending, 30_000));
+    // Sim-ms deadline far past the 5 s promptness bound below: only the
+    // shutdown wake (not the timeout) can satisfy the assert.
+    let terminal = std::thread::spawn(move || ctld2.wait_terminal(pending, 600_000));
     std::thread::sleep(Duration::from_millis(50));
     let t0 = Instant::now();
     ctld.shutdown();

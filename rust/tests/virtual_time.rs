@@ -1,0 +1,185 @@
+//! Driven-mode virtual time: the determinism proof for the time model
+//! (see `docs/TIME.md` and the *Time model* section in `hpk::hpcsim`).
+//!
+//! What is pinned down here:
+//!  - the same seeded scenario, replayed twice on a driven clock,
+//!    produces **byte-identical** job-event sequences;
+//!  - simultaneous virtual deadlines fire in registration order;
+//!  - an idle driven cluster performs zero timer wakeups (the
+//!    no-polling regression guard);
+//!  - an hour of cluster life replays in real milliseconds, not an
+//!    hour — the point of the driven mode.
+
+use hpk::hpcsim::{Clock, Cluster, ClusterSpec};
+use hpk::slurm::{JobContext, JobExecutor, JobSpec, JobState, Slurmctld, SlurmConfig};
+use hpk::util::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Script is a number: park that many *simulated* ms, exit on cancel.
+struct SimSleepExec;
+
+impl JobExecutor for SimSleepExec {
+    fn execute(&self, ctx: &JobContext) -> Result<(), String> {
+        let ms: u64 = ctx.spec.script.trim().parse().unwrap_or(0);
+        if ctx.cancel.wait_sim(&ctx.clock, ms) {
+            return Err("cancelled".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Advance the driven clock in fixed steps until `cond` holds, giving
+/// the woken control threads a (real-time-bounded) window to act after
+/// each step. Extra advances past the interesting deadline are
+/// harmless: the event *content* is what determinism is measured on.
+fn drive_until(ctld: &Slurmctld, clock: &Clock, mut cond: impl FnMut() -> bool) {
+    let sub = ctld.subscribe();
+    for _ in 0..20_000 {
+        if cond() {
+            return;
+        }
+        clock.advance_ms(100);
+        hpk::util::sub::wait_for(&sub, 3, 1, &mut cond);
+    }
+    panic!("condition never reached at sim t={}", clock.now_ms());
+}
+
+fn terminal(ctld: &Slurmctld, id: u64) -> impl FnMut() -> bool + '_ {
+    move || ctld.job_info(id).map(|i| i.state.is_terminal()).unwrap_or(false)
+}
+
+/// One seeded scenario on a driven 1-cpu cluster, structured so every
+/// bus event has exactly one possible position:
+///  - the paced scheduler loop is frozen (huge interval) and the test
+///    thread runs every pass itself via `kick_scheduler`, so `Running`
+///    events are published synchronously from this thread;
+///  - submits and cancels happen while the clock is frozen, with the
+///    executor parked on a virtual deadline — nothing can interleave;
+///  - `drive_until` fences each job's `Completed` (state and event are
+///    published under one lock) before the next job is submitted.
+fn run_scenario(seed: u64) -> String {
+    let cluster = Cluster::new(ClusterSpec::uniform(1, 1, 8).driven());
+    let clock = cluster.clock.clone();
+    let ctld = Slurmctld::start(
+        cluster,
+        Arc::new(SimSleepExec),
+        SlurmConfig { sched_interval_ms: 100_000_000, ..SlurmConfig::default() },
+    );
+    // Wait out the loop's two startup passes (initial + born-signal,
+    // both over an empty queue) so they cannot race the first submit.
+    {
+        let sub = ctld.subscribe();
+        assert!(
+            hpk::util::sub::wait_for(&sub, 10_000, 5, || ctld.sched_passes() >= 2),
+            "scheduler startup passes never ran"
+        );
+    }
+    let mut rng = Rng::new(seed);
+    for j in 0..6 {
+        let dur = 100 + rng.below(400);
+        let a = ctld
+            .submit(JobSpec::new(&format!("job-{j}")).with_script(&dur.to_string()))
+            .unwrap();
+        // Seed-dependent branch: a sibling that is cancelled while
+        // still pending — its Pending->Cancelled chain lands between
+        // `a`'s submission and start, or not at all.
+        if rng.below(2) == 0 {
+            let b = ctld.submit(JobSpec::new(&format!("cx-{j}")).with_script("1")).unwrap();
+            assert!(ctld.cancel(b));
+        }
+        // Start `a` synchronously, then advance virtual time until its
+        // executor has finished and published the terminal event.
+        ctld.kick_scheduler();
+        assert_eq!(ctld.job_info(a).unwrap().state, JobState::Running);
+        drive_until(&ctld, &clock, terminal(&ctld, a));
+        assert_eq!(ctld.job_info(a).unwrap().state, JobState::Completed);
+    }
+    let (events, complete) = ctld.events_since(0);
+    assert!(complete, "short trace must not compact");
+    let log: String = events
+        .iter()
+        .map(|e| format!("{}|{}|{:?}|{:?}\n", e.seq, e.job_id, e.from, e.to))
+        .collect();
+    ctld.shutdown();
+    log
+}
+
+#[test]
+fn same_seed_replays_byte_identical() {
+    let first = run_scenario(7);
+    let second = run_scenario(7);
+    assert_eq!(first, second, "driven replays of one seed must match byte-for-byte");
+    assert!(first.lines().count() >= 18, "trace suspiciously short");
+}
+
+#[test]
+fn simultaneous_deadlines_fire_in_registration_order() {
+    let clock = Clock::driven();
+    let order = Arc::new(Mutex::new(Vec::new()));
+    for i in 0..5u32 {
+        let order = order.clone();
+        let id = clock.notify_at(100, Arc::new(move || order.lock().unwrap().push(i)));
+        assert!(id.is_some(), "future deadline must register");
+    }
+    // Registered later but due earlier: must still fire first.
+    let early = order.clone();
+    clock.notify_at(50, Arc::new(move || early.lock().unwrap().push(99)));
+    clock.advance_ms(200);
+    assert_eq!(*order.lock().unwrap(), vec![99, 0, 1, 2, 3, 4]);
+    assert_eq!(clock.timer_wakeups(), 6);
+    // A cancelled timer never fires.
+    let late = order.clone();
+    let id = clock.notify_at(1_000, Arc::new(move || late.lock().unwrap().push(7))).unwrap();
+    clock.cancel_notify(id);
+    clock.advance_ms(10_000);
+    assert_eq!(order.lock().unwrap().len(), 6);
+}
+
+#[test]
+fn idle_driven_cluster_performs_zero_timer_wakeups() {
+    use hpk::hpk::{ControlPlane, HpkConfig};
+    let cp = ControlPlane::deploy(HpkConfig {
+        cluster: ClusterSpec::uniform(2, 4, 16).driven(),
+        slurm: SlurmConfig::default(),
+        fakeroot_allowed: true,
+    });
+    // Give every control loop real time to run its startup passes and
+    // park on its virtual deadline. Nothing advances the clock, so a
+    // single timer fire here means some loop still polls.
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(cp.cluster.clock.now_ms(), 0, "nobody may move frozen time");
+    assert_eq!(
+        cp.cluster.clock.timer_wakeups(),
+        0,
+        "idle driven cluster must perform zero timer wakeups"
+    );
+    cp.shutdown();
+}
+
+#[test]
+fn hour_of_cluster_life_replays_in_milliseconds() {
+    let cluster = Cluster::new(ClusterSpec::uniform(1, 2, 8).driven());
+    let clock = cluster.clock.clone();
+    let ctld = Slurmctld::start(cluster, Arc::new(SimSleepExec), SlurmConfig::default());
+    let t0 = Instant::now();
+    let id = ctld.submit(JobSpec::new("hour").with_script("3600000")).unwrap();
+    drive_until(&ctld, &clock, || {
+        matches!(ctld.job_info(id).map(|i| i.state), Some(JobState::Running))
+    });
+    let started = clock.now_ms();
+    // The whole hour in one sweep.
+    clock.advance_ms(3_600_000);
+    drive_until(&ctld, &clock, terminal(&ctld, id));
+    assert_eq!(ctld.job_info(id).unwrap().state, JobState::Completed);
+    assert!(clock.now_ms() >= started + 3_600_000);
+    let rec = &ctld.sacct()[0];
+    assert!(
+        rec.end_ms - rec.start_ms >= 3_600_000,
+        "job must have lived a full virtual hour ({} ms)",
+        rec.end_ms - rec.start_ms
+    );
+    // The replay itself runs at wall-clock speed, not virtual speed.
+    assert!(t0.elapsed() < Duration::from_secs(10), "hour replay took {:?}", t0.elapsed());
+    ctld.shutdown();
+}
