@@ -45,6 +45,10 @@ NEUTRAL = {
     # driven rate and the speedup ratio carry the signal.
     "e6v_trace_sim_ms",
     "e6v_scaled_replay_rate",
+    # E7g.C's requeued-member count describes the failure scenario's
+    # shape (gangs touching the failed node); the sweep latency next to
+    # it carries the signal.
+    "e7g_requeued_members",
 }
 
 

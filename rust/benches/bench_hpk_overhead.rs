@@ -15,6 +15,10 @@
 //! whole-service object. E6v quantifies the time-model claim
 //! (docs/TIME.md): a driven clock replays an hour-scale churn trace
 //! orders of magnitude faster than the wall-clock-pinned scaled mode.
+//! E7g quantifies the gang-scheduling paths (*Gang scheduling &
+//! preemption* in `slurm/mod.rs`): all-or-nothing group placement
+//! throughput, the failed-group rollback cost every pass pays for a
+//! stuck gang, and the one-pass node-failure requeue sweep.
 //!
 //! Run: `cargo bench --bench bench_hpk_overhead`
 //!
@@ -30,7 +34,8 @@ use hpk::kube::object;
 use hpk::kube::Store;
 use hpk::kube::WakeReason;
 use hpk::slurm::{
-    sched, CapacityIndex, CapacityView, JobContext, JobExecutor, JobSpec, Slurmctld, SlurmConfig,
+    sched, CapacityIndex, CapacityView, JobContext, JobExecutor, JobSpec, JobState, Slurmctld,
+    SlurmConfig,
 };
 use hpk::testbed;
 use hpk::traffic::{Curve, LoadGen, PodMetrics, ServiceProxy};
@@ -892,6 +897,134 @@ fn main() {
     results.push(("e6v_driven_replay_rate", driven_rate));
     results.push(("e6v_scaled_replay_rate", scaled_rate));
     results.push(("e6v_replay_speedup", driven_rate / scaled_rate));
+
+    // ---- 9. E7g: gang placement, rollback, node-fail requeue sweep ----
+    // The gang-scheduling hot paths (*Gang scheduling & preemption* in
+    // slurm/mod.rs). E7g.A: per-member throughput of
+    // `sched::place_group` reserving whole PodGroups against the
+    // capacity index, comparable to the E6s.B single-job rate. E7g.B:
+    // the all-or-nothing rollback — a group that cannot fit reserves
+    // members and then backs them all out, and every scheduler pass
+    // pays that cost for every stuck gang at the queue head, so it must
+    // stay cheap. E7g.C: the node-failure sweep on a live driven ctld —
+    // one synchronous pass requeues every gang that lost a member,
+    // siblings included.
+    let g_nodes: usize = if smoke { 32 } else { 256 };
+    let gang_size: u32 = 4;
+    let g_gangs: usize = if smoke { 400 } else { 4_000 };
+    println!("# E7g: gangs of {gang_size} x 1 cpu on {g_nodes} nodes x 8 cpus");
+    let member = JobSpec::new("g").with_tasks(1, 1, 1 << 20);
+    let gangs_per_wave = g_nodes * 8 / gang_size as usize;
+
+    // E7g.A: fill waves of complete gangs, fresh node table per wave so
+    // every wave pays the nearly-full regime (same shape as E6s.B).
+    let mut next_id: u64 = 0;
+    let mut placed_gangs = 0usize;
+    let t0 = Instant::now();
+    while placed_gangs < g_gangs {
+        let mut nodes: Vec<Node> =
+            (0..g_nodes).map(|i| Node::new(&format!("gn{i}"), 8, 32 << 30)).collect();
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+        for _ in 0..gangs_per_wave.min(g_gangs - placed_gangs) {
+            let members: Vec<(u64, JobSpec)> = (0..gang_size)
+                .map(|_| {
+                    next_id += 1;
+                    (next_id, member.clone())
+                })
+                .collect();
+            assert!(sched::place_group(&mut view, &members).is_some());
+            placed_gangs += 1;
+        }
+    }
+    let gang_members_per_s =
+        (placed_gangs * gang_size as usize) as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "gang place: {gang_members_per_s:.0} members/s in groups of {gang_size} \
+         (single-job indexed rate: {place_per_s:.0}/s)"
+    );
+    results.push(("e7g_gang_members_per_s", gang_members_per_s));
+
+    // E7g.B: leave gang_size-1 free cpus so a group reserves members
+    // and then rolls them back. The rollback restores the view exactly,
+    // which is what lets one loop time the same failed attempt
+    // repeatedly (and job ids can repeat: nothing is retained).
+    let mut nodes: Vec<Node> =
+        (0..g_nodes).map(|i| Node::new(&format!("gn{i}"), 8, 32 << 30)).collect();
+    let mut index = CapacityIndex::new();
+    let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+    let fill = g_nodes as u64 * 8 - (gang_size as u64 - 1);
+    for _ in 0..fill {
+        next_id += 1;
+        assert!(sched::place(&mut view, next_id, &member).is_some());
+    }
+    let members: Vec<(u64, JobSpec)> =
+        (1..=gang_size as u64).map(|k| (next_id + k, member.clone())).collect();
+    let rb_iters: usize = if smoke { 2_000 } else { 20_000 };
+    let t0 = Instant::now();
+    for _ in 0..rb_iters {
+        assert!(sched::place_group(&mut view, &members).is_none());
+    }
+    let rollback_us = t0.elapsed().as_secs_f64() * 1e6 / rb_iters as f64;
+    println!(
+        "group rollback {} cpus short of fitting: {rollback_us:.2} us/attempt",
+        gang_size - 1
+    );
+    results.push(("e7g_group_rollback_us", rollback_us));
+
+    // E7g.C: the requeue sweep. A driven ctld with the paced loop
+    // frozen (docs/TIME.md recipe) runs gangs of long sim-sleepers; one
+    // node fails and the next synchronous pass requeues every gang that
+    // lost a member. The ready queue is computed before the sweep, so
+    // nothing re-places inside the measured pass — the requeued count
+    // is audited from the queue afterwards.
+    let cluster = Cluster::new(ClusterSpec::uniform(g_nodes, 8, 32).driven());
+    let ctld = Slurmctld::start(
+        cluster,
+        Arc::new(SimSleepExec),
+        SlurmConfig { sched_interval_ms: 100_000_000, ..SlurmConfig::default() },
+    );
+    let sub = ctld.subscribe();
+    assert!(hpk::util::sub::wait_for(&sub, 10_000, 5, || ctld.sched_passes() >= 2));
+    let live_gangs: usize = if smoke { 40 } else { 400 };
+    for gi in 0..live_gangs {
+        for m in 0..gang_size {
+            ctld.submit(
+                JobSpec::new(&format!("e7g-{gi}-{m}"))
+                    .with_tasks(1, 1, 1 << 20)
+                    .with_script("900000000")
+                    .with_gang(&format!("bg-{gi}"), gang_size),
+            )
+            .unwrap();
+        }
+    }
+    ctld.kick_scheduler();
+    let queue = ctld.squeue();
+    assert!(
+        queue.iter().all(|j| matches!(j.state, JobState::Running)),
+        "E7g.C expects every gang member Running before the failure"
+    );
+    let victim_node = ctld.job_info(queue[0].job_id).unwrap().nodes[0].clone();
+    let t0 = Instant::now();
+    assert!(ctld.cluster().fail_node(&victim_node));
+    ctld.kick_scheduler();
+    let sweep_us = t0.elapsed().as_secs_f64() * 1e6;
+    let requeued = ctld
+        .squeue()
+        .iter()
+        .filter(|j| matches!(&j.state, JobState::Pending(r) if r.contains("Requeued(NodeFail)")))
+        .count();
+    assert!(
+        requeued > 0 && requeued % gang_size as usize == 0,
+        "the sweep must requeue whole gangs, got {requeued} members"
+    );
+    println!("node-fail sweep: {requeued} gang members requeued in {sweep_us:.0} us (one pass)\n");
+    results.push(("e7g_requeue_sweep_us", sweep_us));
+    results.push(("e7g_requeued_members", requeued as f64));
+    for j in ctld.squeue() {
+        ctld.cancel(j.job_id);
+    }
+    ctld.shutdown();
 
     write_json(&results);
 }

@@ -179,6 +179,12 @@ impl Cluster {
             false
         })
     }
+
+    /// Alias for [`Cluster::restore_node`] — the chaos-harness vocabulary
+    /// pairs `fail_node`/`recover_node`.
+    pub fn recover_node(&self, name: &str) -> bool {
+        self.restore_node(name)
+    }
 }
 
 #[cfg(test)]
@@ -203,5 +209,37 @@ mod tests {
         assert!(c.restore_node("node01"));
         assert_eq!(c.cpu_summary().0, 16);
         assert!(!c.fail_node("nope"));
+        assert!(c.recover_node("node01") && !c.recover_node("nope"));
+    }
+
+    /// Every node-state mutation must bump the epoch, so an
+    /// epoch-keyed capacity index rebuilt right after `fail_node`
+    /// refuses the dead node immediately (no stale free-CPU buckets).
+    #[test]
+    fn fail_and_recover_bump_epoch_and_invalidate_capacity() {
+        use crate::slurm::{CapacityIndex, CapacityView};
+        let c = Cluster::new(ClusterSpec::uniform(1, 4, 8));
+        let mut index = CapacityIndex::new();
+        c.with_nodes_untracked(|nodes| {
+            let mut view = CapacityView::new(&mut index, nodes, 1);
+            assert!(view.reserve(1, 1, 0).is_some());
+        });
+        let before = c.epoch();
+        assert!(c.fail_node("node01"));
+        assert!(c.epoch() > before, "fail_node must bump the epoch");
+        c.with_nodes_untracked(|nodes| {
+            let mut view = CapacityView::new(&mut index, nodes, c.epoch());
+            assert!(
+                view.reserve(2, 1, 0).is_none(),
+                "down node must be refused immediately after fail_node"
+            );
+        });
+        let before = c.epoch();
+        assert!(c.recover_node("node01"));
+        assert!(c.epoch() > before, "recover_node must bump the epoch");
+        c.with_nodes_untracked(|nodes| {
+            let mut view = CapacityView::new(&mut index, nodes, c.epoch());
+            assert!(view.reserve(3, 1, 0).is_some(), "recovered node schedulable");
+        });
     }
 }

@@ -173,7 +173,23 @@ impl HpkKubelet {
             if self.bindings.lock().unwrap().contains_key(&full) {
                 continue;
             }
-            if object::pod_phase(&pod) != "Pending" {
+            let phase = object::pod_phase(&pod);
+            // Restart adoption: a pod already carrying a job-id
+            // annotation was submitted by an earlier kubelet life —
+            // re-adopt that binding instead of sbatching a duplicate.
+            if let Some(job_id) = object::annotation(&pod, super::annotations::JOB_ID)
+                .and_then(|s| s.parse::<JobId>().ok())
+            {
+                if phase == "Pending" || phase == "Running" {
+                    self.bindings.lock().unwrap().entry(full).or_insert(PodBinding {
+                        job_id,
+                        last_phase: String::new(),
+                        ip_published: false,
+                    });
+                }
+                continue;
+            }
+            if phase != "Pending" {
                 continue; // already processed in an earlier life
             }
             self.submit_pod(&pod, full);

@@ -25,7 +25,12 @@
 //! HPK is push-driven end to end; nothing in the pod path polls:
 //!
 //! 1. A pod lands in the store; the pass-through scheduler's
-//!    subscription wakes, it binds the pod to [`VIRTUAL_NODE`].
+//!    subscription wakes, it binds the pod to [`VIRTUAL_NODE`]. Pods
+//!    carrying a [`annotations::POD_GROUP`] annotation are held until
+//!    every declared member exists, then bound together — the K8s half
+//!    of gang placement (the Slurm half is all-or-nothing group
+//!    reservation; see *Gang scheduling & preemption* in
+//!    [`crate::slurm`]).
 //! 2. The bind event wakes hpk-kubelet's merged subscription (one
 //!    handle registered with the kube store for `Pod` *and* with the
 //!    Slurm job-event bus for every job). It translates, sbatches, and
@@ -61,4 +66,15 @@ pub mod annotations {
     pub const MPI_FLAGS: &str = "slurm-job.hpk.io/mpi-flags";
     /// Set by hpk-kubelet: the Slurm job id backing this pod.
     pub const JOB_ID: &str = "slurm-job.hpk.io/id";
+    /// PodGroup (gang) name: pods in one namespace sharing this value
+    /// are bound and placed all-or-nothing (Slurm-side gang placement;
+    /// see *Gang scheduling* in [`crate::slurm`]).
+    pub const POD_GROUP: &str = "slurm-job.hpk.io/pod-group";
+    /// Declared member count of the PodGroup; the pass-through
+    /// scheduler holds binding until this many members exist and the
+    /// Slurm scheduler holds placement until all are submitted.
+    pub const POD_GROUP_SIZE: &str = "slurm-job.hpk.io/pod-group-size";
+    /// "true" marks the backing Slurm job preemptible by
+    /// higher-priority gangs (scancel-and-requeue).
+    pub const PREEMPTIBLE: &str = "slurm-job.hpk.io/preemptible";
 }

@@ -14,6 +14,7 @@
 use crate::kube::controllers::{Context, Reconciler};
 use crate::kube::informer::WatchSpec;
 use crate::kube::object;
+use crate::kube::ListParams;
 use crate::yamlkit::Value;
 
 pub struct PassThroughScheduler;
@@ -35,6 +36,46 @@ impl Reconciler for PassThroughScheduler {
             if pod.str_at("spec.nodeName").is_some()
                 || object::pod_phase(&pod) != "Pending"
             {
+                continue;
+            }
+            // Gang gate: a PodGroup member binds only once every
+            // declared member exists in its namespace, so no member
+            // reaches Slurm while the group is still materialising.
+            // Earlier members' keys were already drained (and skipped),
+            // so when the gate finally opens — on the last member's
+            // create event — every still-unbound member is bound in
+            // the same sweep.
+            if let Some(group) =
+                object::annotation(&pod, super::annotations::POD_GROUP)
+            {
+                let size: usize =
+                    object::annotation(&pod, super::annotations::POD_GROUP_SIZE)
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(1);
+                let members: Vec<_> = pods
+                    .list(&ListParams::in_namespace(&key.namespace))
+                    .into_iter()
+                    .filter(|p| {
+                        object::annotation(p, super::annotations::POD_GROUP)
+                            == Some(group)
+                    })
+                    .collect();
+                if members.len() < size {
+                    continue;
+                }
+                for m in &members {
+                    if m.str_at("spec.nodeName").is_some()
+                        || object::pod_phase(m) != "Pending"
+                    {
+                        continue;
+                    }
+                    let mut patch = Value::map();
+                    patch
+                        .entry_map("spec")
+                        .set("nodeName", Value::from(super::VIRTUAL_NODE));
+                    let _ =
+                        pods.patch(&key.namespace, object::name(m), &patch);
+                }
                 continue;
             }
             let mut patch = Value::map();
@@ -68,6 +109,32 @@ mod tests {
         reconcile_once(&api, &PassThroughScheduler);
         for p in api.list("Pod") {
             assert_eq!(p.str_at("spec.nodeName"), Some(super::super::VIRTUAL_NODE));
+        }
+    }
+
+    #[test]
+    fn pod_group_members_bind_only_when_complete() {
+        let api = ApiServer::new();
+        let member = |i: usize| {
+            parse_one(&format!(
+                "kind: Pod\nmetadata:\n  name: g{i}\n  annotations:\n    slurm-job.hpk.io/pod-group: ring\n    slurm-job.hpk.io/pod-group-size: \"2\"\nspec:\n  containers:\n  - name: c\n    image: x\n"
+            ))
+            .unwrap()
+        };
+        api.create(member(0)).unwrap();
+        reconcile_once(&api, &PassThroughScheduler);
+        assert!(
+            api.get("Pod", "default", "g0").unwrap().str_at("spec.nodeName").is_none(),
+            "lone member must wait for the group"
+        );
+        api.create(member(1)).unwrap();
+        reconcile_once(&api, &PassThroughScheduler);
+        for name in ["g0", "g1"] {
+            assert_eq!(
+                api.get("Pod", "default", name).unwrap().str_at("spec.nodeName"),
+                Some(super::super::VIRTUAL_NODE),
+                "{name} binds once the group is complete"
+            );
         }
     }
 

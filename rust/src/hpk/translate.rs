@@ -100,6 +100,24 @@ pub fn pod_to_jobspec(pod: &Value) -> Result<JobSpec, String> {
         spec.env
             .push(("HPK_MPI_FLAGS".to_string(), mpi.to_string()));
     }
+    // Gang (PodGroup) membership: namespaced so two groups with the
+    // same name in different namespaces stay distinct gangs.
+    if let Some(group) = object::annotation(pod, super::annotations::POD_GROUP) {
+        let size: u32 = object::annotation(pod, super::annotations::POD_GROUP_SIZE)
+            .ok_or_else(|| {
+                format!(
+                    "{} requires {}",
+                    super::annotations::POD_GROUP,
+                    super::annotations::POD_GROUP_SIZE
+                )
+            })?
+            .parse()
+            .map_err(|_| format!("bad {}", super::annotations::POD_GROUP_SIZE))?;
+        spec = spec.with_gang(&format!("{ns}/{group}"), size);
+    }
+    if object::annotation(pod, super::annotations::PREEMPTIBLE) == Some("true") {
+        spec = spec.with_preemptible();
+    }
     Ok(spec)
 }
 
@@ -194,6 +212,34 @@ spec:
         let spec = crate::slurm::script::parse_script(&script).unwrap();
         assert_eq!(spec.ntasks, 4);
         assert_eq!(spec.comment, "spark/tpcds-exec-1");
+    }
+
+    #[test]
+    fn pod_group_annotations_become_gang_spec() {
+        let mut pod = pod_yaml();
+        pod.entry_map("metadata")
+            .entry_map("annotations")
+            .set(super::super::annotations::POD_GROUP, Value::from("ring"));
+        pod.entry_map("metadata")
+            .entry_map("annotations")
+            .set(super::super::annotations::POD_GROUP_SIZE, Value::from("3"));
+        pod.entry_map("metadata")
+            .entry_map("annotations")
+            .set(super::super::annotations::PREEMPTIBLE, Value::from("true"));
+        let spec = pod_to_jobspec(&pod).unwrap();
+        assert_eq!(spec.gang_id.as_deref(), Some("spark/ring"));
+        assert_eq!(spec.gang_size, 3);
+        assert!(spec.requeue, "gang pods requeue as a group");
+        assert!(spec.preemptible);
+    }
+
+    #[test]
+    fn pod_group_without_size_is_an_error() {
+        let mut pod = pod_yaml();
+        pod.entry_map("metadata")
+            .entry_map("annotations")
+            .set(super::super::annotations::POD_GROUP, Value::from("ring"));
+        assert!(pod_to_jobspec(&pod).is_err());
     }
 
     #[test]

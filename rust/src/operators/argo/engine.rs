@@ -278,6 +278,7 @@ fn expand_template(
                 });
                 match items {
                     Some(items) => {
+                        let fan_start = nodes.len();
                         for (i, item) in items.iter().enumerate() {
                             let mut p = params.clone();
                             item_params(item, &mut p);
@@ -305,6 +306,39 @@ fn expand_template(
                                 resolver,
                                 complete,
                             )?);
+                        }
+                        // An MPI fan-out is one PodGroup: all sweep
+                        // members place all-or-nothing in Slurm, so a
+                        // half-started sweep never squats on capacity.
+                        // Non-MPI fan-outs stay independent jobs.
+                        let gang: Vec<usize> = (fan_start..nodes.len())
+                            .filter(|&i| {
+                                nodes[i]
+                                    .template
+                                    .path("metadata.annotations")
+                                    .and_then(|a| {
+                                        a.get(crate::hpk::annotations::MPI_FLAGS)
+                                    })
+                                    .is_some()
+                            })
+                            .collect();
+                        if gang.len() > 1 {
+                            let gname = format!("{prefix}.{tname}");
+                            let size = gang.len().to_string();
+                            for i in gang {
+                                let ann = nodes[i]
+                                    .template
+                                    .entry_map("metadata")
+                                    .entry_map("annotations");
+                                ann.set(
+                                    crate::hpk::annotations::POD_GROUP,
+                                    Value::from(gname.as_str()),
+                                );
+                                ann.set(
+                                    crate::hpk::annotations::POD_GROUP_SIZE,
+                                    Value::from(size.as_str()),
+                                );
+                            }
                         }
                     }
                     None => {
@@ -465,6 +499,60 @@ spec:
             assert_eq!(flags, format!("--ntasks={want}"));
             let cmd = n.template.str_at("container.command.0").unwrap();
             assert_eq!(cmd, format!("ep.A.{want}"));
+        }
+    }
+
+    /// An MPI fan-out (template carrying `mpi-flags`) is stamped as a
+    /// PodGroup so Slurm places the whole sweep or none of it; a
+    /// non-MPI fan-out (plain [`listing2`]) is left unstamped.
+    #[test]
+    fn mpi_fan_out_is_stamped_as_a_pod_group() {
+        let wf = parse_one(
+            r#"
+kind: Workflow
+metadata: {name: sweep}
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - name: A
+        template: mpi
+        withItems: [2, 4, 8]
+  - name: mpi
+    metadata:
+      annotations:
+        slurm-job.hpk.io/mpi-flags: "-x HPK"
+    container:
+      image: mpi-npb:latest
+"#,
+        )
+        .unwrap();
+        let nodes = expand_workflow(&wf).unwrap();
+        assert_eq!(nodes.len(), 3);
+        for n in &nodes {
+            let ann = n.template.path("metadata.annotations").unwrap();
+            assert_eq!(
+                ann.get(crate::hpk::annotations::POD_GROUP)
+                    .and_then(|v| v.as_str()),
+                Some("main.A"),
+                "{}",
+                n.id
+            );
+            assert_eq!(
+                ann.get(crate::hpk::annotations::POD_GROUP_SIZE)
+                    .and_then(|v| v.as_str()),
+                Some("3")
+            );
+        }
+        // Non-MPI fan-out stays ungrouped.
+        for n in expand_workflow(&listing2()).unwrap() {
+            assert!(n
+                .template
+                .path("metadata.annotations")
+                .and_then(|a| a.get(crate::hpk::annotations::POD_GROUP))
+                .is_none());
         }
     }
 

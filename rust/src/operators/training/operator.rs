@@ -97,10 +97,32 @@ impl Reconciler for TfJobOperator {
                     Arc::new(AllReduce::new(replicas, params)),
                 );
             }
+            // Per-worker terminal phases live in `status.workers`: a
+            // worker observed Succeeded/Failed stays counted even if
+            // its pod is later deleted out-of-band, so it is never
+            // recreated and re-run — while a *non-terminal* worker
+            // that vanishes (node chaos, manual delete) is recreated
+            // below exactly like a first-time worker.
+            let mut workers = job
+                .path("status.workers")
+                .cloned()
+                .unwrap_or_else(Value::map);
+            let mut workers_dirty = false;
             let mut pods_done = 0usize;
             let mut pods_failed = 0usize;
             for r in 0..replicas {
                 let pod_name = format!("{name}-worker-{r}");
+                match workers.str_at(&pod_name) {
+                    Some("Succeeded") => {
+                        pods_done += 1;
+                        continue;
+                    }
+                    Some("Failed") => {
+                        pods_failed += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
                 match pod_api.get(ns, &pod_name) {
                     Err(_) => {
                         let mut pod = object::new_object("Pod", ns, &pod_name);
@@ -119,12 +141,22 @@ impl Reconciler for TfJobOperator {
                             .str_at("spec.timeLimit")
                             .unwrap_or("24:00:00")
                             .to_string();
-                        pod.entry_map("metadata")
-                            .entry_map("annotations")
-                            .set(
-                                "slurm-job.hpk.io/flags",
-                                Value::from(format!("--time={wall}")),
-                            );
+                        let ann = pod.entry_map("metadata").entry_map("annotations");
+                        ann.set(
+                            "slurm-job.hpk.io/flags",
+                            Value::from(format!("--time={wall}")),
+                        );
+                        // Workers form one PodGroup: synchronous
+                        // all-reduce deadlocks on a half-started ring,
+                        // so Slurm must place all ranks or none.
+                        ann.set(
+                            crate::hpk::annotations::POD_GROUP,
+                            Value::from(name.as_str()),
+                        );
+                        ann.set(
+                            crate::hpk::annotations::POD_GROUP_SIZE,
+                            Value::from(replicas.to_string()),
+                        );
                         let mut container = Value::map();
                         container.set("name", Value::from("tensorflow"));
                         container.set("image", Value::from("tf-trainer:latest"));
@@ -155,8 +187,16 @@ impl Reconciler for TfJobOperator {
                         let _ = pod_api.create(pod);
                     }
                     Ok(p) => match object::pod_phase(&p) {
-                        "Succeeded" => pods_done += 1,
-                        "Failed" => pods_failed += 1,
+                        "Succeeded" => {
+                            pods_done += 1;
+                            workers.set(&pod_name, Value::from("Succeeded"));
+                            workers_dirty = true;
+                        }
+                        "Failed" => {
+                            pods_failed += 1;
+                            workers.set(&pod_name, Value::from("Failed"));
+                            workers_dirty = true;
+                        }
                         _ => {}
                     },
                 }
@@ -174,10 +214,11 @@ impl Reconciler for TfJobOperator {
             } else {
                 "Running"
             };
-            if state != new_state {
+            if state != new_state || workers_dirty {
                 let mut st = Value::map();
                 st.set("state", Value::from(new_state));
                 st.set("succeededWorkers", Value::Int(pods_done as i64));
+                st.set("workers", workers);
                 let _ = jobs.update_status(ns, name, st);
             }
         }
@@ -296,6 +337,93 @@ mod tests {
         reconcile_once(&api, &op);
         let job = api.get("TFJob", "default", "t").unwrap();
         assert_eq!(job.str_at("status.state"), Some("Failed"));
+    }
+
+    #[test]
+    fn worker_pods_carry_pod_group_annotations() {
+        let api = ApiServer::new();
+        api.apply_manifest(&tfjob_manifest(
+            "t", "default", "mlp-small", 2, 10, 0.1, "/m",
+        ))
+        .unwrap();
+        let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
+        reconcile_once(&api, &op);
+        for p in api.list("Pod") {
+            assert_eq!(
+                object::annotation(&p, crate::hpk::annotations::POD_GROUP),
+                Some("t"),
+                "workers gang-schedule as one PodGroup"
+            );
+            assert_eq!(
+                object::annotation(&p, crate::hpk::annotations::POD_GROUP_SIZE),
+                Some("2")
+            );
+        }
+    }
+
+    /// A worker deleted out-of-band while still running must be
+    /// recreated — otherwise the job strands at `Running` forever.
+    #[test]
+    fn deleted_running_worker_is_recreated() {
+        let api = ApiServer::new();
+        api.apply_manifest(&tfjob_manifest(
+            "t", "default", "mlp-small", 2, 10, 0.1, "/m",
+        ))
+        .unwrap();
+        let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
+        reconcile_once(&api, &op);
+        api.delete("Pod", "default", "t-worker-1").unwrap();
+        assert_eq!(api.list("Pod").len(), 1);
+        reconcile_once(&api, &op);
+        assert!(
+            api.get("Pod", "default", "t-worker-1").is_ok(),
+            "missing non-terminal worker must be recreated"
+        );
+    }
+
+    /// A worker that already *succeeded* and is then deleted must NOT
+    /// be recreated (its completion is persisted in `status.workers`),
+    /// and its success still counts toward job completion.
+    #[test]
+    fn deleted_succeeded_worker_is_not_rerun() {
+        let api = ApiServer::new();
+        api.apply_manifest(&tfjob_manifest(
+            "t", "default", "mlp-small", 2, 10, 0.1, "/m",
+        ))
+        .unwrap();
+        let op = TfJobOperator { registry: Arc::new(TrainerRegistry::new()) };
+        reconcile_once(&api, &op);
+        api.update_status(
+            "Pod",
+            "default",
+            "t-worker-0",
+            parse_one("phase: Succeeded\n").unwrap(),
+        )
+        .unwrap();
+        reconcile_once(&api, &op); // persists worker-0's completion
+        let job = api.get("TFJob", "default", "t").unwrap();
+        assert_eq!(job.str_at("status.workers.t-worker-0"), Some("Succeeded"));
+        api.delete("Pod", "default", "t-worker-0").unwrap();
+        reconcile_once(&api, &op);
+        assert!(
+            api.get("Pod", "default", "t-worker-0").is_err(),
+            "succeeded worker must not be recreated and re-run"
+        );
+        api.update_status(
+            "Pod",
+            "default",
+            "t-worker-1",
+            parse_one("phase: Succeeded\n").unwrap(),
+        )
+        .unwrap();
+        reconcile_once(&api, &op);
+        let job = api.get("TFJob", "default", "t").unwrap();
+        assert_eq!(
+            job.str_at("status.state"),
+            Some("Succeeded"),
+            "persisted completion still counts: {:?}",
+            job.path("status")
+        );
     }
 
     #[test]

@@ -232,6 +232,30 @@ impl<'a> CapacityView<'a> {
         placeable >= spec.ntasks as u64
     }
 
+    /// Whether a whole gang could ever run *simultaneously* on this
+    /// cluster with every non-`Down` node empty: each member must fit
+    /// on its own ([`CapacityView::can_ever_fit`]) and the group's
+    /// aggregate CPU/memory demand must fit inside the aggregate
+    /// non-`Down` capacity. The aggregate check matches the
+    /// granularity of backfill's [`crate::slurm::sched::earliest_fit`]
+    /// shadow estimate: it can say yes to a group a real packing would
+    /// reject, which only costs a retry next pass — never a false
+    /// permanent-starvation verdict.
+    pub fn can_ever_fit_group(&self, specs: &[&JobSpec]) -> bool {
+        if !specs.iter().all(|s| self.can_ever_fit(s)) {
+            return false;
+        }
+        let need_cpus: u64 = specs.iter().map(|s| s.total_cpus() as u64).sum();
+        let need_mem: u64 = specs.iter().map(|s| s.total_memory()).sum();
+        let mut cap_cpus: u64 = 0;
+        let mut cap_mem: u64 = 0;
+        for &(c, m, n) in &self.index.profiles {
+            cap_cpus += c as u64 * n as u64;
+            cap_mem += m * n as u64;
+        }
+        need_cpus <= cap_cpus && need_mem <= cap_mem
+    }
+
     /// The node slice, read-only (introspection; mutations must go
     /// through the view).
     pub fn nodes(&self) -> &[Node] {
@@ -321,6 +345,22 @@ mod tests {
         assert!(!view.can_ever_fit(&JobSpec::new("j").with_tasks(1, 16, 1 << 20)));
         // Two 8-cpu tasks need both nodes, but n0 is Down.
         assert!(!view.can_ever_fit(&JobSpec::new("j").with_tasks(2, 8, 1 << 20)));
+    }
+
+    #[test]
+    fn group_ever_fit_checks_members_and_aggregate() {
+        let mut nodes = cluster(&[(8, 8 << 30), (8, 8 << 30)]);
+        nodes[1].state = NodeState::Down;
+        let mut index = CapacityIndex::new();
+        let view = CapacityView::new(&mut index, &mut nodes, 1);
+        let member = JobSpec::new("m").with_tasks(1, 4, 1 << 30);
+        // Two 4-cpu members fit the surviving 8-cpu node together.
+        assert!(view.can_ever_fit_group(&[&member, &member]));
+        // Three members need 12 cpus but only 8 exist (n1 is Down).
+        assert!(!view.can_ever_fit_group(&[&member, &member, &member]));
+        // A member that can never fit alone sinks the group.
+        let wide = JobSpec::new("w").with_tasks(1, 16, 1 << 30);
+        assert!(!view.can_ever_fit_group(&[&member, &wide]));
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub struct SlurmConfig {
     /// a driven clock, passes happen exactly when the harness advances
     /// time across a multiple of this interval.
     pub sched_interval_ms: u64,
+    /// Preemption threshold: a pending head unit (gang or singleton)
+    /// whose priority is at least this value may scancel-and-requeue
+    /// running jobs marked [`JobSpec::preemptible`] of strictly lower
+    /// priority, lowest first, until it fits.
+    pub preempt_priority: i32,
 }
 
 impl Default for SlurmConfig {
@@ -41,6 +46,7 @@ impl Default for SlurmConfig {
             default_time_limit_ms: 60 * 60 * 1000, // 1 simulated hour
             backfill: true,
             sched_interval_ms: 100,
+            preempt_priority: 100,
         }
     }
 }
@@ -54,6 +60,10 @@ struct JobRecord {
     allocation: Allocation,
     cancel: CancelToken,
     time_limit_ms: u64,
+    /// Placement generation, bumped on every requeue. A `finish` from
+    /// an executor of an older attempt is stale and must not touch the
+    /// record (or the *new* attempt's allocation).
+    attempt: u64,
 }
 
 /// Bounded job-event log length; consumers lagging further behind
@@ -79,6 +89,10 @@ struct Inner {
     seq: u64,
     /// Seq of the newest event dropped by compaction (0 = none yet).
     compacted_through: u64,
+    /// Members ever submitted per gang id — the PodGroup-completeness
+    /// gate: a gang places only once this count reaches its declared
+    /// [`JobSpec::gang_size`] (O(1) per check, no job-table scan).
+    gang_members: HashMap<String, u32>,
 }
 
 /// Handle to the controller; cheap to clone.
@@ -142,6 +156,9 @@ impl Slurmctld {
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
+        if let Some(g) = spec.gang_id.clone() {
+            *inner.gang_members.entry(g).or_insert(0) += 1;
+        }
         let pending = JobState::Pending("Priority".to_string());
         inner.jobs.insert(
             id,
@@ -154,6 +171,7 @@ impl Slurmctld {
                 allocation: Allocation::default(),
                 cancel: CancelToken::new(),
                 time_limit_ms: time_limit,
+                attempt: 0,
             },
         );
         inner.queue.push(id);
@@ -369,6 +387,39 @@ impl Slurmctld {
         self.publish_event(inner, id, Some(from), to);
     }
 
+    /// Send a *running* job back to Pending with a fresh attempt: the
+    /// node-failure and preemption paths. The old executor is
+    /// cancelled, the attempt counter fences its eventual `finish`,
+    /// and the allocation goes onto `to_release` for the caller to
+    /// free (under its capacity handling). Publishes the
+    /// Running -> Pending(reason) transition, so `wait_terminal`
+    /// waiters wake and re-read instead of hanging to their backstop.
+    fn requeue_running(
+        &self,
+        inner: &mut Inner,
+        id: JobId,
+        reason: &str,
+        to_release: &mut Vec<(JobId, Allocation)>,
+    ) {
+        let Some(rec) = inner.jobs.get_mut(&id) else {
+            return;
+        };
+        if rec.state != JobState::Running {
+            return;
+        }
+        rec.cancel.cancel();
+        rec.cancel = CancelToken::new();
+        rec.attempt += 1;
+        rec.start_ms = None;
+        let to = JobState::Pending(reason.to_string());
+        let from = std::mem::replace(&mut rec.state, to.clone());
+        let alloc = std::mem::take(&mut rec.allocation);
+        to_release.push((id, alloc));
+        inner.running.remove(&id);
+        inner.queue.push(id);
+        self.publish_event(inner, id, Some(from), to);
+    }
+
     /// Block until the job reaches a terminal state (or `timeout_sim_ms`
     /// *simulated* milliseconds pass on the cluster clock). Returns the
     /// final state if terminal. Rides the job-event bus: no wakeup
@@ -465,7 +516,7 @@ impl Slurmctld {
         let now = self.cluster.clock.now_ms();
         // Phase 1: under the job lock, update dependency/timeout/failure
         // state and compute the placement plan.
-        let mut to_start: Vec<(JobId, JobSpec, Allocation, CancelToken)> = Vec::new();
+        let mut to_start: Vec<(JobId, JobSpec, Allocation, CancelToken, u64)> = Vec::new();
         let mut to_release: Vec<(JobId, Allocation)> = Vec::new();
         {
             let mut inner = self.inner.lock().unwrap();
@@ -528,7 +579,7 @@ impl Slurmctld {
                     .collect()
             });
             if !down.is_empty() {
-                let victims: Vec<JobId> = inner
+                let mut victims: Vec<JobId> = inner
                     .running
                     .iter()
                     .filter(|id| {
@@ -541,7 +592,45 @@ impl Slurmctld {
                     })
                     .copied()
                     .collect();
+                // A gang member dying takes the whole group down with
+                // it: requeue the running siblings in the same sweep so
+                // no group is ever left half-running (the no-partial-
+                // gang invariant under node failure).
+                let victim_gangs: BTreeSet<String> = victims
+                    .iter()
+                    .filter_map(|id| {
+                        inner.jobs.get(id).and_then(|r| r.spec.gang_id.clone())
+                    })
+                    .collect();
+                if !victim_gangs.is_empty() {
+                    let siblings: Vec<JobId> = inner
+                        .running
+                        .iter()
+                        .filter(|id| !victims.contains(id))
+                        .filter(|id| {
+                            inner.jobs.get(id).is_some_and(|r| {
+                                r.spec
+                                    .gang_id
+                                    .as_ref()
+                                    .is_some_and(|g| victim_gangs.contains(g))
+                            })
+                        })
+                        .copied()
+                        .collect();
+                    victims.extend(siblings);
+                }
                 for id in victims {
+                    let requeue =
+                        inner.jobs.get(&id).is_some_and(|r| r.spec.requeue);
+                    if requeue {
+                        self.requeue_running(
+                            &mut inner,
+                            id,
+                            "Requeued(NodeFail)",
+                            &mut to_release,
+                        );
+                        continue;
+                    }
                     if let Some(rec) = inner.jobs.get_mut(&id) {
                         rec.cancel.cancel();
                         let to = JobState::Failed("NodeFail".to_string());
@@ -590,7 +679,11 @@ impl Slurmctld {
             }
             to_release.clear();
 
-            // Placement: priority desc, then FIFO.
+            // Placement: priority desc, then FIFO — over *units*, where
+            // a unit is either a singleton job or a whole gang
+            // (anchored at its best member's queue position). Gangs are
+            // placed all-or-nothing via [`sched::place_group`]; the
+            // EASY-backfill shadow protects the whole blocked unit.
             let mut order: Vec<JobId> = inner
                 .queue
                 .iter()
@@ -601,26 +694,76 @@ impl Slurmctld {
                 let p = inner.jobs.get(id).map(|r| r.spec.priority).unwrap_or(0);
                 (-(p as i64), *id)
             });
+            let mut units: Vec<Vec<JobId>> = Vec::new();
+            let mut seen_gangs: BTreeSet<String> = BTreeSet::new();
+            for &id in &order {
+                match inner.jobs.get(&id).and_then(|r| r.spec.gang_id.clone()) {
+                    Some(g) => {
+                        if seen_gangs.insert(g.clone()) {
+                            units.push(
+                                order
+                                    .iter()
+                                    .copied()
+                                    .filter(|m| {
+                                        inner.jobs.get(m).is_some_and(|r| {
+                                            r.spec.gang_id.as_deref() == Some(g.as_str())
+                                        })
+                                    })
+                                    .collect(),
+                            );
+                        }
+                    }
+                    None => units.push(vec![id]),
+                }
+            }
 
             let mut blocked_head = false;
             let mut shadow: u64 = u64::MAX;
             let mut placed_ids: Vec<JobId> = Vec::new();
-            for id in order {
-                // Read the spec in place; it is only cloned once the
-                // job actually starts (for the executor thread).
-                let (never_fits, total_cpus, time_limit_ms) = {
-                    let Some(rec) = inner.jobs.get(&id) else {
+            for unit in units {
+                let members: Vec<(JobId, JobSpec)> = unit
+                    .iter()
+                    .filter_map(|id| inner.jobs.get(id).map(|r| (*id, r.spec.clone())))
+                    .collect();
+                if members.is_empty() {
+                    continue;
+                }
+                // PodGroup completeness: a gang waits until every
+                // declared member has been submitted.
+                if let Some(g) = members[0].1.gang_id.clone() {
+                    let submitted = inner.gang_members.get(&g).copied().unwrap_or(0);
+                    let size =
+                        members.iter().map(|(_, s)| s.gang_size).max().unwrap_or(0);
+                    if submitted < size {
+                        for (id, _) in &members {
+                            self.update_pending_reason(
+                                &mut inner,
+                                *id,
+                                JobState::Pending("PodGroupIncomplete".to_string()),
+                            );
+                        }
                         continue;
-                    };
-                    (
-                        !self.with_capacity(|view| view.can_ever_fit(&rec.spec)),
-                        rec.spec.total_cpus(),
-                        rec.spec.time_limit_ms,
-                    )
+                    }
+                }
+                let group_cpus: u32 =
+                    members.iter().map(|(_, s)| s.total_cpus()).sum();
+                let max_limit: u64 =
+                    members.iter().map(|(_, s)| s.time_limit_ms).max().unwrap_or(0);
+                let unit_priority: i32 =
+                    members.iter().map(|(_, s)| s.priority).max().unwrap_or(0);
+                let never_fits = {
+                    let refs: Vec<&JobSpec> = members.iter().map(|(_, s)| s).collect();
+                    !self.with_capacity(|view| view.can_ever_fit_group(&refs))
                 };
                 if never_fits {
-                    let reason = "Resources (can never be satisfied)".to_string();
-                    self.update_pending_reason(&mut inner, id, JobState::Pending(reason));
+                    for (id, _) in &members {
+                        let reason = "Resources (can never be satisfied)".to_string();
+                        self.update_pending_reason(
+                            &mut inner,
+                            *id,
+                            JobState::Pending(reason),
+                        );
+                    }
                     continue;
                 }
                 if blocked_head {
@@ -628,28 +771,94 @@ impl Slurmctld {
                     if !self.config.backfill {
                         continue;
                     }
-                    if now.saturating_add(time_limit_ms) > shadow {
+                    if now.saturating_add(max_limit) > shadow {
                         continue;
                     }
                 }
-                let placed = {
-                    let rec = inner.jobs.get(&id).unwrap();
-                    self.with_capacity(|view| sched::place(view, id, &rec.spec))
-                };
+                let mut placed =
+                    self.with_capacity(|view| sched::place_group(view, &members));
+                if placed.is_none()
+                    && !blocked_head
+                    && unit_priority >= self.config.preempt_priority
+                {
+                    // Preemption: scancel-and-requeue the lowest-
+                    // priority preemptible running jobs (with their
+                    // running gang siblings — groups leave whole) until
+                    // the head unit fits or no victims remain.
+                    loop {
+                        let victim = inner
+                            .running
+                            .iter()
+                            .filter_map(|rid| {
+                                inner.jobs.get(rid).map(|r| {
+                                    (*rid, r.spec.priority, r.spec.preemptible)
+                                })
+                            })
+                            .filter(|(_, p, pre)| *pre && *p < unit_priority)
+                            .min_by_key(|(rid, p, _)| (*p, *rid))
+                            .map(|(rid, _, _)| rid);
+                        let Some(vid) = victim else {
+                            break;
+                        };
+                        let mut vset = vec![vid];
+                        if let Some(g) = inner
+                            .jobs
+                            .get(&vid)
+                            .and_then(|r| r.spec.gang_id.clone())
+                        {
+                            vset.extend(inner.running.iter().copied().filter(|rid| {
+                                *rid != vid
+                                    && inner.jobs.get(rid).is_some_and(|r| {
+                                        r.spec.gang_id.as_deref() == Some(g.as_str())
+                                    })
+                            }));
+                        }
+                        for v in vset {
+                            self.requeue_running(
+                                &mut inner,
+                                v,
+                                "Requeued(Preempted)",
+                                &mut to_release,
+                            );
+                        }
+                        for (rid, alloc) in to_release.drain(..) {
+                            self.release_nodes(rid, &alloc);
+                        }
+                        placed = self
+                            .with_capacity(|view| sched::place_group(view, &members));
+                        if placed.is_some() {
+                            break;
+                        }
+                    }
+                }
                 match placed {
-                    Some(alloc) => {
-                        let rec = inner.jobs.get_mut(&id).unwrap();
-                        let from = std::mem::replace(&mut rec.state, JobState::Running);
-                        rec.start_ms = Some(now);
-                        rec.allocation = alloc.clone();
-                        to_start.push((id, rec.spec.clone(), alloc, rec.cancel.clone()));
-                        inner.running.insert(id);
-                        placed_ids.push(id);
-                        self.publish_event(&mut inner, id, Some(from), JobState::Running);
+                    Some(allocs) => {
+                        for ((id, _), alloc) in members.iter().zip(allocs) {
+                            let rec = inner.jobs.get_mut(id).unwrap();
+                            let from =
+                                std::mem::replace(&mut rec.state, JobState::Running);
+                            rec.start_ms = Some(now);
+                            rec.allocation = alloc.clone();
+                            to_start.push((
+                                *id,
+                                rec.spec.clone(),
+                                alloc,
+                                rec.cancel.clone(),
+                                rec.attempt,
+                            ));
+                            inner.running.insert(*id);
+                            placed_ids.push(*id);
+                            self.publish_event(
+                                &mut inner,
+                                *id,
+                                Some(from),
+                                JobState::Running,
+                            );
+                        }
                     }
                     None => {
                         if !blocked_head {
-                            // This becomes the protected head job.
+                            // This becomes the protected head unit.
                             blocked_head = true;
                             let free = self.with_capacity(|view| view.free_cpus()) as u32;
                             let running: Vec<(u64, u32)> = inner
@@ -663,12 +872,14 @@ impl Slurmctld {
                                     )
                                 })
                                 .collect();
-                            shadow = sched::earliest_fit(now, free, &running, total_cpus);
-                            self.update_pending_reason(
-                                &mut inner,
-                                id,
-                                JobState::Pending("Resources".to_string()),
-                            );
+                            shadow = sched::earliest_fit(now, free, &running, group_cpus);
+                            for (id, _) in &members {
+                                self.update_pending_reason(
+                                    &mut inner,
+                                    *id,
+                                    JobState::Pending("Resources".to_string()),
+                                );
+                            }
                         }
                     }
                 }
@@ -680,7 +891,7 @@ impl Slurmctld {
         }
 
         // Phase 2: spawn executor threads outside the lock.
-        for (id, spec, alloc, cancel) in to_start {
+        for (id, spec, alloc, cancel, attempt) in to_start {
             if cancel.is_cancelled() {
                 // scancel (or a timeout/node-fail sweep) raced the
                 // placement commit: the record is already terminal and
@@ -705,19 +916,26 @@ impl Slurmctld {
                         progress,
                     };
                     let result = executor.execute(&ctx);
-                    this.finish(id, result);
+                    this.finish(id, attempt, result);
                 })
                 .expect("spawn job thread");
         }
     }
 
-    /// Called by the job thread when the executor returns.
-    fn finish(&self, id: JobId, result: Result<(), String>) {
+    /// Called by the job thread when the executor returns. `attempt`
+    /// fences requeues: a stale attempt's finish returns without
+    /// touching the record — its allocation was already reclaimed by
+    /// the requeue, and releasing by job id here could free the *new*
+    /// attempt's nodes.
+    fn finish(&self, id: JobId, attempt: u64, result: Result<(), String>) {
         let now = self.cluster.clock.now_ms();
         let mut inner = self.inner.lock().unwrap();
         let Some(rec) = inner.jobs.get_mut(&id) else {
             return;
         };
+        if rec.attempt != attempt {
+            return;
+        }
         if rec.state.is_terminal() {
             // Timeout/cancel/node-fail already recorded it (and took
             // the allocation record); sweep by job id to make sure the

@@ -40,6 +40,48 @@
 //!   out-of-band milestones (the pod-IP handshake) without logging a
 //!   fake transition.
 //!
+//! # Gang scheduling & preemption
+//!
+//! Distributed workloads (TFJob worker rings, Argo MPI fan-outs) are
+//! placed as **gangs**: jobs sharing a [`JobSpec::gang_id`]
+//! ([`JobSpec::with_gang`]) form one scheduling unit of
+//! [`JobSpec::gang_size`] members that the scheduler treats
+//! all-or-nothing. Half-placed groups are the deadlock this kills — a
+//! synchronous all-reduce ring with one missing rank squats on capacity
+//! forever. Mechanics:
+//!
+//! - **Completeness gate.** Until every declared member has been
+//!   submitted, members hold with pending reason `PodGroupIncomplete`;
+//!   no capacity is touched.
+//! - **All-or-nothing placement.** A complete gang's pending members
+//!   are placed in one scheduler pass via `sched::place_group`: either
+//!   every member gets an allocation or the pass rolls all of them
+//!   back and the gang stays pending. EASY backfill computes its
+//!   shadow start time for the *group's* aggregate demand, and
+//!   `can_ever_fit_group` stamps `Resources (can never be satisfied)`
+//!   when the group exceeds what the up nodes could ever provide.
+//! - **Priority preemption.** A pending head unit at or above
+//!   [`SlurmConfig::preempt_priority`] may scancel running
+//!   [`JobSpec::preemptible`] allocations of strictly lower priority
+//!   (victims chosen by `(priority, id)`), requeueing each victim —
+//!   and, if the victim belongs to a gang, its running siblings too,
+//!   so no gang survives partially.
+//! - **Requeue.** [`JobSpec::requeue`] jobs (implied by
+//!   [`JobSpec::with_gang`]) bounce on node failure instead of
+//!   failing: the sweep requeues every running sibling of an affected
+//!   gang in the same pass, publishes
+//!   `Running -> Pending("Requeued(NodeFail)")` (preemption publishes
+//!   `Requeued(Preempted)`) on the event bus so `wait_terminal` and
+//!   the HPK kubelet observe the bounce, and bumps the job's attempt
+//!   counter — a stale executor's `finish` is fenced off and can never
+//!   release the new attempt's nodes.
+//!
+//! The HPK side derives gangs from the `slurm-job.hpk.io/pod-group`
+//! annotations (see [`crate::hpk::annotations`]); `tests/chaos.rs`
+//! proves the no-partial-gang invariant over 100+ seeded chaos
+//! schedules and the determinism of placement/preemption traces in
+//! driven-clock mode.
+//!
 //! Execution is pluggable through [`JobExecutor`]: HPK supplies an
 //! executor that interprets the generated script's Apptainer commands;
 //! tests use closures.

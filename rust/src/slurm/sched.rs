@@ -32,6 +32,32 @@ pub fn place(view: &mut CapacityView, job_id: JobId, spec: &JobSpec) -> Option<A
     Some(Allocation { tasks })
 }
 
+/// All-or-nothing gang placement: place every member of a PodGroup
+/// through [`place`], or place nothing. On any member's failure every
+/// already-reserved sibling is rolled back before returning `None`, so
+/// a gang can never hold partial capacity — the half-placed-group
+/// deadlock this module exists to prevent. Members are placed in the
+/// given order (the caller sorts deterministically), and the returned
+/// allocations are index-aligned with `members`.
+pub fn place_group(
+    view: &mut CapacityView,
+    members: &[(JobId, JobSpec)],
+) -> Option<Vec<Allocation>> {
+    let mut placed: Vec<Allocation> = Vec::with_capacity(members.len());
+    for (id, spec) in members {
+        match place(view, *id, spec) {
+            Some(alloc) => placed.push(alloc),
+            None => {
+                for ((pid, _), alloc) in members.iter().zip(placed.iter()) {
+                    view.release(*pid, &alloc.node_names());
+                }
+                return None;
+            }
+        }
+    }
+    Some(placed)
+}
+
 /// The pre-index placement: first-fit over a linear scan of all
 /// nodes. Kept as the equivalence baseline the randomized scheduler
 /// test and the E6-scale bench compare [`place`] against.
@@ -144,6 +170,27 @@ mod tests {
         assert!(view.can_ever_fit(&spec));
         let too_big = JobSpec::new("xxl").with_tasks(1, 5, 1 << 20);
         assert!(!view.can_ever_fit(&too_big));
+    }
+
+    #[test]
+    fn gang_place_is_all_or_nothing() {
+        let mut nodes = nodes2x4();
+        let mut index = CapacityIndex::new();
+        let mut view = CapacityView::new(&mut index, &mut nodes, 1);
+        let member = |n: &str| JobSpec::new(n).with_tasks(1, 3, 1 << 20);
+        // Two 3-cpu members fit the 4+4 cluster; three do not.
+        let too_many = vec![
+            (1, member("a")),
+            (2, member("b")),
+            (3, member("c")),
+        ];
+        assert!(place_group(&mut view, &too_many).is_none());
+        assert_eq!(view.free_cpus(), 8, "failed gang must hold nothing");
+        assert!(view.nodes().iter().all(|n| n.is_idle()));
+        let fits = vec![(1, member("a")), (2, member("b"))];
+        let allocs = place_group(&mut view, &fits).unwrap();
+        assert_eq!(allocs.len(), 2);
+        assert_eq!(view.free_cpus(), 2);
     }
 
     #[test]

@@ -98,9 +98,11 @@ pub fn apply_flags(spec: &mut JobSpec, flags: &str) -> Result<(), String> {
                     }
                 }
             }
+            "--requeue" => spec.requeue = true,
+            "--no-requeue" => spec.requeue = false,
             // Accepted-and-ignored flags that real-world scripts carry;
             // unknown flags are an error (catches typos in annotations).
-            "--exclusive" | "--requeue" | "--no-requeue" | "--overcommit" => {}
+            "--exclusive" | "--overcommit" => {}
             "--mpi" => {
                 let _ = take_value()?; // e.g. pmix; recorded nowhere yet
             }
@@ -210,6 +212,9 @@ pub fn render_script(spec: &JobSpec) -> String {
     if !spec.comment.is_empty() {
         out.push_str(&format!("#SBATCH --comment={}\n", spec.comment));
     }
+    if spec.requeue {
+        out.push_str("#SBATCH --requeue\n");
+    }
     for (kind, id) in &spec.dependencies {
         let k = match kind {
             DepKind::AfterOk => "afterok",
@@ -265,6 +270,18 @@ mod tests {
         assert_eq!(spec.cpus_per_task, 1);
         apply_flags(&mut spec, "--cpus-per-task=1.5").unwrap();
         assert_eq!(spec.cpus_per_task, 2);
+    }
+
+    #[test]
+    fn requeue_flags_wire_to_spec() {
+        let mut spec = JobSpec::new("x");
+        apply_flags(&mut spec, "--requeue").unwrap();
+        assert!(spec.requeue);
+        apply_flags(&mut spec, "--no-requeue").unwrap();
+        assert!(!spec.requeue);
+        let rendered = render_script(&JobSpec::new("r").with_requeue());
+        assert!(rendered.contains("#SBATCH --requeue"));
+        assert!(parse_script(&rendered).unwrap().requeue);
     }
 
     #[test]

@@ -113,6 +113,21 @@ pub struct JobSpec {
     /// Free-form comment; hpk-kubelet stores `namespace/pod` here so
     /// workloads are identifiable in `squeue` (the compliance story).
     pub comment: String,
+    /// Gang (PodGroup) membership: jobs sharing a `gang_id` are placed
+    /// all-or-nothing by the scheduler — the whole group reserves
+    /// capacity atomically or none of it does. `None` for singletons.
+    pub gang_id: Option<String>,
+    /// Declared member count of the gang. Placement waits until this
+    /// many members have been submitted (PodGroup completeness).
+    pub gang_size: u32,
+    /// A running preemptible job may be scancelled-and-requeued by a
+    /// pending higher-priority gang at or above the controller's
+    /// preemption threshold ([`crate::slurm::SlurmConfig`]).
+    pub preemptible: bool,
+    /// `--requeue`: on node failure the job goes back to Pending with a
+    /// fresh attempt instead of Failed("NodeFail"). Gang members always
+    /// requeue (the group restarts together).
+    pub requeue: bool,
 }
 
 impl JobSpec {
@@ -130,6 +145,10 @@ impl JobSpec {
             env: Vec::new(),
             script: String::new(),
             comment: String::new(),
+            gang_id: None,
+            gang_size: 0,
+            preemptible: false,
+            requeue: false,
         }
     }
 
@@ -167,6 +186,28 @@ impl JobSpec {
 
     pub fn with_comment(mut self, c: &str) -> JobSpec {
         self.comment = c.to_string();
+        self
+    }
+
+    /// Join gang `id` of `size` members (all-or-nothing placement).
+    /// Gang members implicitly requeue: a node failure requeues the
+    /// whole group rather than failing one member.
+    pub fn with_gang(mut self, id: &str, size: u32) -> JobSpec {
+        self.gang_id = Some(id.to_string());
+        self.gang_size = size.max(1);
+        self.requeue = true;
+        self
+    }
+
+    /// Mark the job scancel-and-requeue-able by higher-priority gangs.
+    pub fn with_preemptible(mut self) -> JobSpec {
+        self.preemptible = true;
+        self
+    }
+
+    /// Requeue (instead of fail) when the job's node dies mid-run.
+    pub fn with_requeue(mut self) -> JobSpec {
+        self.requeue = true;
         self
     }
 
@@ -379,6 +420,18 @@ mod tests {
         let s = JobSpec::new("x").with_tasks(4, 2, 1 << 20);
         assert_eq!(s.total_cpus(), 8);
         assert_eq!(s.total_memory(), 4 << 20);
+    }
+
+    #[test]
+    fn gang_builder_implies_requeue() {
+        let s = JobSpec::new("g").with_gang("grp", 4).with_preemptible();
+        assert_eq!(s.gang_id.as_deref(), Some("grp"));
+        assert_eq!(s.gang_size, 4);
+        assert!(s.requeue, "gang members restart together on node failure");
+        assert!(s.preemptible);
+        let plain = JobSpec::new("p");
+        assert!(plain.gang_id.is_none());
+        assert!(!plain.requeue && !plain.preemptible);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// script "ok" -> Completed, "fail" -> Failed, "hold" -> runs until
-/// cancelled.
+/// cancelled, a number -> park that many simulated ms (cancellable).
 struct ScriptExec;
 
 impl JobExecutor for ScriptExec {
@@ -38,7 +38,14 @@ impl JobExecutor for ScriptExec {
                 ctx.cancel.wait();
                 Err("cancelled".to_string())
             }
-            _ => Ok(()),
+            s => {
+                if let Ok(ms) = s.trim().parse::<u64>() {
+                    if ctx.cancel.wait_sim(&ctx.clock, ms) {
+                        return Err("cancelled".to_string());
+                    }
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -170,6 +177,50 @@ fn compaction_reports_gap_and_relist_resumes() {
     let (tail, complete) = ctld.events_since(recent);
     assert!(complete);
     assert_eq!(tail.len(), 5);
+    ctld.shutdown();
+}
+
+/// Pin for the requeue-event contract: when a node failure requeues a
+/// job, the Running -> Pending("Requeued(NodeFail)") transition is
+/// published on the bus — so a `wait_terminal` caller (or the HPK
+/// kubelet's merged wait) observes the bounce instead of hanging on a
+/// job whose first attempt silently vanished.
+#[test]
+fn node_failure_requeue_publishes_event_and_wait_terminal_returns() {
+    let ctld = live(2, 2);
+    let id = ctld
+        .submit(
+            JobSpec::new("rq")
+                .with_tasks(1, 2, 1 << 20)
+                .with_script("3000")
+                .with_requeue(),
+        )
+        .unwrap();
+    wait_running(&ctld, id);
+    let mark = ctld.event_seq();
+    let node = ctld.job_info(id).unwrap().nodes[0].clone();
+    assert!(ctld.cluster().fail_node(&node));
+    // The paced loop's next pass requeues and the one after re-places
+    // on the surviving node; the job still runs to completion.
+    assert_eq!(ctld.wait_terminal(id, 600_000), Some(JobState::Completed));
+    let (events, complete) = ctld.events_since(mark);
+    assert!(complete);
+    assert!(
+        events.iter().any(|e| e.job_id == id
+            && e.from == Some(JobState::Running)
+            && matches!(&e.to, JobState::Pending(r) if r.contains("Requeued(NodeFail)"))),
+        "requeue transition must be visible on the bus: {events:?}"
+    );
+    let rec = ctld
+        .sacct()
+        .into_iter()
+        .find(|r| r.job_id == id)
+        .expect("completed job is accounted");
+    assert_eq!(rec.state, JobState::Completed);
+    assert!(
+        !rec.nodes.contains(&node),
+        "accounting records the replacement node, not the dead one"
+    );
     ctld.shutdown();
 }
 
