@@ -27,6 +27,9 @@ LOWER_IS_BETTER = (
     "_dropped",
     "_no_backend",
 )
+# The suffix rule auto-classifies new tiers — e.g. E8y's YAML-ingestion
+# metrics (e8y_parse_mb_per_s, e8y_apply_objs_per_s) are both
+# higher-is-better by suffix alone.
 HIGHER_IS_BETTER = ("_per_s", "_rate", "_speedup")
 
 # Bench configuration / baseline metrics, not costs the code pays:

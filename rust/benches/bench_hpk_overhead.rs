@@ -1026,5 +1026,48 @@ fn main() {
     }
     ctld.shutdown();
 
+    // ------------------------------------------------------------------
+    // E8y: the YAML ingestion path (docs/SCENARIOS.md). Two stages every
+    // scenario directory pays per manifest: raw multi-document parsing
+    // (with file-absolute line tracking) and typed validation + store
+    // apply. Parsing is reported as MB/s over a kubectl-dump-style
+    // corpus; apply as objects/s into a fresh store.
+    // ------------------------------------------------------------------
+    println!("== E8y: YAML ingestion (parse MB/s, validated apply objs/s) ==");
+    let corpus_docs: usize = if smoke { 100 } else { 1_000 };
+    let mut corpus = String::new();
+    for i in 0..corpus_docs {
+        corpus.push_str(&pod_manifest(&format!("e8y-{i}")));
+        corpus.push_str("---\n");
+    }
+    let corpus_mb = corpus.len() as f64 / 1e6;
+    let parse_iters: usize = if smoke { 20 } else { 100 };
+    let t0 = Instant::now();
+    for _ in 0..parse_iters {
+        let docs = hpk::yamlkit::parse_all(&corpus).unwrap();
+        assert_eq!(docs.len(), corpus_docs);
+    }
+    let parse_mb_per_s = corpus_mb * parse_iters as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "parse_all: {corpus_docs} docs/iter x {parse_iters} iters, {parse_mb_per_s:.1} MB/s"
+    );
+    results.push(("e8y_parse_mb_per_s", parse_mb_per_s));
+
+    let apply_objs: usize = if smoke { 500 } else { 5_000 };
+    let manifests: Vec<String> =
+        (0..apply_objs).map(|i| pod_manifest(&format!("e8y-apply-{i}"))).collect();
+    let api = hpk::kube::ApiServer::new();
+    let t0 = Instant::now();
+    for m in &manifests {
+        // The scenario loader's per-manifest cost: strict typed
+        // validation, then the store apply.
+        let parsed = hpk::kube::manifest::validate_manifest_text(m).unwrap();
+        assert_eq!(parsed.len(), 1);
+        api.apply_manifest(m).unwrap();
+    }
+    let apply_objs_per_s = apply_objs as f64 / t0.elapsed().as_secs_f64();
+    println!("validate+apply: {apply_objs} pods, {apply_objs_per_s:.0} objs/s\n");
+    results.push(("e8y_apply_objs_per_s", apply_objs_per_s));
+
     write_json(&results);
 }

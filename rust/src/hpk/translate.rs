@@ -103,16 +103,20 @@ pub fn pod_to_jobspec(pod: &Value) -> Result<JobSpec, String> {
     // Gang (PodGroup) membership: namespaced so two groups with the
     // same name in different namespaces stay distinct gangs.
     if let Some(group) = object::annotation(pod, super::annotations::POD_GROUP) {
-        let size: u32 = object::annotation(pod, super::annotations::POD_GROUP_SIZE)
+        let raw = object::annotation(pod, super::annotations::POD_GROUP_SIZE)
             .ok_or_else(|| {
                 format!(
                     "{} requires {}",
                     super::annotations::POD_GROUP,
                     super::annotations::POD_GROUP_SIZE
                 )
-            })?
-            .parse()
-            .map_err(|_| format!("bad {}", super::annotations::POD_GROUP_SIZE))?;
+            })?;
+        let size: u32 = raw.parse().ok().filter(|s| *s > 0).ok_or_else(|| {
+            format!(
+                "bad {} {raw:?}: expected a positive integer",
+                super::annotations::POD_GROUP_SIZE
+            )
+        })?;
         spec = spec.with_gang(&format!("{ns}/{group}"), size);
     }
     if object::annotation(pod, super::annotations::PREEMPTIBLE) == Some("true") {
@@ -240,6 +244,20 @@ spec:
             .entry_map("annotations")
             .set(super::super::annotations::POD_GROUP, Value::from("ring"));
         assert!(pod_to_jobspec(&pod).is_err());
+    }
+
+    #[test]
+    fn pod_group_size_zero_is_an_error() {
+        // A gang of zero would admit instantly and never place a pod.
+        let mut pod = pod_yaml();
+        pod.entry_map("metadata")
+            .entry_map("annotations")
+            .set(super::super::annotations::POD_GROUP, Value::from("ring"));
+        pod.entry_map("metadata")
+            .entry_map("annotations")
+            .set(super::super::annotations::POD_GROUP_SIZE, Value::from("0"));
+        let e = pod_to_jobspec(&pod).unwrap_err();
+        assert!(e.contains("\"0\""), "error names the bad value: {e}");
     }
 
     #[test]

@@ -1,0 +1,957 @@
+//! Typed manifest layer: `yamlkit::Value` documents -> object-model kinds.
+//!
+//! `kubectl apply` in the real world runs every document through
+//! schema validation before anything reaches a controller; our
+//! `ApiServer::apply_manifest` historically accepted any well-formed
+//! YAML, so typos (`replica:` for `replicas:`, a misindented
+//! `containers:`) silently produced objects the controllers ignored.
+//! This module is the strict front door used by `hpk apply` and the
+//! scenario harness (see `docs/SCENARIOS.md`): each known kind is
+//! checked field-by-field, unknown fields are rejected, and every
+//! error carries the dotted path of the offending node
+//! (`spec.template.spec.containers[0].image: ...`) in the spirit of
+//! upstream parsers like Argo's workflow validator.
+
+use crate::util::{parse_cpu_millis, parse_memory_bytes};
+use crate::workloads::trainer;
+use crate::yamlkit::Value;
+
+/// A validation error with the dotted path of the offending field.
+#[derive(Debug, Clone)]
+pub struct ManifestError {
+    pub path: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.path.is_empty() {
+            write!(f, "{}", self.message)
+        } else {
+            write!(f, "{}: {}", self.path, self.message)
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+pub(crate) fn fail<T>(path: &str, message: impl Into<String>) -> Result<T, ManifestError> {
+    Err(ManifestError { path: path.to_string(), message: message.into() })
+}
+
+pub(crate) fn join(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+pub(crate) fn idx(path: &str, i: usize) -> String {
+    format!("{path}[{i}]")
+}
+
+/// A validated manifest, tagged by kind. Unknown kinds pass through as
+/// [`Manifest::Other`] with only the envelope (kind + metadata.name)
+/// checked, so `hpk apply` stays usable for auxiliary objects.
+#[derive(Debug, Clone)]
+pub enum Manifest {
+    Pod(Value),
+    Deployment(Value),
+    Service(Value),
+    Workflow(Value),
+    CronWorkflow(Value),
+    TfJob(Value),
+    SparkApplication(Value),
+    HorizontalPodAutoscaler(Value),
+    Other(Value),
+}
+
+impl Manifest {
+    /// Validate one parsed document and classify it by kind.
+    pub fn from_value(doc: &Value) -> Result<Manifest, ManifestError> {
+        let kind = validate_envelope(doc)?;
+        match kind.as_str() {
+            "Pod" => {
+                validate_pod_spec(doc, "spec")?;
+                Ok(Manifest::Pod(doc.clone()))
+            }
+            "Deployment" => {
+                validate_deployment(doc)?;
+                Ok(Manifest::Deployment(doc.clone()))
+            }
+            "Service" => {
+                validate_service(doc)?;
+                Ok(Manifest::Service(doc.clone()))
+            }
+            "Workflow" => {
+                validate_workflow_spec(doc, "spec")?;
+                Ok(Manifest::Workflow(doc.clone()))
+            }
+            "CronWorkflow" => {
+                validate_cron_workflow(doc)?;
+                Ok(Manifest::CronWorkflow(doc.clone()))
+            }
+            "TFJob" => {
+                validate_tfjob(doc)?;
+                Ok(Manifest::TfJob(doc.clone()))
+            }
+            "SparkApplication" => {
+                validate_spark_application(doc)?;
+                Ok(Manifest::SparkApplication(doc.clone()))
+            }
+            "HorizontalPodAutoscaler" => {
+                validate_hpa(doc)?;
+                Ok(Manifest::HorizontalPodAutoscaler(doc.clone()))
+            }
+            _ => Ok(Manifest::Other(doc.clone())),
+        }
+    }
+
+    /// The Kubernetes kind string.
+    pub fn kind(&self) -> &str {
+        super::object::kind(self.value())
+    }
+
+    /// `metadata.name`.
+    pub fn name(&self) -> &str {
+        super::object::name(self.value())
+    }
+
+    /// `metadata.namespace`, defaulting to `default`.
+    pub fn namespace(&self) -> &str {
+        super::object::namespace(self.value())
+    }
+
+    /// The underlying document.
+    pub fn value(&self) -> &Value {
+        match self {
+            Manifest::Pod(v)
+            | Manifest::Deployment(v)
+            | Manifest::Service(v)
+            | Manifest::Workflow(v)
+            | Manifest::CronWorkflow(v)
+            | Manifest::TfJob(v)
+            | Manifest::SparkApplication(v)
+            | Manifest::HorizontalPodAutoscaler(v)
+            | Manifest::Other(v) => v,
+        }
+    }
+
+    /// Image references this manifest will run (empty for kinds whose
+    /// pods are synthesized by an operator from fixed images).
+    pub fn images(&self) -> Vec<String> {
+        match self {
+            Manifest::Pod(v) => super::object::container_images(v),
+            Manifest::Deployment(v) => v
+                .path("spec.template")
+                .map(super::object::container_images)
+                .unwrap_or_default(),
+            Manifest::Workflow(v) => workflow_images(v.path("spec")),
+            Manifest::CronWorkflow(v) => {
+                workflow_images(v.path("spec.workflowSpec"))
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+fn workflow_images(spec: Option<&Value>) -> Vec<String> {
+    let mut out = Vec::new();
+    let Some(templates) = spec.and_then(|s| s.get("templates")).and_then(Value::as_seq)
+    else {
+        return out;
+    };
+    for t in templates {
+        if let Some(image) = t.str_at("container.image") {
+            if !out.iter().any(|i| i == image) {
+                out.push(image.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Validate a full multi-kind manifest text: parse + typed validation,
+/// with document-qualified error messages. Null documents are skipped,
+/// mirroring `ApiServer::apply_manifest`.
+pub fn validate_manifest_text(text: &str) -> Result<Vec<Manifest>, String> {
+    let docs = crate::yamlkit::parse_all(text).map_err(|e| e.to_string())?;
+    let mut out = Vec::new();
+    for (i, doc) in docs.iter().enumerate() {
+        if matches!(doc, Value::Null) {
+            continue;
+        }
+        let m = Manifest::from_value(doc)
+            .map_err(|e| format!("document {}: {e}", i + 1))?;
+        out.push(m);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Shared field helpers.
+// ---------------------------------------------------------------------
+
+pub(crate) fn err_at(path: &str, message: &str) -> ManifestError {
+    ManifestError { path: path.to_string(), message: message.to_string() }
+}
+
+pub(crate) fn as_map<'a>(
+    v: &'a Value,
+    path: &str,
+) -> Result<&'a [(String, Value)], ManifestError> {
+    v.as_map().ok_or_else(|| err_at(path, "expected a mapping"))
+}
+
+pub(crate) fn as_seq<'a>(v: &'a Value, path: &str) -> Result<&'a [Value], ManifestError> {
+    v.as_seq().ok_or_else(|| err_at(path, "expected a sequence"))
+}
+
+pub(crate) fn as_str<'a>(v: &'a Value, path: &str) -> Result<&'a str, ManifestError> {
+    v.as_str().ok_or_else(|| err_at(path, "expected a string"))
+}
+
+pub(crate) fn nonempty_str<'a>(v: &'a Value, path: &str) -> Result<&'a str, ManifestError> {
+    let s = as_str(v, path)?;
+    if s.is_empty() {
+        return fail(path, "must not be empty");
+    }
+    Ok(s)
+}
+
+pub(crate) fn as_int(v: &Value, path: &str) -> Result<i64, ManifestError> {
+    v.as_i64().ok_or_else(|| err_at(path, "expected an integer"))
+}
+
+pub(crate) fn positive_int(v: &Value, path: &str) -> Result<i64, ManifestError> {
+    let n = as_int(v, path)?;
+    if n < 1 {
+        return fail(path, format!("must be >= 1, got {n}"));
+    }
+    Ok(n)
+}
+
+/// Require `key` in the mapping `v`.
+pub(crate) fn req<'a>(v: &'a Value, path: &str, key: &str) -> Result<&'a Value, ManifestError> {
+    v.get(key)
+        .ok_or_else(|| err_at(&join(path, key), "required field is missing"))
+}
+
+/// Reject unknown keys — the typo guard that motivates this module.
+pub(crate) fn check_keys(
+    v: &Value,
+    path: &str,
+    allowed: &[&str],
+) -> Result<(), ManifestError> {
+    for (k, _) in as_map(v, path)? {
+        if !allowed.contains(&k.as_str()) {
+            return fail(
+                &join(path, k),
+                format!("unknown field (allowed: {})", allowed.join(", ")),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Labels/annotations/nodeSelector: a mapping of scalar values.
+pub(crate) fn validate_string_map(v: &Value, path: &str) -> Result<(), ManifestError> {
+    for (k, val) in as_map(v, path)? {
+        if val.coerce_string().is_none() {
+            return fail(&join(path, k), "expected a scalar value");
+        }
+    }
+    Ok(())
+}
+
+fn validate_cpu(v: &Value, path: &str) -> Result<(), ManifestError> {
+    let s = match v.coerce_string() {
+        Some(s) => s,
+        None => return fail(path, "expected a CPU quantity (e.g. 2 or 500m)"),
+    };
+    if parse_cpu_millis(&s).is_none() {
+        return fail(path, format!("bad CPU quantity {s:?}"));
+    }
+    Ok(())
+}
+
+fn validate_memory(v: &Value, path: &str) -> Result<(), ManifestError> {
+    let s = match v.coerce_string() {
+        Some(s) => s,
+        None => return fail(path, "expected a memory quantity (e.g. 4Gi)"),
+    };
+    if parse_memory_bytes(&s).is_none() {
+        return fail(path, format!("bad memory quantity {s:?}"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Envelope: apiVersion / kind / metadata / spec / status.
+// ---------------------------------------------------------------------
+
+/// Validate the common object envelope; returns the kind. Unknown
+/// kinds get the envelope check only (their spec is free-form).
+fn validate_envelope(doc: &Value) -> Result<String, ManifestError> {
+    as_map(doc, "")?;
+    let kind = nonempty_str(req(doc, "", "kind")?, "kind")?.to_string();
+    let meta = req(doc, "", "metadata")?;
+    check_keys(
+        meta,
+        "metadata",
+        &[
+            "name",
+            "generateName",
+            "namespace",
+            "labels",
+            "annotations",
+            "uid",
+            "resourceVersion",
+            "creationTimestamp",
+            "ownerReferences",
+        ],
+    )?;
+    nonempty_str(req(meta, "metadata", "name")?, "metadata.name")?;
+    if let Some(ns) = meta.get("namespace") {
+        nonempty_str(ns, "metadata.namespace")?;
+    }
+    if let Some(labels) = meta.get("labels") {
+        validate_string_map(labels, "metadata.labels")?;
+    }
+    if let Some(ann) = meta.get("annotations") {
+        validate_string_map(ann, "metadata.annotations")?;
+    }
+    if KNOWN_KINDS.contains(&kind.as_str()) {
+        check_keys(doc, "", &["apiVersion", "kind", "metadata", "spec", "status"])?;
+        req(doc, "", "spec")?;
+    }
+    Ok(kind)
+}
+
+const KNOWN_KINDS: &[&str] = &[
+    "Pod",
+    "Deployment",
+    "Service",
+    "Workflow",
+    "CronWorkflow",
+    "TFJob",
+    "SparkApplication",
+    "HorizontalPodAutoscaler",
+];
+
+// ---------------------------------------------------------------------
+// Pods and pod templates.
+// ---------------------------------------------------------------------
+
+/// Validate a pod `spec` (also used for Deployment pod templates).
+fn validate_pod_spec(parent: &Value, path: &str) -> Result<(), ManifestError> {
+    let spec = req(parent, parent_of(path), leaf_of(path))?;
+    check_keys(
+        spec,
+        path,
+        &[
+            "containers",
+            "nodeSelector",
+            "restartPolicy",
+            "terminationGracePeriodSeconds",
+            "serviceAccountName",
+            "hostname",
+            "subdomain",
+        ],
+    )?;
+    let cpath = join(path, "containers");
+    let containers = as_seq(req(spec, path, "containers")?, &cpath)?;
+    if containers.is_empty() {
+        return fail(&cpath, "at least one container is required");
+    }
+    for (i, c) in containers.iter().enumerate() {
+        validate_container(c, &idx(&cpath, i), true)?;
+    }
+    if let Some(sel) = spec.get("nodeSelector") {
+        validate_string_map(sel, &join(path, "nodeSelector"))?;
+    }
+    Ok(())
+}
+
+fn parent_of(path: &str) -> &str {
+    path.rsplit_once('.').map_or("", |(p, _)| p)
+}
+
+fn leaf_of(path: &str) -> &str {
+    path.rsplit_once('.').map_or(path, |(_, l)| l)
+}
+
+/// One container entry. Argo template containers get `name` defaulted
+/// to `main` by the controller, so it is only required for pods.
+fn validate_container(
+    c: &Value,
+    path: &str,
+    name_required: bool,
+) -> Result<(), ManifestError> {
+    check_keys(
+        c,
+        path,
+        &[
+            "name",
+            "image",
+            "command",
+            "args",
+            "env",
+            "resources",
+            "ports",
+            "workingDir",
+        ],
+    )?;
+    if name_required {
+        nonempty_str(req(c, path, "name")?, &join(path, "name"))?;
+    } else if let Some(n) = c.get("name") {
+        nonempty_str(n, &join(path, "name"))?;
+    }
+    nonempty_str(req(c, path, "image")?, &join(path, "image"))?;
+    for key in ["command", "args"] {
+        if let Some(v) = c.get(key) {
+            let p = join(path, key);
+            for (i, a) in as_seq(v, &p)?.iter().enumerate() {
+                if a.coerce_string().is_none() {
+                    return fail(&idx(&p, i), "expected a scalar argument");
+                }
+            }
+        }
+    }
+    if let Some(env) = c.get("env") {
+        let p = join(path, "env");
+        for (i, e) in as_seq(env, &p)?.iter().enumerate() {
+            let ep = idx(&p, i);
+            check_keys(e, &ep, &["name", "value"])?;
+            nonempty_str(req(e, &ep, "name")?, &join(&ep, "name"))?;
+            if let Some(v) = e.get("value") {
+                if v.coerce_string().is_none() {
+                    return fail(&join(&ep, "value"), "expected a scalar value");
+                }
+            }
+        }
+    }
+    if let Some(ports) = c.get("ports") {
+        let p = join(path, "ports");
+        for (i, port) in as_seq(ports, &p)?.iter().enumerate() {
+            let pp = idx(&p, i);
+            check_keys(port, &pp, &["name", "containerPort", "protocol"])?;
+            let n = positive_int(
+                req(port, &pp, "containerPort")?,
+                &join(&pp, "containerPort"),
+            )?;
+            if n > 65535 {
+                return fail(&join(&pp, "containerPort"), "port out of range");
+            }
+        }
+    }
+    if let Some(res) = c.get("resources") {
+        let p = join(path, "resources");
+        check_keys(res, &p, &["requests", "limits"])?;
+        for key in ["requests", "limits"] {
+            if let Some(r) = res.get(key) {
+                let rp = join(&p, key);
+                check_keys(r, &rp, &["cpu", "memory"])?;
+                if let Some(cpu) = r.get("cpu") {
+                    validate_cpu(cpu, &join(&rp, "cpu"))?;
+                }
+                if let Some(mem) = r.get("memory") {
+                    validate_memory(mem, &join(&rp, "memory"))?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Deployment / Service / HPA.
+// ---------------------------------------------------------------------
+
+fn validate_deployment(doc: &Value) -> Result<(), ManifestError> {
+    let spec = req(doc, "", "spec")?;
+    check_keys(spec, "spec", &["replicas", "selector", "template"])?;
+    if let Some(r) = spec.get("replicas") {
+        let n = as_int(r, "spec.replicas")?;
+        if n < 0 {
+            return fail("spec.replicas", "must be >= 0");
+        }
+    }
+    let selector = req(spec, "spec", "selector")?;
+    check_keys(selector, "spec.selector", &["matchLabels"])?;
+    let match_labels = req(selector, "spec.selector", "matchLabels")?;
+    validate_string_map(match_labels, "spec.selector.matchLabels")?;
+    let template = req(spec, "spec", "template")?;
+    check_keys(template, "spec.template", &["metadata", "spec"])?;
+    validate_pod_spec(template, "spec.template.spec")?;
+    // The selector must actually select the template's pods, or the
+    // ReplicaSet will spawn replicas it can never count.
+    let labels = template.path("metadata.labels").cloned().unwrap_or_else(Value::map);
+    for (k, v) in as_map(match_labels, "spec.selector.matchLabels")? {
+        let want = v.coerce_string().unwrap_or_default();
+        let got = labels.get(k).and_then(Value::coerce_string);
+        if got.as_deref() != Some(want.as_str()) {
+            return fail(
+                "spec.selector.matchLabels",
+                format!("selector {k}={want} does not match spec.template.metadata.labels"),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn validate_service(doc: &Value) -> Result<(), ManifestError> {
+    let spec = req(doc, "", "spec")?;
+    check_keys(spec, "spec", &["selector", "ports", "clusterIP", "type"])?;
+    if let Some(sel) = spec.get("selector") {
+        validate_string_map(sel, "spec.selector")?;
+    }
+    if let Some(ports) = spec.get("ports") {
+        for (i, port) in as_seq(ports, "spec.ports")?.iter().enumerate() {
+            let pp = idx("spec.ports", i);
+            check_keys(port, &pp, &["name", "port", "targetPort", "protocol"])?;
+            positive_int(req(port, &pp, "port")?, &join(&pp, "port"))?;
+        }
+    }
+    Ok(())
+}
+
+fn validate_hpa(doc: &Value) -> Result<(), ManifestError> {
+    let spec = req(doc, "", "spec")?;
+    check_keys(
+        spec,
+        "spec",
+        &[
+            "scaleTargetRef",
+            "minReplicas",
+            "maxReplicas",
+            "targetRequestsPerSecond",
+            "stabilizationWindowMs",
+        ],
+    )?;
+    let target = req(spec, "spec", "scaleTargetRef")?;
+    check_keys(target, "spec.scaleTargetRef", &["apiVersion", "kind", "name"])?;
+    nonempty_str(
+        req(target, "spec.scaleTargetRef", "name")?,
+        "spec.scaleTargetRef.name",
+    )?;
+    let min = match spec.get("minReplicas") {
+        Some(v) => positive_int(v, "spec.minReplicas")?,
+        None => 1,
+    };
+    let max = positive_int(req(spec, "spec", "maxReplicas")?, "spec.maxReplicas")?;
+    if max < min {
+        return fail("spec.maxReplicas", "must be >= spec.minReplicas");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Argo Workflow / CronWorkflow.
+// ---------------------------------------------------------------------
+
+/// Validate a workflow spec at `path` (either `spec` of a Workflow or
+/// `spec.workflowSpec` of a CronWorkflow).
+fn validate_workflow_spec(parent: &Value, path: &str) -> Result<(), ManifestError> {
+    let spec = match parent.path(path) {
+        Some(s) => s,
+        None => return fail(path, "required field is missing"),
+    };
+    check_keys(spec, path, &["entrypoint", "arguments", "templates"])?;
+    let ep_path = join(path, "entrypoint");
+    let entrypoint = nonempty_str(req(spec, path, "entrypoint")?, &ep_path)?;
+    if let Some(args) = spec.get("arguments") {
+        validate_arguments(args, &join(path, "arguments"))?;
+    }
+    let tpath = join(path, "templates");
+    let templates = as_seq(req(spec, path, "templates")?, &tpath)?;
+    let mut names: Vec<&str> = Vec::new();
+    for (i, t) in templates.iter().enumerate() {
+        let tp = idx(&tpath, i);
+        check_keys(t, &tp, &["name", "container", "dag", "steps", "inputs", "metadata"])?;
+        let name = nonempty_str(req(t, &tp, "name")?, &join(&tp, "name"))?;
+        if names.contains(&name) {
+            return fail(&join(&tp, "name"), format!("duplicate template {name:?}"));
+        }
+        names.push(name);
+        let bodies = ["container", "dag", "steps"]
+            .iter()
+            .filter(|k| t.get(k).is_some())
+            .count();
+        if bodies != 1 {
+            return fail(
+                &tp,
+                "template must have exactly one of container, dag or steps",
+            );
+        }
+        if let Some(c) = t.get("container") {
+            validate_container(c, &join(&tp, "container"), false)?;
+        }
+    }
+    // Second pass: every reference (entrypoint, DAG tasks, steps) must
+    // resolve to a declared template.
+    if !names.contains(&entrypoint) {
+        return fail(
+            &join(path, "entrypoint"),
+            format!("references unknown template {entrypoint:?}"),
+        );
+    }
+    for (i, t) in templates.iter().enumerate() {
+        let tp = idx(&tpath, i);
+        if let Some(dag) = t.get("dag") {
+            validate_dag(dag, &join(&tp, "dag"), &names)?;
+        }
+        if let Some(steps) = t.get("steps") {
+            validate_steps(steps, &join(&tp, "steps"), &names)?;
+        }
+    }
+    Ok(())
+}
+
+fn validate_arguments(args: &Value, path: &str) -> Result<(), ManifestError> {
+    check_keys(args, path, &["parameters"])?;
+    if let Some(params) = args.get("parameters") {
+        let pp = join(path, "parameters");
+        for (i, p) in as_seq(params, &pp)?.iter().enumerate() {
+            let ip = idx(&pp, i);
+            check_keys(p, &ip, &["name", "value"])?;
+            nonempty_str(req(p, &ip, "name")?, &join(&ip, "name"))?;
+        }
+    }
+    Ok(())
+}
+
+fn validate_dag(dag: &Value, path: &str, templates: &[&str]) -> Result<(), ManifestError> {
+    check_keys(dag, path, &["tasks"])?;
+    let tpath = join(path, "tasks");
+    let tasks = as_seq(req(dag, path, "tasks")?, &tpath)?;
+    let mut task_names: Vec<&str> = Vec::new();
+    for (i, t) in tasks.iter().enumerate() {
+        let tp = idx(&tpath, i);
+        check_keys(
+            t,
+            &tp,
+            &["name", "template", "dependencies", "arguments", "withItems", "withParam"],
+        )?;
+        let name = nonempty_str(req(t, &tp, "name")?, &join(&tp, "name"))?;
+        if task_names.contains(&name) {
+            return fail(&join(&tp, "name"), format!("duplicate task {name:?}"));
+        }
+        task_names.push(name);
+        let tmpl = nonempty_str(req(t, &tp, "template")?, &join(&tp, "template"))?;
+        if !templates.contains(&tmpl) {
+            return fail(
+                &join(&tp, "template"),
+                format!("references unknown template {tmpl:?}"),
+            );
+        }
+        if let Some(args) = t.get("arguments") {
+            validate_arguments(args, &join(&tp, "arguments"))?;
+        }
+        if t.get("withItems").is_some() && t.get("withParam").is_some() {
+            return fail(&tp, "withItems and withParam are mutually exclusive");
+        }
+    }
+    // Dependencies may point forward, so resolve them after collecting
+    // all task names.
+    for (i, t) in tasks.iter().enumerate() {
+        if let Some(deps) = t.get("dependencies") {
+            let dp = join(&idx(&tpath, i), "dependencies");
+            for (j, d) in as_seq(deps, &dp)?.iter().enumerate() {
+                let dep = as_str(d, &idx(&dp, j))?;
+                if !task_names.contains(&dep) {
+                    return fail(
+                        &idx(&dp, j),
+                        format!("references unknown task {dep:?}"),
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn validate_steps(
+    steps: &Value,
+    path: &str,
+    templates: &[&str],
+) -> Result<(), ManifestError> {
+    for (g, group) in as_seq(steps, path)?.iter().enumerate() {
+        let gp = idx(path, g);
+        // A group is a list of parallel steps; a bare step is also
+        // accepted (the engine treats it as a group of one).
+        let group_steps: &[Value] = group.as_seq().unwrap_or_else(|| std::slice::from_ref(group));
+        for (s, step) in group_steps.iter().enumerate() {
+            let sp = if group.as_seq().is_some() { idx(&gp, s) } else { gp.clone() };
+            check_keys(step, &sp, &["name", "template", "arguments"])?;
+            nonempty_str(req(step, &sp, "name")?, &join(&sp, "name"))?;
+            let tmpl = nonempty_str(req(step, &sp, "template")?, &join(&sp, "template"))?;
+            if !templates.contains(&tmpl) {
+                return fail(
+                    &join(&sp, "template"),
+                    format!("references unknown template {tmpl:?}"),
+                );
+            }
+            if let Some(args) = step.get("arguments") {
+                validate_arguments(args, &join(&sp, "arguments"))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn validate_cron_workflow(doc: &Value) -> Result<(), ManifestError> {
+    let spec = req(doc, "", "spec")?;
+    check_keys(
+        spec,
+        "spec",
+        &["schedule", "suspend", "concurrencyPolicy", "workflowSpec"],
+    )?;
+    let schedule = nonempty_str(req(spec, "spec", "schedule")?, "spec.schedule")?;
+    if let Err(e) = crate::operators::argo::Schedule::parse(schedule) {
+        return fail("spec.schedule", e);
+    }
+    if let Some(policy) = spec.get("concurrencyPolicy") {
+        let p = as_str(policy, "spec.concurrencyPolicy")?;
+        if !["Allow", "Forbid", "Replace"].contains(&p) {
+            return fail(
+                "spec.concurrencyPolicy",
+                format!("unknown policy {p:?} (Allow, Forbid or Replace)"),
+            );
+        }
+    }
+    validate_workflow_spec(doc, "spec.workflowSpec")
+}
+
+// ---------------------------------------------------------------------
+// TFJob / SparkApplication.
+// ---------------------------------------------------------------------
+
+fn validate_tfjob(doc: &Value) -> Result<(), ManifestError> {
+    let spec = req(doc, "", "spec")?;
+    check_keys(
+        spec,
+        "spec",
+        &[
+            "variant",
+            "steps",
+            "learningRate",
+            "seed",
+            "outputDir",
+            "timeLimit",
+            "tfReplicaSpecs",
+        ],
+    )?;
+    if let Some(v) = spec.get("variant") {
+        let variant = as_str(v, "spec.variant")?;
+        if trainer::variant_dims(variant).is_none() {
+            return fail("spec.variant", format!("unknown model variant {variant:?}"));
+        }
+    }
+    if let Some(steps) = spec.get("steps") {
+        positive_int(steps, "spec.steps")?;
+    }
+    let replicas = req(spec, "spec", "tfReplicaSpecs")?;
+    check_keys(replicas, "spec.tfReplicaSpecs", &["Worker"])?;
+    let worker = req(replicas, "spec.tfReplicaSpecs", "Worker")?;
+    check_keys(worker, "spec.tfReplicaSpecs.Worker", &["replicas", "cpu"])?;
+    if let Some(r) = worker.get("replicas") {
+        positive_int(r, "spec.tfReplicaSpecs.Worker.replicas")?;
+    }
+    if let Some(cpu) = worker.get("cpu") {
+        validate_cpu(cpu, "spec.tfReplicaSpecs.Worker.cpu")?;
+    }
+    Ok(())
+}
+
+fn validate_spark_application(doc: &Value) -> Result<(), ManifestError> {
+    let spec = req(doc, "", "spec")?;
+    check_keys(
+        spec,
+        "spec",
+        &["type", "mainClass", "arguments", "driver", "executor", "s3Service"],
+    )?;
+    nonempty_str(req(spec, "spec", "mainClass")?, "spec.mainClass")?;
+    if let Some(args) = spec.get("arguments") {
+        for (i, a) in as_seq(args, "spec.arguments")?.iter().enumerate() {
+            if a.coerce_string().is_none() {
+                return fail(&idx("spec.arguments", i), "expected a scalar argument");
+            }
+        }
+    }
+    for role in ["driver", "executor"] {
+        if let Some(r) = spec.get(role) {
+            let rp = join("spec", role);
+            check_keys(r, &rp, &["instances", "cores", "memory", "memoryOverhead", "labels"])?;
+            if role == "driver" && r.get("instances").is_some() {
+                return fail(&join(&rp, "instances"), "driver has exactly one instance");
+            }
+            if let Some(n) = r.get("instances") {
+                positive_int(n, &join(&rp, "instances"))?;
+            }
+            if let Some(c) = r.get("cores") {
+                positive_int(c, &join(&rp, "cores"))?;
+            }
+            for key in ["memory", "memoryOverhead"] {
+                if let Some(m) = r.get(key) {
+                    validate_memory(m, &join(&rp, key))?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlkit::parse_one;
+
+    fn check(src: &str) -> Result<Manifest, ManifestError> {
+        Manifest::from_value(&parse_one(src).unwrap())
+    }
+
+    #[test]
+    fn valid_pod_classifies() {
+        let m = check(
+            "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: main\n    image: busybox:latest\n    resources:\n      requests:\n        cpu: 500m\n        memory: 1Gi\n",
+        )
+        .unwrap();
+        assert!(matches!(m, Manifest::Pod(_)));
+        assert_eq!(m.name(), "p");
+        assert_eq!(m.images(), vec!["busybox:latest".to_string()]);
+    }
+
+    #[test]
+    fn unknown_field_rejected_with_path() {
+        let e = check(
+            "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: main\n    image: i\n    imagePullPolicy: Always\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.containers[0].imagePullPolicy", "got: {e}");
+        assert!(e.message.contains("unknown field"), "got: {e}");
+    }
+
+    #[test]
+    fn missing_image_rejected_with_path() {
+        let e = check(
+            "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: main\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.containers[0].image", "got: {e}");
+    }
+
+    #[test]
+    fn bad_quantity_rejected() {
+        let e = check(
+            "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: main\n    image: i\n    resources:\n      requests:\n        memory: 4Gib\n",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.path, "spec.containers[0].resources.requests.memory",
+            "got: {e}"
+        );
+    }
+
+    #[test]
+    fn metadata_name_required() {
+        let e = check("kind: Pod\nmetadata: {}\nspec: {}\n").unwrap_err();
+        assert_eq!(e.path, "metadata.name", "got: {e}");
+    }
+
+    #[test]
+    fn deployment_selector_must_match_template() {
+        let e = check(
+            "kind: Deployment\nmetadata:\n  name: d\nspec:\n  replicas: 2\n  selector:\n    matchLabels:\n      app: web\n  template:\n    metadata:\n      labels:\n        app: api\n    spec:\n      containers:\n      - name: c\n        image: i\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.selector.matchLabels", "got: {e}");
+    }
+
+    #[test]
+    fn workflow_refs_must_resolve() {
+        let e = check(
+            "kind: Workflow\nmetadata:\n  name: w\nspec:\n  entrypoint: main\n  templates:\n  - name: main\n    dag:\n      tasks:\n      - name: a\n        template: missing\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.templates[0].dag.tasks[0].template", "got: {e}");
+        let e = check(
+            "kind: Workflow\nmetadata:\n  name: w\nspec:\n  entrypoint: nope\n  templates:\n  - name: main\n    container:\n      image: i\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.entrypoint", "got: {e}");
+    }
+
+    #[test]
+    fn workflow_template_needs_exactly_one_body() {
+        let e = check(
+            "kind: Workflow\nmetadata:\n  name: w\nspec:\n  entrypoint: main\n  templates:\n  - name: main\n    container:\n      image: i\n    dag:\n      tasks: []\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.templates[0]", "got: {e}");
+    }
+
+    #[test]
+    fn cron_workflow_schedule_validated() {
+        let e = check(
+            "kind: CronWorkflow\nmetadata:\n  name: c\nspec:\n  schedule: \"not cron\"\n  workflowSpec:\n    entrypoint: main\n    templates:\n    - name: main\n      container:\n        image: i\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.schedule", "got: {e}");
+    }
+
+    #[test]
+    fn tfjob_variant_and_replicas_validated() {
+        let good = crate::operators::training::operator::tfjob_manifest(
+            "t", "default", "mlp-small", 2, 10, 0.1, "/m",
+        );
+        assert!(matches!(check(&good).unwrap(), Manifest::TfJob(_)));
+        let e = check(
+            "kind: TFJob\nmetadata:\n  name: t\nspec:\n  variant: mlp-huge\n  tfReplicaSpecs:\n    Worker:\n      replicas: 2\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.variant", "got: {e}");
+        let e = check(
+            "kind: TFJob\nmetadata:\n  name: t\nspec:\n  tfReplicaSpecs:\n    Worker:\n      replicas: 0\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.path, "spec.tfReplicaSpecs.Worker.replicas", "got: {e}");
+    }
+
+    #[test]
+    fn spark_application_manifest_validates() {
+        let src = crate::operators::spark::operator::spark_application_manifest(
+            "tpcds", "default", "datagen", 1, 8, "", 3, 1, "8000m",
+        );
+        let m = check(&src).unwrap();
+        assert!(matches!(m, Manifest::SparkApplication(_)));
+    }
+
+    #[test]
+    fn unknown_kind_passes_envelope_only() {
+        let m = check("kind: ConfigMap\nmetadata:\n  name: cm\ndata:\n  k: v\n")
+            .unwrap();
+        assert!(matches!(m, Manifest::Other(_)));
+        assert_eq!(m.kind(), "ConfigMap");
+    }
+
+    #[test]
+    fn validate_text_prefixes_document() {
+        let err = validate_manifest_text(
+            "kind: Pod\nmetadata:\n  name: a\nspec:\n  containers:\n  - name: c\n    image: i\n---\nkind: Pod\nmetadata:\n  name: b\nspec: {}\n",
+        )
+        .unwrap_err();
+        assert!(err.starts_with("document 2:"), "got: {err}");
+        assert!(err.contains("spec.containers"), "got: {err}");
+    }
+
+    #[test]
+    fn deployment_images_come_from_template() {
+        let m = check(
+            "kind: Deployment\nmetadata:\n  name: d\nspec:\n  replicas: 1\n  selector:\n    matchLabels:\n      app: w\n  template:\n    metadata:\n      labels:\n        app: w\n    spec:\n      containers:\n      - name: c\n        image: pause:3.9\n",
+        )
+        .unwrap();
+        assert_eq!(m.images(), vec!["pause:3.9".to_string()]);
+    }
+}

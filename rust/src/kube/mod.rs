@@ -108,6 +108,7 @@ pub mod controllers;
 pub mod coredns;
 pub mod informer;
 pub mod kubelet;
+pub mod manifest;
 pub mod object;
 pub mod scheduler;
 pub mod store;

@@ -145,6 +145,19 @@ pub fn container_resources<'a>(pod: &'a Value, which: &str) -> Vec<&'a str> {
     out
 }
 
+/// The image references of every container in a pod (or pod template):
+/// `spec.containers[*].image`, in declaration order.
+pub fn container_images(pod: &Value) -> Vec<String> {
+    let containers = pod
+        .path("spec.containers")
+        .and_then(|c| c.as_seq())
+        .unwrap_or(&[]);
+    containers
+        .iter()
+        .filter_map(|c| c.str_at("image").map(|s| s.to_string()))
+        .collect()
+}
+
 /// Total CPU request of a pod in millicores and memory in bytes
 /// (defaults per unset container: 100m / 128Mi, mirroring typical
 /// LimitRange defaults so scheduling always has a number).
@@ -283,6 +296,16 @@ mod tests {
         assert_eq!(namespace(&p), "prod");
         assert_eq!(full_name(&p), "prod/web-1");
         assert_eq!(labels(&p).len(), 2);
+    }
+
+    #[test]
+    fn container_images_in_order() {
+        let p = parse_one(
+            "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: a\n    image: nginx:1.25\n  - name: b\n    image: busybox:latest\n",
+        )
+        .unwrap();
+        assert_eq!(container_images(&p), vec!["nginx:1.25", "busybox:latest"]);
+        assert!(container_images(&pod()).is_empty(), "imageless containers skipped");
     }
 
     #[test]

@@ -26,6 +26,9 @@
 //! - [`runtime`] — PJRT loading/execution of the AOT compute artifacts.
 //! - [`workloads`] — container-image → entrypoint dispatch.
 //! - [`operators`] — Argo Workflows, Spark, Training, MinIO, OpenEBS.
+//! - [`scenario`] — declarative end-to-end tests: a directory of
+//!   manifests plus an `expect.yaml`, replayed on a driven clock
+//!   (`hpk scenario run <dir>`; see `docs/SCENARIOS.md`).
 //!
 //! Time crate-wide is *simulated* milliseconds on [`hpcsim::Clock`] —
 //! scaled against the wall clock for interactive runs, or **driven**
@@ -44,6 +47,7 @@ pub mod traffic;
 pub mod runtime;
 pub mod workloads;
 pub mod operators;
+pub mod scenario;
 pub mod testbed;
 pub mod util;
 

@@ -5,8 +5,10 @@
 //! Usage:
 //!   hpk demo                         # quickstart deployment + teardown
 //!   hpk apply <file.yaml> [...]      # kubectl-style apply + watch
+//!   hpk scenario run <dir> [...]     # replay scenario dirs (docs/SCENARIOS.md)
 //!   hpk --nodes 8 --cpus 16 apply f.yaml
 
+use hpk::kube::manifest;
 use hpk::kube::object;
 use hpk::testbed;
 
@@ -39,7 +41,9 @@ fn parse_cli() -> Result<Cli, String> {
                     .map_err(|_| "bad --cpus")?
             }
             "--help" | "-h" => {
-                println!("hpk [--nodes N] [--cpus C] <demo|apply <files...>>");
+                println!(
+                    "hpk [--nodes N] [--cpus C] <demo|apply <files...>|scenario run <dirs...>>"
+                );
                 std::process::exit(0);
             }
             other => positional.push(other.to_string()),
@@ -74,6 +78,36 @@ fn print_squeue(tb: &testbed::Testbed) {
     }
 }
 
+/// `hpk scenario run <dir> [...]`: replay each scenario directory on a
+/// fresh driven-clock testbed and print its report. Exit code is the
+/// number of failed directories (0 = all passed).
+fn run_scenarios(args: &[String]) -> i32 {
+    let dirs = match args.split_first() {
+        Some((verb, rest)) if verb == "run" && !rest.is_empty() => rest,
+        _ => {
+            eprintln!("usage: hpk scenario run <dir> [<dir>...]");
+            return 2;
+        }
+    };
+    let mut failed = 0;
+    for dir in dirs {
+        println!("=== {dir} ===");
+        match hpk::scenario::run_dir(std::path::Path::new(dir)) {
+            Ok(outcome) => {
+                print!("{}", outcome.report);
+                if !outcome.passed {
+                    failed += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                failed += 1;
+            }
+        }
+    }
+    failed
+}
+
 fn main() {
     let cli = match parse_cli() {
         Ok(c) => c,
@@ -82,6 +116,12 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // `scenario` boots its own driven-clock testbed per directory
+    // (cluster shape comes from each expect.yaml), so handle it before
+    // the interactive deployment below.
+    if cli.command == "scenario" {
+        std::process::exit(run_scenarios(&cli.args));
+    }
     println!(
         "booting HPK on a {}x{}-cpu simulated cluster...",
         cli.nodes, cli.cpus
@@ -106,6 +146,12 @@ fn main() {
                         std::process::exit(1);
                     }
                 };
+                // Typed validation first: path-qualified errors beat a
+                // pod silently pending on a half-understood manifest.
+                if let Err(e) = manifest::validate_manifest_text(&text) {
+                    eprintln!("apply {file}: {e}");
+                    std::process::exit(1);
+                }
                 match tb.cp.kubectl_apply(&text) {
                     Ok(objs) => {
                         for o in objs {

@@ -14,6 +14,11 @@
 //! `withParam` fan-out over a previous step's output items (steps write
 //! a JSON array to `<pod_dir>/outputs/result.json`). Artifact passing
 //! (S3-backed files between steps) is out of scope (DESIGN.md).
+//!
+//! Workflow manifests are validated up front by
+//! [`crate::kube::manifest`] (template references, strict fields), and
+//! `examples/scenarios/argo-docking` replays a full docking DAG
+//! end-to-end through the scenario harness (`docs/SCENARIOS.md`).
 
 mod controller;
 pub mod cron;

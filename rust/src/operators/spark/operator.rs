@@ -4,6 +4,10 @@
 //! Spark applications on Kubernetes by defining the SparkApplication
 //! CRD. It handles the entire lifecycle of execution, including
 //! submission, scaling, and cleanup" (SS4.1).
+//!
+//! SparkApplication manifests are validated up front by
+//! [`crate::kube::manifest`], and [`spark_application_manifest`] sits
+//! in the golden round-trip corpus of `tests/yaml_roundtrip.rs`.
 
 use crate::kube::controllers::{Context, Reconciler, Runner};
 use crate::kube::informer::WatchSpec;

@@ -12,18 +12,23 @@ pub struct TfJobOperator {
     pub registry: Arc<TrainerRegistry>,
 }
 
-/// Install into a control plane ("helm install training-operator"):
-/// requires [`super::install_runtime_services`] to have provided the
-/// PJRT runtime and registry in the hub.
+/// Install into a control plane ("helm install training-operator").
+/// Reconciling TFJobs into pods only needs a coordinator registry, so
+/// one is created here if [`super::install_runtime_services`] has not
+/// provided one (no PJRT backend); the stock worker entrypoint still
+/// fails fast inside its container without the PJRT runtime.
 pub fn install(cp: &crate::hpk::ControlPlane) {
     super::register_trainer_image(&cp.runtime);
     super::register_ingest_image(&cp.runtime);
     super::serving::register_serving_image(&cp.runtime);
-    let registry = cp
-        .runtime
-        .hub
-        .get::<TrainerRegistry>()
-        .expect("install_runtime_services must run first");
+    let registry = match cp.runtime.hub.get::<TrainerRegistry>() {
+        Some(r) => r,
+        None => {
+            let r = Arc::new(TrainerRegistry::new());
+            cp.runtime.hub.insert(r.clone());
+            r
+        }
+    };
     let api = cp.api.clone();
     std::thread::Builder::new()
         .name("training-operator".to_string())

@@ -1,0 +1,477 @@
+//! `expect.yaml`: the declared outcome of a scenario directory.
+//!
+//! The schema is documented in `docs/SCENARIOS.md`; parsing reuses the
+//! strict field helpers of [`crate::kube::manifest`] so a typo in an
+//! expectation fails with the same path-qualified errors as a typo in
+//! a manifest.
+
+use crate::kube::manifest::{
+    as_int, as_map, as_seq, check_keys, fail, idx, join, nonempty_str,
+    positive_int, req, validate_string_map, ManifestError,
+};
+use crate::yamlkit::Value;
+
+/// Entrypoint behaviour of a scenario-declared simulated image.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Behavior {
+    /// Sleep for `ms` (+ deterministic per-pod jitter), then exit 0.
+    Sleep,
+    /// Exit 0 immediately.
+    Succeed,
+    /// Exit non-zero immediately.
+    Fail,
+}
+
+/// A simulated container image declared by the scenario.
+#[derive(Debug, Clone)]
+pub struct ImageDecl {
+    pub name: String,
+    pub behavior: Behavior,
+    pub ms: u64,
+    pub jitter_ms: u64,
+}
+
+/// `pods`: one pod must be in the given phase.
+#[derive(Debug, Clone)]
+pub struct PodExpect {
+    pub namespace: String,
+    pub name: String,
+    pub phase: String,
+}
+
+/// `podCount`: exactly `count` pods in `phase` (optionally filtered by
+/// a label selector).
+#[derive(Debug, Clone)]
+pub struct PodCountExpect {
+    pub phase: String,
+    pub count: usize,
+    pub selector: Vec<(String, String)>,
+}
+
+/// `workflows`: an Argo Workflow must reach a phase (and optionally a
+/// `n/m` progress string).
+#[derive(Debug, Clone)]
+pub struct WorkflowExpect {
+    pub namespace: String,
+    pub name: String,
+    pub phase: String,
+    pub progress: Option<String>,
+}
+
+/// `tfjobs` / `sparkApplications`: a CRD must reach a state.
+#[derive(Debug, Clone)]
+pub struct StateExpect {
+    pub namespace: String,
+    pub name: String,
+    pub state: String,
+}
+
+/// `deployments`: `status.readyReplicas` must equal `replicas`.
+#[derive(Debug, Clone)]
+pub struct ReplicasExpect {
+    pub namespace: String,
+    pub name: String,
+    pub replicas: i64,
+}
+
+/// `services`: the service must have exactly `endpoints` addresses.
+#[derive(Debug, Clone)]
+pub struct EndpointsExpect {
+    pub namespace: String,
+    pub name: String,
+    pub endpoints: usize,
+}
+
+/// `slurm`: queue/accounting assertions.
+#[derive(Debug, Clone, Default)]
+pub struct SlurmExpect {
+    pub running: Option<usize>,
+    pub pending: Option<usize>,
+    pub completed_min: Option<usize>,
+    pub queue_empty: bool,
+}
+
+/// One `checks[i]` entry: assertions that must all hold within
+/// `within_ms` of simulated time from the end of the previous check.
+#[derive(Debug, Clone)]
+pub struct Check {
+    pub within_ms: u64,
+    pub pods: Vec<PodExpect>,
+    pub pod_counts: Vec<PodCountExpect>,
+    pub workflows: Vec<WorkflowExpect>,
+    pub tfjobs: Vec<StateExpect>,
+    pub spark_applications: Vec<StateExpect>,
+    pub deployments: Vec<ReplicasExpect>,
+    pub services: Vec<EndpointsExpect>,
+    pub slurm: Option<SlurmExpect>,
+}
+
+impl Check {
+    fn assertions(&self) -> usize {
+        self.pods.len()
+            + self.pod_counts.len()
+            + self.workflows.len()
+            + self.tfjobs.len()
+            + self.spark_applications.len()
+            + self.deployments.len()
+            + self.services.len()
+            + usize::from(self.slurm.is_some())
+    }
+}
+
+/// The whole parsed `expect.yaml`.
+#[derive(Debug, Clone)]
+pub struct ExpectFile {
+    pub name: Option<String>,
+    pub nodes: usize,
+    pub cpus: u32,
+    pub seed: u64,
+    pub images: Vec<ImageDecl>,
+    pub checks: Vec<Check>,
+}
+
+impl ExpectFile {
+    /// Parse and validate an `expect.yaml` document.
+    pub fn parse(src: &str) -> Result<ExpectFile, String> {
+        let doc = crate::yamlkit::parse_one(src).map_err(|e| e.to_string())?;
+        from_value(&doc).map_err(|e| e.to_string())
+    }
+}
+
+fn from_value(doc: &Value) -> Result<ExpectFile, ManifestError> {
+    check_keys(doc, "", &["name", "cluster", "seed", "images", "checks"])?;
+    let name = match doc.get("name") {
+        Some(n) => Some(nonempty_str(n, "name")?.to_string()),
+        None => None,
+    };
+    let (mut nodes, mut cpus) = (4usize, 8u32);
+    if let Some(cluster) = doc.get("cluster") {
+        check_keys(cluster, "cluster", &["nodes", "cpus"])?;
+        if let Some(n) = cluster.get("nodes") {
+            nodes = positive_int(n, "cluster.nodes")? as usize;
+        }
+        if let Some(c) = cluster.get("cpus") {
+            cpus = positive_int(c, "cluster.cpus")? as u32;
+        }
+    }
+    let seed = match doc.get("seed") {
+        Some(s) => {
+            let v = as_int(s, "seed")?;
+            if v < 0 {
+                return fail("seed", "must be >= 0");
+            }
+            v as u64
+        }
+        None => 7,
+    };
+    let mut images = Vec::new();
+    if let Some(decls) = doc.get("images") {
+        for (i, d) in as_seq(decls, "images")?.iter().enumerate() {
+            images.push(parse_image(d, &idx("images", i))?);
+        }
+    }
+    let checks_v = req(doc, "", "checks")?;
+    let mut checks = Vec::new();
+    for (i, c) in as_seq(checks_v, "checks")?.iter().enumerate() {
+        checks.push(parse_check(c, &idx("checks", i))?);
+    }
+    if checks.is_empty() {
+        return fail("checks", "at least one check is required");
+    }
+    Ok(ExpectFile { name, nodes, cpus, seed, images, checks })
+}
+
+fn parse_image(d: &Value, path: &str) -> Result<ImageDecl, ManifestError> {
+    check_keys(d, path, &["name", "behavior", "ms", "jitterMs"])?;
+    let name = nonempty_str(req(d, path, "name")?, &join(path, "name"))?.to_string();
+    let behavior = match d.get("behavior") {
+        None => Behavior::Succeed,
+        Some(b) => match nonempty_str(b, &join(path, "behavior"))? {
+            "sleep" => Behavior::Sleep,
+            "succeed" => Behavior::Succeed,
+            "fail" => Behavior::Fail,
+            other => {
+                return fail(
+                    &join(path, "behavior"),
+                    format!("unknown behavior {other:?} (sleep, succeed or fail)"),
+                )
+            }
+        },
+    };
+    let ms = opt_u64(d, path, "ms")?.unwrap_or(1000);
+    let jitter_ms = opt_u64(d, path, "jitterMs")?.unwrap_or(0);
+    let has_timing = d.get("ms").is_some() || d.get("jitterMs").is_some();
+    if behavior != Behavior::Sleep && has_timing {
+        return fail(path, "ms/jitterMs only apply to behavior: sleep");
+    }
+    Ok(ImageDecl { name, behavior, ms, jitter_ms })
+}
+
+fn opt_u64(v: &Value, path: &str, key: &str) -> Result<Option<u64>, ManifestError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(n) => {
+            let p = join(path, key);
+            let i = as_int(n, &p)?;
+            if i < 0 {
+                return fail(&p, "must be >= 0");
+            }
+            Ok(Some(i as u64))
+        }
+    }
+}
+
+fn namespace_of(v: &Value, path: &str) -> Result<String, ManifestError> {
+    match v.get("namespace") {
+        Some(ns) => Ok(nonempty_str(ns, &join(path, "namespace"))?.to_string()),
+        None => Ok("default".to_string()),
+    }
+}
+
+fn parse_check(c: &Value, path: &str) -> Result<Check, ManifestError> {
+    check_keys(
+        c,
+        path,
+        &[
+            "within",
+            "pods",
+            "podCount",
+            "workflows",
+            "tfjobs",
+            "sparkApplications",
+            "deployments",
+            "services",
+            "slurm",
+        ],
+    )?;
+    let within_ms = positive_int(req(c, path, "within")?, &join(path, "within"))? as u64;
+    let mut check = Check {
+        within_ms,
+        pods: Vec::new(),
+        pod_counts: Vec::new(),
+        workflows: Vec::new(),
+        tfjobs: Vec::new(),
+        spark_applications: Vec::new(),
+        deployments: Vec::new(),
+        services: Vec::new(),
+        slurm: None,
+    };
+    if let Some(pods) = c.get("pods") {
+        let pp = join(path, "pods");
+        for (i, p) in as_seq(pods, &pp)?.iter().enumerate() {
+            let ip = idx(&pp, i);
+            check_keys(p, &ip, &["name", "namespace", "phase"])?;
+            check.pods.push(PodExpect {
+                namespace: namespace_of(p, &ip)?,
+                name: nonempty_str(req(p, &ip, "name")?, &join(&ip, "name"))?
+                    .to_string(),
+                phase: pod_phase_str(req(p, &ip, "phase")?, &join(&ip, "phase"))?,
+            });
+        }
+    }
+    if let Some(counts) = c.get("podCount") {
+        let pp = join(path, "podCount");
+        for (i, p) in as_seq(counts, &pp)?.iter().enumerate() {
+            let ip = idx(&pp, i);
+            check_keys(p, &ip, &["phase", "count", "selector"])?;
+            let count = as_int(req(p, &ip, "count")?, &join(&ip, "count"))?;
+            if count < 0 {
+                return fail(&join(&ip, "count"), "must be >= 0");
+            }
+            let mut selector = Vec::new();
+            if let Some(sel) = p.get("selector") {
+                let sp = join(&ip, "selector");
+                validate_string_map(sel, &sp)?;
+                for (k, v) in as_map(sel, &sp)? {
+                    selector.push((k.clone(), v.coerce_string().unwrap_or_default()));
+                }
+            }
+            check.pod_counts.push(PodCountExpect {
+                phase: pod_phase_str(req(p, &ip, "phase")?, &join(&ip, "phase"))?,
+                count: count as usize,
+                selector,
+            });
+        }
+    }
+    if let Some(wfs) = c.get("workflows") {
+        let pp = join(path, "workflows");
+        for (i, w) in as_seq(wfs, &pp)?.iter().enumerate() {
+            let ip = idx(&pp, i);
+            check_keys(w, &ip, &["name", "namespace", "phase", "progress"])?;
+            check.workflows.push(WorkflowExpect {
+                namespace: namespace_of(w, &ip)?,
+                name: nonempty_str(req(w, &ip, "name")?, &join(&ip, "name"))?
+                    .to_string(),
+                phase: nonempty_str(req(w, &ip, "phase")?, &join(&ip, "phase"))?
+                    .to_string(),
+                progress: match w.get("progress") {
+                    Some(p) => {
+                        Some(nonempty_str(p, &join(&ip, "progress"))?.to_string())
+                    }
+                    None => None,
+                },
+            });
+        }
+    }
+    for (key, out) in [("tfjobs", 0usize), ("sparkApplications", 1)] {
+        if let Some(items) = c.get(key) {
+            let pp = join(path, key);
+            for (i, s) in as_seq(items, &pp)?.iter().enumerate() {
+                let ip = idx(&pp, i);
+                check_keys(s, &ip, &["name", "namespace", "state"])?;
+                let e = StateExpect {
+                    namespace: namespace_of(s, &ip)?,
+                    name: nonempty_str(req(s, &ip, "name")?, &join(&ip, "name"))?
+                        .to_string(),
+                    state: nonempty_str(req(s, &ip, "state")?, &join(&ip, "state"))?
+                        .to_string(),
+                };
+                if out == 0 {
+                    check.tfjobs.push(e);
+                } else {
+                    check.spark_applications.push(e);
+                }
+            }
+        }
+    }
+    if let Some(deps) = c.get("deployments") {
+        let pp = join(path, "deployments");
+        for (i, d) in as_seq(deps, &pp)?.iter().enumerate() {
+            let ip = idx(&pp, i);
+            check_keys(d, &ip, &["name", "namespace", "replicas"])?;
+            let replicas = as_int(req(d, &ip, "replicas")?, &join(&ip, "replicas"))?;
+            if replicas < 0 {
+                return fail(&join(&ip, "replicas"), "must be >= 0");
+            }
+            check.deployments.push(ReplicasExpect {
+                namespace: namespace_of(d, &ip)?,
+                name: nonempty_str(req(d, &ip, "name")?, &join(&ip, "name"))?
+                    .to_string(),
+                replicas,
+            });
+        }
+    }
+    if let Some(svcs) = c.get("services") {
+        let pp = join(path, "services");
+        for (i, s) in as_seq(svcs, &pp)?.iter().enumerate() {
+            let ip = idx(&pp, i);
+            check_keys(s, &ip, &["name", "namespace", "endpoints"])?;
+            let endpoints = as_int(req(s, &ip, "endpoints")?, &join(&ip, "endpoints"))?;
+            if endpoints < 0 {
+                return fail(&join(&ip, "endpoints"), "must be >= 0");
+            }
+            check.services.push(EndpointsExpect {
+                namespace: namespace_of(s, &ip)?,
+                name: nonempty_str(req(s, &ip, "name")?, &join(&ip, "name"))?
+                    .to_string(),
+                endpoints: endpoints as usize,
+            });
+        }
+    }
+    if let Some(slurm) = c.get("slurm") {
+        let sp = join(path, "slurm");
+        check_keys(slurm, &sp, &["running", "pending", "completedMin", "queueEmpty"])?;
+        let queue_empty = match slurm.get("queueEmpty") {
+            None => false,
+            Some(b) => b
+                .as_bool()
+                .ok_or_else(|| {
+                    crate::kube::manifest::err_at(
+                        &join(&sp, "queueEmpty"),
+                        "expected a boolean",
+                    )
+                })?,
+        };
+        check.slurm = Some(SlurmExpect {
+            running: opt_u64(slurm, &sp, "running")?.map(|v| v as usize),
+            pending: opt_u64(slurm, &sp, "pending")?.map(|v| v as usize),
+            completed_min: opt_u64(slurm, &sp, "completedMin")?.map(|v| v as usize),
+            queue_empty,
+        });
+    }
+    if check.assertions() == 0 {
+        return fail(path, "check declares no assertions");
+    }
+    Ok(check)
+}
+
+/// Pod phases are a closed set; catching `Complete`-style typos here
+/// beats a check that can never pass.
+fn pod_phase_str(v: &Value, path: &str) -> Result<String, ManifestError> {
+    let s = nonempty_str(v, path)?;
+    const PHASES: &[&str] = &["Pending", "Running", "Succeeded", "Failed"];
+    if !PHASES.contains(&s) {
+        return fail(path, format!("unknown pod phase {s:?} ({})", PHASES.join(", ")));
+    }
+    Ok(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_expect_file() {
+        let e = ExpectFile::parse(
+            "cluster:\n  nodes: 2\n  cpus: 4\nseed: 11\nimages:\n- name: autodock:latest\n  behavior: sleep\n  ms: 1500\n  jitterMs: 500\nchecks:\n- within: 60000\n  podCount:\n  - phase: Running\n    count: 2\n    selector:\n      app: web\n- within: 300000\n  tfjobs:\n  - name: train\n    state: Succeeded\n  slurm:\n    queueEmpty: true\n    completedMin: 2\n",
+        )
+        .unwrap();
+        assert_eq!(e.nodes, 2);
+        assert_eq!(e.seed, 11);
+        assert_eq!(e.images.len(), 1);
+        assert_eq!(e.images[0].behavior, Behavior::Sleep);
+        assert_eq!(e.checks.len(), 2);
+        assert_eq!(e.checks[0].pod_counts[0].selector.len(), 1);
+        let slurm = e.checks[1].slurm.as_ref().unwrap();
+        assert!(slurm.queue_empty);
+        assert_eq!(slurm.completed_min, Some(2));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let e = ExpectFile::parse(
+            "checks:\n- within: 1000\n  slurm:\n    queueEmpty: true\n",
+        )
+        .unwrap();
+        assert_eq!((e.nodes, e.cpus, e.seed), (4, 8, 7));
+        assert!(e.images.is_empty());
+    }
+
+    #[test]
+    fn unknown_field_rejected_with_path() {
+        let err = ExpectFile::parse(
+            "checks:\n- within: 1000\n  podCounts:\n  - phase: Running\n    count: 1\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("checks[0].podCounts"), "got: {err}");
+    }
+
+    #[test]
+    fn bad_pod_phase_rejected() {
+        let err = ExpectFile::parse(
+            "checks:\n- within: 1000\n  pods:\n  - name: p\n    phase: Complete\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("checks[0].pods[0].phase"), "got: {err}");
+    }
+
+    #[test]
+    fn empty_check_rejected() {
+        let err = ExpectFile::parse("checks:\n- within: 1000\n").unwrap_err();
+        assert!(err.contains("no assertions"), "got: {err}");
+    }
+
+    #[test]
+    fn within_required_and_positive() {
+        let err = ExpectFile::parse(
+            "checks:\n- pods:\n  - name: p\n    phase: Running\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("checks[0].within"), "got: {err}");
+        let err = ExpectFile::parse(
+            "checks:\n- within: 0\n  pods:\n  - name: p\n    phase: Running\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("checks[0].within"), "got: {err}");
+    }
+}

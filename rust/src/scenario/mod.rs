@@ -1,0 +1,627 @@
+//! Declarative scenario harness: manifest directories as tests.
+//!
+//! The paper's premise is that *unmodified* cloud-native YAML runs on
+//! the HPC cluster; this module makes that the test interface. A
+//! scenario is a directory of Kubernetes manifests plus one
+//! `expect.yaml` declaring the outcome (pod phases, replica counts,
+//! Slurm queue states, timing bounds in simulated milliseconds):
+//!
+//! ```text
+//! examples/scenarios/tfjob-gang/
+//!   tfjob.yaml     # the workload, exactly as kubectl would apply it
+//!   expect.yaml    # cluster shape + ordered checks
+//! ```
+//!
+//! `hpk scenario run <dir>` (and `tests/scenarios.rs`) boots a
+//! driven-clock testbed ([`crate::testbed::deploy_driven`]), validates
+//! every document through the typed layer ([`crate::kube::manifest`]),
+//! applies the manifests, and advances virtual time in fixed steps
+//! until each check's assertions hold — or its `within` budget is
+//! exhausted. The run is deterministic: same directory, same seed,
+//! byte-identical report (no wall-clock or sim timestamps appear in
+//! it). See `docs/SCENARIOS.md` for the directory layout and the full
+//! `expect.yaml` schema.
+
+pub mod expect;
+
+use crate::apptainer::ImageSpec;
+use crate::hpk::ControlPlane;
+use crate::kube::manifest::{validate_manifest_text, Manifest};
+use crate::kube::object;
+use crate::slurm::JobState;
+use crate::yamlkit::Value;
+use expect::{Behavior, Check, ExpectFile};
+use std::path::Path;
+
+/// Virtual-time granularity of the drive loop: matches the chaos
+/// harness so scheduler sweeps and clock advances interleave the same
+/// way everywhere.
+const STEP_MS: u64 = 100;
+
+/// Result of a scenario run that got as far as evaluating checks.
+/// Load/validation problems are the `Err` of [`run_dir`] instead.
+pub struct ScenarioOutcome {
+    /// All checks passed.
+    pub passed: bool,
+    /// Deterministic human-readable report (byte-identical across runs
+    /// of the same scenario and seed).
+    pub report: String,
+}
+
+/// Run one scenario directory end-to-end on a fresh driven-clock
+/// testbed.
+pub fn run_dir(dir: &Path) -> Result<ScenarioOutcome, String> {
+    let dir_name = dir
+        .file_name()
+        .and_then(|s| s.to_str())
+        .unwrap_or("scenario")
+        .to_string();
+    let mut manifest_names: Vec<String> = Vec::new();
+    let mut expect_src: Option<String> = None;
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let fname = entry.file_name().to_string_lossy().into_owned();
+        if !(fname.ends_with(".yaml") || fname.ends_with(".yml")) {
+            continue;
+        }
+        if fname == "expect.yaml" || fname == "expect.yml" {
+            expect_src = Some(
+                std::fs::read_to_string(entry.path())
+                    .map_err(|e| format!("{fname}: {e}"))?,
+            );
+        } else {
+            manifest_names.push(fname);
+        }
+    }
+    let expect_src = expect_src
+        .ok_or_else(|| format!("{}: no expect.yaml found", dir.display()))?;
+    if manifest_names.is_empty() {
+        return Err(format!("{}: no manifest *.yaml files found", dir.display()));
+    }
+    // Apply order is the sorted file-name order — name files `00-*.yaml`,
+    // `10-*.yaml` to force one.
+    manifest_names.sort();
+    let expect = ExpectFile::parse(&expect_src).map_err(|e| format!("expect.yaml: {e}"))?;
+
+    let mut files: Vec<LoadedFile> = Vec::new();
+    for fname in &manifest_names {
+        let text = std::fs::read_to_string(dir.join(fname))
+            .map_err(|e| format!("{fname}: {e}"))?;
+        let manifests = validate_manifest_text(&text).map_err(|e| format!("{fname}: {e}"))?;
+        for m in &manifests {
+            // Dry-run the HPK translation: a pod that cannot become a
+            // Slurm job should fail at load time, not strand mid-run.
+            if let Manifest::Pod(v) = m {
+                crate::hpk::translate::pod_to_jobspec(v).map_err(|e| {
+                    format!("{fname}: pod {}/{}: {e}", m.namespace(), m.name())
+                })?;
+            }
+        }
+        files.push(LoadedFile { name: fname.clone(), text, manifests });
+    }
+
+    let bed = crate::testbed::deploy_driven(expect.nodes, expect.cpus);
+    let outcome = run_loaded(&bed.cp, &dir_name, &expect, &files);
+    bed.shutdown();
+    outcome
+}
+
+struct LoadedFile {
+    name: String,
+    text: String,
+    manifests: Vec<Manifest>,
+}
+
+fn run_loaded(
+    cp: &ControlPlane,
+    dir_name: &str,
+    expect: &ExpectFile,
+    files: &[LoadedFile],
+) -> Result<ScenarioOutcome, String> {
+    register_sim_images(cp, expect);
+    // Every image a manifest references must resolve before anything
+    // is applied — otherwise the pod would just pend forever.
+    for f in files {
+        for m in &f.manifests {
+            for image in m.images() {
+                if cp.runtime.registry.resolve(&image).is_none() {
+                    return Err(format!(
+                        "{}: image {image:?} is not registered (declare it under `images:` in expect.yaml)",
+                        f.name
+                    ));
+                }
+            }
+        }
+    }
+    for f in files {
+        cp.kubectl_apply(&f.text).map_err(|e| format!("{}: {e}", f.name))?;
+    }
+
+    let mut report = String::new();
+    report.push_str(&format!(
+        "scenario: {}\n",
+        expect.name.as_deref().unwrap_or(dir_name)
+    ));
+    report.push_str(&format!(
+        "cluster: {} nodes x {} cpus, seed {}\n",
+        expect.nodes, expect.cpus, expect.seed
+    ));
+    report.push_str("manifests:\n");
+    for f in files {
+        for m in &f.manifests {
+            report.push_str(&format!(
+                "  - {}: {} {}/{}\n",
+                f.name,
+                m.kind(),
+                m.namespace(),
+                m.name()
+            ));
+        }
+    }
+    report.push_str("checks:\n");
+    let mut passed = true;
+    for (i, check) in expect.checks.iter().enumerate() {
+        match drive_until(cp, check) {
+            Ok(()) => {
+                report.push_str(&format!(
+                    "  - check {} (within {} sim-ms): PASS\n",
+                    i + 1,
+                    check.within_ms
+                ));
+                for line in describe_check(check) {
+                    report.push_str(&format!("      {line}\n"));
+                }
+            }
+            Err(e) => {
+                passed = false;
+                report.push_str(&format!(
+                    "  - check {} (within {} sim-ms): FAIL\n      {e}\n",
+                    i + 1,
+                    check.within_ms
+                ));
+                // Later checks assume this one's state; stop here.
+                break;
+            }
+        }
+    }
+    if passed {
+        append_final_state(cp, &mut report);
+    }
+    report.push_str(if passed { "result: PASS\n" } else { "result: FAIL\n" });
+    Ok(ScenarioOutcome { passed, report })
+}
+
+/// Register the scenario-declared simulated images plus a deterministic
+/// `tf-trainer` stand-in (the stock trainer needs the PJRT artifacts,
+/// which scenario runs must not depend on).
+fn register_sim_images(cp: &ControlPlane, expect: &ExpectFile) {
+    let seed = expect.seed;
+    for decl in &expect.images {
+        let entry_key = format!("scenario:{}", decl.name);
+        cp.runtime.registry.register(
+            ImageSpec::new(&decl.name, &entry_key).with_size(32 << 20),
+        );
+        let (behavior, ms, jitter_ms) = (decl.behavior, decl.ms, decl.jitter_ms);
+        cp.runtime.table.register(&entry_key, move |ctx| match behavior {
+            Behavior::Fail => Err("scenario image exits non-zero".to_string()),
+            Behavior::Succeed => Ok(0),
+            Behavior::Sleep => {
+                // Per-container jitter keyed off (seed, args): stable
+                // across runs, varied across e.g. withItems fan-outs.
+                let jitter = if jitter_ms == 0 {
+                    0
+                } else {
+                    let mut rng = crate::util::Rng::new(seed ^ args_key(&ctx.args));
+                    rng.below(jitter_ms)
+                };
+                if ctx.cancel.wait_sim(&ctx.clock, ms + jitter) {
+                    return Err("terminated".to_string());
+                }
+                Ok(0)
+            }
+        });
+    }
+    // Overwrite the trainer entrypoint with a virtual-time stub: 20
+    // sim-ms per step, rank 0 writes the loss curve. The image spec is
+    // (re-)registered too: without PJRT artifacts the stock trainer
+    // never registers, and scenarios must not depend on `make
+    // artifacts`.
+    cp.runtime.registry.register(
+        ImageSpec::new("tf-trainer:latest", "tf-trainer").with_size(800 << 20),
+    );
+    cp.runtime.table.register("tf-trainer", |ctx| {
+        let steps: u64 = ctx.env_parsed("STEPS").unwrap_or(100);
+        let rank: usize = ctx.env_parsed("WORKER_RANK").unwrap_or(0);
+        if ctx.cancel.wait_sim(&ctx.clock, steps * 20) {
+            return Err("terminated".to_string());
+        }
+        if rank == 0 {
+            let job = ctx.env_or("TFJOB_NAME", "tfjob");
+            let out_dir = ctx.env_or("OUT_DIR", &format!("/home/user/models/{job}"));
+            let mut csv = String::from("step,loss\n");
+            for s in 0..steps {
+                csv.push_str(&format!("{s},{}\n", 1.0 / (s + 1) as f64));
+            }
+            ctx.fs
+                .write_str(&format!("{out_dir}/loss.csv"), &csv)
+                .map_err(|e| e.to_string())?;
+        }
+        Ok(0)
+    });
+}
+
+/// Deterministic 64-bit key from container args (FNV-1a).
+fn args_key(args: &[String]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for a in args {
+        for b in a.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Advance virtual time in `STEP_MS` steps (kicking the Slurm scheduler
+/// each step, like the chaos harness) until the check holds or its
+/// budget is spent.
+fn drive_until(cp: &ControlPlane, check: &Check) -> Result<(), String> {
+    let steps = check.within_ms / STEP_MS + 1;
+    for _ in 0..steps {
+        // The short wall wait lets controller threads settle and
+        // re-evaluates on every store/Slurm event in the meantime.
+        if cp.wait_until(10, |_| eval_check(cp, check).is_ok()) {
+            return Ok(());
+        }
+        cp.slurm.kick_scheduler();
+        cp.cluster.clock.advance_ms(STEP_MS);
+    }
+    if cp.wait_until(100, |_| eval_check(cp, check).is_ok()) {
+        return Ok(());
+    }
+    // Report the first failing assertion with what was observed.
+    eval_check(cp, check)
+}
+
+fn matches_selector(pod: &Value, selector: &[(String, String)]) -> bool {
+    let labels = object::labels(pod);
+    selector
+        .iter()
+        .all(|(k, v)| labels.iter().any(|(lk, lv)| lk == k && lv == v))
+}
+
+fn selector_suffix(selector: &[(String, String)]) -> String {
+    if selector.is_empty() {
+        return String::new();
+    }
+    let pairs: Vec<String> = selector.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!(" [{}]", pairs.join(","))
+}
+
+/// Evaluate every assertion of a check; `Err` carries the first
+/// failure, described with the observed value.
+fn eval_check(cp: &ControlPlane, check: &Check) -> Result<(), String> {
+    for p in &check.pods {
+        let got = match cp.api.get("Pod", &p.namespace, &p.name) {
+            Ok(pod) => object::pod_phase(&pod).to_string(),
+            Err(_) => "<missing>".to_string(),
+        };
+        if got != p.phase {
+            return Err(format!(
+                "pod {}/{}: expected phase {}, observed {got}",
+                p.namespace, p.name, p.phase
+            ));
+        }
+    }
+    for pc in &check.pod_counts {
+        let n = cp
+            .api
+            .list("Pod")
+            .iter()
+            .filter(|pod| {
+                object::pod_phase(pod) == pc.phase
+                    && matches_selector(pod, &pc.selector)
+            })
+            .count();
+        if n != pc.count {
+            return Err(format!(
+                "pods in phase {}{}: expected {}, observed {n}",
+                pc.phase,
+                selector_suffix(&pc.selector),
+                pc.count
+            ));
+        }
+    }
+    for w in &check.workflows {
+        let wf = cp.api.get("Workflow", &w.namespace, &w.name);
+        let got = wf
+            .as_ref()
+            .ok()
+            .and_then(|v| v.str_at("status.phase"))
+            .unwrap_or("<missing>");
+        if got != w.phase {
+            return Err(format!(
+                "workflow {}/{}: expected phase {}, observed {got}",
+                w.namespace, w.name, w.phase
+            ));
+        }
+        if let Some(want) = &w.progress {
+            let got = wf
+                .as_ref()
+                .ok()
+                .and_then(|v| v.str_at("status.progress"))
+                .unwrap_or("<missing>");
+            if got != want {
+                return Err(format!(
+                    "workflow {}/{}: expected progress {want}, observed {got}",
+                    w.namespace, w.name
+                ));
+            }
+        }
+    }
+    for (kind, status_path, items) in [
+        ("TFJob", "status.state", &check.tfjobs),
+        ("SparkApplication", "status.applicationState.state", &check.spark_applications),
+    ] {
+        for s in items {
+            let got = cp
+                .api
+                .get(kind, &s.namespace, &s.name)
+                .ok()
+                .and_then(|v| v.str_at(status_path).map(|p| p.to_string()))
+                .unwrap_or_else(|| "<missing>".to_string());
+            if got != s.state {
+                return Err(format!(
+                    "{kind} {}/{}: expected state {}, observed {got}",
+                    s.namespace, s.name, s.state
+                ));
+            }
+        }
+    }
+    for d in &check.deployments {
+        let got = cp
+            .api
+            .get("Deployment", &d.namespace, &d.name)
+            .ok()
+            .and_then(|v| v.i64_at("status.readyReplicas"));
+        if got != Some(d.replicas) {
+            return Err(format!(
+                "deployment {}/{}: expected {} ready replicas, observed {}",
+                d.namespace,
+                d.name,
+                d.replicas,
+                got.map_or_else(|| "<missing>".to_string(), |n| n.to_string())
+            ));
+        }
+    }
+    for s in &check.services {
+        let n = cp.service_endpoints(&s.namespace, &s.name).len();
+        if n != s.endpoints {
+            return Err(format!(
+                "service {}/{}: expected {} endpoints, observed {n}",
+                s.namespace, s.name, s.endpoints
+            ));
+        }
+    }
+    if let Some(sl) = &check.slurm {
+        let queue = cp.slurm.squeue();
+        let running = queue
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Running))
+            .count();
+        let pending = queue
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Pending(_)))
+            .count();
+        if let Some(want) = sl.running {
+            if running != want {
+                return Err(format!(
+                    "slurm: expected {want} running jobs, observed {running}"
+                ));
+            }
+        }
+        if let Some(want) = sl.pending {
+            if pending != want {
+                return Err(format!(
+                    "slurm: expected {want} pending jobs, observed {pending}"
+                ));
+            }
+        }
+        if let Some(min) = sl.completed_min {
+            let completed = cp
+                .slurm
+                .sacct()
+                .iter()
+                .filter(|r| matches!(r.state, JobState::Completed))
+                .count();
+            if completed < min {
+                return Err(format!(
+                    "slurm: expected >= {min} completed jobs, observed {completed}"
+                ));
+            }
+        }
+        if sl.queue_empty && !queue.is_empty() {
+            return Err(format!(
+                "slurm: expected an empty queue, observed {} jobs",
+                queue.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Restate a passed check's assertions for the report.
+fn describe_check(check: &Check) -> Vec<String> {
+    let mut out = Vec::new();
+    for p in &check.pods {
+        out.push(format!("pod {}/{} phase {}", p.namespace, p.name, p.phase));
+    }
+    for pc in &check.pod_counts {
+        out.push(format!(
+            "{} pods in phase {}{}",
+            pc.count,
+            pc.phase,
+            selector_suffix(&pc.selector)
+        ));
+    }
+    for w in &check.workflows {
+        let progress = w
+            .progress
+            .as_ref()
+            .map(|p| format!(" progress {p}"))
+            .unwrap_or_default();
+        out.push(format!(
+            "workflow {}/{} phase {}{progress}",
+            w.namespace, w.name, w.phase
+        ));
+    }
+    for t in &check.tfjobs {
+        out.push(format!("tfjob {}/{} state {}", t.namespace, t.name, t.state));
+    }
+    for s in &check.spark_applications {
+        out.push(format!(
+            "sparkapplication {}/{} state {}",
+            s.namespace, s.name, s.state
+        ));
+    }
+    for d in &check.deployments {
+        out.push(format!(
+            "deployment {}/{} ready replicas {}",
+            d.namespace, d.name, d.replicas
+        ));
+    }
+    for s in &check.services {
+        out.push(format!(
+            "service {}/{} endpoints {}",
+            s.namespace, s.name, s.endpoints
+        ));
+    }
+    if let Some(sl) = &check.slurm {
+        let mut parts = Vec::new();
+        if let Some(n) = sl.running {
+            parts.push(format!("running={n}"));
+        }
+        if let Some(n) = sl.pending {
+            parts.push(format!("pending={n}"));
+        }
+        if let Some(n) = sl.completed_min {
+            parts.push(format!("completed>={n}"));
+        }
+        if sl.queue_empty {
+            parts.push("queue-empty".to_string());
+        }
+        out.push(format!("slurm {}", parts.join(" ")));
+    }
+    out
+}
+
+/// Append the quiescent end state. Everything here is outcome-stable
+/// (no timestamps, no step counts), so the report stays byte-identical
+/// across runs of the same scenario and seed.
+fn append_final_state(cp: &ControlPlane, report: &mut String) {
+    report.push_str("final:\n");
+    let mut pods: Vec<String> = cp
+        .api
+        .list("Pod")
+        .iter()
+        .map(|p| {
+            format!(
+                "{}/{}={}",
+                object::namespace(p),
+                object::name(p),
+                object::pod_phase(p)
+            )
+        })
+        .collect();
+    pods.sort();
+    if !pods.is_empty() {
+        report.push_str(&format!("  pods: {}\n", pods.join(" ")));
+    }
+    for (kind, label, status_path) in [
+        ("Workflow", "workflows", "status.phase"),
+        ("TFJob", "tfjobs", "status.state"),
+        ("SparkApplication", "sparkapplications", "status.applicationState.state"),
+    ] {
+        let mut rows: Vec<String> = cp
+            .api
+            .list(kind)
+            .iter()
+            .map(|v| {
+                format!(
+                    "{}/{}={}",
+                    object::namespace(v),
+                    object::name(v),
+                    v.str_at(status_path).unwrap_or("<none>")
+                )
+            })
+            .collect();
+        rows.sort();
+        if !rows.is_empty() {
+            report.push_str(&format!("  {label}: {}\n", rows.join(" ")));
+        }
+    }
+    let mut deployments: Vec<String> = cp
+        .api
+        .list("Deployment")
+        .iter()
+        .map(|d| {
+            format!(
+                "{}/{}={}",
+                object::namespace(d),
+                object::name(d),
+                d.i64_at("status.readyReplicas").unwrap_or(0)
+            )
+        })
+        .collect();
+    deployments.sort();
+    if !deployments.is_empty() {
+        report.push_str(&format!("  deployments-ready: {}\n", deployments.join(" ")));
+    }
+    let queue = cp.slurm.squeue();
+    let acct = cp.slurm.sacct();
+    let count = |state: fn(&JobState) -> bool| {
+        acct.iter().filter(|r| state(&r.state)).count()
+    };
+    report.push_str(&format!(
+        "  slurm: running={} pending={} completed={} failed={}\n",
+        queue.iter().filter(|j| matches!(j.state, JobState::Running)).count(),
+        queue
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Pending(_)))
+            .count(),
+        count(|s| matches!(s, JobState::Completed)),
+        count(|s| matches!(s, JobState::Failed(_) | JobState::Timeout)),
+    ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_key_is_stable_and_order_sensitive() {
+        let a = vec!["dock".to_string(), "zinc-1".to_string()];
+        let b = vec!["dock".to_string(), "zinc-2".to_string()];
+        assert_eq!(args_key(&a), args_key(&a));
+        assert_ne!(args_key(&a), args_key(&b));
+        assert_ne!(
+            args_key(&["ab".to_string()]),
+            args_key(&["a".to_string(), "b".to_string()]),
+            "separator keeps [\"ab\"] and [\"a\",\"b\"] distinct"
+        );
+    }
+
+    #[test]
+    fn selector_matching() {
+        let pod = crate::yamlkit::parse_one(
+            "kind: Pod\nmetadata:\n  name: p\n  labels:\n    app: web\n    tier: fe\n",
+        )
+        .unwrap();
+        assert!(matches_selector(&pod, &[("app".into(), "web".into())]));
+        assert!(!matches_selector(&pod, &[("app".into(), "api".into())]));
+        assert!(matches_selector(&pod, &[]));
+    }
+}

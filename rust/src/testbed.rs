@@ -31,8 +31,25 @@ pub fn deploy(nodes: usize, cpus: u32) -> Testbed {
 
 /// Deploy with custom Slurm behaviour (backfill ablations etc.).
 pub fn deploy_with(nodes: usize, cpus: u32, slurm: SlurmConfig) -> Testbed {
+    deploy_spec(ClusterSpec::uniform(nodes, cpus, 64), slurm)
+}
+
+/// Deploy on a driven (virtual-time) clock: nothing advances until the
+/// caller calls `cp.cluster.clock.advance_ms(..)`. The Slurm scheduler
+/// tick is parked out of reach so sweeps happen only via
+/// `kick_scheduler()` — the deterministic setup the scenario harness
+/// (`docs/SCENARIOS.md`) and the chaos tests drive.
+pub fn deploy_driven(nodes: usize, cpus: u32) -> Testbed {
+    deploy_spec(
+        ClusterSpec::uniform(nodes, cpus, 64).driven(),
+        SlurmConfig { sched_interval_ms: 100_000_000, ..SlurmConfig::default() },
+    )
+}
+
+/// Deploy with a fully custom cluster shape and Slurm behaviour.
+pub fn deploy_spec(cluster: ClusterSpec, slurm: SlurmConfig) -> Testbed {
     let cp = ControlPlane::deploy(HpkConfig {
-        cluster: ClusterSpec::uniform(nodes, cpus, 64),
+        cluster,
         slurm,
         fakeroot_allowed: true,
     });

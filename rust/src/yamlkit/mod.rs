@@ -7,9 +7,17 @@
 //! - block mappings and sequences (indentation-based)
 //! - inline (flow) maps `{a: 1}` and lists `[1, 2]`
 //! - plain / single- / double-quoted scalars, comments, `---` documents
+//! - the `...` end-of-document marker (`kubectl get -o yaml` emits it)
 //! - block scalars `|`, `|-`, `>`, `>-` (Listing 2 of the paper uses `>-`)
 //! - anchors are NOT supported (rejected with an error), matching the
 //!   subset Kubernetes examples in the paper actually use.
+//!
+//! [`ParseError`] line numbers are **file-absolute** — an error in the
+//! third document of a multi-document file points at the real line,
+//! not at an offset within the chunk — and tab indentation is rejected
+//! with the offending line named. The typed layer above this one is
+//! [`crate::kube::manifest`]; the end-to-end consumer is the scenario
+//! harness (`docs/SCENARIOS.md`).
 //!
 //! The [`Value`] tree preserves mapping order (kubectl-style round-trips).
 

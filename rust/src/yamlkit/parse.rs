@@ -52,22 +52,34 @@ fn strip_comment(s: &str) -> &str {
     s
 }
 
-fn logical_lines(src: &str) -> Vec<Line> {
+/// Split a document chunk into logical lines. `offset` is the number of
+/// source lines preceding the chunk, so `num` is file-absolute even for
+/// documents after a `---` separator.
+fn logical_lines(src: &str, offset: usize) -> Result<Vec<Line>, ParseError> {
     let mut out = Vec::new();
     for (idx, raw) in src.lines().enumerate() {
+        let num = idx + 1 + offset;
         let no_comment = strip_comment(raw);
         let trimmed = no_comment.trim_end();
         if trimmed.trim().is_empty() {
             continue;
         }
-        let indent = trimmed.len() - trimmed.trim_start().len();
+        let content_start = trimmed.len() - trimmed.trim_start().len();
+        // YAML forbids tabs in indentation: a tab has no defined column
+        // width, so tolerating it silently misparses the structure.
+        if trimmed[..content_start].contains('\t') {
+            return err(
+                num,
+                "tab character in indentation (YAML forbids tabs; indent with spaces)",
+            );
+        }
         out.push(Line {
-            indent,
+            indent: content_start,
             text: trimmed.trim_start().to_string(),
-            num: idx + 1,
+            num,
         });
     }
-    out
+    Ok(out)
 }
 
 /// Parse a single-document source (the first document if several).
@@ -76,20 +88,40 @@ pub fn parse_one(src: &str) -> Result<Value, ParseError> {
     Ok(docs.into_iter().next().unwrap_or(Value::Null))
 }
 
-/// Parse a multi-document source split on `---` lines.
+/// Parse a multi-document source split on `---` lines. The `...`
+/// end-of-document marker (as emitted by `kubectl get -o yaml`)
+/// terminates the current document; only a `---` may follow it.
 pub fn parse_all(src: &str) -> Result<Vec<Value>, ParseError> {
     let mut docs = Vec::new();
     let mut current = String::new();
     let mut line_offset = 0usize;
+    // Set when a `...` marker closed the current document: any further
+    // content before the next `---` is an error at the recorded line.
+    let mut terminated = false;
     let mut starts = Vec::new();
     for (i, line) in src.lines().enumerate() {
         let t = line.trim();
         if t == "---" || t.starts_with("--- ") {
             starts.push((std::mem::take(&mut current), line_offset));
+            terminated = false;
             line_offset = i + 1;
             if t.len() > 4 {
+                // Inline document (`--- value`): content begins on the
+                // marker line itself, so the chunk's offset is i, not i+1.
+                line_offset = i;
                 current.push_str(&line[line.find("--- ").unwrap() + 4..]);
                 current.push('\n');
+            }
+        } else if t == "..." {
+            starts.push((std::mem::take(&mut current), line_offset));
+            terminated = true;
+            line_offset = i + 1;
+        } else if terminated {
+            if !strip_comment(line).trim().is_empty() {
+                return err(
+                    i + 1,
+                    "content after `...` end-of-document marker (expected `---`)",
+                );
             }
         } else {
             current.push_str(line);
@@ -97,11 +129,11 @@ pub fn parse_all(src: &str) -> Result<Vec<Value>, ParseError> {
         }
     }
     starts.push((current, line_offset));
-    for (chunk, _offset) in starts {
+    for (chunk, offset) in starts {
         if chunk.trim().is_empty() {
             continue;
         }
-        let lines = logical_lines(&chunk);
+        let lines = logical_lines(&chunk, offset)?;
         if lines.is_empty() {
             continue;
         }
@@ -663,5 +695,44 @@ spec:
     fn seq_at_same_indent_as_key() {
         let v = parse_one("tasks:\n- name: t1\n- name: t2\n").unwrap();
         assert_eq!(v.path("tasks").unwrap().as_seq().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn multi_document_errors_report_file_absolute_lines() {
+        // The duplicate key sits in the third document, on file line 6.
+        let e = parse_all("a: 1\n---\nb: 2\n---\nc: 3\nc: 4\n").unwrap_err();
+        assert_eq!(e.line, 6, "got: {e}");
+        assert!(e.message.contains("duplicate key"), "got: {e}");
+    }
+
+    #[test]
+    fn inline_document_errors_report_marker_line() {
+        // `--- &x 1` puts the document on the marker line itself (line 2).
+        let e = parse_all("a: 1\n--- &x 1\n").unwrap_err();
+        assert_eq!(e.line, 2, "got: {e}");
+    }
+
+    #[test]
+    fn tab_indentation_rejected_with_line() {
+        let e = parse_one("a:\n\tb: 1\n").unwrap_err();
+        assert_eq!(e.line, 2, "got: {e}");
+        assert!(e.message.contains("tab"), "got: {e}");
+    }
+
+    #[test]
+    fn end_of_document_marker_terminates() {
+        let docs = parse_all("a: 1\n...\n").unwrap();
+        assert_eq!(docs.len(), 1);
+        assert_eq!(docs[0].i64_at("a"), Some(1));
+        let docs = parse_all("a: 1\n...\n---\nb: 2\n...\n").unwrap();
+        assert_eq!(docs.len(), 2);
+        assert_eq!(docs[1].i64_at("b"), Some(2));
+    }
+
+    #[test]
+    fn content_after_end_marker_rejected() {
+        let e = parse_all("a: 1\n...\nb: 2\n").unwrap_err();
+        assert_eq!(e.line, 3, "got: {e}");
+        assert!(e.message.contains("..."), "got: {e}");
     }
 }

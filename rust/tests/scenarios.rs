@@ -1,0 +1,137 @@
+//! Golden tests for the declarative scenario harness
+//! (`docs/SCENARIOS.md`): every shipped directory under
+//! `examples/scenarios/` must pass, and its report must be
+//! byte-identical across runs — the determinism the driven clock
+//! promises. Plus the load-error paths: file-qualified, path-qualified,
+//! line-accurate diagnostics.
+
+use hpk::scenario::run_dir;
+use std::path::{Path, PathBuf};
+
+fn scenario_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/scenarios")
+        .join(name)
+}
+
+/// Run a shipped scenario twice; assert it passes and the two reports
+/// are byte-identical. Returns the report for content assertions.
+fn run_twice(name: &str) -> String {
+    let dir = scenario_path(name);
+    let first = run_dir(&dir).expect("scenario loads");
+    assert!(first.passed, "{name} failed:\n{}", first.report);
+    let second = run_dir(&dir).expect("scenario loads");
+    assert_eq!(
+        first.report, second.report,
+        "{name}: report differs between identical runs"
+    );
+    first.report
+}
+
+#[test]
+fn tfjob_gang_scenario_passes_deterministically() {
+    let report = run_twice("tfjob-gang");
+    assert!(report.contains("tfjob.yaml: TFJob default/train"), "{report}");
+    assert!(report.contains("tfjob default/train state Succeeded"), "{report}");
+    assert!(report.contains("result: PASS"), "{report}");
+}
+
+#[test]
+fn argo_docking_scenario_passes_deterministically() {
+    let report = run_twice("argo-docking");
+    assert!(
+        report.contains("workflow default/docking phase Succeeded progress 7/7"),
+        "{report}"
+    );
+    assert!(report.contains("7 pods in phase Succeeded"), "{report}");
+    assert!(report.contains("result: PASS"), "{report}");
+}
+
+#[test]
+fn web_deploy_scenario_passes_deterministically() {
+    let report = run_twice("web-deploy");
+    assert!(report.contains("deployment default/web ready replicas 3"), "{report}");
+    assert!(report.contains("service default/web endpoints 3"), "{report}");
+    assert!(report.contains("result: PASS"), "{report}");
+}
+
+/// Build a throwaway scenario directory from (filename, contents)
+/// pairs.
+fn temp_scenario(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hpk-scenario-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    for (fname, text) in files {
+        std::fs::write(dir.join(fname), text).unwrap();
+    }
+    dir
+}
+
+const MINIMAL_EXPECT: &str = "checks:\n- within: 1000\n  slurm:\n    queueEmpty: true\n";
+
+#[test]
+fn missing_expect_file_is_an_error() {
+    let dir = temp_scenario(
+        "no-expect",
+        &[(
+            "pod.yaml",
+            "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: c\n    image: pause:3.9\n",
+        )],
+    );
+    let err = run_dir(&dir).unwrap_err();
+    assert!(err.contains("no expect.yaml"), "got: {err}");
+}
+
+#[test]
+fn invalid_manifest_is_rejected_with_file_and_path() {
+    let dir = temp_scenario(
+        "bad-manifest",
+        &[
+            ("expect.yaml", MINIMAL_EXPECT),
+            (
+                "pod.yaml",
+                "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: c\n    image: pause:3.9\n    imagePullPolicy: Always\n",
+            ),
+        ],
+    );
+    let err = run_dir(&dir).unwrap_err();
+    assert!(err.starts_with("pod.yaml:"), "got: {err}");
+    assert!(err.contains("spec.containers[0].imagePullPolicy"), "got: {err}");
+}
+
+#[test]
+fn parse_errors_carry_file_absolute_lines_across_documents() {
+    // The tab sits on line 9 of the file — inside document 2. Before
+    // the offset fix, multi-document errors restarted at line 1.
+    let dir = temp_scenario(
+        "bad-line",
+        &[
+            ("expect.yaml", MINIMAL_EXPECT),
+            (
+                "multi.yaml",
+                "kind: Service\nmetadata:\n  name: s\nspec:\n  selector:\n    app: x\n---\nkind: Pod\n\tmetadata: {}\n",
+            ),
+        ],
+    );
+    let err = run_dir(&dir).unwrap_err();
+    assert!(err.starts_with("multi.yaml:"), "got: {err}");
+    assert!(err.contains("line 9"), "got: {err}");
+    assert!(err.contains("tab"), "got: {err}");
+}
+
+#[test]
+fn unregistered_image_is_rejected_before_apply() {
+    let dir = temp_scenario(
+        "ghost-image",
+        &[
+            ("expect.yaml", MINIMAL_EXPECT),
+            (
+                "pod.yaml",
+                "kind: Pod\nmetadata:\n  name: p\nspec:\n  containers:\n  - name: c\n    image: ghost:1\n",
+            ),
+        ],
+    );
+    let err = run_dir(&dir).unwrap_err();
+    assert!(err.contains("ghost:1"), "got: {err}");
+    assert!(err.contains("not registered"), "got: {err}");
+}

@@ -1,0 +1,178 @@
+//! Round-trip property test for `yamlkit`: for generated value trees,
+//! `parse_one(to_yaml_string(v)) == v`. Seeded with the crate's own
+//! splitmix RNG — no wall-clock entropy, so a failure reproduces
+//! exactly. Plus a golden corpus of paper-style manifests (Argo DAG
+//! with `>-` block scalars, SparkApplication, TFJob, a kubectl-style
+//! dump ending in `...`) that must survive parse → emit → reparse and
+//! typed validation.
+
+use hpk::kube::manifest::{validate_manifest_text, Manifest};
+use hpk::util::Rng;
+use hpk::yamlkit::{parse_one, to_yaml_string, Value};
+
+/// Strings the emitter is known to round-trip: quoting covers spaces,
+/// colons, hashes, leading indicators etc. Leading/trailing tabs and
+/// whitespace-only strings are excluded — the emitter does not quote
+/// those (documented limitation).
+const STRINGS: &[&str] = &[
+    "plain",
+    "with space",
+    "a:b",
+    "a: b",
+    "",
+    "true",
+    "null",
+    "8080",
+    "007",
+    "x #y",
+    "-dash",
+    "a,b",
+    "*star",
+    "&amp",
+    "?",
+    "{brace",
+    "[bracket",
+    "quote's",
+    "line1\nline2",
+];
+
+/// Map keys drawn from the same tricky pool (suffixed for uniqueness).
+const KEYS: &[&str] = &["key", "with space", "a:b", "true", "8080", "-dash", "k#h"];
+
+/// Floats whose `format_float` rendering parses back to the same bits:
+/// integral values print as `x.0`, the rest via `{}` (shortest
+/// round-trip representation).
+const FLOATS: &[f64] = &[0.0, -1.5, 2.5, 3.125, 0.001, 6.02e23, 0.375, -42.0];
+
+fn gen_scalar(rng: &mut Rng) -> Value {
+    match rng.below(6) {
+        0 => Value::Null,
+        1 => Value::Bool(rng.below(2) == 0),
+        2 => Value::Int(rng.range(-1_000_000, 1_000_000)),
+        3 => Value::Int(i64::from(rng.below(2) == 0) * i64::MAX),
+        4 => Value::Float(FLOATS[rng.below(FLOATS.len() as u64) as usize]),
+        _ => Value::Str(STRINGS[rng.below(STRINGS.len() as u64) as usize].to_string()),
+    }
+}
+
+fn gen_value(rng: &mut Rng, depth: u32) -> Value {
+    if depth == 0 {
+        return gen_scalar(rng);
+    }
+    match rng.below(4) {
+        0 => {
+            let n = rng.below(4) as usize;
+            Value::Seq((0..n).map(|_| gen_value(rng, depth - 1)).collect())
+        }
+        1 => gen_map(rng, depth - 1),
+        _ => gen_scalar(rng),
+    }
+}
+
+fn gen_map(rng: &mut Rng, depth: u32) -> Value {
+    let n = rng.below(4) as usize + 1;
+    let mut entries = Vec::new();
+    for i in 0..n {
+        // Suffix with the index so keys stay unique within the map.
+        let base = KEYS[rng.below(KEYS.len() as u64) as usize];
+        entries.push((format!("{base}{i}"), gen_value(rng, depth)));
+    }
+    Value::Map(entries)
+}
+
+#[test]
+fn generated_trees_round_trip() {
+    let mut rng = Rng::new(0x5eed_cafe);
+    for case in 0..200 {
+        // Root is always a map: YAML documents here are manifests.
+        let v = gen_map(&mut rng, 3);
+        let yaml = to_yaml_string(&v);
+        let back = parse_one(&yaml)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n--- emitted ---\n{yaml}"));
+        assert_eq!(back, v, "case {case}:\n--- emitted ---\n{yaml}");
+    }
+}
+
+/// Listing-2-style Argo Workflow: `>-` folded block scalar, flow
+/// sequences, a `withItems` fan-out.
+const ARGO_MANIFEST: &str = r#"apiVersion: argoproj.io/v1alpha1
+kind: Workflow
+metadata:
+  name: listing-two
+spec:
+  entrypoint: main
+  templates:
+  - name: main
+    dag:
+      tasks:
+      - name: run
+        template: worker
+        withItems: [1, 2, 4]
+        arguments:
+          parameters:
+          - name: n
+            value: "{{item}}"
+  - name: worker
+    inputs:
+      parameters:
+      - name: n
+    container:
+      image: busybox:latest
+      command: [sh, -c]
+      args:
+      - >-
+        echo running with
+        {{inputs.parameters.n}} tasks
+"#;
+
+/// kubectl-style dump: explicit document start, a status stanza, and
+/// the `...` end-of-document marker.
+const DUMPED_POD: &str = "---\nkind: Pod\nmetadata:\n  name: dumped\n  namespace: default\nspec:\n  containers:\n  - name: main\n    image: pause:3.9\nstatus:\n  phase: Running\n...\n";
+
+#[test]
+fn golden_corpus_round_trips_and_validates() {
+    let spark = hpk::operators::spark::operator::spark_application_manifest(
+        "tpcds", "default", "datagen", 1, 8, "q1,q2", 3, 1, "8000m",
+    );
+    let tfjob = hpk::operators::training::operator::tfjob_manifest(
+        "mnist", "default", "mlp-small", 2, 500, 0.01, "/home/user/models/mnist",
+    );
+    for (name, text) in [
+        ("argo", ARGO_MANIFEST),
+        ("spark", spark.as_str()),
+        ("tfjob", tfjob.as_str()),
+        ("dumped-pod", DUMPED_POD),
+    ] {
+        let v = parse_one(text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let emitted = to_yaml_string(&v);
+        let back = parse_one(&emitted)
+            .unwrap_or_else(|e| panic!("{name} (re-parse): {e}\n{emitted}"));
+        assert_eq!(back, v, "{name}: emit/reparse changed the tree");
+        let manifests = validate_manifest_text(text)
+            .unwrap_or_else(|e| panic!("{name}: typed validation failed: {e}"));
+        assert_eq!(manifests.len(), 1, "{name}");
+    }
+}
+
+#[test]
+fn golden_corpus_key_fields_survive() {
+    let v = parse_one(ARGO_MANIFEST).unwrap();
+    assert_eq!(v.str_at("metadata.name"), Some("listing-two"));
+    // The folded scalar joins its lines with single spaces.
+    let args = v
+        .path("spec.templates")
+        .and_then(|t| t.as_seq())
+        .and_then(|t| t[1].path("container.args"))
+        .and_then(|a| a.as_seq())
+        .unwrap();
+    assert_eq!(
+        args[0].as_str(),
+        Some("echo running with {{inputs.parameters.n}} tasks")
+    );
+    let pod = parse_one(DUMPED_POD).unwrap();
+    assert_eq!(pod.str_at("status.phase"), Some("Running"));
+    assert!(matches!(
+        Manifest::from_value(&pod).unwrap(),
+        Manifest::Pod(_)
+    ));
+}
